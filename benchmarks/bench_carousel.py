@@ -1,0 +1,57 @@
+"""Fig. 9 — Data Carousel: fine-grained (file) vs dataset-level staging.
+
+Measures the three quantities the paper's claim rests on: time-to-first
+-processing, disk high-water mark, and makespan, at several campaign
+sizes.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from repro.data.carousel import run_carousel
+
+
+def run() -> list[dict[str, Any]]:
+    rows: list[dict[str, Any]] = []
+    for n_files in (32, 128, 512):
+        for mode in ("dataset", "file"):
+            t0 = time.perf_counter()
+            m = run_carousel(
+                [f"f{i}" for i in range(n_files)],
+                mode=mode,
+                drives=8,
+                latency_s=0.001,
+                consume_s=0.0005,
+                file_bytes=1 << 20,
+            )
+            rows.append(
+                {
+                    "name": f"carousel/{mode}/{n_files}f",
+                    "us_per_call": (time.perf_counter() - t0) * 1e6 / n_files,
+                    "derived": {
+                        "ttf_consume_s": round(m["time_to_first_consume_s"], 4),
+                        "disk_hw_mb": m["disk_high_water_bytes"] / 2**20,
+                        "makespan_s": round(m["makespan_s"], 4),
+                    },
+                }
+            )
+    # headline ratios (the Fig. 9 mechanism, quantified)
+    ds = next(r for r in rows if r["name"] == "carousel/dataset/512f")
+    fi = next(r for r in rows if r["name"] == "carousel/file/512f")
+    rows.append(
+        {
+            "name": "carousel/ratio_512f",
+            "us_per_call": 0.0,
+            "derived": {
+                "disk_hw_reduction_x": round(
+                    ds["derived"]["disk_hw_mb"] / fi["derived"]["disk_hw_mb"], 1
+                ),
+                "ttf_speedup_x": round(
+                    ds["derived"]["ttf_consume_s"]
+                    / max(fi["derived"]["ttf_consume_s"], 1e-9), 1
+                ),
+            },
+        }
+    )
+    return rows

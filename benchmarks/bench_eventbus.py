@@ -1,0 +1,79 @@
+"""§3.2.2/§3.4.2 — event-bus backends: throughput + Coordinator merge
+effectiveness under redundant-update storms."""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from repro.db.engine import Database
+from repro.eventbus import Event, create_event_bus
+from repro.eventbus.events import update_transform_event
+
+
+def _bench_bus(kind: str, n: int) -> dict[str, Any]:
+    db = Database(":memory:") if kind == "db" else None
+    bus = create_event_bus(kind, **({"db": db} if db else {}))
+    t0 = time.perf_counter()
+    for i in range(n):
+        bus.publish(Event(type="T", payload={"i": i}))
+    t_pub = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    got = 0
+    while got < n:
+        evs = bus.consume("c", limit=256)
+        if not evs:
+            break
+        bus.ack(evs)
+        got += len(evs)
+    t_con = time.perf_counter() - t0
+    bus.close()
+    if db:
+        db.close()
+    return {
+        "publish_ev_per_s": int(n / t_pub),
+        "consume_ev_per_s": int(got / max(t_con, 1e-9)),
+        "delivered": got,
+    }
+
+
+def _bench_merge(kind: str, n_updates: int, n_entities: int) -> dict[str, Any]:
+    """Storm of per-entity status updates → Coordinator merge ratio."""
+    db = Database(":memory:") if kind == "db" else None
+    bus = create_event_bus(kind, **({"db": db} if db else {}))
+    t0 = time.perf_counter()
+    for i in range(n_updates):
+        bus.publish(update_transform_event(i % n_entities))
+    t_pub = time.perf_counter() - t0
+    delivered = len(bus.consume("c", limit=n_updates + 1))
+    bus.close()
+    if db:
+        db.close()
+    return {
+        "publish_ev_per_s": int(n_updates / t_pub),
+        "delivered": delivered,
+        "merge_ratio": round(1 - delivered / n_updates, 3),
+    }
+
+
+def run() -> list[dict[str, Any]]:
+    rows: list[dict[str, Any]] = []
+    n = 5_000
+    for kind in ("local", "db", "msg"):
+        d = _bench_bus(kind, n if kind != "msg" else 2_000)
+        rows.append(
+            {
+                "name": f"eventbus/{kind}/throughput",
+                "us_per_call": 1e6 / max(d["publish_ev_per_s"], 1),
+                "derived": d,
+            }
+        )
+    for kind in ("local", "db"):
+        d = _bench_merge(kind, 20_000, 64)
+        rows.append(
+            {
+                "name": f"eventbus/{kind}/merge_storm",
+                "us_per_call": 1e6 / max(d["publish_ev_per_s"], 1),
+                "derived": d,
+            }
+        )
+    return rows

@@ -1,0 +1,88 @@
+"""Data-plane micro-bench: kernel-path op timings on CPU (interpret/jnp)
+and smoke-scale train/decode step timings.  Wall-clock here is CPU-bound
+and NOT the perf deliverable (that's the dry-run roofline); these rows
+track relative regressions."""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import smoke_config
+from repro.models.layers import attention_chunked, attention_naive
+from repro.models.rwkv import wkv6_chunked, wkv6_recurrent
+from repro.train.step import init_train_state, make_train_step
+from repro.models.io import concrete_batch
+from repro.models.config import ShapeConfig
+
+
+def _time(fn, *args, iters=3) -> float:
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def run() -> list[dict[str, Any]]:
+    rows: list[dict[str, Any]] = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, 512, 4, 64))
+    k = jax.random.normal(ks[1], (2, 512, 2, 64))
+    v = jax.random.normal(ks[2], (2, 512, 2, 64))
+    t_naive = _time(jax.jit(lambda q, k, v: attention_naive(q, k, v)), q, k, v)
+    t_chunk = _time(jax.jit(lambda q, k, v: attention_chunked(q, k, v)), q, k, v)
+    rows.append(
+        {
+            "name": "kernels/attention_chunked_vs_naive_512",
+            "us_per_call": t_chunk * 1e6,
+            "derived": {"naive_us": int(t_naive * 1e6), "ratio": round(t_chunk / t_naive, 2)},
+        }
+    )
+    # rwkv chunked vs recurrent (the chunking win, visible even on CPU)
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    B, S, H, K = 1, 1024, 4, 64
+    r = jax.random.normal(ks[0], (B, S, H, K)) * 0.5
+    kk = jax.random.normal(ks[1], (B, S, H, K)) * 0.5
+    vv = jax.random.normal(ks[2], (B, S, H, K)) * 0.5
+    lw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.5)
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    t_rec = _time(jax.jit(lambda *a: wkv6_recurrent(*a)[0]), r, kk, vv, lw, u)
+    t_chk = _time(jax.jit(lambda *a: wkv6_chunked(*a)[0]), r, kk, vv, lw, u)
+    rows.append(
+        {
+            "name": "kernels/wkv6_chunked_vs_recurrent_1k",
+            "us_per_call": t_chk * 1e6,
+            "derived": {
+                "recurrent_us": int(t_rec * 1e6),
+                "speedup_x": round(t_rec / t_chk, 2),
+            },
+        }
+    )
+    # smoke train-step throughput per family representative
+    for arch in ("qwen3-4b", "olmoe-1b-7b", "rwkv6-1.6b", "zamba2-1.2b"):
+        cfg = smoke_config(arch)
+        state = init_train_state(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(make_train_step(cfg), donate_argnums=(0,))
+        batch = {
+            k2: jnp.asarray(v2)
+            for k2, v2 in concrete_batch(cfg, ShapeConfig("b", 128, 4, "train")).items()
+        }
+        state, _ = step(state, batch)  # compile
+        t0 = time.perf_counter()
+        iters = 3
+        for _ in range(iters):
+            state, metrics = step(state, batch)
+        jax.block_until_ready(metrics["loss"])
+        dt = (time.perf_counter() - t0) / iters
+        rows.append(
+            {
+                "name": f"train_step_smoke/{arch}",
+                "us_per_call": dt * 1e6,
+                "derived": {"tokens_per_s": int(4 * 128 / dt)},
+            }
+        )
+    return rows

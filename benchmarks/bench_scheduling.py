@@ -1,0 +1,64 @@
+"""§3.4.3 — hybrid scheduling: event-driven latency vs lazy-poll fallback,
+and orchestration overhead per job through the full stack."""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+from repro.core import Work, Workflow, register_task
+from repro.orchestrator import Orchestrator
+
+
+def _measure_completion(orch: Orchestrator, n_works: int) -> float:
+    wf = Workflow(f"lat_{time.time_ns()}")
+    for i in range(n_works):
+        wf.add_work(Work(f"w{i}", task="bench_noop"))
+    t0 = time.perf_counter()
+    rid = orch.submit_workflow(wf)
+    orch.wait_request(rid, timeout=120)
+    return time.perf_counter() - t0
+
+
+def run() -> list[dict[str, Any]]:
+    register_task("bench_noop", lambda **kw: {})
+    rows: list[dict[str, Any]] = []
+
+    # event-driven (bus on) vs pure lazy-poll (bus DISABLED — §3.4.3):
+    # same poll period; only the event path differs.
+    for label, bus_kind in (("event_driven", "local"), ("lazy_poll_only", "null")):
+        orch = Orchestrator(poll_period_s=0.2, bus_kind=bus_kind)
+        with orch:
+            _measure_completion(orch, 1)  # warm
+            dts = [_measure_completion(orch, 1) for _ in range(3)]
+        rows.append(
+            {
+                "name": f"scheduling/{label}/single_work_latency",
+                "us_per_call": min(dts) * 1e6,
+                "derived": {"seconds": round(min(dts), 4), "bus": bus_kind},
+            }
+        )
+
+    # orchestration overhead per job at scale (64 works × 4 jobs)
+    orch = Orchestrator(poll_period_s=0.02)
+    with orch:
+        register_task("bench_noop4", lambda **kw: {})
+        wf = Workflow("scale")
+        for i in range(64):
+            wf.add_work(Work(f"w{i}", task="bench_noop4", n_jobs=4))
+        t0 = time.perf_counter()
+        rid = orch.submit_workflow(wf)
+        orch.wait_request(rid, timeout=240)
+        dt = time.perf_counter() - t0
+        m = orch.monitor_summary()
+    rows.append(
+        {
+            "name": "scheduling/overhead_256_jobs",
+            "us_per_call": dt * 1e6 / 256,
+            "derived": {
+                "jobs_per_s": int(256 / dt),
+                "bus_merge_ratio": round(m["bus"].get("merge_ratio", 0.0), 3),
+                "wall_s": round(dt, 2),
+            },
+        }
+    )
+    return rows

@@ -1,0 +1,96 @@
+"""§Roofline table builder: reads the dry-run JSON cache and renders the
+per-(arch × shape) three-term roofline with dominant bottleneck + useful
+-compute ratio.  Run the sweep first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --both-meshes --out results/dryrun
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import Any
+
+RESULTS = pathlib.Path("results/dryrun")
+RESULTS_OPT = pathlib.Path("results/dryrun_opt")
+
+
+def load_records(mesh: str = "single", *, opt: bool = False) -> list[dict[str, Any]]:
+    root = RESULTS_OPT if opt else RESULTS
+    recs = []
+    if not root.exists():
+        return recs
+    for p in sorted(root.glob(f"*_{mesh}.json")):
+        recs.append(json.loads(p.read_text()))
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:7.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:6.2f}ms"
+    return f"{x * 1e6:6.1f}us"
+
+
+def render_table(recs: list[dict[str, Any]]) -> str:
+    hdr = (
+        f"{'arch':18s} {'shape':12s} {'st':4s} {'compute':>9s} {'memory':>9s}"
+        f" {'collect':>9s} {'dominant':>11s} {'frac':>5s} {'useful':>6s}"
+    )
+    lines = [hdr, "-" * len(hdr)]
+    for r in recs:
+        if r["status"] != "ok":
+            lines.append(
+                f"{r['arch']:18s} {r['shape']:12s} skip  ({r.get('reason', r.get('error', ''))[:70]})"
+            )
+            continue
+        t = r["roofline"]
+        lines.append(
+            f"{r['arch']:18s} {r['shape']:12s} ok   {_fmt_s(t['compute_s']):>9s}"
+            f" {_fmt_s(t['memory_s']):>9s} {_fmt_s(t['collective_s']):>9s}"
+            f" {t['dominant'][:-2]:>11s} {t['roofline_fraction']:5.2f}"
+            f" {t['model_flops_ratio']:6.2f}"
+        )
+    return "\n".join(lines)
+
+
+def run() -> list[dict[str, Any]]:
+    rows: list[dict[str, Any]] = []
+    for opt in (False, True):
+        label = "optimized" if opt else "baseline"
+        for r in load_records("single", opt=opt):
+            if r["status"] != "ok":
+                continue
+            t = r["roofline"]
+            rows.append(
+                {
+                    "name": f"roofline/{label}/{r['arch']}/{r['shape']}",
+                    "us_per_call": t[t["dominant"]] * 1e6,
+                    "derived": {
+                        "compute_s": round(t["compute_s"], 6),
+                        "memory_s": round(t["memory_s"], 6),
+                        "collective_s": round(t["collective_s"], 6),
+                        "dominant": t["dominant"],
+                        "roofline_fraction": round(t["roofline_fraction"], 3),
+                        "useful_ratio": round(t["model_flops_ratio"], 3),
+                    },
+                }
+            )
+    if not rows:
+        rows.append(
+            {
+                "name": "roofline/NO_DRYRUN_CACHE",
+                "us_per_call": 0.0,
+                "derived": {"hint": "run python -m repro.launch.dryrun --all first"},
+            }
+        )
+    return rows
+
+
+if __name__ == "__main__":
+    for opt in (False, True):
+        recs = load_records("single", opt=opt)
+        if recs:
+            print(f"=== {'optimized (--opt)' if opt else 'baseline'} ===")
+            print(render_table(recs))
+            print()

@@ -1,0 +1,26 @@
+"""Active Learning campaign (paper §4.4 / Fig. 13): automated
+simulate → analyze → propose loop converging on a hidden physics
+"significance" optimum with no human intervention.
+
+    PYTHONPATH=src python examples/active_learning.py
+"""
+from __future__ import annotations
+
+import json
+
+from repro.al import ActiveLearner
+from repro.orchestrator import Orchestrator
+
+
+def main() -> None:
+    with Orchestrator(poll_period_s=0.05) as orch:
+        al = ActiveLearner(orch, points_per_iter=4)
+        out = al.run(iterations=6, target=2.0, timeout=120)
+        print(json.dumps(out, indent=1))
+        print(f"\nfound optimum x={out['best_x']:.3f} "
+              f"(truth {out['true_optimum_x']}) with only "
+              f"{out['n_observations']} simulations")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""End-to-end training driver: Data Carousel → pipeline → trainer →
+checkpoint → (simulated crash) → restart.
+
+The full iDDS story on one machine: input shards live "on tape"; the
+carousel stages them file-by-file; the data pipeline starts producing
+batches with the FIRST staged shard (fine-grained processing); training
+checkpoints asynchronously; a simulated preemption restarts the trainer
+from the last checkpoint and continues to the target step.
+
+CPU defaults are small; pass ``--steps 300 --layers 32`` (and run on a real
+accelerator) for the ~100M-parameter configuration.
+
+    PYTHONPATH=src python examples/train_e2e.py --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+
+from repro.configs import smoke_config
+from repro.data import DataPipeline, ShardedDataset, TapeSimulator
+from repro.train.trainer import Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="smollm-360m")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--layers", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+
+    cfg = smoke_config(args.arch).replace(n_layers=args.layers)
+    print(f"arch={cfg.name} layers={cfg.n_layers} params~{cfg.n_params()/1e6:.1f}M")
+
+    # --- carousel: stage shards from "tape", consume as they land --------
+    ds = ShardedDataset("corpus", n_shards=32, tokens_per_shard=args.batch * (args.seq + 1) * 4,
+                        vocab_size=cfg.vocab_size)
+    tape = TapeSimulator(drives=4, latency_s=0.01)
+    pipe = DataPipeline(ds, batch_size=args.batch, seq_len=args.seq,
+                        on_consumed=tape.consume)
+    tape.request(ds.file_names(), pipe.stage)
+
+    with tempfile.TemporaryDirectory() as tmp:
+        trainer = Trainer(
+            cfg, batch_iter=iter(pipe), batch_size=args.batch, seq_len=args.seq,
+            ckpt_dir=tmp, ckpt_every=max(5, args.steps // 4),
+            total_steps=args.steps,
+        )
+        half = args.steps // 2
+        out1 = trainer.run(half, log_every=max(1, half // 3))
+        print(f"-- simulated preemption at step {trainer.step} --")
+
+        # restart: a NEW trainer restores from the checkpoint directory
+        trainer2 = Trainer(
+            cfg, batch_iter=iter(pipe), batch_size=args.batch, seq_len=args.seq,
+            ckpt_dir=tmp, ckpt_every=max(5, args.steps // 4),
+            total_steps=args.steps,
+        )
+        assert trainer2.resume(), "no checkpoint found on restart"
+        print(f"resumed at step {trainer2.step}")
+        out2 = trainer2.run(args.steps - trainer2.step,
+                            log_every=max(1, half // 3))
+        print(json.dumps({
+            "first_half": out1, "second_half_after_restart": out2,
+            "staged_files": tape.metrics.staged_files,
+            "disk_high_water_bytes": tape.metrics.disk_high_water,
+        }, indent=1))
+    tape.stop()
+
+
+if __name__ == "__main__":
+    main()

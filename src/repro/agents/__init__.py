@@ -1,0 +1,27 @@
+"""iDDS agents (paper §3.4): Clerk, Transformer, Carrier sub-agents,
+Coordinator — stateless, horizontally scalable, event-driven with lazy-poll
+fallback."""
+from repro.agents.base import BaseAgent  # noqa: F401
+from repro.agents.clerk import Clerk  # noqa: F401
+from repro.agents.coordinator import Coordinator  # noqa: F401
+from repro.agents.carrier import (  # noqa: F401
+    Conductor,
+    Finisher,
+    Poller,
+    Receiver,
+    Submitter,
+    Trigger,
+)
+from repro.agents.transformer import Transformer  # noqa: F401
+
+ALL_AGENT_TYPES = (
+    Clerk,
+    Transformer,
+    Submitter,
+    Poller,
+    Receiver,
+    Trigger,
+    Finisher,
+    Conductor,
+    Coordinator,
+)

@@ -1,0 +1,146 @@
+"""Agent base class (paper §3.4).
+
+"Agents are stateless, autonomous components ...  Each agent specializes in
+a specific role and interacts with the central database and event bus to
+receive tasks, report progress, and trigger downstream operations.  Agents
+are horizontally scalable and operate asynchronously."
+
+The hybrid scheduling model (§3.4.3) is implemented here once:
+
+* **event-driven**: each cycle consumes a batch of this agent's event types
+  from the bus and handles them immediately;
+* **lazy poll**: every ``poll_period_s`` the agent also scans the database
+  for rows idle beyond their ``next_poll_at`` — the fallback that catches
+  events lost by non-persistent buses;
+* **idempotent claims**: every handler claims its row (status+timestamp
+  update) before acting, so multiple replicas of the same agent never
+  double-process.
+"""
+from __future__ import annotations
+
+import logging
+import threading
+import traceback
+from typing import TYPE_CHECKING, Sequence
+
+from repro.common.utils import utc_now_ts
+from repro.eventbus.base import BaseEventBus
+from repro.eventbus.events import Event
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.orchestrator import Orchestrator
+
+logger = logging.getLogger(__name__)
+
+
+class BaseAgent:
+    #: event types this agent consumes
+    event_types: tuple[str, ...] = ()
+    name = "base"
+
+    def __init__(
+        self,
+        orch: "Orchestrator",
+        *,
+        poll_period_s: float = 0.2,
+        batch_size: int = 32,
+        replica: int = 0,
+    ):
+        self.orch = orch
+        self.bus: BaseEventBus = orch.bus
+        self.stores = orch.stores
+        self.poll_period_s = poll_period_s
+        self.batch_size = batch_size
+        self.replica = replica
+        self.consumer_id = f"{self.name}-{replica}"
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._last_poll = 0.0
+        self._last_heartbeat = 0.0
+        self.cycles = 0
+        self.errors = 0
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> None:
+        self._thread = threading.Thread(
+            target=self._run, name=self.consumer_id, daemon=True
+        )
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: float = 5.0) -> None:
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+
+    # -- main loop -------------------------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            did_work = False
+            try:
+                did_work = self.cycle()
+            except Exception:  # noqa: BLE001 - agents must survive anything
+                self.errors += 1
+                logger.error(
+                    "%s cycle error:\n%s", self.consumer_id, traceback.format_exc()
+                )
+            self.cycles += 1
+            if not did_work:
+                self.bus.wait(timeout=self.poll_period_s / 2)
+
+    def cycle(self) -> bool:
+        """One scheduling cycle: events first, then the lazy poll."""
+        did = False
+        if self.event_types:
+            events = self.bus.consume(
+                self.consumer_id, types=self.event_types, limit=self.batch_size
+            )
+            if events:
+                did = True
+                handled: list[Event] = []
+                for ev in events:
+                    try:
+                        self.handle_event(ev)
+                        handled.append(ev)
+                    except Exception:  # noqa: BLE001
+                        self.errors += 1
+                        logger.error(
+                            "%s event %s error:\n%s",
+                            self.consumer_id,
+                            ev.type,
+                            traceback.format_exc(),
+                        )
+                        handled.append(ev)  # ack anyway; lazy poll will retry
+                self.bus.ack(handled)
+        now = utc_now_ts()
+        if now - self._last_poll >= self.poll_period_s:
+            self._last_poll = now
+            if self.lazy_poll():
+                did = True
+        if now - self._last_heartbeat >= max(1.0, self.poll_period_s * 10):
+            self._last_heartbeat = now
+            try:
+                self.stores["health"].heartbeat(
+                    self.consumer_id, {"cycles": self.cycles, "errors": self.errors}
+                )
+            except Exception:  # noqa: BLE001 - heartbeat is best-effort
+                pass
+        return did
+
+    # -- to implement ------------------------------------------------------------
+    def handle_event(self, event: Event) -> None:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def lazy_poll(self) -> bool:  # pragma: no cover - abstract
+        """Scan the DB for idle rows (lost-event fallback).  Returns True if
+        any work was done."""
+        return False
+
+    # -- helpers --------------------------------------------------------------
+    def publish(self, *events: Event) -> None:
+        for ev in events:
+            self.bus.publish(ev)
+
+    def defer(self, seconds: float) -> float:
+        return utc_now_ts() + seconds

@@ -1,0 +1,495 @@
+"""Carrier agent and its sub-agents (paper §3.4.2).
+
+"The Carrier agent interfaces with external workload management systems to
+handle the submission and tracking of the Work execution."
+
+Sub-agents (each an independently runnable BaseAgent, horizontally
+scalable):
+
+* **Submitter** — submits Work payloads to the workload runtime.
+* **Poller**   — polls execution status (lazy fallback path).
+* **Receiver** — consumes the runtime's async status messages and converts
+  them into bus events (the low-latency event-driven path).
+* **Trigger**  — evaluates the job-level dependency graph and releases
+  downstream jobs/contents as inputs become available.
+* **Finisher** — finalizes transforms when processings terminate.
+* **Conductor**— delivers outbound messages to external subscribers.
+"""
+from __future__ import annotations
+
+import queue
+from typing import Any
+
+from repro.common.constants import (
+    CollectionRelation,
+    ContentStatus,
+    EventType,
+    MessageDestination,
+    ProcessingStatus,
+    TransformStatus,
+)
+from repro.common.exceptions import NotFoundError
+from repro.core.statemachine import check_transition
+from repro.core.work import Work
+from repro.agents.base import BaseAgent
+from repro.eventbus.events import (
+    Event,
+    data_available_event,
+    poll_processing_event,
+    update_request_event,
+    update_transform_event,
+)
+from repro.runtime.executor import TaskSpec
+
+_RUNTIME_TO_PROCESSING = {
+    "Submitted": ProcessingStatus.SUBMITTED,
+    "Running": ProcessingStatus.RUNNING,
+    "Finished": ProcessingStatus.FINISHED,
+    "SubFinished": ProcessingStatus.SUBFINISHED,
+    "Failed": ProcessingStatus.FAILED,
+    "Cancelled": ProcessingStatus.CANCELLED,
+}
+
+_TERMINAL_RUNTIME = {"Finished", "SubFinished", "Failed", "Cancelled"}
+
+
+class Submitter(BaseAgent):
+    name = "carrier-submitter"
+    event_types = (str(EventType.SUBMIT_PROCESSING),)
+
+    def handle_event(self, event: Event) -> None:
+        pid = event.payload.get("processing_id")
+        if pid is not None:
+            self.process(int(pid))
+
+    def lazy_poll(self) -> bool:
+        rows = self.stores["processings"].poll_ready(
+            [ProcessingStatus.NEW], limit=self.batch_size
+        )
+        for row in rows:
+            self.process(int(row["processing_id"]))
+        return bool(rows)
+
+    def process(self, processing_id: int) -> None:
+        processings = self.stores["processings"]
+        try:
+            row = processings.get(processing_id)
+        except NotFoundError:
+            return
+        if row["status"] != str(ProcessingStatus.NEW):
+            return
+        if not processings.claim(processing_id):
+            return
+        try:
+            trow = self.stores["transforms"].get(int(row["transform_id"]))
+            work = Work.from_dict(trow["work"])
+            meta = row.get("processing_metadata") or {}
+            data_aware = bool(meta.get("data_aware"))
+            params = trow["work"]["template"].get("bound_parameters") or {}
+            spec = TaskSpec(
+                payload=dict(work.payload),
+                n_jobs=work.n_jobs,
+                parameters=params,
+                site=row.get("site"),
+                hold_jobs=data_aware,
+                max_job_retries=work.max_retries,
+                name=work.name,
+                job_contents=meta.get("job_contents") or None,
+            )
+            workload_id = self.orch.runtime.submit(spec)
+            # register output content ids in job order so the Receiver can
+            # mark them available as individual jobs finish
+            out_ids = self._output_content_ids(int(row["transform_id"]))
+            meta.update({"workload_id": workload_id, "output_content_ids": out_ids})
+            check_transition("processing", row["status"], ProcessingStatus.SUBMITTING)
+            processings.update(
+                processing_id,
+                status=ProcessingStatus.SUBMITTED,
+                workload_id=workload_id,
+                processing_metadata=meta,
+                submitted_at=self.defer(0),
+                next_poll_at=self.defer(self.poll_period_s),
+            )
+            self.stores["transforms"].update(
+                int(row["transform_id"]), status=TransformStatus.SUBMITTED
+            )
+            if data_aware:
+                # kick the Trigger once for inputs that are already available
+                avail = [
+                    c["content_id"]
+                    for c in self.stores["contents"].by_transform(
+                        int(row["transform_id"]), status=ContentStatus.AVAILABLE
+                    )
+                ]
+                held = meta.get("job_contents") or []
+                pre = [c for c in held if c in set(avail)]
+                if pre:
+                    self.orch.runtime.release_jobs_for_contents(workload_id, pre)
+            self.publish(poll_processing_event(processing_id))
+        finally:
+            processings.unlock(processing_id)
+
+    def _output_content_ids(self, transform_id: int) -> list[int]:
+        out: list[int] = []
+        for coll in self.stores["collections"].by_transform(
+            transform_id, CollectionRelation.OUTPUT
+        ):
+            rows = self.stores["contents"].by_collection(int(coll["coll_id"]))
+            out.extend(int(r["content_id"]) for r in rows)
+        return out
+
+
+class Poller(BaseAgent):
+    name = "carrier-poller"
+    event_types = (
+        str(EventType.POLL_PROCESSING),
+        str(EventType.UPDATE_PROCESSING),
+        str(EventType.TERMINATE_PROCESSING),
+    )
+
+    def handle_event(self, event: Event) -> None:
+        pid = event.payload.get("processing_id")
+        if pid is not None:
+            self.process(int(pid))
+
+    def lazy_poll(self) -> bool:
+        rows = self.stores["processings"].poll_ready(
+            [ProcessingStatus.SUBMITTED, ProcessingStatus.RUNNING],
+            limit=self.batch_size,
+        )
+        for row in rows:
+            self.process(int(row["processing_id"]))
+        return bool(rows)
+
+    def process(self, processing_id: int) -> None:
+        processings = self.stores["processings"]
+        try:
+            row = processings.get(processing_id)
+        except NotFoundError:
+            return
+        if row["status"] not in (
+            str(ProcessingStatus.SUBMITTED),
+            str(ProcessingStatus.RUNNING),
+        ):
+            return
+        if not processings.claim(processing_id):
+            return
+        try:
+            meta = row.get("processing_metadata") or {}
+            workload_id = meta.get("workload_id") or row.get("workload_id")
+            if not workload_id:
+                return
+            st = self.orch.runtime.status(workload_id)
+            runtime_status = st["status"]
+            if runtime_status in _TERMINAL_RUNTIME:
+                results = self.orch.runtime.results(workload_id)
+                meta["results"] = results
+                meta["job_states"] = [j["state"] for j in st["jobs"]]
+                new_status = _RUNTIME_TO_PROCESSING[runtime_status]
+                check_transition("processing", row["status"], new_status)
+                processings.update(
+                    processing_id,
+                    status=new_status,
+                    processing_metadata=meta,
+                    finished_at=self.defer(0),
+                )
+                self._mark_outputs(meta, st)
+                self.publish(
+                    update_transform_event(int(row["transform_id"]), priority=20)
+                )
+            else:
+                new_status = _RUNTIME_TO_PROCESSING.get(
+                    runtime_status, ProcessingStatus.RUNNING
+                )
+                if str(new_status) != row["status"]:
+                    check_transition("processing", row["status"], new_status)
+                    processings.update(processing_id, status=new_status)
+                processings.update(
+                    processing_id, next_poll_at=self.defer(self.poll_period_s * 2)
+                )
+                self.publish(poll_processing_event(processing_id))
+        finally:
+            processings.unlock(processing_id)
+
+    def _mark_outputs(self, meta: dict[str, Any], st: dict[str, Any]) -> None:
+        """Mark per-job output contents Available/Failed and cascade."""
+        out_ids = meta.get("output_content_ids") or []
+        if not out_ids:
+            return
+        finished: list[int] = []
+        failed: list[int] = []
+        jobs = {j["index"]: j["state"] for j in st["jobs"]}
+        n_jobs = max(len(jobs), 1)
+        for i, cid in enumerate(out_ids):
+            state = jobs.get(i % n_jobs)
+            if state == "Finished":
+                finished.append(cid)
+            elif state in ("Failed", "Cancelled"):
+                failed.append(cid)
+        contents = self.stores["contents"]
+        if finished:
+            contents.set_status(finished, ContentStatus.AVAILABLE)
+            self.publish(data_available_event(0, finished))
+        if failed:
+            contents.set_status(failed, ContentStatus.FAILED)
+
+
+class Receiver(BaseAgent):
+    """Consumes the workload runtime's async message stream (the PanDA →
+    iDDS callback channel) and turns it into bus events — the event-driven
+    fast path; the Poller remains the lazy fallback."""
+
+    name = "carrier-receiver"
+    event_types = ()
+
+    def __init__(self, *a: Any, **kw: Any):
+        super().__init__(*a, **kw)
+        self._wl_to_processing: dict[str, int] = {}
+
+    def lazy_poll(self) -> bool:
+        drained = 0
+        while True:
+            try:
+                msg = self.orch.runtime.messages.get_nowait()
+            except queue.Empty:
+                break
+            drained += 1
+            self._handle_runtime_message(msg)
+        return drained > 0
+
+    def _processing_for(self, workload_id: str) -> int | None:
+        if workload_id in self._wl_to_processing:
+            return self._wl_to_processing[workload_id]
+        row = self.stores["processings"].db.query_one(
+            "SELECT processing_id FROM processings WHERE workload_id=?",
+            (workload_id,),
+        )
+        if row is None:
+            return None
+        pid = int(row["processing_id"])
+        self._wl_to_processing[workload_id] = pid
+        return pid
+
+    def _handle_runtime_message(self, msg: dict[str, Any]) -> None:
+        kind = msg.get("kind")
+        workload_id = msg.get("workload_id", "")
+        pid = self._processing_for(workload_id)
+        if pid is None:
+            return
+        if kind == "task_terminal":
+            self.publish(
+                Event(
+                    type=str(EventType.UPDATE_PROCESSING),
+                    payload={"processing_id": pid},
+                    priority=20,
+                    merge_key=f"pr:update:{pid}",
+                )
+            )
+        elif kind == "job_finished":
+            # fine-grained: flag the job's output content available NOW so
+            # downstream jobs release without waiting for task completion
+            row = self.stores["processings"].get(pid)
+            meta = row.get("processing_metadata") or {}
+            out_ids = meta.get("output_content_ids") or []
+            ji = int(msg.get("job_index", -1))
+            if 0 <= ji < len(out_ids):
+                self.stores["contents"].set_status(
+                    [out_ids[ji]], ContentStatus.AVAILABLE
+                )
+                self.publish(data_available_event(0, [out_ids[ji]]))
+        elif kind == "job_failed":
+            self.publish(poll_processing_event(pid, priority=15))
+
+
+class Trigger(BaseAgent):
+    """Evaluates dependency graphs and triggers downstream work (job-level
+    DAG engine, §3.1.1): released contents → released runtime jobs."""
+
+    name = "carrier-trigger"
+    event_types = (
+        str(EventType.DATA_AVAILABLE),
+        str(EventType.TRIGGER_RELEASE),
+    )
+
+    def handle_event(self, event: Event) -> None:
+        content_ids = [int(c) for c in event.payload.get("content_ids") or []]
+        if content_ids:
+            self.release(content_ids)
+
+    def lazy_poll(self) -> bool:
+        # fallback: activate any NEW contents whose deps are all available
+        # but whose release event was lost — set-based sweep
+        db = self.stores["contents"].db
+        rows = db.query(
+            "SELECT DISTINCT d.dep_content_id AS cid FROM content_deps d "
+            "JOIN contents c ON c.content_id=d.dep_content_id "
+            "JOIN contents w ON w.content_id=d.content_id "
+            "WHERE c.status IN ('Available','Finished') AND w.status='New' "
+            "LIMIT 512"
+        )
+        ids = [int(r["cid"]) for r in rows]
+        if ids:
+            self.release(ids)
+        return bool(ids)
+
+    def release(self, available_ids: list[int]) -> None:
+        contents = self.stores["contents"]
+        activated = contents.release_dependents(available_ids)
+        if not activated:
+            return
+        # group activated contents by transform and release the held jobs
+        by_transform: dict[int, list[int]] = {}
+        for cid in activated:
+            row = contents.get(cid)
+            by_transform.setdefault(int(row["transform_id"]), []).append(cid)
+        for tid, ids in by_transform.items():
+            contents.set_status(ids, ContentStatus.AVAILABLE)
+            for prow in self.stores["processings"].by_transform(tid):
+                meta = prow.get("processing_metadata") or {}
+                wl = meta.get("workload_id")
+                if wl:
+                    try:
+                        self.orch.runtime.release_jobs_for_contents(wl, ids)
+                    except Exception:  # noqa: BLE001 - workload may be gone
+                        pass
+            self.publish(update_transform_event(tid))
+        # cascade: newly available contents may unlock further layers
+        self.publish(data_available_event(0, [c for v in by_transform.values() for c in v]))
+
+
+class Finisher(BaseAgent):
+    name = "carrier-finisher"
+    event_types = (str(EventType.UPDATE_TRANSFORM),)
+
+    def handle_event(self, event: Event) -> None:
+        tid = event.payload.get("transform_id")
+        if tid is not None:
+            self.process(int(tid))
+
+    def lazy_poll(self) -> bool:
+        rows = self.stores["transforms"].poll_ready(
+            [TransformStatus.SUBMITTED, TransformStatus.RUNNING],
+            limit=self.batch_size,
+        )
+        did = False
+        for row in rows:
+            did = self.process(int(row["transform_id"])) or did
+        return did
+
+    def process(self, transform_id: int) -> bool:
+        transforms = self.stores["transforms"]
+        try:
+            trow = transforms.get(transform_id)
+        except NotFoundError:
+            return False
+        if trow["status"] not in (
+            str(TransformStatus.SUBMITTED),
+            str(TransformStatus.RUNNING),
+        ):
+            return False
+        prows = self.stores["processings"].by_transform(transform_id)
+        if not prows:
+            transforms.update(
+                transform_id, next_poll_at=self.defer(self.poll_period_s * 4)
+            )
+            return False
+        latest = prows[-1]
+        pstat = latest["status"]
+        terminal_map = {
+            str(ProcessingStatus.FINISHED): TransformStatus.FINISHED,
+            str(ProcessingStatus.SUBFINISHED): TransformStatus.SUBFINISHED,
+            str(ProcessingStatus.FAILED): TransformStatus.FAILED,
+            str(ProcessingStatus.TIMEOUT): TransformStatus.FAILED,
+            str(ProcessingStatus.CANCELLED): TransformStatus.CANCELLED,
+        }
+        if pstat not in terminal_map:
+            transforms.update(
+                transform_id, next_poll_at=self.defer(self.poll_period_s * 2)
+            )
+            return False
+        if not transforms.claim(transform_id):
+            return False
+        try:
+            work = Work.from_dict(trow["work"])
+            meta = latest.get("processing_metadata") or {}
+            results = self._fold_results(work, meta.get("results") or [])
+            new_status = terminal_map[pstat]
+            check_transition("transform", trow["status"], new_status)
+            # refresh collection counters
+            for coll in self.stores["collections"].by_transform(transform_id):
+                self.stores["collections"].refresh_counters(int(coll["coll_id"]))
+            tmeta = trow.get("transform_metadata") or {}
+            tmeta["results"] = results
+            transforms.update(
+                transform_id, status=new_status, transform_metadata=tmeta
+            )
+            self.stores["messages"].add(
+                "work_finished",
+                MessageDestination.OUTSIDE,
+                {
+                    "transform_id": transform_id,
+                    "request_id": int(trow["request_id"]),
+                    "node_id": trow["node_id"],
+                    "status": str(new_status),
+                    "results": results,
+                },
+                request_id=int(trow["request_id"]),
+                transform_id=transform_id,
+            )
+            self.publish(
+                update_request_event(int(trow["request_id"]), priority=20)
+            )
+            return True
+        finally:
+            transforms.unlock(transform_id)
+
+    def _fold_results(self, work: Work, results: list[Any]) -> dict[str, Any]:
+        """Fold job results into the Work's result dict.
+
+        * function payloads: single job → {"return": blob}; map-mode →
+          {"job_returns": [...]}.
+        * registered tasks returning dicts: single job → merged directly so
+          Conditions can reference ``Ref("<work>.outputs.<key>")``.
+        """
+        folded: dict[str, Any] = {}
+        if work.payload.get("kind") == "function":
+            if work.n_jobs == 1:
+                folded["return"] = results[0] if results else None
+            else:
+                folded["job_returns"] = results
+            return folded
+        if work.n_jobs == 1 and results and isinstance(results[0], dict):
+            folded.update(results[0])
+        elif results:
+            folded["job_results"] = results
+        return folded
+
+
+class Conductor(BaseAgent):
+    """Sends execution status updates to external systems (outbox drain)."""
+
+    name = "carrier-conductor"
+    event_types = (str(EventType.MSG_OUTBOX),)
+
+    def handle_event(self, event: Event) -> None:
+        self.lazy_poll()
+
+    def lazy_poll(self) -> bool:
+        msgs = self.stores["messages"].fetch_new(
+            MessageDestination.OUTSIDE, limit=self.batch_size
+        )
+        if not msgs:
+            return False
+        delivered: list[int] = []
+        for msg in msgs:
+            ok = True
+            for cb in self.orch.message_subscribers:
+                try:
+                    cb(msg)
+                except Exception:  # noqa: BLE001 - subscriber errors logged only
+                    ok = False
+            if ok:
+                delivered.append(int(msg["msg_id"]))
+        if delivered:
+            self.stores["messages"].mark_delivered(delivered)
+        return True

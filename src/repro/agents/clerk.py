@@ -1,0 +1,218 @@
+"""Clerk agent (paper §3.4.2).
+
+"The Clerk agent decomposes Workflow and generates Work objects.  During
+workflow execution, it evaluates Condition objects to determine if new Work
+objects should be created or if the workflow should terminate.  When a new
+Work object is needed, the Clerk references Parameter objects to generate
+inputs."
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.common.constants import (
+    EventType,
+    RequestStatus,
+    TransformStatus,
+    WorkStatus,
+    TERMINAL_TRANSFORM_STATES,
+)
+from repro.common.exceptions import NotFoundError
+from repro.core.statemachine import check_transition
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+from repro.agents.base import BaseAgent
+from repro.eventbus.events import (
+    Event,
+    new_transform_event,
+    update_request_event,
+)
+
+_TF_TO_WORK = {
+    TransformStatus.FINISHED: WorkStatus.FINISHED,
+    TransformStatus.SUBFINISHED: WorkStatus.SUBFINISHED,
+    TransformStatus.FAILED: WorkStatus.FAILED,
+    TransformStatus.CANCELLED: WorkStatus.CANCELLED,
+}
+
+_WF_TO_REQ = {
+    WorkStatus.FINISHED: RequestStatus.FINISHED,
+    WorkStatus.SUBFINISHED: RequestStatus.SUBFINISHED,
+    WorkStatus.FAILED: RequestStatus.FAILED,
+    WorkStatus.CANCELLED: RequestStatus.CANCELLED,
+}
+
+
+class Clerk(BaseAgent):
+    name = "clerk"
+    event_types = (
+        str(EventType.NEW_REQUEST),
+        str(EventType.UPDATE_REQUEST),
+        str(EventType.ABORT_REQUEST),
+    )
+
+    def handle_event(self, event: Event) -> None:
+        request_id = event.payload.get("request_id")
+        if request_id is None:
+            return
+        abort = event.type == str(EventType.ABORT_REQUEST)
+        self.process_request(int(request_id), abort=abort)
+
+    def lazy_poll(self) -> bool:
+        rows = self.stores["requests"].poll_ready(
+            [RequestStatus.NEW, RequestStatus.READY, RequestStatus.TRANSFORMING],
+            limit=self.batch_size,
+        )
+        for row in rows:
+            self.process_request(int(row["request_id"]))
+        return bool(rows)
+
+    # -- core logic -----------------------------------------------------------
+    def process_request(self, request_id: int, *, abort: bool = False) -> None:
+        requests = self.stores["requests"]
+        transforms = self.stores["transforms"]
+        try:
+            row = requests.get(request_id)
+        except NotFoundError:
+            return
+        if row["status"] in (
+            str(RequestStatus.FINISHED),
+            str(RequestStatus.CANCELLED),
+            str(RequestStatus.EXPIRED),
+        ):
+            return
+        if not requests.claim(request_id):
+            return
+        try:
+            wf = Workflow.from_dict(row["workflow"])
+            if abort:
+                self._abort(request_id, wf)
+                return
+            progressed = self._sync_from_transforms(request_id, wf)
+            wf.expand_loops()
+            self._apply_expansions(wf)
+            created = self._launch_ready(request_id, wf)
+            self._retry_failed(request_id, wf)
+            # persist evolved metadata
+            new_status = self._request_status(wf, row["status"])
+            check_transition("request", row["status"], new_status)
+            requests.update(
+                request_id,
+                workflow=wf.to_dict(),
+                status=new_status,
+                next_poll_at=self.defer(self.poll_period_s * 4),
+            )
+            if created or progressed:
+                # more scheduling may be unlocked right away
+                self.publish(update_request_event(request_id))
+        finally:
+            requests.unlock(request_id)
+
+    def _sync_from_transforms(self, request_id: int, wf: Workflow) -> bool:
+        """Mirror transform rows back into Work metadata."""
+        progressed = False
+        for trow in self.stores["transforms"].by_request(request_id):
+            work = wf.works.get(trow["node_id"])
+            if work is None:
+                continue
+            if work.transform_id is None:
+                work.transform_id = int(trow["transform_id"])
+            if work.transform_id != int(trow["transform_id"]):
+                continue  # superseded (retry) row
+            status = TransformStatus(trow["status"])
+            new_ws = _TF_TO_WORK.get(status, WorkStatus.RUNNING)
+            meta = trow.get("transform_metadata") or {}
+            results = meta.get("results")
+            if results is not None and work.results != results:
+                work.results = results
+                progressed = True
+            if work.status != new_ws:
+                work.status = new_ws
+                progressed = True
+        return progressed
+
+    def _apply_expansions(self, wf: Workflow) -> None:
+        """Dynamic expansion requested by finished works (code-driven
+        workflows append works at runtime, §2.2)."""
+        for work in list(wf.works.values()):
+            exp = (work.results or {}).get("workflow_expansion")
+            if not exp or work.results.get("_expansion_applied"):
+                continue
+            new_works = [Work.from_dict(d) for d in exp.get("works", [])]
+            new_works = [w for w in new_works if w.name not in wf.works]
+            wf.expand(new_works, [tuple(e) for e in exp.get("deps", [])])
+            work.results["_expansion_applied"] = True
+
+    def _launch_ready(self, request_id: int, wf: Workflow) -> int:
+        transforms = self.stores["transforms"]
+        created = 0
+        ctx = wf.context()
+        for work in wf.ready_works():
+            if work.transform_id is not None:
+                continue
+            # bind Parameters against the live context (the "references
+            # Parameter objects to generate inputs" step)
+            bound = work.bound_parameters(ctx)
+            blob = work.to_dict()
+            blob["template"]["bound_parameters"] = bound
+            tid = transforms.add(
+                request_id,
+                work.name,
+                transform_type=work.work_type,
+                priority=work.priority,
+                max_retries=work.max_retries,
+                work=blob,
+                site=work.site,
+            )
+            work.transform_id = tid
+            work.status = WorkStatus.RUNNING
+            created += 1
+            self.publish(new_transform_event(tid))
+        return created
+
+    def _retry_failed(self, request_id: int, wf: Workflow) -> None:
+        transforms = self.stores["transforms"]
+        for work in wf.works.values():
+            if work.status != WorkStatus.FAILED:
+                continue
+            if work.retries >= work.max_retries:
+                continue
+            work.retries += 1
+            work.status = WorkStatus.NEW
+            work.results = {}
+            old_tid = work.transform_id
+            work.transform_id = None
+            if old_tid is not None:
+                try:
+                    transforms.update(old_tid, transform_metadata={"superseded": True})
+                except NotFoundError:
+                    pass
+
+    def _request_status(self, wf: Workflow, old: str) -> RequestStatus:
+        if wf.is_terminal():
+            return _WF_TO_REQ.get(wf.overall_status(), RequestStatus.FAILED)
+        if old == str(RequestStatus.NEW):
+            return RequestStatus.TRANSFORMING
+        return RequestStatus(old) if old != str(RequestStatus.READY) else RequestStatus.TRANSFORMING
+
+    def _abort(self, request_id: int, wf: Workflow) -> None:
+        transforms = self.stores["transforms"]
+        for trow in transforms.by_request(request_id):
+            if trow["status"] not in [str(s) for s in TERMINAL_TRANSFORM_STATES]:
+                transforms.update(trow["transform_id"], status=TransformStatus.CANCELLED)
+                for prow in self.stores["processings"].by_transform(
+                    trow["transform_id"]
+                ):
+                    meta = prow.get("processing_metadata") or {}
+                    wl = meta.get("workload_id") or prow.get("workload_id")
+                    if wl:
+                        try:
+                            self.orch.runtime.kill(wl)
+                        except Exception:  # noqa: BLE001
+                            pass
+        for work in wf.works.values():
+            if work.status in (WorkStatus.NEW, WorkStatus.READY, WorkStatus.RUNNING):
+                work.status = WorkStatus.CANCELLED
+        self.stores["requests"].update(
+            request_id, workflow=wf.to_dict(), status=RequestStatus.CANCELLED
+        )

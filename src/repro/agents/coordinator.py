@@ -1,0 +1,56 @@
+"""Coordinator agent (paper §3.4.2).
+
+"The Coordinator agent enhances the efficiency of the event bus ...
+Merging Events: consolidates similar or redundant messages ...  Priority
+Management: assigns higher priority to critical operations."
+
+Merging/priority live inside every bus backend (publish-time merge keys +
+priority heaps/SQL); the Coordinator runs the *recovery* half of the
+design: requeueing stale claims on persistent buses, sweeping lost events
+back into circulation, and reporting bus health.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.common.constants import EventType
+from repro.agents.base import BaseAgent
+from repro.eventbus.dbbus import DBEventBus
+from repro.eventbus.events import Event, msg_outbox_event
+
+
+class Coordinator(BaseAgent):
+    name = "coordinator"
+    event_types = (str(EventType.HEARTBEAT),)
+
+    def __init__(self, *a: Any, stale_claim_s: float = 30.0, **kw: Any):
+        super().__init__(*a, **kw)
+        self.stale_claim_s = stale_claim_s
+        self.recovered = 0
+
+    def handle_event(self, event: Event) -> None:
+        pass  # heartbeats only feed health tracking
+
+    def lazy_poll(self) -> bool:
+        did = False
+        if isinstance(self.bus, DBEventBus):
+            n = self.bus.recover_stale(stale_s=self.stale_claim_s)
+            if n:
+                self.recovered += n
+                did = True
+        # keep the Conductor's outbox moving even when nothing publishes
+        self.publish(msg_outbox_event())
+        return did
+
+    def bus_report(self) -> dict[str, Any]:
+        report = {
+            "backend": self.bus.name,
+            "pending": self.bus.pending(),
+            "recovered": self.recovered,
+        }
+        stats = getattr(self.bus, "stats", None)
+        if stats:
+            report.update(stats)
+            published = max(1, stats.get("published", 1))
+            report["merge_ratio"] = stats.get("merged", 0) / published
+        return report

@@ -1,0 +1,162 @@
+"""Transformer agent (paper §3.4.2).
+
+"The Transformer agent coordinates the execution of Work objects.  It
+verifies that all execution prerequisites — such as input data — are met
+and selects the appropriate workload system based on availability,
+efficiency, and policy constraints."
+
+Here "selecting the execution environment" is *mesh-slice brokering*: the
+Transformer inspects the runtime's sites (pod slices) and the Work's
+resource request, and pins the transform to the best-fitting slice — the
+TPU-native analogue of grid-site selection.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.common.constants import (
+    CollectionRelation,
+    CollectionStatus,
+    ContentStatus,
+    EventType,
+    ProcessingStatus,
+    TransformStatus,
+)
+from repro.common.exceptions import NotFoundError
+from repro.core.statemachine import check_transition
+from repro.core.work import Work
+from repro.agents.base import BaseAgent
+from repro.eventbus.events import Event, submit_processing_event
+
+
+class Transformer(BaseAgent):
+    name = "transformer"
+    event_types = (str(EventType.NEW_TRANSFORM),)
+
+    def handle_event(self, event: Event) -> None:
+        tid = event.payload.get("transform_id")
+        if tid is not None:
+            self.process_transform(int(tid))
+
+    def lazy_poll(self) -> bool:
+        rows = self.stores["transforms"].poll_ready(
+            [TransformStatus.NEW, TransformStatus.READY],
+            limit=self.batch_size,
+        )
+        for row in rows:
+            self.process_transform(int(row["transform_id"]))
+        return bool(rows)
+
+    # -- core logic -----------------------------------------------------------
+    def process_transform(self, transform_id: int) -> None:
+        transforms = self.stores["transforms"]
+        try:
+            row = transforms.get(transform_id)
+        except NotFoundError:
+            return
+        if row["status"] not in (str(TransformStatus.NEW), str(TransformStatus.READY)):
+            return
+        if not transforms.claim(transform_id):
+            return
+        try:
+            work = Work.from_dict(row["work"])
+            request_id = int(row["request_id"])
+            data_aware = bool(work.resources.get("data_aware"))
+            input_ids, job_contents = self._register_collections(
+                request_id, transform_id, work, data_aware
+            )
+            site = self._broker_site(work)
+            processing_id = self.stores["processings"].add(
+                transform_id,
+                request_id,
+                status=ProcessingStatus.NEW,
+                site=site,
+                metadata={
+                    "job_contents": job_contents,
+                    "data_aware": data_aware,
+                },
+            )
+            check_transition("transform", row["status"], TransformStatus.SUBMITTING)
+            transforms.update(
+                transform_id,
+                status=TransformStatus.SUBMITTING,
+                site=site,
+                next_poll_at=self.defer(self.poll_period_s * 4),
+            )
+            self.publish(submit_processing_event(processing_id))
+        finally:
+            transforms.unlock(transform_id)
+
+    def _register_collections(
+        self,
+        request_id: int,
+        transform_id: int,
+        work: Work,
+        data_aware: bool,
+    ) -> tuple[list[int], list[int]]:
+        """Create input/output collections & file-granular contents.
+
+        For data-aware works each job is bound 1:1 to an input file; those
+        contents start NEW (waiting for staging / upstream production) and
+        the Trigger agent releases jobs as they become AVAILABLE.
+        """
+        colls = self.stores["collections"]
+        contents = self.stores["contents"]
+        input_ids: list[int] = []
+        job_contents: list[int] = []
+        for spec in work.inputs:
+            coll_id = colls.add(
+                request_id,
+                transform_id,
+                spec.name,
+                relation=CollectionRelation.INPUT,
+                scope=spec.scope,
+                status=CollectionStatus.OPEN,
+                total_files=len(spec.files),
+            )
+            status = ContentStatus.NEW if data_aware else ContentStatus.AVAILABLE
+            ids = contents.add_many(
+                coll_id,
+                request_id,
+                transform_id,
+                [{"name": f, "status": status} for f in spec.files],
+            )
+            input_ids.extend(ids)
+            if not job_contents:
+                job_contents = ids[: work.n_jobs]
+        for spec in work.outputs:
+            coll_id = colls.add(
+                request_id,
+                transform_id,
+                spec.name,
+                relation=CollectionRelation.OUTPUT,
+                scope=spec.scope,
+                status=CollectionStatus.OPEN,
+                total_files=len(spec.files) or work.n_jobs,
+            )
+            names = spec.files or [
+                f"{spec.name}.job{i:06d}" for i in range(work.n_jobs)
+            ]
+            contents.add_many(
+                coll_id,
+                request_id,
+                transform_id,
+                [{"name": n, "status": ContentStatus.NEW} for n in names],
+            )
+        return input_ids, job_contents
+
+    def _broker_site(self, work: Work) -> str | None:
+        """Pick the execution slice: honour explicit pins, else choose the
+        site with the most free slots that satisfies the resource tags."""
+        if work.site:
+            return work.site
+        runtime = self.orch.runtime
+        want = work.resources.get("tags") or ()
+        best, best_free = None, -1
+        for site in runtime.sites.values():
+            if want and not set(want).issubset(set(site.tags)):
+                continue
+            free = site.free()
+            if free > best_free:
+                best, best_free = site.name, free
+        return best

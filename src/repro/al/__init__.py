@@ -1,0 +1,2 @@
+"""Active Learning workflows (paper §4.4)."""
+from repro.al.loop import ActiveLearner  # noqa: F401

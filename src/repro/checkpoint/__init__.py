@@ -1,0 +1,2 @@
+"""Checkpoint substrate: async, atomic, mesh-agnostic save/restore."""
+from repro.checkpoint.manager import CheckpointManager  # noqa: F401

@@ -1,0 +1,37 @@
+"""Common utilities shared across the iDDS-on-JAX reproduction."""
+from repro.common.constants import (  # noqa: F401
+    RequestStatus,
+    TransformStatus,
+    CollectionStatus,
+    CollectionRelation,
+    ContentStatus,
+    ProcessingStatus,
+    WorkStatus,
+    EventType,
+    EventPriority,
+    MessageStatus,
+    MessageDestination,
+    TERMINAL_REQUEST_STATES,
+    TERMINAL_TRANSFORM_STATES,
+    TERMINAL_CONTENT_STATES,
+)
+from repro.common.exceptions import (  # noqa: F401
+    ReproError,
+    DatabaseError,
+    DuplicateClaimError,
+    NotFoundError,
+    ValidationError,
+    AuthenticationError,
+    AuthorizationError,
+    WorkflowError,
+    SchedulingError,
+)
+from repro.common.utils import (  # noqa: F401
+    json_dumps,
+    json_loads,
+    new_uid,
+    utc_now,
+    utc_now_ts,
+    chunked,
+    retry_call,
+)

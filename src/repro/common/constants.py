@@ -1,0 +1,181 @@
+"""Status enums and constants mirroring the iDDS state model.
+
+The paper (§3.1.2) describes a state machine tracking each Work unit "from
+submission through execution to completion or failure"; the monitor screenshots
+(Fig. 7/8) show the production states (Finished / SubFinished / Failed /
+Cancelled).  We reproduce that state vocabulary.
+"""
+from __future__ import annotations
+
+import enum
+
+
+class StrEnum(str, enum.Enum):
+    """Enum whose members serialize as plain strings (stable in JSON/sqlite)."""
+
+    def __str__(self) -> str:  # pragma: no cover - trivial
+        return self.value
+
+
+class RequestStatus(StrEnum):
+    NEW = "New"
+    READY = "Ready"
+    TRANSFORMING = "Transforming"
+    FINISHED = "Finished"
+    SUBFINISHED = "SubFinished"
+    FAILED = "Failed"
+    CANCELLING = "Cancelling"
+    CANCELLED = "Cancelled"
+    SUSPENDED = "Suspended"
+    EXPIRED = "Expired"
+
+
+class TransformStatus(StrEnum):
+    NEW = "New"
+    READY = "Ready"
+    TRANSFORMING = "Transforming"
+    SUBMITTING = "Submitting"
+    SUBMITTED = "Submitted"
+    RUNNING = "Running"
+    FINISHED = "Finished"
+    SUBFINISHED = "SubFinished"
+    FAILED = "Failed"
+    CANCELLED = "Cancelled"
+    SUSPENDED = "Suspended"
+
+
+class WorkStatus(StrEnum):
+    """Lifecycle of an in-memory Work object (mirrors TransformStatus)."""
+
+    NEW = "New"
+    READY = "Ready"
+    RUNNING = "Running"
+    FINISHED = "Finished"
+    SUBFINISHED = "SubFinished"
+    FAILED = "Failed"
+    CANCELLED = "Cancelled"
+
+
+class CollectionStatus(StrEnum):
+    NEW = "New"
+    OPEN = "Open"
+    CLOSED = "Closed"
+    PROCESSED = "Processed"
+    SUBPROCESSED = "SubProcessed"
+    FAILED = "Failed"
+    DELETED = "Deleted"
+
+
+class CollectionRelation(StrEnum):
+    INPUT = "Input"
+    OUTPUT = "Output"
+    LOG = "Log"
+
+
+class ContentStatus(StrEnum):
+    NEW = "New"
+    ACTIVATED = "Activated"     # dependencies met, released for execution
+    PROCESSING = "Processing"
+    AVAILABLE = "Available"     # produced / staged and usable downstream
+    FINISHED = "Finished"
+    FAILED = "Failed"
+    MISSING = "Missing"
+    CANCELLED = "Cancelled"
+
+
+class ProcessingStatus(StrEnum):
+    NEW = "New"
+    SUBMITTING = "Submitting"
+    SUBMITTED = "Submitted"
+    RUNNING = "Running"
+    FINISHED = "Finished"
+    SUBFINISHED = "SubFinished"
+    FAILED = "Failed"
+    TIMEOUT = "Timeout"
+    CANCELLED = "Cancelled"
+
+
+class MessageStatus(StrEnum):
+    NEW = "New"
+    DELIVERED = "Delivered"
+    FAILED = "Failed"
+
+
+class MessageDestination(StrEnum):
+    OUTSIDE = "Outside"          # external systems (Conductor sends these)
+    CARRIER = "Carrier"
+    CLERK = "Clerk"
+    TRANSFORMER = "Transformer"
+
+
+class EventType(StrEnum):
+    """Event-bus event types (paper §3.2.2: task completions, data
+    availability, error signals, status updates)."""
+
+    NEW_REQUEST = "NewRequest"
+    UPDATE_REQUEST = "UpdateRequest"
+    ABORT_REQUEST = "AbortRequest"
+    NEW_TRANSFORM = "NewTransform"
+    UPDATE_TRANSFORM = "UpdateTransform"
+    NEW_PROCESSING = "NewProcessing"
+    UPDATE_PROCESSING = "UpdateProcessing"
+    SUBMIT_PROCESSING = "SubmitProcessing"
+    POLL_PROCESSING = "PollProcessing"
+    TERMINATE_PROCESSING = "TerminateProcessing"
+    TRIGGER_RELEASE = "TriggerRelease"       # job-level dependency release
+    DATA_AVAILABLE = "DataAvailable"         # carousel: file staged
+    MSG_OUTBOX = "MsgOutbox"                 # conductor delivery
+    HEARTBEAT = "Heartbeat"
+
+
+class EventPriority(enum.IntEnum):
+    """Coordinator priority classes (paper §3.4.2: Work completion events
+    outrank routine status updates)."""
+
+    LOW = 0
+    MEDIUM = 10
+    HIGH = 20
+    CRITICAL = 30
+
+
+TERMINAL_REQUEST_STATES = frozenset(
+    {
+        RequestStatus.FINISHED,
+        RequestStatus.SUBFINISHED,
+        RequestStatus.FAILED,
+        RequestStatus.CANCELLED,
+        RequestStatus.EXPIRED,
+    }
+)
+
+TERMINAL_TRANSFORM_STATES = frozenset(
+    {
+        TransformStatus.FINISHED,
+        TransformStatus.SUBFINISHED,
+        TransformStatus.FAILED,
+        TransformStatus.CANCELLED,
+    }
+)
+
+TERMINAL_PROCESSING_STATES = frozenset(
+    {
+        ProcessingStatus.FINISHED,
+        ProcessingStatus.SUBFINISHED,
+        ProcessingStatus.FAILED,
+        ProcessingStatus.TIMEOUT,
+        ProcessingStatus.CANCELLED,
+    }
+)
+
+TERMINAL_CONTENT_STATES = frozenset(
+    {
+        ContentStatus.AVAILABLE,
+        ContentStatus.FINISHED,
+        ContentStatus.FAILED,
+        ContentStatus.MISSING,
+        ContentStatus.CANCELLED,
+    }
+)
+
+# Success-ish terminal states used when deciding Finished vs SubFinished.
+SUCCESS_CONTENT_STATES = frozenset({ContentStatus.AVAILABLE, ContentStatus.FINISHED})

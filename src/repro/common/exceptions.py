@@ -1,0 +1,47 @@
+"""Exception hierarchy for the reproduction."""
+from __future__ import annotations
+
+
+class ReproError(Exception):
+    """Base class for all framework errors."""
+
+
+class DatabaseError(ReproError):
+    pass
+
+
+class DuplicateClaimError(DatabaseError):
+    """Raised when an agent loses an idempotent-claim race (paper §3.4.3:
+    agents update status+timestamp on trigger so peers do not reprocess)."""
+
+
+class NotFoundError(ReproError):
+    pass
+
+
+class ValidationError(ReproError):
+    pass
+
+
+class AuthenticationError(ReproError):
+    pass
+
+
+class AuthorizationError(ReproError):
+    pass
+
+
+class WorkflowError(ReproError):
+    pass
+
+
+class SchedulingError(ReproError):
+    pass
+
+
+class RuntimeExecutionError(ReproError):
+    """A workload (job payload) failed during execution."""
+
+
+class CheckpointError(ReproError):
+    pass

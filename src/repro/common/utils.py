@@ -1,0 +1,90 @@
+"""Small shared utilities: JSON with enum/time support, ids, retries."""
+from __future__ import annotations
+
+import enum
+import itertools
+import json
+import time
+import uuid
+from datetime import datetime, timezone
+from typing import Any, Callable, Iterable, Iterator, Sequence, TypeVar
+
+T = TypeVar("T")
+
+
+def utc_now() -> datetime:
+    return datetime.now(timezone.utc)
+
+
+def utc_now_ts() -> float:
+    return time.time()
+
+
+def new_uid(prefix: str = "") -> str:
+    u = uuid.uuid4().hex[:16]
+    return f"{prefix}{u}" if prefix else u
+
+
+class _Encoder(json.JSONEncoder):
+    def default(self, o: Any) -> Any:
+        if isinstance(o, enum.Enum):
+            return o.value
+        if isinstance(o, datetime):
+            return o.isoformat()
+        if isinstance(o, (set, frozenset)):
+            return sorted(o)
+        if hasattr(o, "to_dict"):
+            return o.to_dict()
+        if hasattr(o, "tolist"):  # numpy / jax arrays
+            return o.tolist()
+        return super().default(o)
+
+
+def json_dumps(obj: Any, **kw: Any) -> str:
+    return json.dumps(obj, cls=_Encoder, sort_keys=True, **kw)
+
+
+def json_loads(s: str | bytes | None) -> Any:
+    if s is None or s == "":
+        return None
+    return json.loads(s)
+
+
+def chunked(seq: Iterable[T], size: int) -> Iterator[list[T]]:
+    it = iter(seq)
+    while True:
+        block = list(itertools.islice(it, size))
+        if not block:
+            return
+        yield block
+
+
+def retry_call(
+    fn: Callable[[], T],
+    *,
+    retries: int = 3,
+    backoff_s: float = 0.01,
+    retry_on: tuple[type[BaseException], ...] = (Exception,),
+) -> T:
+    """Call ``fn`` with exponential backoff.  Used for transient sqlite
+    lock contention between agent threads."""
+    delay = backoff_s
+    for attempt in range(retries + 1):
+        try:
+            return fn()
+        except retry_on:
+            if attempt == retries:
+                raise
+            time.sleep(delay)
+            delay *= 2
+    raise AssertionError("unreachable")
+
+
+def stable_hash(items: Sequence[Any]) -> int:
+    """Deterministic small hash for sharding/bucketing decisions."""
+    h = 1469598103934665603
+    for it in items:
+        for b in str(it).encode():
+            h ^= b
+            h = (h * 1099511628211) & 0xFFFFFFFFFFFFFFFF
+    return h

@@ -1,0 +1,86 @@
+"""Architecture registry: ``get_config(arch_id)`` + reduced smoke configs.
+
+Arch ids use the assignment's hyphenated names (``--arch olmoe-1b-7b``).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ArchConfig, MoEConfig, SHAPES, ShapeConfig, cell_is_supported  # noqa: F401
+
+from repro.configs.olmoe_1b_7b import CONFIG as _olmoe
+from repro.configs.deepseek_moe_16b import CONFIG as _deepseek
+from repro.configs.internvl2_2b import CONFIG as _internvl2
+from repro.configs.gemma3_4b import CONFIG as _gemma3
+from repro.configs.mistral_nemo_12b import CONFIG as _nemo
+from repro.configs.smollm_360m import CONFIG as _smollm
+from repro.configs.qwen3_4b import CONFIG as _qwen3
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.rwkv6_1p6b import CONFIG as _rwkv6
+from repro.configs.zamba2_1p2b import CONFIG as _zamba2
+
+REGISTRY: dict[str, ArchConfig] = {
+    c.name: c
+    for c in (
+        _olmoe,
+        _deepseek,
+        _internvl2,
+        _gemma3,
+        _nemo,
+        _smollm,
+        _qwen3,
+        _musicgen,
+        _rwkv6,
+        _zamba2,
+    )
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id not in REGISTRY:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[arch_id]
+
+
+def smoke_config(arch_id: str) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests: small layers/width,
+    few experts, tiny vocab — structure (patterns, families, frontends)
+    preserved."""
+    cfg = get_config(arch_id)
+    kw: dict = dict(
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=max(1, min(cfg.n_kv_heads, 2)),
+        d_head=32,
+        d_ff=256,
+        vocab_size=512,
+        dtype="float32",
+        remat="none",
+    )
+    if cfg.family == "moe":
+        kw["moe"] = MoEConfig(
+            n_experts=8,
+            top_k=min(cfg.moe.top_k, 2),
+            d_expert=64,
+            n_shared=cfg.moe.n_shared,
+            capacity_factor=2.0,
+        )
+        kw["n_layers"] = 2
+    if cfg.local_global_pattern:
+        kw["n_layers"] = 8          # 1 superblock of (5L+1G) + 2 tail
+        kw["sliding_window"] = 16
+    elif cfg.family == "hybrid":
+        kw["n_layers"] = 8          # 1 superblock of 6 + 2 tail
+        kw["attn_every"] = 6
+        kw["ssm"] = dataclasses.replace(cfg.ssm, d_state=16, d_head=16)
+    elif cfg.family == "ssm":
+        kw["n_layers"] = 2
+        kw["d_model"] = 128         # 2 rwkv heads of 64
+    elif "n_layers" not in kw:
+        kw["n_layers"] = 2
+    if cfg.frontend == "vit_stub":
+        kw["n_patches"] = 4
+        kw["d_frontend"] = 32
+    return cfg.replace(**kw)

@@ -1,0 +1,23 @@
+"""gemma3-4b [dense] — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt; unverified].
+
+34 layers = 5 superblocks of (5 local + 1 global) + 4 tail local layers;
+local layers use a 1024-token sliding window.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="gemma3-4b",
+    family="dense",
+    n_layers=34,
+    d_model=2560,
+    n_heads=8,
+    n_kv_heads=4,
+    d_head=256,
+    d_ff=10240,
+    vocab_size=262144,
+    sliding_window=1024,
+    local_global_pattern=5,
+    tie_embeddings=True,
+    rope_theta=1000000.0,
+)

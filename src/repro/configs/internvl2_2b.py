@@ -1,0 +1,23 @@
+"""internvl2-2b [vlm] — InternViT + InternLM2 [arXiv:2404.16821; hf].
+
+The InternViT frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed patch embeddings [B, n_patches, d_frontend] which a
+2-layer projector splices over the first token positions.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internvl2-2b",
+    family="vlm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=16,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=8192,
+    vocab_size=92553,
+    frontend="vit_stub",
+    n_patches=256,
+    d_frontend=1024,
+    rope_theta=1000000.0,
+)

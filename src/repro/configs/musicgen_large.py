@@ -1,0 +1,22 @@
+"""musicgen-large [audio] — decoder-only over EnCodec tokens
+[arXiv:2306.05284; hf].
+
+The EnCodec frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, S, d_model]; the decoder predicts
+codebook tokens over vocab 2048.
+"""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="musicgen-large",
+    family="audio",
+    n_layers=48,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=64,
+    d_ff=8192,
+    vocab_size=2048,
+    frontend="audio_stub",
+    rope_theta=10000.0,
+)

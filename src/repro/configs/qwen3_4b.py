@@ -1,0 +1,16 @@
+"""qwen3-4b [dense] — qk_norm, GQA [hf:Qwen/Qwen3-8B]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-4b",
+    family="dense",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_head=128,
+    d_ff=9728,
+    vocab_size=151936,
+    qk_norm=True,
+    rope_theta=1000000.0,
+)

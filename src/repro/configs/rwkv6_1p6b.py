@@ -1,0 +1,20 @@
+"""rwkv6-1.6b [ssm] — Finch, data-dependent decay [arXiv:2404.05892].
+
+Attention-free: n_heads fields describe the RWKV head layout
+(d_model / head_size = 32 heads of 64).  Eligible for long_500k (O(1)
+decode state).
+"""
+from repro.models.config import ArchConfig, RWKVConfig
+
+CONFIG = ArchConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    n_layers=24,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=64,
+    d_ff=7168,
+    vocab_size=65536,
+    rwkv=RWKVConfig(head_size=64),
+)

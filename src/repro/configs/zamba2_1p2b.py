@@ -1,0 +1,22 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + ONE shared attention block
+applied every 6 layers (weight sharing) [arXiv:2411.15242; hf].
+
+38 mamba layers = 6 superblocks of 6 + 2 tail; ssm_state=64.  Eligible for
+long_500k (SSM state + shared-block KV caches).
+"""
+from repro.models.config import ArchConfig, SSMConfig
+
+CONFIG = ArchConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_head=64,
+    d_ff=8192,
+    vocab_size=32000,
+    ssm=SSMConfig(d_state=64, d_head=64, d_conv=4, expand=2),
+    attn_every=6,
+    rope_theta=10000.0,
+)

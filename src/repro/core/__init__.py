@@ -1,0 +1,19 @@
+"""The paper's primary contribution: the iDDS workflow engine (§2, §3.1).
+
+Work / Workflow / Condition / Parameter as composable, serializable
+objects; the DG engine with conditional branching and loops; and the
+Function-as-a-Task programming model.
+"""
+from repro.core.condition import Condition, register_predicate  # noqa: F401
+from repro.core.dag import DirectedGraph  # noqa: F401
+from repro.core.fat import (  # noqa: F401
+    CodeCache,
+    GLOBAL_CODE_CACHE,
+    ResultFuture,
+    WorkFunction,
+    work_function,
+)
+from repro.core.parameter import Gen, ParameterSet, Ref, register_generator  # noqa: F401
+from repro.core.statemachine import check_transition  # noqa: F401
+from repro.core.work import CollectionSpec, Work, get_task, has_task, register_task  # noqa: F401
+from repro.core.workflow import LoopSpec, Workflow  # noqa: F401

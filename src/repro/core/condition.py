@@ -1,0 +1,167 @@
+"""Condition — runtime-evaluated control structures (paper §2.1).
+
+"A Condition is a control structure that guides the execution of a workflow
+by evaluating runtime information, such as the output of previous Work
+units or system metrics ...  Conditions allow for branching, delays,
+failure handling, and adaptive behavior."
+
+Conditions are JSON-serializable expression trees over the workflow
+*context* (work statuses + bound outputs + system metrics).  Leaves are
+comparisons of ``Ref`` paths / constants or named custom predicates; inner
+nodes are and/or/not.  Evaluation never executes user code except through
+the predicate registry, matching iDDS's template validation property.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+from repro.common.exceptions import ValidationError
+from repro.core.parameter import Ref
+
+_PREDICATES: dict[str, Callable[..., bool]] = {}
+
+
+def register_predicate(name: str, fn: Callable[..., bool] | None = None):
+    """Register a named custom predicate (serializable by name)."""
+
+    def deco(f: Callable[..., bool]) -> Callable[..., bool]:
+        _PREDICATES[name] = f
+        return f
+
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+_OPS: dict[str, Callable[[Any, Any], bool]] = {
+    "==": lambda a, b: a == b,
+    "!=": lambda a, b: a != b,
+    "<": lambda a, b: a < b,
+    "<=": lambda a, b: a <= b,
+    ">": lambda a, b: a > b,
+    ">=": lambda a, b: a >= b,
+    "in": lambda a, b: a in b,
+    "not_in": lambda a, b: a not in b,
+}
+
+
+def _resolve_operand(v: Any, context: Mapping[str, Any]) -> Any:
+    if isinstance(v, Ref):
+        return v.resolve(context)
+    return v
+
+
+class Condition:
+    """Expression-tree condition.
+
+    Construction helpers::
+
+        Condition.compare(Ref("train.outputs.loss"), "<", 0.5)
+        Condition.status("train", "Finished")
+        Condition.custom("my_pred", threshold=3)
+        c1 & c2, c1 | c2, ~c1
+        Condition.true(), Condition.false()
+    """
+
+    def __init__(self, node: dict[str, Any]):
+        self.node = node
+
+    # -- constructors -------------------------------------------------------
+    @classmethod
+    def true(cls) -> "Condition":
+        return cls({"op": "const", "value": True})
+
+    @classmethod
+    def false(cls) -> "Condition":
+        return cls({"op": "const", "value": False})
+
+    @classmethod
+    def compare(cls, left: Any, op: str, right: Any) -> "Condition":
+        if op not in _OPS:
+            raise ValidationError(f"unknown comparison op {op!r}")
+        return cls(
+            {
+                "op": "cmp",
+                "cmp": op,
+                "left": left.to_dict() if isinstance(left, Ref) else left,
+                "right": right.to_dict() if isinstance(right, Ref) else right,
+            }
+        )
+
+    @classmethod
+    def status(cls, work_name: str, status: Any) -> "Condition":
+        """True when ``work_name``'s status equals ``status``."""
+        return cls.compare(Ref(f"{work_name}.status"), "==", str(status))
+
+    @classmethod
+    def succeeded(cls, work_name: str) -> "Condition":
+        return cls.compare(
+            Ref(f"{work_name}.status"), "in", ["Finished", "SubFinished"]
+        )
+
+    @classmethod
+    def failed(cls, work_name: str) -> "Condition":
+        return cls.compare(
+            Ref(f"{work_name}.status"), "in", ["Failed", "Cancelled"]
+        )
+
+    @classmethod
+    def custom(cls, name: str, **kwargs: Any) -> "Condition":
+        if name not in _PREDICATES:
+            raise ValidationError(f"unknown predicate {name!r}")
+        return cls({"op": "custom", "name": name, "kwargs": kwargs})
+
+    # -- combinators ----------------------------------------------------------
+    def __and__(self, other: "Condition") -> "Condition":
+        return Condition({"op": "and", "args": [self.node, other.node]})
+
+    def __or__(self, other: "Condition") -> "Condition":
+        return Condition({"op": "or", "args": [self.node, other.node]})
+
+    def __invert__(self) -> "Condition":
+        return Condition({"op": "not", "arg": self.node})
+
+    # -- evaluation ------------------------------------------------------------
+    def evaluate(self, context: Mapping[str, Any]) -> bool:
+        return bool(_eval_node(self.node, context))
+
+    # -- serialization -----------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return self.node
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Condition":
+        return cls(dict(d))
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Condition({self.node})"
+
+
+def _decode_operand(v: Any) -> Any:
+    if isinstance(v, dict) and "$ref" in v:
+        if "$default" in v:
+            return Ref(v["$ref"], v["$default"])
+        return Ref(v["$ref"])
+    return v
+
+
+def _eval_node(node: Mapping[str, Any], context: Mapping[str, Any]) -> bool:
+    op = node.get("op")
+    if op == "const":
+        return bool(node["value"])
+    if op == "cmp":
+        left = _resolve_operand(_decode_operand(node["left"]), context)
+        right = _resolve_operand(_decode_operand(node["right"]), context)
+        return _OPS[node["cmp"]](left, right)
+    if op == "and":
+        return all(_eval_node(a, context) for a in node["args"])
+    if op == "or":
+        return any(_eval_node(a, context) for a in node["args"])
+    if op == "not":
+        return not _eval_node(node["arg"], context)
+    if op == "custom":
+        name = node["name"]
+        if name not in _PREDICATES:
+            raise ValidationError(f"unknown predicate {name!r}")
+        return bool(_PREDICATES[name](context=context, **(node.get("kwargs") or {})))
+    raise ValidationError(f"unknown condition op {op!r}")

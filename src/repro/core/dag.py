@@ -1,0 +1,167 @@
+"""Directed-graph engine (paper §3.1.1).
+
+"At the task level, iDDS implements a Directed Graph (DG) engine that
+manages acyclic and cyclic dependencies."
+
+Plain graph mechanics live here (the Workflow layer adds Conditions and
+loop re-instantiation).  Unconditioned subgraphs must be acyclic; cycles
+are legal only when at least one edge on the cycle is *conditioned* —
+runtime condition evaluation is what breaks the cycle, exactly the iDDS
+template+metadata split.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Any, Hashable, Iterable, Mapping
+
+from repro.common.exceptions import WorkflowError
+
+
+class DirectedGraph:
+    def __init__(self) -> None:
+        self._nodes: dict[Hashable, dict[str, Any]] = {}
+        self._succ: dict[Hashable, set[Hashable]] = {}
+        self._pred: dict[Hashable, set[Hashable]] = {}
+        # (parent, child) -> attrs (e.g. {"conditioned": True})
+        self._edges: dict[tuple[Hashable, Hashable], dict[str, Any]] = {}
+
+    # -- construction -------------------------------------------------------
+    def add_node(self, node: Hashable, **attrs: Any) -> None:
+        if node in self._nodes:
+            self._nodes[node].update(attrs)
+            return
+        self._nodes[node] = dict(attrs)
+        self._succ[node] = set()
+        self._pred[node] = set()
+
+    def add_edge(self, parent: Hashable, child: Hashable, **attrs: Any) -> None:
+        for n in (parent, child):
+            if n not in self._nodes:
+                raise WorkflowError(f"edge endpoint {n!r} not in graph")
+        self._succ[parent].add(child)
+        self._pred[child].add(parent)
+        self._edges[(parent, child)] = dict(attrs)
+
+    def remove_edge(self, parent: Hashable, child: Hashable) -> None:
+        self._succ[parent].discard(child)
+        self._pred[child].discard(parent)
+        self._edges.pop((parent, child), None)
+
+    # -- accessors -------------------------------------------------------------
+    @property
+    def nodes(self) -> list[Hashable]:
+        return list(self._nodes)
+
+    def node_attrs(self, node: Hashable) -> dict[str, Any]:
+        return self._nodes[node]
+
+    def edge_attrs(self, parent: Hashable, child: Hashable) -> dict[str, Any]:
+        return self._edges[(parent, child)]
+
+    @property
+    def edges(self) -> list[tuple[Hashable, Hashable]]:
+        return list(self._edges)
+
+    def parents(self, node: Hashable) -> set[Hashable]:
+        return set(self._pred.get(node, ()))
+
+    def children(self, node: Hashable) -> set[Hashable]:
+        return set(self._succ.get(node, ()))
+
+    def roots(self) -> list[Hashable]:
+        return [n for n in self._nodes if not self._pred[n]]
+
+    def leaves(self) -> list[Hashable]:
+        return [n for n in self._nodes if not self._succ[n]]
+
+    def __len__(self) -> int:
+        return len(self._nodes)
+
+    def __contains__(self, node: Hashable) -> bool:
+        return node in self._nodes
+
+    # -- algorithms ------------------------------------------------------------
+    def topological_order(
+        self, *, ignore_edges: Iterable[tuple[Hashable, Hashable]] = ()
+    ) -> list[Hashable]:
+        """Kahn's algorithm; raises on cycles (after removing ignore_edges)."""
+        ignored = set(ignore_edges)
+        indeg: dict[Hashable, int] = {n: 0 for n in self._nodes}
+        for (p, c) in self._edges:
+            if (p, c) not in ignored:
+                indeg[c] += 1
+        q = deque(sorted((n for n, d in indeg.items() if d == 0), key=str))
+        order: list[Hashable] = []
+        while q:
+            n = q.popleft()
+            order.append(n)
+            for c in sorted(self._succ[n], key=str):
+                if (n, c) in ignored:
+                    continue
+                indeg[c] -= 1
+                if indeg[c] == 0:
+                    q.append(c)
+        if len(order) != len(self._nodes):
+            cyclic = sorted((n for n, d in indeg.items() if d > 0), key=str)
+            raise WorkflowError(f"graph has a cycle through {cyclic[:8]}")
+        return order
+
+    def validate(self) -> None:
+        """Unconditioned edges must form a DAG (conditioned edges may close
+        cycles — they are broken at runtime)."""
+        conditioned = [
+            e for e, attrs in self._edges.items() if attrs.get("conditioned")
+        ]
+        self.topological_order(ignore_edges=conditioned)
+
+    def ancestors(self, node: Hashable) -> set[Hashable]:
+        seen: set[Hashable] = set()
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            for p in self._pred.get(n, ()):
+                if p not in seen:
+                    seen.add(p)
+                    stack.append(p)
+        return seen
+
+    def descendants(self, node: Hashable) -> set[Hashable]:
+        seen: set[Hashable] = set()
+        stack = [node]
+        while stack:
+            n = stack.pop()
+            for c in self._succ.get(n, ()):
+                if c not in seen:
+                    seen.add(c)
+                    stack.append(c)
+        return seen
+
+    def layers(self) -> list[list[Hashable]]:
+        """Topological layers (parallelizable waves)."""
+        order = self.topological_order()
+        depth: dict[Hashable, int] = {}
+        for n in order:
+            depth[n] = 1 + max((depth[p] for p in self._pred[n]), default=-1)
+        out: dict[int, list[Hashable]] = {}
+        for n, d in depth.items():
+            out.setdefault(d, []).append(n)
+        return [sorted(out[d], key=str) for d in sorted(out)]
+
+    # -- serialization -----------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "nodes": {str(n): a for n, a in self._nodes.items()},
+            "edges": [
+                {"parent": str(p), "child": str(c), "attrs": a}
+                for (p, c), a in self._edges.items()
+            ],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "DirectedGraph":
+        g = cls()
+        for n, attrs in (d.get("nodes") or {}).items():
+            g.add_node(n, **(attrs or {}))
+        for e in d.get("edges") or []:
+            g.add_edge(e["parent"], e["child"], **(e.get("attrs") or {}))
+        return g

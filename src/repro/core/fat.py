@@ -1,0 +1,306 @@
+"""Function-as-a-Task (paper §3.1.3).
+
+"The core idea of Function-as-a-Task is to transparently convert functions
+into Work objects using Python decorators, which are then submitted as
+Tasks to remote workers via a workload management system."
+
+Reproduction of the two-stage model:
+
+* **Serialization & distribution** — ``@work_function`` captures the
+  function *source code* (the paper ships a ZIP of source + environment to
+  an HTTP cache; we store the archive in a content-addressed ``CodeCache``
+  that the REST service exposes under ``/cache``).  Arguments are pickled.
+* **Execution** — ``reconstruct_function`` rebuilds the callable on the
+  worker from the archive (an "enhanced wrapper reconstructs the Work
+  object and executes the function"); results return asynchronously via the
+  messaging layer and surface through ``ResultFuture``.
+
+Constraints are the same as the paper's: the function body must be
+self-contained (do its own imports) and arguments must be picklable.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import inspect
+import pickle
+import textwrap
+import threading
+import time
+from typing import Any, Callable, Mapping, Sequence
+
+from repro.common.exceptions import ValidationError, WorkflowError
+from repro.core.work import CollectionSpec, Work
+
+# ---------------------------------------------------------------------------
+# Code cache — the "centrally managed HTTP cache" for source archives.
+# ---------------------------------------------------------------------------
+class CodeCache:
+    """Content-addressed in-memory/disk archive store."""
+
+    def __init__(self) -> None:
+        self._store: dict[str, bytes] = {}
+        self._lock = threading.Lock()
+
+    def put(self, data: bytes) -> str:
+        digest = hashlib.sha256(data).hexdigest()[:24]
+        with self._lock:
+            self._store[digest] = data
+        return digest
+
+    def get(self, digest: str) -> bytes:
+        with self._lock:
+            if digest not in self._store:
+                raise ValidationError(f"code archive {digest!r} not in cache")
+            return self._store[digest]
+
+    def __contains__(self, digest: str) -> bool:
+        with self._lock:
+            return digest in self._store
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._store)
+
+
+GLOBAL_CODE_CACHE = CodeCache()
+
+
+# ---------------------------------------------------------------------------
+# Serialization
+# ---------------------------------------------------------------------------
+def serialize_function(fn: Callable[..., Any]) -> dict[str, str]:
+    """Extract a self-contained payload for ``fn``.
+
+    Primary path ships *source code* (like the paper's ZIP archive).  When
+    source is unavailable (REPL / stdin definitions) we fall back to a
+    marshalled code object — same-interpreter-version only, which holds
+    within one deployment."""
+    try:
+        src = inspect.getsource(fn)
+    except (OSError, TypeError):
+        import marshal
+
+        blob = b"MARSHAL1" + marshal.dumps(fn.__code__)
+        digest = GLOBAL_CODE_CACHE.put(blob)
+        return {"archive": digest, "func_name": fn.__name__}
+    src = textwrap.dedent(src)
+    # strip decorator lines (the worker must not re-submit)
+    lines = src.splitlines()
+    start = 0
+    while start < len(lines) and lines[start].lstrip().startswith("@"):
+        start += 1
+    src = "\n".join(lines[start:])
+    digest = GLOBAL_CODE_CACHE.put(src.encode())
+    return {"archive": digest, "func_name": fn.__name__}
+
+
+def encode_args(args: Sequence[Any], kwargs: Mapping[str, Any]) -> str:
+    return base64.b64encode(pickle.dumps((list(args), dict(kwargs)))).decode()
+
+
+def decode_args(blob: str) -> tuple[list[Any], dict[str, Any]]:
+    args, kwargs = pickle.loads(base64.b64decode(blob))
+    return args, kwargs
+
+
+def encode_result(value: Any) -> str:
+    return base64.b64encode(pickle.dumps(value)).decode()
+
+
+def decode_result(blob: str) -> Any:
+    return pickle.loads(base64.b64decode(blob))
+
+
+def reconstruct_function(
+    payload: Mapping[str, Any], cache: CodeCache | None = None
+) -> Callable[..., Any]:
+    """Worker-side wrapper: rebuild the callable from its source archive."""
+    cache = cache or GLOBAL_CODE_CACHE
+    blob = cache.get(payload["archive"])
+    if blob.startswith(b"MARSHAL1"):
+        import marshal
+        import types
+
+        code = marshal.loads(blob[len(b"MARSHAL1"):])
+        return types.FunctionType(code, {"__builtins__": __builtins__})
+    src = blob.decode()
+    namespace: dict[str, Any] = {"__builtins__": __builtins__}
+    exec(compile(src, f"<fat:{payload['func_name']}>", "exec"), namespace)
+    fn = namespace.get(payload["func_name"])
+    if not callable(fn):
+        raise WorkflowError(
+            f"archive did not define callable {payload['func_name']!r}"
+        )
+    return fn
+
+
+def execute_function_payload(
+    payload: Mapping[str, Any],
+    *,
+    job_index: int = 0,
+    cache: CodeCache | None = None,
+) -> Any:
+    """Full worker-side execution path for a ``kind="function"`` payload."""
+    fn = reconstruct_function(payload, cache=cache)
+    args, kwargs = decode_args(payload["args"])
+    if payload.get("map_mode"):
+        # map-style: job i evaluates fn(*args_list[i])
+        items = args[0]
+        item = items[job_index]
+        if isinstance(item, (list, tuple)):
+            return fn(*item, **kwargs)
+        return fn(item, **kwargs)
+    return fn(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Futures
+# ---------------------------------------------------------------------------
+class ResultFuture:
+    """Asynchronous result handle.  ``poll_fn(work_name)`` must return a
+    (status:str, results:dict|None) pair — the client layer wires this to
+    the engine/REST so results are retrieved exactly as §3.1.3 step (4)."""
+
+    def __init__(self, work_name: str, poll_fn: Callable[[str], tuple[str, Any]]):
+        self.work_name = work_name
+        self._poll_fn = poll_fn
+
+    def done(self) -> bool:
+        status, _ = self._poll_fn(self.work_name)
+        return status in ("Finished", "SubFinished", "Failed", "Cancelled")
+
+    def result(self, timeout: float = 60.0, interval: float = 0.02) -> Any:
+        deadline = time.monotonic() + timeout
+        while True:
+            status, results = self._poll_fn(self.work_name)
+            if status in ("Finished", "SubFinished"):
+                payload = (results or {}).get("return")
+                if payload is not None:
+                    return decode_result(payload)
+                # map-mode: ordered per-job returns
+                jobs = (results or {}).get("job_returns")
+                if jobs is not None:
+                    return [decode_result(b) for b in jobs]
+                return None
+            if status in ("Failed", "Cancelled"):
+                raise WorkflowError(
+                    f"work {self.work_name} terminated with {status}: "
+                    f"{(results or {}).get('error')}"
+                )
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"work {self.work_name} still {status}")
+            time.sleep(interval)
+
+
+# ---------------------------------------------------------------------------
+# The decorator
+# ---------------------------------------------------------------------------
+_current_session = threading.local()
+
+
+def set_active_session(session: Any) -> None:
+    _current_session.value = session
+
+
+def get_active_session() -> Any:
+    session = getattr(_current_session, "value", None)
+    if session is None:
+        raise WorkflowError(
+            "no active orchestration session; use `with client.session(): ...`"
+        )
+    return session
+
+
+class WorkFunction:
+    """Callable wrapper produced by ``@work_function``."""
+
+    def __init__(
+        self,
+        fn: Callable[..., Any],
+        *,
+        n_jobs: int = 1,
+        site: str | None = None,
+        priority: int = 0,
+        resources: Mapping[str, Any] | None = None,
+    ):
+        self.fn = fn
+        self.n_jobs = n_jobs
+        self.site = site
+        self.priority = priority
+        self.resources = dict(resources or {})
+        self.__name__ = fn.__name__
+        self.__doc__ = fn.__doc__
+
+    def __call__(self, *args: Any, **kwargs: Any) -> Any:
+        return self.fn(*args, **kwargs)  # local, undistributed call
+
+    def make_work(self, *args: Any, **kwargs: Any) -> Work:
+        spec = serialize_function(self.fn)
+        payload = {
+            "kind": "function",
+            "name": self.fn.__name__,
+            "archive": spec["archive"],
+            "func_name": spec["func_name"],
+            "args": encode_args(args, kwargs),
+        }
+        return Work(
+            name=f"{self.fn.__name__}_{hashlib.sha256(payload['args'].encode()).hexdigest()[:8]}",
+            payload=payload,
+            n_jobs=1,
+            site=self.site,
+            priority=self.priority,
+            resources=self.resources,
+            work_type="function",
+        )
+
+    def make_map_work(self, items: Sequence[Any], **kwargs: Any) -> Work:
+        spec = serialize_function(self.fn)
+        payload = {
+            "kind": "function",
+            "name": self.fn.__name__,
+            "archive": spec["archive"],
+            "func_name": spec["func_name"],
+            "args": encode_args([list(items)], kwargs),
+            "map_mode": True,
+        }
+        return Work(
+            name=f"{self.fn.__name__}_map_{hashlib.sha256(payload['args'].encode()).hexdigest()[:8]}",
+            payload=payload,
+            n_jobs=len(items),
+            site=self.site,
+            priority=self.priority,
+            resources=self.resources,
+            work_type="function",
+            inputs=[CollectionSpec(f"{self.fn.__name__}.items", n_files=len(items))],
+        )
+
+    # -- distributed paths (need an active session) ------------------------
+    def submit(self, *args: Any, **kwargs: Any) -> ResultFuture:
+        session = get_active_session()
+        return session.submit_work(self.make_work(*args, **kwargs))
+
+    def map(self, items: Sequence[Any], **kwargs: Any) -> ResultFuture:
+        session = get_active_session()
+        return session.submit_work(self.make_map_work(items, **kwargs))
+
+
+def work_function(
+    fn: Callable[..., Any] | None = None,
+    *,
+    n_jobs: int = 1,
+    site: str | None = None,
+    priority: int = 0,
+    resources: Mapping[str, Any] | None = None,
+):
+    """Decorator converting a local Python function into a submittable Work
+    (Fig. 2 step 1)."""
+
+    def deco(f: Callable[..., Any]) -> WorkFunction:
+        return WorkFunction(
+            f, n_jobs=n_jobs, site=site, priority=priority, resources=resources
+        )
+
+    if fn is not None:
+        return deco(fn)
+    return deco

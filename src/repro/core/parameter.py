@@ -1,0 +1,208 @@
+"""Parameter — key-value bindings influencing execution (paper §2.1).
+
+"Parameters are key-value pairs passed into Work units and Workflows...
+They may be hierarchical and dynamically generated during workflow
+execution, supporting advanced techniques such as hyperparameter search or
+data-driven configuration."
+
+Implemented as a JSON-serializable hierarchical namespace with *references*
+(late-bound lookups into other works' outputs) and *generators* (named
+factory functions producing values at bind time — how HPO candidates and
+data-driven configs enter a running workflow).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Iterator, Mapping
+
+from repro.common.exceptions import ValidationError
+
+# Registry of named parameter generators (serializable by name).
+_GENERATORS: dict[str, Callable[..., Any]] = {}
+
+
+def register_generator(name: str, fn: Callable[..., Any] | None = None):
+    """Register a named generator, usable as ``Ref``-style dynamic values.
+    Usable as a decorator or a direct call."""
+
+    def deco(f: Callable[..., Any]) -> Callable[..., Any]:
+        _GENERATORS[name] = f
+        return f
+
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def get_generator(name: str) -> Callable[..., Any]:
+    if name not in _GENERATORS:
+        raise ValidationError(f"unknown parameter generator {name!r}")
+    return _GENERATORS[name]
+
+
+class Ref:
+    """Late-bound reference into the workflow context, e.g.
+    ``Ref("train.outputs.loss")`` resolves against the runtime context at
+    bind time.  Serializes as ``{"$ref": path}``."""
+
+    __slots__ = ("path", "default")
+    _MISSING = object()
+
+    def __init__(self, path: str, default: Any = _MISSING):
+        self.path = path
+        self.default = default
+
+    def resolve(self, context: Mapping[str, Any]) -> Any:
+        node: Any = context
+        for part in self.path.split("."):
+            if isinstance(node, Mapping) and part in node:
+                node = node[part]
+            elif isinstance(node, (list, tuple)) and part.isdigit():
+                node = node[int(part)]
+            else:
+                if self.default is not Ref._MISSING:
+                    return self.default
+                raise ValidationError(f"unresolvable parameter ref {self.path!r}")
+        return node
+
+    def to_dict(self) -> dict[str, Any]:
+        d: dict[str, Any] = {"$ref": self.path}
+        if self.default is not Ref._MISSING:
+            d["$default"] = self.default
+        return d
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Ref({self.path!r})"
+
+    def __eq__(self, other: object) -> bool:
+        return isinstance(other, Ref) and other.path == self.path
+
+    def __hash__(self) -> int:
+        return hash(("Ref", self.path))
+
+
+class Gen:
+    """A named dynamic generator invocation: ``Gen("uniform", lo=0, hi=1)``.
+    Serializes as ``{"$gen": name, "$kwargs": {...}}``."""
+
+    __slots__ = ("name", "kwargs")
+
+    def __init__(self, name: str, **kwargs: Any):
+        self.name = name
+        self.kwargs = kwargs
+
+    def resolve(self, context: Mapping[str, Any]) -> Any:
+        fn = get_generator(self.name)
+        return fn(context=context, **self.kwargs)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"$gen": self.name, "$kwargs": self.kwargs}
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Gen({self.name!r}, {self.kwargs})"
+
+
+def _encode(value: Any) -> Any:
+    if isinstance(value, (Ref, Gen)):
+        return value.to_dict()
+    if isinstance(value, ParameterSet):
+        return {"$params": value.to_dict()}
+    if isinstance(value, dict):
+        return {k: _encode(v) for k, v in value.items()}
+    if isinstance(value, (list, tuple)):
+        return [_encode(v) for v in value]
+    return value
+
+
+def _decode(value: Any) -> Any:
+    if isinstance(value, dict):
+        if "$ref" in value:
+            if "$default" in value:
+                return Ref(value["$ref"], value["$default"])
+            return Ref(value["$ref"])
+        if "$gen" in value:
+            return Gen(value["$gen"], **(value.get("$kwargs") or {}))
+        if "$params" in value:
+            return ParameterSet.from_dict(value["$params"])
+        return {k: _decode(v) for k, v in value.items()}
+    if isinstance(value, list):
+        return [_decode(v) for v in value]
+    return value
+
+
+class ParameterSet:
+    """Hierarchical parameter namespace with late binding.
+
+    ``bind(context)`` produces a plain dict with every Ref/Gen resolved —
+    that is what gets handed to a Work's payload at execution time.
+    """
+
+    def __init__(self, values: Mapping[str, Any] | None = None):
+        self._values: dict[str, Any] = dict(values or {})
+
+    # -- mapping-ish API ---------------------------------------------------
+    def __getitem__(self, key: str) -> Any:
+        node: Any = self._values
+        for part in key.split("."):
+            node = node[part]
+        return node
+
+    def __setitem__(self, key: str, value: Any) -> None:
+        parts = key.split(".")
+        node = self._values
+        for part in parts[:-1]:
+            node = node.setdefault(part, {})
+            if not isinstance(node, dict):
+                raise ValidationError(f"cannot nest under scalar at {part!r}")
+        node[parts[-1]] = value
+
+    def __contains__(self, key: str) -> bool:
+        try:
+            self[key]
+            return True
+        except (KeyError, TypeError):
+            return False
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(self._values)
+
+    def get(self, key: str, default: Any = None) -> Any:
+        try:
+            return self[key]
+        except (KeyError, TypeError):
+            return default
+
+    def update(self, other: Mapping[str, Any] | "ParameterSet") -> None:
+        items = other._values if isinstance(other, ParameterSet) else other
+        for k, v in items.items():
+            self._values[k] = v
+
+    # -- binding -------------------------------------------------------------
+    def bind(self, context: Mapping[str, Any] | None = None) -> dict[str, Any]:
+        context = context or {}
+
+        def resolve(v: Any) -> Any:
+            if isinstance(v, (Ref, Gen)):
+                return resolve(v.resolve(context))
+            if isinstance(v, ParameterSet):
+                return v.bind(context)
+            if isinstance(v, dict):
+                return {k: resolve(x) for k, x in v.items()}
+            if isinstance(v, (list, tuple)):
+                return [resolve(x) for x in v]
+            return v
+
+        return resolve(dict(self._values))
+
+    # -- serialization --------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return _encode(dict(self._values))
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any] | None) -> "ParameterSet":
+        return cls(_decode(dict(d or {})))
+
+    def copy(self) -> "ParameterSet":
+        return ParameterSet.from_dict(self.to_dict())
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"ParameterSet({self._values})"

@@ -1,0 +1,193 @@
+"""Work — the atomic executable entity of a workflow (paper §2.1).
+
+"A Work unit is the atomic executable entity within a workflow.  Each Work
+unit encapsulates a self-contained task ... and carries metadata describing
+its execution state, dependencies, inputs, and outputs.  Each task consists
+of a group of jobs with similar attributes, which serve as the actual units
+of execution."
+
+A Work is a *Template* (static: payload spec, collections, parameters,
+resources) plus *Metadata* (dynamic: status, results, retries, bindings) —
+the split the workflow engine persists separately (§3.1).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+from repro.common.constants import WorkStatus
+from repro.common.exceptions import ValidationError
+from repro.common.utils import new_uid
+from repro.core.parameter import ParameterSet
+
+# ---------------------------------------------------------------------------
+# Task registry: named executable payloads (the "self-contained task" body).
+# The runtime resolves payload["name"] here; entries must be importable on
+# every worker, mirroring iDDS's requirement that payload code is resolvable
+# on the compute node.
+# ---------------------------------------------------------------------------
+_TASKS: dict[str, Callable[..., Any]] = {}
+
+
+def register_task(name: str, fn: Callable[..., Any] | None = None):
+    def deco(f: Callable[..., Any]) -> Callable[..., Any]:
+        _TASKS[name] = f
+        return f
+
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def get_task(name: str) -> Callable[..., Any]:
+    if name not in _TASKS:
+        raise ValidationError(f"unknown task {name!r} (register with register_task)")
+    return _TASKS[name]
+
+
+def has_task(name: str) -> bool:
+    return name in _TASKS
+
+
+class CollectionSpec:
+    """Input/output dataset attached to a Work (file-granular)."""
+
+    def __init__(
+        self,
+        name: str,
+        *,
+        scope: str = "default",
+        files: list[str] | None = None,
+        n_files: int | None = None,
+    ):
+        self.name = name
+        self.scope = scope
+        if files is None and n_files is not None:
+            files = [f"{name}.part{i:06d}" for i in range(n_files)]
+        self.files = files or []
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"name": self.name, "scope": self.scope, "files": self.files}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "CollectionSpec":
+        return cls(d["name"], scope=d.get("scope", "default"), files=list(d.get("files") or []))
+
+
+class Work:
+    def __init__(
+        self,
+        name: str | None = None,
+        *,
+        payload: Mapping[str, Any] | None = None,
+        task: str | None = None,
+        parameters: ParameterSet | Mapping[str, Any] | None = None,
+        inputs: list[CollectionSpec] | None = None,
+        outputs: list[CollectionSpec] | None = None,
+        n_jobs: int = 1,
+        priority: int = 0,
+        max_retries: int = 3,
+        site: str | None = None,
+        resources: Mapping[str, Any] | None = None,
+        work_type: str = "generic",
+    ):
+        # ---- Template (static) ----
+        self.name = name or f"work_{new_uid()}"
+        if payload is None:
+            if task is None:
+                raise ValidationError("Work needs payload= or task=")
+            payload = {"kind": "registered", "name": task}
+        self.payload = dict(payload)
+        self.parameters = (
+            parameters
+            if isinstance(parameters, ParameterSet)
+            else ParameterSet(parameters)
+        )
+        self.inputs = inputs or []
+        self.outputs = outputs or []
+        self.n_jobs = int(n_jobs)
+        self.priority = priority
+        self.max_retries = max_retries
+        self.site = site
+        self.resources = dict(resources or {})
+        self.work_type = work_type
+        # ---- Metadata (dynamic) ----
+        self.status = WorkStatus.NEW
+        self.results: dict[str, Any] = {}
+        self.errors: list[str] = []
+        self.retries = 0
+        self.transform_id: int | None = None
+        self.internal_id = new_uid("w")
+
+    # -- validation -----------------------------------------------------------
+    def validate(self) -> None:
+        if self.n_jobs < 1:
+            raise ValidationError(f"{self.name}: n_jobs must be >= 1")
+        kind = self.payload.get("kind")
+        if kind == "registered":
+            if not has_task(self.payload.get("name", "")):
+                raise ValidationError(
+                    f"{self.name}: unregistered task {self.payload.get('name')!r}"
+                )
+        elif kind not in ("function", "noop"):
+            raise ValidationError(f"{self.name}: unknown payload kind {kind!r}")
+
+    # -- serialization -----------------------------------------------------------
+    def template_dict(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "payload": self.payload,
+            "parameters": self.parameters.to_dict(),
+            "inputs": [c.to_dict() for c in self.inputs],
+            "outputs": [c.to_dict() for c in self.outputs],
+            "n_jobs": self.n_jobs,
+            "priority": self.priority,
+            "max_retries": self.max_retries,
+            "site": self.site,
+            "resources": self.resources,
+            "work_type": self.work_type,
+        }
+
+    def metadata_dict(self) -> dict[str, Any]:
+        return {
+            "status": str(self.status),
+            "results": self.results,
+            "errors": self.errors,
+            "retries": self.retries,
+            "transform_id": self.transform_id,
+            "internal_id": self.internal_id,
+        }
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"template": self.template_dict(), "metadata": self.metadata_dict()}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Work":
+        t = d["template"]
+        w = cls(
+            t["name"],
+            payload=t["payload"],
+            parameters=ParameterSet.from_dict(t.get("parameters")),
+            inputs=[CollectionSpec.from_dict(c) for c in t.get("inputs") or []],
+            outputs=[CollectionSpec.from_dict(c) for c in t.get("outputs") or []],
+            n_jobs=t.get("n_jobs", 1),
+            priority=t.get("priority", 0),
+            max_retries=t.get("max_retries", 3),
+            site=t.get("site"),
+            resources=t.get("resources"),
+            work_type=t.get("work_type", "generic"),
+        )
+        m = d.get("metadata") or {}
+        w.status = WorkStatus(m.get("status", "New"))
+        w.results = dict(m.get("results") or {})
+        w.errors = list(m.get("errors") or [])
+        w.retries = int(m.get("retries", 0))
+        w.transform_id = m.get("transform_id")
+        w.internal_id = m.get("internal_id", w.internal_id)
+        return w
+
+    # -- execution support ---------------------------------------------------
+    def bound_parameters(self, context: Mapping[str, Any]) -> dict[str, Any]:
+        return self.parameters.bind(context)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Work({self.name!r}, {self.payload.get('name', self.payload.get('kind'))}, {self.status})"

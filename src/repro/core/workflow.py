@@ -1,0 +1,339 @@
+"""Workflow — a DG of Works with Conditions, loops, dynamic expansion (§2.1).
+
+Semantics implemented here (and exercised by the property tests):
+
+* A work becomes **eligible** once every parent is terminal AND
+  - every *unconditioned* incoming edge's parent succeeded, AND
+  - if it has conditioned incoming edges, at least one evaluates True.
+* When all conditioned edges evaluate False (and no unconditioned edge
+  demands it), the work is **skipped** — terminal, does not fail the
+  workflow (conditional branching, §2.1).
+* **Loops** (cyclic graphs at the task level, §3.1.1): a named group of
+  works plus a continue-Condition; when the group finishes and the
+  condition holds, the group is re-instantiated as iteration ``k+1``
+  (``name#k`` node ids) — template stays fixed, metadata evolves.
+* **Dynamic expansion** (§2.2 code-based workflows): new works and edges
+  may be appended while the workflow runs (HPO/AL use this).
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Mapping
+
+from repro.common.constants import WorkStatus
+from repro.common.exceptions import WorkflowError
+from repro.common.utils import new_uid
+from repro.core.condition import Condition
+from repro.core.dag import DirectedGraph
+from repro.core.parameter import ParameterSet
+from repro.core.work import Work
+
+_TERMINAL = {
+    WorkStatus.FINISHED,
+    WorkStatus.SUBFINISHED,
+    WorkStatus.FAILED,
+    WorkStatus.CANCELLED,
+}
+_SUCCESS = {WorkStatus.FINISHED, WorkStatus.SUBFINISHED}
+
+
+def _iter_name(base: str, iteration: int) -> str:
+    return base if iteration == 0 else f"{base}#{iteration}"
+
+
+class LoopSpec:
+    """A loop over a group of work names with a continue condition."""
+
+    def __init__(
+        self,
+        name: str,
+        work_names: list[str],
+        condition: Condition,
+        *,
+        max_iterations: int = 100,
+    ):
+        self.name = name
+        self.work_names = list(work_names)
+        self.condition = condition
+        self.max_iterations = max_iterations
+        self.iteration = 0
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "work_names": self.work_names,
+            "condition": self.condition.to_dict(),
+            "max_iterations": self.max_iterations,
+            "iteration": self.iteration,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "LoopSpec":
+        sp = cls(
+            d["name"],
+            list(d["work_names"]),
+            Condition.from_dict(d["condition"]),
+            max_iterations=d.get("max_iterations", 100),
+        )
+        sp.iteration = d.get("iteration", 0)
+        return sp
+
+
+class Workflow:
+    def __init__(
+        self,
+        name: str | None = None,
+        *,
+        parameters: ParameterSet | Mapping[str, Any] | None = None,
+    ):
+        self.name = name or f"workflow_{new_uid()}"
+        self.parameters = (
+            parameters
+            if isinstance(parameters, ParameterSet)
+            else ParameterSet(parameters)
+        )
+        self.graph = DirectedGraph()
+        self.works: dict[str, Work] = {}
+        # (parent, child) -> Condition | None
+        self.edge_conditions: dict[tuple[str, str], Condition | None] = {}
+        self.loops: dict[str, LoopSpec] = {}
+        self.skipped: set[str] = set()
+        self.internal_id = new_uid("wf")
+
+    # -- construction -------------------------------------------------------
+    def add_work(self, work: Work) -> Work:
+        if work.name in self.works:
+            raise WorkflowError(f"duplicate work name {work.name!r}")
+        self.works[work.name] = work
+        self.graph.add_node(work.name)
+        return work
+
+    def add_dependency(
+        self, parent: str, child: str, condition: Condition | None = None
+    ) -> None:
+        for n in (parent, child):
+            if n not in self.works:
+                raise WorkflowError(f"unknown work {n!r}")
+        self.graph.add_edge(parent, child, conditioned=condition is not None)
+        self.edge_conditions[(parent, child)] = condition
+
+    def add_loop(
+        self,
+        name: str,
+        work_names: list[str],
+        condition: Condition,
+        *,
+        max_iterations: int = 100,
+    ) -> None:
+        for n in work_names:
+            if n not in self.works:
+                raise WorkflowError(f"unknown work {n!r} in loop {name!r}")
+        self.loops[name] = LoopSpec(
+            name, work_names, condition, max_iterations=max_iterations
+        )
+
+    def validate(self) -> None:
+        self.graph.validate()
+        for w in self.works.values():
+            w.validate()
+
+    # -- runtime context ----------------------------------------------------
+    def context(self) -> dict[str, Any]:
+        """Workflow context for Condition evaluation / Parameter binding:
+        {work_name: {status, outputs}} + workflow-level parameters."""
+        ctx: dict[str, Any] = {}
+        for name, w in self.works.items():
+            ctx[name] = {"status": str(w.status), "outputs": w.results}
+            # loop iterations resolve by their base name too (latest wins)
+            base = name.split("#")[0]
+            ctx[base] = ctx[name]
+        ctx["workflow"] = {
+            "name": self.name,
+            "parameters": self.parameters.bind({}),
+        }
+        return ctx
+
+    # -- scheduling ---------------------------------------------------------
+    def _edge_ok(self, parent: str, child: str, ctx: Mapping[str, Any]) -> bool | None:
+        """True → edge satisfied, False → edge vetoes, None → branch-off
+        (conditioned edge evaluating False)."""
+        cond = self.edge_conditions.get((parent, child))
+        pstat = self.works[parent].status
+        if parent in self.skipped:
+            # skipped parents satisfy nothing; child may still run through
+            # other parents — treat as branch-off
+            return None
+        if cond is None:
+            if pstat not in _TERMINAL:
+                return False  # still pending (caller treats as not-ready)
+            return True if pstat in _SUCCESS else False  # failed ⇒ hard veto
+        if pstat not in _TERMINAL:
+            return False
+        return True if cond.evaluate(ctx) else None
+
+    def ready_works(self) -> list[Work]:
+        """Works whose dependencies are satisfied now (status NEW only);
+        also marks branch-off works as skipped."""
+        ctx = self.context()
+        ready: list[Work] = []
+        for name, w in self.works.items():
+            if w.status != WorkStatus.NEW or name in self.skipped:
+                continue
+            parents = self.graph.parents(name)
+            if not parents:
+                ready.append(w)
+                continue
+            votes: list[bool | None] = []
+            pending = False
+            for p in parents:
+                # a conditioned edge from a non-terminal parent is "pending"
+                pstat = self.works[p].status
+                if pstat not in _TERMINAL and p not in self.skipped:
+                    pending = True
+                    break
+                votes.append(self._edge_ok(p, name, ctx))
+            if pending:
+                continue
+            if any(v is False for v in votes):
+                continue  # a hard dependency failed; Clerk decides retries
+            if all(v is None for v in votes):
+                # every edge branched off → skip this work and its exclusive
+                # descendants lazily (they will see skipped parents)
+                self._skip(name)
+                continue
+            ready.append(w)
+        return ready
+
+    def _skip(self, name: str) -> None:
+        self.skipped.add(name)
+        self.works[name].status = WorkStatus.CANCELLED
+        self.works[name].results.setdefault("skipped", True)
+
+    def blocked_failed_works(self) -> list[str]:
+        """Works permanently blocked by a failed hard dependency."""
+        ctx = self.context()
+        out = []
+        for name, w in self.works.items():
+            if w.status != WorkStatus.NEW or name in self.skipped:
+                continue
+            for p in self.graph.parents(name):
+                cond = self.edge_conditions.get((p, name))
+                if cond is None and self.works[p].status == WorkStatus.FAILED:
+                    out.append(name)
+                    break
+        return out
+
+    # -- loops ---------------------------------------------------------------
+    def expand_loops(self) -> list[Work]:
+        """Called by the Clerk when works finish: for each loop whose current
+        iteration is fully terminal and whose condition holds, instantiate
+        the next iteration.  Returns newly created works."""
+        ctx = self.context()
+        created: list[Work] = []
+        for loop in self.loops.values():
+            cur_names = [_iter_name(n, loop.iteration) for n in loop.work_names]
+            if not all(
+                self.works[n].status in _TERMINAL
+                for n in cur_names
+                if n in self.works
+            ):
+                continue
+            if loop.iteration + 1 >= loop.max_iterations:
+                continue
+            if not loop.condition.evaluate(ctx):
+                continue
+            loop.iteration += 1
+            mapping: dict[str, str] = {}
+            for base in loop.work_names:
+                prev = self.works[_iter_name(base, loop.iteration - 1)]
+                nxt = Work.from_dict(prev.to_dict())
+                nxt.name = _iter_name(base, loop.iteration)
+                nxt.status = WorkStatus.NEW
+                nxt.results = {}
+                nxt.errors = []
+                nxt.retries = 0
+                nxt.transform_id = None
+                nxt.internal_id = new_uid("w")
+                nxt.parameters["loop_iteration"] = loop.iteration
+                self.add_work(nxt)
+                mapping[base] = nxt.name
+                created.append(nxt)
+            # replicate intra-loop edges
+            for (p, c), cond in list(self.edge_conditions.items()):
+                pb, cb = p.split("#")[0], c.split("#")[0]
+                if pb in mapping and cb in mapping and "#" not in p and "#" not in c:
+                    self.add_dependency(mapping[pb], mapping[cb], cond)
+        return created
+
+    # -- dynamic expansion ------------------------------------------------------
+    def expand(
+        self,
+        new_works: Iterable[Work],
+        dependencies: Iterable[tuple[str, str]] = (),
+    ) -> list[Work]:
+        added = [self.add_work(w) for w in new_works]
+        for p, c in dependencies:
+            self.add_dependency(p, c)
+        return added
+
+    # -- aggregate state -------------------------------------------------------
+    def is_terminal(self) -> bool:
+        if any(w.status not in _TERMINAL for w in self.works.values()):
+            return False
+        # a loop that would still expand keeps the workflow alive
+        ctx = self.context()
+        for loop in self.loops.values():
+            if loop.iteration + 1 < loop.max_iterations and loop.condition.evaluate(
+                ctx
+            ):
+                return False
+        return True
+
+    def overall_status(self) -> WorkStatus:
+        stats = [w.status for n, w in self.works.items() if n not in self.skipped]
+        if not self.is_terminal():
+            return WorkStatus.RUNNING
+        if not stats:
+            return WorkStatus.FINISHED
+        if all(s == WorkStatus.FINISHED for s in stats):
+            return WorkStatus.FINISHED
+        if any(s in _SUCCESS for s in stats):
+            return WorkStatus.SUBFINISHED
+        return WorkStatus.FAILED
+
+    # -- serialization -----------------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "name": self.name,
+            "parameters": self.parameters.to_dict(),
+            "works": {n: w.to_dict() for n, w in self.works.items()},
+            "edges": [
+                {
+                    "parent": p,
+                    "child": c,
+                    "condition": cond.to_dict() if cond else None,
+                }
+                for (p, c), cond in self.edge_conditions.items()
+            ],
+            "loops": {n: sp.to_dict() for n, sp in self.loops.items()},
+            "skipped": sorted(self.skipped),
+            "internal_id": self.internal_id,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "Workflow":
+        wf = cls(d["name"], parameters=ParameterSet.from_dict(d.get("parameters")))
+        for n, wd in (d.get("works") or {}).items():
+            w = Work.from_dict(wd)
+            w.name = n
+            wf.add_work(w)
+        for e in d.get("edges") or []:
+            cond = Condition.from_dict(e["condition"]) if e.get("condition") else None
+            wf.add_dependency(e["parent"], e["child"], cond)
+        for n, sp in (d.get("loops") or {}).items():
+            wf.loops[n] = LoopSpec.from_dict(sp)
+        wf.skipped = set(d.get("skipped") or ())
+        wf.internal_id = d.get("internal_id", wf.internal_id)
+        return wf
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"Workflow({self.name!r}, works={len(self.works)})"

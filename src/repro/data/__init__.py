@@ -1,0 +1,4 @@
+"""Data substrate: file-granular datasets, streaming pipeline, Data
+Carousel (fine-grained tape staging, paper §4.1)."""
+from repro.data.carousel import StagingMetrics, TapeSimulator, run_carousel  # noqa: F401
+from repro.data.pipeline import DataPipeline, Shard, ShardedDataset  # noqa: F401

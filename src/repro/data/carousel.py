@@ -1,0 +1,183 @@
+"""Data Carousel — fine-grained tape-staging orchestration (paper §4.1).
+
+"iDDS enhances the WFM system with file-level granularity, enabling input
+data to be processed incrementally as it becomes available from tape ...
+maintaining a minimal input data footprint on disk."
+
+Components:
+
+* ``TapeSimulator`` — a tape library with limited parallel drives and a
+  per-file staging latency; ``request(files)`` queues recalls and invokes
+  a callback per staged file (plus disk-usage accounting with
+  ``consume``/``release`` so the footprint claim is measurable);
+* ``run_carousel`` — drives a staging campaign in either mode:
+  - ``"dataset"`` (the pre-iDDS baseline): downstream consumption starts
+    only after the ENTIRE dataset is on disk;
+  - ``"file"`` (the iDDS contribution): each file is handed downstream the
+    moment it lands, and its disk is reclaimed as soon as it is consumed.
+
+Metrics returned (time-to-first-consumption, disk high-water mark,
+makespan) reproduce the Fig. 9 mechanism quantitatively.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.common.utils import utc_now_ts
+
+
+@dataclass
+class StagingMetrics:
+    requested_files: int = 0
+    staged_files: int = 0
+    consumed_files: int = 0
+    first_stage_at: float | None = None
+    first_consume_at: float | None = None
+    started_at: float = field(default_factory=utc_now_ts)
+    finished_at: float | None = None
+    disk_bytes: int = 0
+    disk_high_water: int = 0
+
+    def summary(self) -> dict[str, Any]:
+        t0 = self.started_at
+        return {
+            "requested_files": self.requested_files,
+            "staged_files": self.staged_files,
+            "consumed_files": self.consumed_files,
+            "time_to_first_stage_s": (self.first_stage_at - t0)
+            if self.first_stage_at
+            else None,
+            "time_to_first_consume_s": (self.first_consume_at - t0)
+            if self.first_consume_at
+            else None,
+            "makespan_s": (self.finished_at - t0) if self.finished_at else None,
+            "disk_high_water_bytes": self.disk_high_water,
+        }
+
+
+class TapeSimulator:
+    """Tape library: ``drives`` parallel recalls, ``latency_s`` each."""
+
+    def __init__(
+        self,
+        *,
+        drives: int = 4,
+        latency_s: float = 0.01,
+        file_bytes: int = 1 << 20,
+    ):
+        self.drives = drives
+        self.latency_s = latency_s
+        self.file_bytes = file_bytes
+        self.metrics = StagingMetrics()
+        self._q: list[tuple[str, Callable[[str], None]]] = []
+        self._cv = threading.Condition()
+        self._stop = False
+        self._threads = [
+            threading.Thread(target=self._drive_loop, daemon=True, name=f"tape-drive-{i}")
+            for i in range(drives)
+        ]
+        for t in self._threads:
+            t.start()
+
+    def request(self, files: list[str], on_staged: Callable[[str], None]) -> None:
+        with self._cv:
+            self.metrics.requested_files += len(files)
+            for f in files:
+                self._q.append((f, on_staged))
+            self._cv.notify_all()
+
+    def consume(self, file: str) -> None:
+        """Downstream finished with the file → reclaim disk."""
+        with self._cv:
+            self.metrics.consumed_files += 1
+            self.metrics.disk_bytes = max(0, self.metrics.disk_bytes - self.file_bytes)
+            if self.metrics.first_consume_at is None:
+                self.metrics.first_consume_at = utc_now_ts()
+
+    def mark_consume_start(self) -> None:
+        with self._cv:
+            if self.metrics.first_consume_at is None:
+                self.metrics.first_consume_at = utc_now_ts()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stop = True
+            self._cv.notify_all()
+
+    def _drive_loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._q and not self._stop:
+                    self._cv.wait(timeout=0.1)
+                if self._stop and not self._q:
+                    return
+                file, cb = self._q.pop(0)
+            time.sleep(self.latency_s)
+            with self._cv:
+                self.metrics.staged_files += 1
+                self.metrics.disk_bytes += self.file_bytes
+                self.metrics.disk_high_water = max(
+                    self.metrics.disk_high_water, self.metrics.disk_bytes
+                )
+                if self.metrics.first_stage_at is None:
+                    self.metrics.first_stage_at = utc_now_ts()
+            try:
+                cb(file)
+            except Exception:  # noqa: BLE001 - staging callback is best-effort
+                pass
+
+
+def run_carousel(
+    files: list[str],
+    *,
+    mode: str = "file",
+    drives: int = 4,
+    latency_s: float = 0.002,
+    file_bytes: int = 1 << 20,
+    consume_s: float = 0.0,
+    on_available: Callable[[str], None] | None = None,
+) -> dict[str, Any]:
+    """Run a staging campaign and CONSUME each file (simulated processing),
+    honouring the mode's release policy.  Returns metrics summary."""
+    tape = TapeSimulator(drives=drives, latency_s=latency_s, file_bytes=file_bytes)
+    staged: list[str] = []
+    done = threading.Event()
+    lock = threading.Lock()
+
+    def consume_one(f: str) -> None:
+        tape.mark_consume_start()
+        if consume_s:
+            time.sleep(consume_s)
+        if on_available is not None:
+            on_available(f)
+        tape.consume(f)
+
+    consumed_count = [0]
+
+    def on_staged_file_mode(f: str) -> None:
+        consume_one(f)
+        with lock:
+            consumed_count[0] += 1
+            if consumed_count[0] == len(files):
+                done.set()
+
+    def on_staged_dataset_mode(f: str) -> None:
+        with lock:
+            staged.append(f)
+            complete = len(staged) == len(files)
+        if complete:
+            for g in staged:
+                consume_one(g)
+            done.set()
+
+    cb = on_staged_file_mode if mode == "file" else on_staged_dataset_mode
+    tape.request(list(files), cb)
+    done.wait(timeout=max(60.0, len(files) * latency_s * 20))
+    tape.metrics.finished_at = utc_now_ts()
+    tape.stop()
+    out = tape.metrics.summary()
+    out["mode"] = mode
+    return out

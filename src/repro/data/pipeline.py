@@ -1,0 +1,142 @@
+"""Tokenized data pipeline with file-granular availability.
+
+Shards are deterministic synthetic token files (seeded by shard id), so
+any worker can materialize any shard without real storage — what matters
+for the reproduction is the *availability protocol*: the pipeline only
+consumes shards that have been staged (released by the Data Carousel),
+and exposes consumption callbacks so the carousel can reclaim disk.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Iterator
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class Shard:
+    name: str
+    index: int
+    n_tokens: int
+    bytes: int
+
+
+class ShardedDataset:
+    """A dataset = ordered list of token shards (files)."""
+
+    def __init__(
+        self,
+        name: str,
+        *,
+        n_shards: int = 64,
+        tokens_per_shard: int = 65536,
+        vocab_size: int = 50257,
+        seed: int = 0,
+    ):
+        self.name = name
+        self.vocab_size = vocab_size
+        self.seed = seed
+        self.tokens_per_shard = tokens_per_shard
+        self.shards = [
+            Shard(
+                name=f"{name}.part{i:06d}",
+                index=i,
+                n_tokens=tokens_per_shard,
+                bytes=tokens_per_shard * 4,
+            )
+            for i in range(n_shards)
+        ]
+
+    def file_names(self) -> list[str]:
+        return [s.name for s in self.shards]
+
+    def load_shard(self, shard: Shard | int) -> np.ndarray:
+        """Materialize shard tokens (deterministic)."""
+        idx = shard.index if isinstance(shard, Shard) else shard
+        rng = np.random.default_rng(self.seed * 1_000_003 + idx)
+        return rng.integers(
+            0, self.vocab_size, size=self.tokens_per_shard, dtype=np.int32
+        )
+
+
+class DataPipeline:
+    """Streams (tokens, labels) batches from *staged* shards only.
+
+    ``stage(shard_name)`` is called by the carousel as files land on disk;
+    ``__iter__`` blocks until enough staged tokens exist for the next
+    batch, consuming shards in staging order (fine-grained processing —
+    compute starts with the first shard, not the last)."""
+
+    def __init__(
+        self,
+        dataset: ShardedDataset,
+        *,
+        batch_size: int,
+        seq_len: int,
+        on_consumed: Callable[[str], None] | None = None,
+    ):
+        self.dataset = dataset
+        self.batch_size = batch_size
+        self.seq_len = seq_len
+        self.on_consumed = on_consumed
+        self._staged: list[Shard] = []
+        self._by_name = {s.name: s for s in dataset.shards}
+        self._buffer = np.zeros((0,), dtype=np.int32)
+        self._cv = threading.Condition()
+        self._closed = False
+        self.consumed_shards = 0
+
+    def stage(self, shard_name: str) -> None:
+        with self._cv:
+            shard = self._by_name.get(shard_name)
+            if shard is not None:
+                self._staged.append(shard)
+                self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+
+    def staged_count(self) -> int:
+        with self._cv:
+            return len(self._staged)
+
+    def _need(self) -> int:
+        return self.batch_size * (self.seq_len + 1)
+
+    def next_batch(self, timeout: float = 30.0) -> dict[str, np.ndarray] | None:
+        """Blocks until a full batch of staged tokens is available."""
+        import time
+
+        deadline = time.monotonic() + timeout
+        while self._buffer.size < self._need():
+            with self._cv:
+                if self._staged:
+                    shard = self._staged.pop(0)
+                else:
+                    if self._closed:
+                        return None
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return None
+                    self._cv.wait(timeout=min(0.05, remaining))
+                    continue
+            tokens = self.dataset.load_shard(shard)
+            self._buffer = np.concatenate([self._buffer, tokens])
+            self.consumed_shards += 1
+            if self.on_consumed:
+                self.on_consumed(shard.name)
+        need = self._need()
+        chunk, self._buffer = self._buffer[:need], self._buffer[need:]
+        arr = chunk.reshape(self.batch_size, self.seq_len + 1)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+    def __iter__(self) -> Iterator[dict[str, np.ndarray]]:
+        while True:
+            batch = self.next_batch()
+            if batch is None:
+                return
+            yield batch

@@ -1,0 +1,19 @@
+"""Relational backbone of the orchestrator (paper §3.2.1).
+
+A thin, dependency-free ORM over sqlite3 standing in for
+SQLAlchemy+Oracle/PostgreSQL: same relational model iDDS uses
+(requests → transforms → collections → contents, processings, messages,
+events), schema versioning with forward migrations, and idempotent-claim
+primitives used by the distributed agents.
+"""
+from repro.db.engine import Database, get_database, set_database  # noqa: F401
+from repro.db.stores import (  # noqa: F401
+    RequestStore,
+    TransformStore,
+    CollectionStore,
+    ContentStore,
+    ProcessingStore,
+    MessageStore,
+    EventStore,
+    HealthStore,
+)

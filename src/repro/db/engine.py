@@ -1,0 +1,181 @@
+"""Database engine: connection management, transactions, migrations.
+
+Mirrors the paper's use of SQLAlchemy (ORM over Oracle/PostgreSQL/MySQL/
+SQLite) + Alembic (schema versioning, §3.2.1).  Here sqlite3 is the one
+backend available offline; the engine keeps the same shape: a versioned
+schema with ordered migrations, dynamic create/teardown for tests, and
+thread-safe access for multi-threaded agent deployments.
+"""
+from __future__ import annotations
+
+import sqlite3
+import threading
+from contextlib import contextmanager
+from typing import Any, Iterator, Sequence
+
+from repro.common.exceptions import DatabaseError
+from repro.db.schema import MIGRATIONS, SCHEMA_VERSION
+
+
+class Database:
+    """Thread-safe sqlite wrapper with one connection per thread.
+
+    sqlite allows many readers / one writer; WAL mode plus short
+    transactions keeps the multi-agent workload flowing.  ``memory=True``
+    builds a process-private shared-cache in-memory database (used by unit
+    tests and the LocalEventBus deployments).
+    """
+
+    def __init__(self, path: str = ":memory:", *, fast: bool = True):
+        self._path = path
+        self._memory = path == ":memory:"
+        self._fast = fast
+        self._local = threading.local()
+        self._lock = threading.RLock()
+        self._mem_conn: sqlite3.Connection | None = None
+        if self._memory:
+            # One shared connection guarded by a lock: ':memory:' DBs are
+            # per-connection, so threads must share.
+            self._mem_conn = self._new_conn()
+        self.migrate()
+
+    # -- connections -----------------------------------------------------
+    def _new_conn(self) -> sqlite3.Connection:
+        conn = sqlite3.connect(
+            self._path,
+            timeout=30.0,
+            check_same_thread=False,
+            isolation_level=None,  # autocommit; we BEGIN explicitly
+        )
+        conn.row_factory = sqlite3.Row
+        conn.execute("PRAGMA foreign_keys=ON")
+        if not self._memory:
+            conn.execute("PRAGMA journal_mode=WAL")
+            if self._fast:
+                conn.execute("PRAGMA synchronous=NORMAL")
+        return conn
+
+    def _conn(self) -> sqlite3.Connection:
+        if self._memory:
+            assert self._mem_conn is not None
+            return self._mem_conn
+        conn = getattr(self._local, "conn", None)
+        if conn is None:
+            conn = self._new_conn()
+            self._local.conn = conn
+        return conn
+
+    @contextmanager
+    def tx(self) -> Iterator[sqlite3.Connection]:
+        """Write transaction.  Serialized by a process-level lock for
+        ':memory:' databases; file databases rely on sqlite's own locking."""
+        conn = self._conn()
+        with self._lock:
+            try:
+                conn.execute("BEGIN IMMEDIATE")
+                yield conn
+                conn.execute("COMMIT")
+            except BaseException:
+                try:
+                    conn.execute("ROLLBACK")
+                except sqlite3.Error:  # pragma: no cover - already rolled back
+                    pass
+                raise
+
+    # -- query helpers ---------------------------------------------------
+    def query(self, sql: str, params: Sequence[Any] = ()) -> list[sqlite3.Row]:
+        with self._lock:
+            return list(self._conn().execute(sql, params).fetchall())
+
+    def query_one(self, sql: str, params: Sequence[Any] = ()) -> sqlite3.Row | None:
+        rows = self.query(sql, params)
+        return rows[0] if rows else None
+
+    def execute(self, sql: str, params: Sequence[Any] = ()) -> int:
+        """Single write statement in its own transaction; returns rowcount."""
+        with self.tx() as conn:
+            cur = conn.execute(sql, params)
+            return cur.rowcount
+
+    def executemany(self, sql: str, rows: Sequence[Sequence[Any]]) -> int:
+        if not rows:
+            return 0
+        with self.tx() as conn:
+            cur = conn.executemany(sql, rows)
+            return cur.rowcount
+
+    def insert(self, sql: str, params: Sequence[Any] = ()) -> int:
+        """Insert and return lastrowid."""
+        with self.tx() as conn:
+            cur = conn.execute(sql, params)
+            rid = cur.lastrowid
+            if rid is None:  # pragma: no cover - sqlite always sets it
+                raise DatabaseError("insert produced no rowid")
+            return rid
+
+    # -- schema ----------------------------------------------------------
+    def schema_version(self) -> int:
+        try:
+            row = self.query_one("SELECT version FROM schema_version")
+        except sqlite3.OperationalError:
+            return 0
+        return int(row["version"]) if row else 0
+
+    def migrate(self, target: int | None = None) -> int:
+        """Run forward migrations up to ``target`` (Alembic-style)."""
+        target = SCHEMA_VERSION if target is None else target
+        current = self.schema_version()
+        if current > target:
+            raise DatabaseError(
+                f"schema version {current} is newer than target {target}"
+            )
+        with self.tx() as conn:
+            for version, statements in MIGRATIONS:
+                if current < version <= target:
+                    for stmt in statements:
+                        conn.execute(stmt)
+                    conn.execute("DELETE FROM schema_version")
+                    conn.execute(
+                        "INSERT INTO schema_version(version) VALUES (?)", (version,)
+                    )
+        return self.schema_version()
+
+    def teardown(self) -> None:
+        """Drop all tables (dynamic teardown for tests, §3.2.1)."""
+        rows = self.query(
+            "SELECT name FROM sqlite_master WHERE type='table' "
+            "AND name NOT LIKE 'sqlite_%'"
+        )
+        with self.tx() as conn:
+            for row in rows:
+                conn.execute(f"DROP TABLE IF EXISTS {row['name']}")
+
+    def close(self) -> None:
+        if self._memory and self._mem_conn is not None:
+            self._mem_conn.close()
+            self._mem_conn = None
+            return
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            conn.close()
+            self._local.conn = None
+
+
+# -- process-global default database (what agents/REST share) -------------
+_default_db: Database | None = None
+_default_lock = threading.Lock()
+
+
+def get_database() -> Database:
+    global _default_db
+    with _default_lock:
+        if _default_db is None:
+            _default_db = Database(":memory:")
+        return _default_db
+
+
+def set_database(db: Database) -> Database:
+    global _default_db
+    with _default_lock:
+        _default_db = db
+    return db

@@ -1,0 +1,187 @@
+"""Versioned schema (Alembic-style ordered migrations, paper §3.2.1).
+
+Relational model follows iDDS:
+
+    requests ──< transforms ──< collections ──< contents
+                     │                             │
+                     └──< processings         content_deps (job-level DAG)
+    messages, events, health
+
+``contents`` carries a ``dep_count`` counter (number of unresolved
+dependencies).  Releasing a finished content decrements its dependents'
+counters; rows hitting zero are *activated* — this is the O(edges)
+fine-grained release engine behind the Rubin 100k-job DAG use case (§4.2)
+and the Data Carousel file-level staging (§4.1).
+"""
+from __future__ import annotations
+
+SCHEMA_VERSION = 3
+
+_V1 = [
+    """
+    CREATE TABLE IF NOT EXISTS schema_version (
+        version INTEGER NOT NULL
+    )
+    """,
+    """
+    CREATE TABLE requests (
+        request_id      INTEGER PRIMARY KEY AUTOINCREMENT,
+        scope           TEXT NOT NULL DEFAULT 'default',
+        name            TEXT NOT NULL,
+        requester       TEXT NOT NULL DEFAULT 'anonymous',
+        request_type    TEXT NOT NULL DEFAULT 'workflow',
+        status          TEXT NOT NULL,
+        priority        INTEGER NOT NULL DEFAULT 0,
+        locking         INTEGER NOT NULL DEFAULT 0,
+        workflow        TEXT,                 -- serialized Workflow (JSON)
+        request_metadata TEXT,
+        errors          TEXT,
+        created_at      REAL NOT NULL,
+        updated_at      REAL NOT NULL,
+        next_poll_at    REAL NOT NULL DEFAULT 0
+    )
+    """,
+    """
+    CREATE TABLE transforms (
+        transform_id    INTEGER PRIMARY KEY AUTOINCREMENT,
+        request_id      INTEGER NOT NULL REFERENCES requests(request_id),
+        node_id         TEXT NOT NULL,        -- Work node name in the workflow
+        transform_type  TEXT NOT NULL DEFAULT 'generic',
+        status          TEXT NOT NULL,
+        priority        INTEGER NOT NULL DEFAULT 0,
+        retries         INTEGER NOT NULL DEFAULT 0,
+        max_retries     INTEGER NOT NULL DEFAULT 3,
+        locking         INTEGER NOT NULL DEFAULT 0,
+        site            TEXT,                 -- runtime placement (mesh slice)
+        work            TEXT,                 -- serialized Work (JSON)
+        transform_metadata TEXT,
+        errors          TEXT,
+        created_at      REAL NOT NULL,
+        updated_at      REAL NOT NULL,
+        next_poll_at    REAL NOT NULL DEFAULT 0
+    )
+    """,
+    """
+    CREATE TABLE collections (
+        coll_id         INTEGER PRIMARY KEY AUTOINCREMENT,
+        request_id      INTEGER NOT NULL,
+        transform_id    INTEGER NOT NULL REFERENCES transforms(transform_id),
+        relation_type   TEXT NOT NULL,        -- Input / Output / Log
+        scope           TEXT NOT NULL DEFAULT 'default',
+        name            TEXT NOT NULL,
+        status          TEXT NOT NULL,
+        total_files     INTEGER NOT NULL DEFAULT 0,
+        processed_files INTEGER NOT NULL DEFAULT 0,
+        failed_files    INTEGER NOT NULL DEFAULT 0,
+        coll_metadata   TEXT,
+        created_at      REAL NOT NULL,
+        updated_at      REAL NOT NULL
+    )
+    """,
+    """
+    CREATE TABLE contents (
+        content_id      INTEGER PRIMARY KEY AUTOINCREMENT,
+        coll_id         INTEGER NOT NULL REFERENCES collections(coll_id),
+        request_id      INTEGER NOT NULL,
+        transform_id    INTEGER NOT NULL,
+        name            TEXT NOT NULL,
+        status          TEXT NOT NULL,
+        content_type    TEXT NOT NULL DEFAULT 'file',
+        min_id          INTEGER NOT NULL DEFAULT 0,
+        max_id          INTEGER NOT NULL DEFAULT 0,
+        bytes           INTEGER NOT NULL DEFAULT 0,
+        dep_count       INTEGER NOT NULL DEFAULT 0,
+        content_metadata TEXT,
+        created_at      REAL NOT NULL,
+        updated_at      REAL NOT NULL
+    )
+    """,
+    """
+    CREATE TABLE processings (
+        processing_id   INTEGER PRIMARY KEY AUTOINCREMENT,
+        transform_id    INTEGER NOT NULL REFERENCES transforms(transform_id),
+        request_id      INTEGER NOT NULL,
+        status          TEXT NOT NULL,
+        locking         INTEGER NOT NULL DEFAULT 0,
+        workload_id     TEXT,                 -- id in the workload runtime
+        site            TEXT,
+        submitted_at    REAL,
+        finished_at     REAL,
+        processing_metadata TEXT,
+        errors          TEXT,
+        created_at      REAL NOT NULL,
+        updated_at      REAL NOT NULL,
+        next_poll_at    REAL NOT NULL DEFAULT 0
+    )
+    """,
+    """
+    CREATE TABLE messages (
+        msg_id          INTEGER PRIMARY KEY AUTOINCREMENT,
+        msg_type        TEXT NOT NULL,
+        status          TEXT NOT NULL,
+        destination     TEXT NOT NULL,
+        request_id      INTEGER,
+        transform_id    INTEGER,
+        processing_id   INTEGER,
+        content         TEXT,
+        created_at      REAL NOT NULL,
+        delivered_at    REAL
+    )
+    """,
+]
+
+_V2 = [
+    """
+    CREATE TABLE content_deps (
+        content_id      INTEGER NOT NULL REFERENCES contents(content_id),
+        dep_content_id  INTEGER NOT NULL REFERENCES contents(content_id),
+        PRIMARY KEY (content_id, dep_content_id)
+    ) WITHOUT ROWID
+    """,
+    """
+    CREATE TABLE events (
+        event_id        INTEGER PRIMARY KEY AUTOINCREMENT,
+        event_type      TEXT NOT NULL,
+        priority        INTEGER NOT NULL DEFAULT 0,
+        merge_key       TEXT,
+        payload         TEXT,
+        status          TEXT NOT NULL DEFAULT 'New',
+        claimed_by      TEXT,
+        created_at      REAL NOT NULL,
+        claimed_at      REAL
+    )
+    """,
+]
+
+_V3 = [
+    """
+    CREATE TABLE health (
+        agent           TEXT NOT NULL,
+        hostname        TEXT NOT NULL,
+        thread_name     TEXT NOT NULL,
+        payload         TEXT,
+        updated_at      REAL NOT NULL,
+        PRIMARY KEY (agent, hostname, thread_name)
+    )
+    """,
+    "CREATE INDEX idx_requests_status_poll ON requests(status, next_poll_at)",
+    "CREATE INDEX idx_transforms_status_poll ON transforms(status, next_poll_at)",
+    "CREATE INDEX idx_transforms_request ON transforms(request_id)",
+    "CREATE INDEX idx_collections_transform ON collections(transform_id)",
+    "CREATE INDEX idx_contents_coll_status ON contents(coll_id, status)",
+    "CREATE INDEX idx_contents_transform_status ON contents(transform_id, status)",
+    "CREATE INDEX idx_content_deps_dep ON content_deps(dep_content_id)",
+    "CREATE INDEX idx_processings_status_poll ON processings(status, next_poll_at)",
+    "CREATE INDEX idx_processings_transform ON processings(transform_id)",
+    "CREATE INDEX idx_messages_status_dest ON messages(status, destination)",
+    "CREATE INDEX idx_events_status_prio ON events(status, priority DESC, event_id)",
+    "CREATE INDEX idx_events_merge ON events(merge_key, status)",
+]
+
+# Ordered (version, statements) pairs — forward migrations only, applied in
+# sequence by Database.migrate().
+MIGRATIONS: list[tuple[int, list[str]]] = [
+    (1, _V1),
+    (2, _V2),
+    (3, _V3),
+]

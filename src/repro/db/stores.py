@@ -1,0 +1,795 @@
+"""Typed store accessors over the relational backbone.
+
+The two roles the paper assigns the database (§3.2.1) are implemented here:
+
+1. *Persistence & traceability* — requests, their workflow blobs, and the
+   relationships among workflow objects (transforms/collections/contents).
+2. *Status-driven coordination* — every store exposes ``poll_*`` (lazy-mode
+   scheduling: rows idle beyond ``next_poll_at``) and ``claim``/``unlock``
+   (idempotent triggering: status+timestamp updates so concurrent agents
+   never double-process, §3.4.3).
+"""
+from __future__ import annotations
+
+import socket
+import threading
+from dataclasses import dataclass
+from typing import Any, Iterable, Sequence
+
+from repro.common.constants import (
+    CollectionRelation,
+    CollectionStatus,
+    ContentStatus,
+    EventPriority,
+    MessageDestination,
+    MessageStatus,
+    ProcessingStatus,
+    RequestStatus,
+    TransformStatus,
+)
+from repro.common.exceptions import NotFoundError
+from repro.common.utils import chunked, json_dumps, json_loads, utc_now_ts
+from repro.db.engine import Database
+
+_HOSTNAME = socket.gethostname()
+
+
+def _row_to_dict(row: Any) -> dict[str, Any]:
+    d = dict(row)
+    for key in (
+        "workflow",
+        "work",
+        "request_metadata",
+        "transform_metadata",
+        "coll_metadata",
+        "content_metadata",
+        "processing_metadata",
+        "payload",
+        "content",
+        "errors",
+    ):
+        if key in d and isinstance(d[key], str):
+            try:
+                d[key] = json_loads(d[key])
+            except Exception:
+                pass
+    return d
+
+
+class _BaseStore:
+    def __init__(self, db: Database):
+        self.db = db
+
+
+# ---------------------------------------------------------------------------
+# Requests
+# ---------------------------------------------------------------------------
+class RequestStore(_BaseStore):
+    def add(
+        self,
+        name: str,
+        *,
+        scope: str = "default",
+        requester: str = "anonymous",
+        request_type: str = "workflow",
+        status: RequestStatus = RequestStatus.NEW,
+        priority: int = 0,
+        workflow: Any = None,
+        metadata: Any = None,
+    ) -> int:
+        now = utc_now_ts()
+        return self.db.insert(
+            "INSERT INTO requests(scope,name,requester,request_type,status,"
+            "priority,workflow,request_metadata,created_at,updated_at,next_poll_at)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?,0)",
+            (
+                scope,
+                name,
+                requester,
+                request_type,
+                str(status),
+                priority,
+                json_dumps(workflow) if workflow is not None else None,
+                json_dumps(metadata) if metadata is not None else None,
+                now,
+                now,
+            ),
+        )
+
+    def get(self, request_id: int) -> dict[str, Any]:
+        row = self.db.query_one(
+            "SELECT * FROM requests WHERE request_id=?", (request_id,)
+        )
+        if row is None:
+            raise NotFoundError(f"request {request_id} not found")
+        return _row_to_dict(row)
+
+    def list(
+        self, *, status: RequestStatus | None = None, limit: int = 100
+    ) -> list[dict[str, Any]]:
+        if status is None:
+            rows = self.db.query(
+                "SELECT * FROM requests ORDER BY request_id DESC LIMIT ?", (limit,)
+            )
+        else:
+            rows = self.db.query(
+                "SELECT * FROM requests WHERE status=? "
+                "ORDER BY request_id DESC LIMIT ?",
+                (str(status), limit),
+            )
+        return [_row_to_dict(r) for r in rows]
+
+    def update(self, request_id: int, **fields: Any) -> None:
+        _update_row(self.db, "requests", "request_id", request_id, fields)
+
+    def claim(self, request_id: int, *, stale_s: float = 300.0) -> bool:
+        return _claim_row(self.db, "requests", "request_id", request_id, stale_s)
+
+    def unlock(self, request_id: int) -> None:
+        self.db.execute(
+            "UPDATE requests SET locking=0, updated_at=? WHERE request_id=?",
+            (utc_now_ts(), request_id),
+        )
+
+    def poll_ready(
+        self,
+        statuses: Sequence[RequestStatus],
+        *,
+        limit: int = 16,
+        now: float | None = None,
+    ) -> list[dict[str, Any]]:
+        """Lazy-mode scheduling: rows in ``statuses`` idle past next_poll_at."""
+        now = utc_now_ts() if now is None else now
+        marks = ",".join("?" for _ in statuses)
+        rows = self.db.query(
+            f"SELECT * FROM requests WHERE status IN ({marks}) "
+            "AND next_poll_at<=? AND locking=0 "
+            "ORDER BY priority DESC, request_id LIMIT ?",
+            [str(s) for s in statuses] + [now, limit],
+        )
+        return [_row_to_dict(r) for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# Transforms
+# ---------------------------------------------------------------------------
+class TransformStore(_BaseStore):
+    def add(
+        self,
+        request_id: int,
+        node_id: str,
+        *,
+        transform_type: str = "generic",
+        status: TransformStatus = TransformStatus.NEW,
+        priority: int = 0,
+        max_retries: int = 3,
+        work: Any = None,
+        site: str | None = None,
+        metadata: Any = None,
+    ) -> int:
+        now = utc_now_ts()
+        return self.db.insert(
+            "INSERT INTO transforms(request_id,node_id,transform_type,status,"
+            "priority,max_retries,work,site,transform_metadata,created_at,"
+            "updated_at,next_poll_at) VALUES (?,?,?,?,?,?,?,?,?,?,?,0)",
+            (
+                request_id,
+                node_id,
+                transform_type,
+                str(status),
+                priority,
+                max_retries,
+                json_dumps(work) if work is not None else None,
+                site,
+                json_dumps(metadata) if metadata is not None else None,
+                now,
+                now,
+            ),
+        )
+
+    def get(self, transform_id: int) -> dict[str, Any]:
+        row = self.db.query_one(
+            "SELECT * FROM transforms WHERE transform_id=?", (transform_id,)
+        )
+        if row is None:
+            raise NotFoundError(f"transform {transform_id} not found")
+        return _row_to_dict(row)
+
+    def by_request(self, request_id: int) -> list[dict[str, Any]]:
+        rows = self.db.query(
+            "SELECT * FROM transforms WHERE request_id=? ORDER BY transform_id",
+            (request_id,),
+        )
+        return [_row_to_dict(r) for r in rows]
+
+    def by_node(self, request_id: int, node_id: str) -> dict[str, Any] | None:
+        row = self.db.query_one(
+            "SELECT * FROM transforms WHERE request_id=? AND node_id=? "
+            "ORDER BY transform_id DESC LIMIT 1",
+            (request_id, node_id),
+        )
+        return _row_to_dict(row) if row else None
+
+    def update(self, transform_id: int, **fields: Any) -> None:
+        _update_row(self.db, "transforms", "transform_id", transform_id, fields)
+
+    def claim(self, transform_id: int, *, stale_s: float = 300.0) -> bool:
+        return _claim_row(self.db, "transforms", "transform_id", transform_id, stale_s)
+
+    def unlock(self, transform_id: int) -> None:
+        self.db.execute(
+            "UPDATE transforms SET locking=0, updated_at=? WHERE transform_id=?",
+            (utc_now_ts(), transform_id),
+        )
+
+    def poll_ready(
+        self,
+        statuses: Sequence[TransformStatus],
+        *,
+        limit: int = 16,
+        now: float | None = None,
+    ) -> list[dict[str, Any]]:
+        now = utc_now_ts() if now is None else now
+        marks = ",".join("?" for _ in statuses)
+        rows = self.db.query(
+            f"SELECT * FROM transforms WHERE status IN ({marks}) "
+            "AND next_poll_at<=? AND locking=0 "
+            "ORDER BY priority DESC, transform_id LIMIT ?",
+            [str(s) for s in statuses] + [now, limit],
+        )
+        return [_row_to_dict(r) for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# Collections & Contents (the fine-grained data layer)
+# ---------------------------------------------------------------------------
+class CollectionStore(_BaseStore):
+    def add(
+        self,
+        request_id: int,
+        transform_id: int,
+        name: str,
+        *,
+        relation: CollectionRelation,
+        scope: str = "default",
+        status: CollectionStatus = CollectionStatus.NEW,
+        total_files: int = 0,
+        metadata: Any = None,
+    ) -> int:
+        now = utc_now_ts()
+        return self.db.insert(
+            "INSERT INTO collections(request_id,transform_id,relation_type,scope,"
+            "name,status,total_files,coll_metadata,created_at,updated_at)"
+            " VALUES (?,?,?,?,?,?,?,?,?,?)",
+            (
+                request_id,
+                transform_id,
+                str(relation),
+                scope,
+                name,
+                str(status),
+                total_files,
+                json_dumps(metadata) if metadata is not None else None,
+                now,
+                now,
+            ),
+        )
+
+    def get(self, coll_id: int) -> dict[str, Any]:
+        row = self.db.query_one("SELECT * FROM collections WHERE coll_id=?", (coll_id,))
+        if row is None:
+            raise NotFoundError(f"collection {coll_id} not found")
+        return _row_to_dict(row)
+
+    def by_transform(
+        self, transform_id: int, relation: CollectionRelation | None = None
+    ) -> list[dict[str, Any]]:
+        if relation is None:
+            rows = self.db.query(
+                "SELECT * FROM collections WHERE transform_id=?", (transform_id,)
+            )
+        else:
+            rows = self.db.query(
+                "SELECT * FROM collections WHERE transform_id=? AND relation_type=?",
+                (transform_id, str(relation)),
+            )
+        return [_row_to_dict(r) for r in rows]
+
+    def update(self, coll_id: int, **fields: Any) -> None:
+        _update_row(self.db, "collections", "coll_id", coll_id, fields)
+
+    def refresh_counters(self, coll_id: int) -> dict[str, int]:
+        """Recompute processed/failed counters from contents (set-based)."""
+        now = utc_now_ts()
+        row = self.db.query_one(
+            "SELECT COUNT(*) AS total,"
+            " SUM(CASE WHEN status IN ('Available','Finished') THEN 1 ELSE 0 END)"
+            "   AS done,"
+            " SUM(CASE WHEN status IN ('Failed','Missing','Cancelled') THEN 1 ELSE 0"
+            " END) AS failed "
+            "FROM contents WHERE coll_id=?",
+            (coll_id,),
+        )
+        assert row is not None
+        total = int(row["total"] or 0)
+        done = int(row["done"] or 0)
+        failed = int(row["failed"] or 0)
+        self.db.execute(
+            "UPDATE collections SET total_files=?, processed_files=?, "
+            "failed_files=?, updated_at=? WHERE coll_id=?",
+            (total, done, failed, now, coll_id),
+        )
+        return {"total": total, "processed": done, "failed": failed}
+
+
+class ContentStore(_BaseStore):
+    def add_many(
+        self,
+        coll_id: int,
+        request_id: int,
+        transform_id: int,
+        items: Sequence[dict[str, Any]],
+    ) -> list[int]:
+        """Bulk-register contents; returns content_ids in input order."""
+        now = utc_now_ts()
+        ids: list[int] = []
+        with self.db.tx() as conn:
+            for it in items:
+                cur = conn.execute(
+                    "INSERT INTO contents(coll_id,request_id,transform_id,name,"
+                    "status,content_type,min_id,max_id,bytes,dep_count,"
+                    "content_metadata,created_at,updated_at)"
+                    " VALUES (?,?,?,?,?,?,?,?,?,?,?,?,?)",
+                    (
+                        coll_id,
+                        request_id,
+                        transform_id,
+                        it["name"],
+                        str(it.get("status", ContentStatus.NEW)),
+                        it.get("content_type", "file"),
+                        it.get("min_id", 0),
+                        it.get("max_id", 0),
+                        it.get("bytes", 0),
+                        it.get("dep_count", 0),
+                        json_dumps(it["metadata"]) if it.get("metadata") else None,
+                        now,
+                        now,
+                    ),
+                )
+                ids.append(int(cur.lastrowid))
+        return ids
+
+    def add_deps(self, edges: Sequence[tuple[int, int]]) -> None:
+        """Bulk-register (content_id, dep_content_id) edges and set
+        dep_count accordingly.  Edges form the job-level DAG (§3.1.1)."""
+        if not edges:
+            return
+        with self.db.tx() as conn:
+            conn.executemany(
+                "INSERT OR IGNORE INTO content_deps(content_id,dep_content_id)"
+                " VALUES (?,?)",
+                edges,
+            )
+            conn.execute(
+                "UPDATE contents SET dep_count="
+                "(SELECT COUNT(*) FROM content_deps d"
+                "  WHERE d.content_id=contents.content_id) "
+                "WHERE content_id IN "
+                "(SELECT DISTINCT content_id FROM content_deps)"
+            )
+
+    def get(self, content_id: int) -> dict[str, Any]:
+        row = self.db.query_one(
+            "SELECT * FROM contents WHERE content_id=?", (content_id,)
+        )
+        if row is None:
+            raise NotFoundError(f"content {content_id} not found")
+        return _row_to_dict(row)
+
+    def by_collection(
+        self,
+        coll_id: int,
+        *,
+        status: ContentStatus | None = None,
+        limit: int | None = None,
+    ) -> list[dict[str, Any]]:
+        sql = "SELECT * FROM contents WHERE coll_id=?"
+        params: list[Any] = [coll_id]
+        if status is not None:
+            sql += " AND status=?"
+            params.append(str(status))
+        sql += " ORDER BY content_id"
+        if limit is not None:
+            sql += " LIMIT ?"
+            params.append(limit)
+        return [_row_to_dict(r) for r in self.db.query(sql, params)]
+
+    def by_transform(
+        self, transform_id: int, *, status: ContentStatus | None = None
+    ) -> list[dict[str, Any]]:
+        if status is None:
+            rows = self.db.query(
+                "SELECT * FROM contents WHERE transform_id=?", (transform_id,)
+            )
+        else:
+            rows = self.db.query(
+                "SELECT * FROM contents WHERE transform_id=? AND status=?",
+                (transform_id, str(status)),
+            )
+        return [_row_to_dict(r) for r in rows]
+
+    def set_status(self, content_ids: Sequence[int], status: ContentStatus) -> int:
+        if not content_ids:
+            return 0
+        now = utc_now_ts()
+        n = 0
+        for block in chunked(content_ids, 8000):
+            marks = ",".join("?" for _ in block)
+            n += self.db.execute(
+                f"UPDATE contents SET status=?, updated_at=? "
+                f"WHERE content_id IN ({marks})",
+                [str(status), now] + list(block),
+            )
+        return n
+
+    def release_dependents(self, finished_ids: Sequence[int]) -> list[int]:
+        """THE fine-grained release primitive (paper §3.1.1 job-level DAG,
+        §4.1 Data Carousel, §4.2 Rubin).
+
+        Given newly-finished/available content ids, decrement their
+        dependents' ``dep_count`` and *activate* (release) every dependent
+        reaching zero.  Entirely set-based SQL → O(edges touched), which is
+        what lets a 100k-vertex DAG release incrementally at high rate.
+        Returns the newly activated content_ids.
+        """
+        if not finished_ids:
+            return []
+        now = utc_now_ts()
+        activated: list[int] = []
+        for block in chunked(finished_ids, 8000):
+            with self.db.tx() as conn:
+                conn.execute("CREATE TEMP TABLE IF NOT EXISTS _fin(id INTEGER PRIMARY KEY)")
+                conn.execute("DELETE FROM _fin")
+                conn.executemany(
+                    "INSERT OR IGNORE INTO _fin(id) VALUES (?)",
+                    [(i,) for i in block],
+                )
+                # aggregate per-dependent decrements ONCE (join + group-by),
+                # then apply — avoids a correlated subquery per row, which
+                # degrades to O(n²) at 100k-job scale.
+                conn.execute(
+                    "CREATE TEMP TABLE IF NOT EXISTS _dec"
+                    "(cid INTEGER PRIMARY KEY, n INTEGER)"
+                )
+                conn.execute("DELETE FROM _dec")
+                conn.execute(
+                    "INSERT INTO _dec(cid, n) "
+                    "SELECT d.content_id, COUNT(*) FROM content_deps d "
+                    "JOIN _fin f ON d.dep_content_id=f.id GROUP BY d.content_id"
+                )
+                conn.execute(
+                    "UPDATE contents SET dep_count = dep_count - ("
+                    "  SELECT n FROM _dec WHERE _dec.cid=contents.content_id"
+                    "), updated_at=? "
+                    "WHERE content_id IN (SELECT cid FROM _dec)",
+                    (now,),
+                )
+                rows = conn.execute(
+                    "UPDATE contents SET status=?, updated_at=? "
+                    "WHERE dep_count<=0 AND status=? "
+                    "AND content_id IN (SELECT cid FROM _dec) "
+                    "RETURNING content_id",
+                    (str(ContentStatus.ACTIVATED), now, str(ContentStatus.NEW)),
+                ).fetchall()
+                activated.extend(int(r["content_id"]) for r in rows)
+        return activated
+
+    def activate_roots(self, transform_id: int | None = None) -> list[int]:
+        """Activate contents with no dependencies (DAG roots)."""
+        now = utc_now_ts()
+        sql = (
+            "UPDATE contents SET status=?, updated_at=? "
+            "WHERE dep_count<=0 AND status=?"
+        )
+        params: list[Any] = [str(ContentStatus.ACTIVATED), now, str(ContentStatus.NEW)]
+        if transform_id is not None:
+            sql += " AND transform_id=?"
+            params.append(transform_id)
+        sql += " RETURNING content_id"
+        with self.db.tx() as conn:
+            rows = conn.execute(sql, params).fetchall()
+        return [int(r["content_id"]) for r in rows]
+
+    def count_by_status(self, transform_id: int) -> dict[str, int]:
+        rows = self.db.query(
+            "SELECT status, COUNT(*) AS n FROM contents "
+            "WHERE transform_id=? GROUP BY status",
+            (transform_id,),
+        )
+        return {r["status"]: int(r["n"]) for r in rows}
+
+
+# ---------------------------------------------------------------------------
+# Processings
+# ---------------------------------------------------------------------------
+class ProcessingStore(_BaseStore):
+    def add(
+        self,
+        transform_id: int,
+        request_id: int,
+        *,
+        status: ProcessingStatus = ProcessingStatus.NEW,
+        site: str | None = None,
+        metadata: Any = None,
+    ) -> int:
+        now = utc_now_ts()
+        return self.db.insert(
+            "INSERT INTO processings(transform_id,request_id,status,site,"
+            "processing_metadata,created_at,updated_at,next_poll_at)"
+            " VALUES (?,?,?,?,?,?,?,0)",
+            (
+                transform_id,
+                request_id,
+                str(status),
+                site,
+                json_dumps(metadata) if metadata is not None else None,
+                now,
+                now,
+            ),
+        )
+
+    def get(self, processing_id: int) -> dict[str, Any]:
+        row = self.db.query_one(
+            "SELECT * FROM processings WHERE processing_id=?", (processing_id,)
+        )
+        if row is None:
+            raise NotFoundError(f"processing {processing_id} not found")
+        return _row_to_dict(row)
+
+    def by_transform(self, transform_id: int) -> list[dict[str, Any]]:
+        rows = self.db.query(
+            "SELECT * FROM processings WHERE transform_id=? ORDER BY processing_id",
+            (transform_id,),
+        )
+        return [_row_to_dict(r) for r in rows]
+
+    def update(self, processing_id: int, **fields: Any) -> None:
+        _update_row(self.db, "processings", "processing_id", processing_id, fields)
+
+    def claim(self, processing_id: int, *, stale_s: float = 300.0) -> bool:
+        return _claim_row(
+            self.db, "processings", "processing_id", processing_id, stale_s
+        )
+
+    def unlock(self, processing_id: int) -> None:
+        self.db.execute(
+            "UPDATE processings SET locking=0, updated_at=? WHERE processing_id=?",
+            (utc_now_ts(), processing_id),
+        )
+
+    def poll_ready(
+        self,
+        statuses: Sequence[ProcessingStatus],
+        *,
+        limit: int = 16,
+        now: float | None = None,
+    ) -> list[dict[str, Any]]:
+        now = utc_now_ts() if now is None else now
+        marks = ",".join("?" for _ in statuses)
+        rows = self.db.query(
+            f"SELECT * FROM processings WHERE status IN ({marks}) "
+            "AND next_poll_at<=? AND locking=0 ORDER BY processing_id LIMIT ?",
+            [str(s) for s in statuses] + [now, limit],
+        )
+        return [_row_to_dict(r) for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# Messages (Conductor outbox / Receiver inbox)
+# ---------------------------------------------------------------------------
+class MessageStore(_BaseStore):
+    def add(
+        self,
+        msg_type: str,
+        destination: MessageDestination,
+        content: Any,
+        *,
+        request_id: int | None = None,
+        transform_id: int | None = None,
+        processing_id: int | None = None,
+    ) -> int:
+        return self.db.insert(
+            "INSERT INTO messages(msg_type,status,destination,request_id,"
+            "transform_id,processing_id,content,created_at)"
+            " VALUES (?,?,?,?,?,?,?,?)",
+            (
+                msg_type,
+                str(MessageStatus.NEW),
+                str(destination),
+                request_id,
+                transform_id,
+                processing_id,
+                json_dumps(content),
+                utc_now_ts(),
+            ),
+        )
+
+    def fetch_new(
+        self, destination: MessageDestination, *, limit: int = 64
+    ) -> list[dict[str, Any]]:
+        rows = self.db.query(
+            "SELECT * FROM messages WHERE status=? AND destination=? "
+            "ORDER BY msg_id LIMIT ?",
+            (str(MessageStatus.NEW), str(destination), limit),
+        )
+        return [_row_to_dict(r) for r in rows]
+
+    def mark_delivered(self, msg_ids: Sequence[int]) -> int:
+        if not msg_ids:
+            return 0
+        marks = ",".join("?" for _ in msg_ids)
+        return self.db.execute(
+            f"UPDATE messages SET status=?, delivered_at=? WHERE msg_id IN ({marks})",
+            [str(MessageStatus.DELIVERED), utc_now_ts()] + list(msg_ids),
+        )
+
+
+# ---------------------------------------------------------------------------
+# Events (DBEventBus persistence)
+# ---------------------------------------------------------------------------
+class EventStore(_BaseStore):
+    def publish(
+        self,
+        event_type: str,
+        payload: Any,
+        *,
+        priority: int = int(EventPriority.MEDIUM),
+        merge_key: str | None = None,
+    ) -> int | None:
+        """Insert an event; if ``merge_key`` matches a pending event the two
+        are merged (Coordinator dedup, §3.4.2) and the priority upgraded.
+        Returns the event_id, or None when merged away."""
+        now = utc_now_ts()
+        with self.db.tx() as conn:
+            if merge_key is not None:
+                cur = conn.execute(
+                    "UPDATE events SET priority=MAX(priority,?) "
+                    "WHERE merge_key=? AND status='New'",
+                    (priority, merge_key),
+                )
+                if cur.rowcount:
+                    return None
+            cur = conn.execute(
+                "INSERT INTO events(event_type,priority,merge_key,payload,status,"
+                "created_at) VALUES (?,?,?,?,'New',?)",
+                (event_type, priority, merge_key, json_dumps(payload), now),
+            )
+            return int(cur.lastrowid)
+
+    def claim_batch(self, consumer: str, *, limit: int = 32) -> list[dict[str, Any]]:
+        """Atomically claim the highest-priority pending events."""
+        now = utc_now_ts()
+        with self.db.tx() as conn:
+            rows = conn.execute(
+                "UPDATE events SET status='Claimed', claimed_by=?, claimed_at=? "
+                "WHERE event_id IN ("
+                "  SELECT event_id FROM events WHERE status='New'"
+                "  ORDER BY priority DESC, event_id LIMIT ?)"
+                " RETURNING *",
+                (consumer, now, limit),
+            ).fetchall()
+        out = [_row_to_dict(r) for r in rows]
+        out.sort(key=lambda e: (-int(e["priority"]), int(e["event_id"])))
+        return out
+
+    def ack(self, event_ids: Sequence[int]) -> int:
+        if not event_ids:
+            return 0
+        marks = ",".join("?" for _ in event_ids)
+        return self.db.execute(
+            f"DELETE FROM events WHERE event_id IN ({marks})", list(event_ids)
+        )
+
+    def requeue_stale(self, *, stale_s: float = 60.0) -> int:
+        """Lost-consumer recovery: claimed events idle past ``stale_s`` go
+        back to New (lazy-poll fallback semantics, §3.4.3)."""
+        cutoff = utc_now_ts() - stale_s
+        return self.db.execute(
+            "UPDATE events SET status='New', claimed_by=NULL "
+            "WHERE status='Claimed' AND claimed_at<?",
+            (cutoff,),
+        )
+
+    def pending_count(self) -> int:
+        row = self.db.query_one("SELECT COUNT(*) AS n FROM events WHERE status='New'")
+        return int(row["n"]) if row else 0
+
+
+# ---------------------------------------------------------------------------
+# Health (agent heartbeats)
+# ---------------------------------------------------------------------------
+class HealthStore(_BaseStore):
+    def heartbeat(self, agent: str, payload: Any = None) -> None:
+        now = utc_now_ts()
+        self.db.execute(
+            "INSERT INTO health(agent,hostname,thread_name,payload,updated_at)"
+            " VALUES (?,?,?,?,?)"
+            " ON CONFLICT(agent,hostname,thread_name)"
+            " DO UPDATE SET payload=excluded.payload, updated_at=excluded.updated_at",
+            (
+                agent,
+                _HOSTNAME,
+                threading.current_thread().name,
+                json_dumps(payload) if payload is not None else None,
+                now,
+            ),
+        )
+
+    def live_agents(self, *, within_s: float = 60.0) -> list[dict[str, Any]]:
+        cutoff = utc_now_ts() - within_s
+        rows = self.db.query(
+            "SELECT * FROM health WHERE updated_at>=? ORDER BY agent", (cutoff,)
+        )
+        return [_row_to_dict(r) for r in rows]
+
+
+# ---------------------------------------------------------------------------
+# shared helpers
+# ---------------------------------------------------------------------------
+_JSON_FIELDS = {
+    "workflow",
+    "work",
+    "request_metadata",
+    "transform_metadata",
+    "coll_metadata",
+    "content_metadata",
+    "processing_metadata",
+    "errors",
+}
+
+
+def _update_row(
+    db: Database, table: str, key: str, key_val: int, fields: dict[str, Any]
+) -> None:
+    if not fields:
+        return
+    sets: list[str] = []
+    params: list[Any] = []
+    for name, value in fields.items():
+        sets.append(f"{name}=?")
+        if name in _JSON_FIELDS and value is not None and not isinstance(value, str):
+            value = json_dumps(value)
+        elif hasattr(value, "value"):  # enums
+            value = str(value)
+        params.append(value)
+    sets.append("updated_at=?")
+    params.append(utc_now_ts())
+    params.append(key_val)
+    db.execute(f"UPDATE {table} SET {', '.join(sets)} WHERE {key}=?", params)
+
+
+def _claim_row(
+    db: Database, table: str, key: str, key_val: int, stale_s: float
+) -> bool:
+    """Idempotent claim: set locking=1 iff unlocked (or the lock is stale).
+    Returns True when this caller won the claim."""
+    now = utc_now_ts()
+    n = db.execute(
+        f"UPDATE {table} SET locking=1, updated_at=? "
+        f"WHERE {key}=? AND (locking=0 OR updated_at<?)",
+        (now, key_val, now - stale_s),
+    )
+    return n > 0
+
+
+def make_stores(db: Database) -> dict[str, Any]:
+    return {
+        "requests": RequestStore(db),
+        "transforms": TransformStore(db),
+        "collections": CollectionStore(db),
+        "contents": ContentStore(db),
+        "processings": ProcessingStore(db),
+        "messages": MessageStore(db),
+        "events": EventStore(db),
+        "health": HealthStore(db),
+    }

@@ -1,0 +1,42 @@
+"""Event bus backends (paper §3.2.2) + factory."""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.eventbus.base import BaseEventBus  # noqa: F401
+from repro.eventbus.dbbus import DBEventBus  # noqa: F401
+from repro.eventbus.events import Event  # noqa: F401
+from repro.eventbus.local import LocalEventBus  # noqa: F401
+from repro.eventbus.msgbus import MsgBroker, MsgEventBus  # noqa: F401
+
+
+class NullEventBus(BaseEventBus):
+    """Event bus DISABLED (paper §3.4.3: "the flexibility to disable the
+    event bus when not required") — publishes drop, consumes return
+    nothing, agents fall back to pure lazy database polling."""
+
+    name = "null"
+    persistent = False
+
+    def publish(self, event: Event) -> None:  # noqa: D102
+        pass
+
+    def consume(self, consumer, *, types=None, limit=32):  # noqa: D102
+        return []
+
+    def pending(self) -> int:  # noqa: D102
+        return 0
+
+
+def create_event_bus(kind: str = "local", **kw: Any) -> BaseEventBus:
+    """Factory: ``local`` | ``db`` | ``msg`` | ``null``.  ``db`` needs
+    ``db=Database``; ``msg`` accepts an optional shared ``broker``."""
+    if kind == "local":
+        return LocalEventBus()
+    if kind == "db":
+        return DBEventBus(kw["db"])
+    if kind == "msg":
+        return MsgEventBus(kw.get("broker"))
+    if kind == "null":
+        return NullEventBus()
+    raise ValueError(f"unknown event bus kind: {kind!r}")

@@ -1,0 +1,74 @@
+"""Event bus interface (paper §3.2.2).
+
+Pull-based consumption matches the agents' design: each agent consumes a
+batch of events it is responsible for, processes them, and acks.  ``wait``
+blocks until events *may* be available, giving event-driven latency without
+busy-polling; the database lazy-poll remains the correctness fallback
+(§3.4.3), so buses are allowed to be lossy (MsgEventBus is, by design).
+"""
+from __future__ import annotations
+
+import threading
+from abc import ABC, abstractmethod
+from typing import Iterable, Sequence
+
+from repro.eventbus.events import Event
+
+
+class BaseEventBus(ABC):
+    """Abstract pub-sub bus with priority + merge semantics."""
+
+    name = "base"
+    #: True when events survive process restarts / reach other processes.
+    persistent = False
+
+    def __init__(self) -> None:
+        self._cv = threading.Condition()
+        self._closed = False
+
+    # -- producer side ----------------------------------------------------
+    @abstractmethod
+    def publish(self, event: Event) -> None:
+        """Publish one event (merging with pending duplicates if the
+        backend supports it)."""
+
+    def publish_many(self, events: Iterable[Event]) -> None:
+        for ev in events:
+            self.publish(ev)
+
+    # -- consumer side -----------------------------------------------------
+    @abstractmethod
+    def consume(
+        self,
+        consumer: str,
+        *,
+        types: Sequence[str] | None = None,
+        limit: int = 32,
+    ) -> list[Event]:
+        """Atomically take up to ``limit`` pending events (highest priority
+        first), optionally restricted to ``types``."""
+
+    def ack(self, events: Sequence[Event]) -> None:
+        """Acknowledge processed events (no-op for non-persistent buses)."""
+
+    @abstractmethod
+    def pending(self) -> int:
+        """Number of events waiting for consumption."""
+
+    # -- wakeups -----------------------------------------------------------
+    def wait(self, timeout: float = 1.0) -> bool:
+        """Block until new events may be available (or timeout).  Returns
+        True when woken by a publish."""
+        with self._cv:
+            if self._closed:
+                return False
+            return self._cv.wait(timeout=timeout)
+
+    def _notify(self) -> None:
+        with self._cv:
+            self._cv.notify_all()
+
+    def close(self) -> None:
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()

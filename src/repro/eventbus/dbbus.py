@@ -1,0 +1,82 @@
+"""DBEventBus — database-backed persistent bus (paper §3.2.2).
+
+"Stores events persistently, enabling distributed delivery across agents on
+different hosts.  Performance depends on the underlying database system."
+
+Merging and priority are pushed down into SQL (EventStore.publish /
+claim_batch); consumers must ``ack`` — unacked claims are requeued by
+``recover_stale`` (called by the Coordinator agent), which is the
+persistence guarantee the lazy-poll fallback relies on.
+"""
+from __future__ import annotations
+
+from typing import Sequence
+
+from repro.db.engine import Database
+from repro.db.stores import EventStore
+from repro.eventbus.base import BaseEventBus
+from repro.eventbus.events import Event
+
+
+class DBEventBus(BaseEventBus):
+    name = "db"
+    persistent = True
+
+    def __init__(self, db: Database):
+        super().__init__()
+        self._store = EventStore(db)
+        self.stats = {"published": 0, "merged": 0, "consumed": 0}
+
+    def publish(self, event: Event) -> None:
+        event_id = self._store.publish(
+            event.type,
+            event.payload,
+            priority=event.priority,
+            merge_key=event.merge_key,
+        )
+        self.stats["published"] += 1
+        if event_id is None:
+            self.stats["merged"] += 1
+        self._notify()
+
+    def consume(
+        self,
+        consumer: str,
+        *,
+        types: Sequence[str] | None = None,
+        limit: int = 32,
+    ) -> list[Event]:
+        rows = self._store.claim_batch(consumer, limit=limit)
+        events: list[Event] = []
+        put_back: list[int] = []
+        for row in rows:
+            ev = Event(
+                type=row["event_type"],
+                payload=row["payload"] or {},
+                priority=int(row["priority"]),
+                merge_key=row["merge_key"],
+                event_id=int(row["event_id"]),
+                created_at=float(row["created_at"]),
+            )
+            if types is not None and ev.type not in types:
+                put_back.append(ev.event_id)
+            else:
+                events.append(ev)
+        if put_back:
+            # immediately requeue events this consumer doesn't handle
+            self._store.db.execute(
+                "UPDATE events SET status='New', claimed_by=NULL "
+                f"WHERE event_id IN ({','.join('?' for _ in put_back)})",
+                put_back,
+            )
+        self.stats["consumed"] += len(events)
+        return events
+
+    def ack(self, events: Sequence[Event]) -> None:
+        self._store.ack([e.event_id for e in events])
+
+    def recover_stale(self, *, stale_s: float = 60.0) -> int:
+        return self._store.requeue_stale(stale_s=stale_s)
+
+    def pending(self) -> int:
+        return self._store.pending_count()

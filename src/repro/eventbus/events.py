@@ -1,0 +1,158 @@
+"""Event model for the publish-subscribe backbone (paper §3.2.2).
+
+Events carry a ``merge_key`` so the Coordinator can consolidate redundant
+messages (e.g. thousands of job updates for one processing collapse into a
+single pending event) and an integer ``priority`` so critical operations
+(Work completion) outrank routine status updates (§3.4.2).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.common.constants import EventPriority, EventType
+from repro.common.utils import utc_now_ts
+
+_seq = itertools.count(1)
+_seq_lock = threading.Lock()
+
+
+def _next_id() -> int:
+    with _seq_lock:
+        return next(_seq)
+
+
+@dataclass
+class Event:
+    type: str
+    payload: dict[str, Any] = field(default_factory=dict)
+    priority: int = int(EventPriority.MEDIUM)
+    merge_key: str | None = None
+    event_id: int = field(default_factory=_next_id)
+    created_at: float = field(default_factory=utc_now_ts)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "type": self.type,
+            "payload": self.payload,
+            "priority": self.priority,
+            "merge_key": self.merge_key,
+            "event_id": self.event_id,
+            "created_at": self.created_at,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "Event":
+        return cls(
+            type=d["type"],
+            payload=d.get("payload") or {},
+            priority=int(d.get("priority", EventPriority.MEDIUM)),
+            merge_key=d.get("merge_key"),
+            event_id=int(d.get("event_id", 0)) or _next_id(),
+            created_at=float(d.get("created_at", 0.0)) or utc_now_ts(),
+        )
+
+
+# -- typed constructors used across agents ---------------------------------
+def new_request_event(request_id: int) -> Event:
+    return Event(
+        type=str(EventType.NEW_REQUEST),
+        payload={"request_id": request_id},
+        priority=int(EventPriority.HIGH),
+        merge_key=f"req:new:{request_id}",
+    )
+
+
+def update_request_event(request_id: int, *, priority: int = int(EventPriority.MEDIUM)) -> Event:
+    return Event(
+        type=str(EventType.UPDATE_REQUEST),
+        payload={"request_id": request_id},
+        priority=priority,
+        merge_key=f"req:update:{request_id}",
+    )
+
+
+def abort_request_event(request_id: int) -> Event:
+    return Event(
+        type=str(EventType.ABORT_REQUEST),
+        payload={"request_id": request_id},
+        priority=int(EventPriority.CRITICAL),
+        merge_key=f"req:abort:{request_id}",
+    )
+
+
+def new_transform_event(transform_id: int) -> Event:
+    return Event(
+        type=str(EventType.NEW_TRANSFORM),
+        payload={"transform_id": transform_id},
+        priority=int(EventPriority.HIGH),
+        merge_key=f"tf:new:{transform_id}",
+    )
+
+
+def update_transform_event(
+    transform_id: int, *, priority: int = int(EventPriority.MEDIUM)
+) -> Event:
+    return Event(
+        type=str(EventType.UPDATE_TRANSFORM),
+        payload={"transform_id": transform_id},
+        priority=priority,
+        merge_key=f"tf:update:{transform_id}",
+    )
+
+
+def submit_processing_event(processing_id: int) -> Event:
+    return Event(
+        type=str(EventType.SUBMIT_PROCESSING),
+        payload={"processing_id": processing_id},
+        priority=int(EventPriority.HIGH),
+        merge_key=f"pr:submit:{processing_id}",
+    )
+
+
+def poll_processing_event(
+    processing_id: int, *, priority: int = int(EventPriority.LOW)
+) -> Event:
+    return Event(
+        type=str(EventType.POLL_PROCESSING),
+        payload={"processing_id": processing_id},
+        priority=priority,
+        merge_key=f"pr:poll:{processing_id}",
+    )
+
+
+def terminate_processing_event(processing_id: int) -> Event:
+    return Event(
+        type=str(EventType.TERMINATE_PROCESSING),
+        payload={"processing_id": processing_id},
+        priority=int(EventPriority.CRITICAL),
+        merge_key=f"pr:term:{processing_id}",
+    )
+
+
+def trigger_release_event(transform_id: int, content_ids: list[int]) -> Event:
+    # NOT merged: each release batch carries distinct payload data.
+    return Event(
+        type=str(EventType.TRIGGER_RELEASE),
+        payload={"transform_id": transform_id, "content_ids": content_ids},
+        priority=int(EventPriority.HIGH),
+    )
+
+
+def data_available_event(coll_id: int, content_ids: list[int]) -> Event:
+    return Event(
+        type=str(EventType.DATA_AVAILABLE),
+        payload={"coll_id": coll_id, "content_ids": content_ids},
+        priority=int(EventPriority.HIGH),
+    )
+
+
+def msg_outbox_event() -> Event:
+    return Event(
+        type=str(EventType.MSG_OUTBOX),
+        payload={},
+        priority=int(EventPriority.LOW),
+        merge_key="msg:outbox",
+    )

@@ -1,0 +1,110 @@
+"""LocalEventBus — in-process dictionary bus (paper §3.2.2).
+
+"A lightweight implementation based on a Python dictionary, enabling fast
+in-process event delivery.  Suitable for single-process deployments."
+
+Events are kept per-type in priority order; ``merge_key`` duplicates are
+consolidated at publish time (the Coordinator behaviour is built into the
+bus here because everything is in one process anyway).  A priority upgrade
+re-pushes the same Event object; stale heap entries are skipped at pop time
+via the per-event delivered flag, preserving exactly-once delivery.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Sequence
+
+from repro.eventbus.base import BaseEventBus
+from repro.eventbus.events import Event
+
+
+class LocalEventBus(BaseEventBus):
+    name = "local"
+    persistent = False
+
+    def __init__(self) -> None:
+        super().__init__()
+        self._lock = threading.Lock()
+        # type -> heap of (-priority, seq, Event)
+        self._queues: dict[str, list[tuple[int, int, Event]]] = {}
+        # merge_key -> pending Event (for merging / in-place priority upgrade)
+        self._pending_by_key: dict[str, Event] = {}
+        self._delivered: set[int] = set()  # id()s of delivered Event objects
+        self._entries: dict[int, int] = {}  # id() -> live heap entries
+        self._count = 0
+        self._seq = itertools.count()
+        self.stats = {"published": 0, "merged": 0, "consumed": 0}
+
+    def _push(self, event: Event) -> None:
+        heap = self._queues.setdefault(event.type, [])
+        heapq.heappush(heap, (-event.priority, next(self._seq), event))
+        self._entries[id(event)] = self._entries.get(id(event), 0) + 1
+
+    def publish(self, event: Event) -> None:
+        with self._lock:
+            self.stats["published"] += 1
+            if event.merge_key is not None:
+                existing = self._pending_by_key.get(event.merge_key)
+                if existing is not None:
+                    if event.priority > existing.priority:
+                        existing.priority = event.priority
+                        self._push(existing)  # earlier entry skipped at pop
+                    self.stats["merged"] += 1
+                    return
+                self._pending_by_key[event.merge_key] = event
+            self._push(event)
+            self._count += 1
+        self._notify()
+
+    def consume(
+        self,
+        consumer: str,
+        *,
+        types: Sequence[str] | None = None,
+        limit: int = 32,
+    ) -> list[Event]:
+        out: list[Event] = []
+        with self._lock:
+            keys = list(self._queues.keys()) if types is None else list(types)
+            candidates: list[tuple[int, int, str]] = []
+            for t in keys:
+                heap = self._queues.get(t)
+                if heap:
+                    prio, seq, _ = heap[0]
+                    candidates.append((prio, seq, t))
+            heapq.heapify(candidates)
+            while candidates and len(out) < limit:
+                _, _, t = heapq.heappop(candidates)
+                heap = self._queues.get(t)
+                if not heap:
+                    continue
+                _, _, ev = heapq.heappop(heap)
+                key = id(ev)
+                left = self._entries[key] - 1
+                if left > 0:
+                    self._entries[key] = left
+                else:
+                    del self._entries[key]
+                if key in self._delivered:
+                    if left == 0:
+                        self._delivered.discard(key)  # last stale entry gone
+                else:
+                    out.append(ev)
+                    self._count -= 1
+                    if ev.merge_key is not None:
+                        self._pending_by_key.pop(ev.merge_key, None)
+                    if left > 0:
+                        # duplicate heap entries exist (priority upgrade);
+                        # skip them when they surface.
+                        self._delivered.add(key)
+                if heap:
+                    prio, seq, _ = heap[0]
+                    heapq.heappush(candidates, (prio, seq, t))
+            self.stats["consumed"] += len(out)
+        return out
+
+    def pending(self) -> int:
+        with self._lock:
+            return self._count

@@ -1,0 +1,227 @@
+"""MsgEventBus — high-throughput socket bus (paper §3.2.2).
+
+"A high-throughput, distributed event bus built on the ZeroMQ messaging
+library.  While efficient, it requires application-level logic to handle
+message routing and delivery guarantees."
+
+ZeroMQ is not available offline, so the same semantics are reproduced over
+raw TCP: a tiny in-process broker accepts length-prefixed JSON frames from
+any number of publisher/consumer connections and routes by event type.
+Delivery is **at-most-once** (no persistence, no redelivery): dropped
+events are the reason the agents keep the lazy database poll as a fallback
+(§3.4.3) — tests exercise exactly that path.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import json
+import socket
+import struct
+import threading
+from typing import Sequence
+
+from repro.eventbus.base import BaseEventBus
+from repro.eventbus.events import Event
+
+_HDR = struct.Struct("!I")
+
+
+def _send_frame(sock: socket.socket, obj: dict) -> None:
+    data = json.dumps(obj).encode()
+    sock.sendall(_HDR.pack(len(data)) + data)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes | None:
+    buf = b""
+    while len(buf) < n:
+        chunk = sock.recv(n - len(buf))
+        if not chunk:
+            return None
+        buf += chunk
+    return buf
+
+
+def _recv_frame(sock: socket.socket) -> dict | None:
+    hdr = _recv_exact(sock, _HDR.size)
+    if hdr is None:
+        return None
+    (length,) = _HDR.unpack(hdr)
+    body = _recv_exact(sock, length)
+    if body is None:
+        return None
+    return json.loads(body)
+
+
+class MsgBroker:
+    """Single-threaded-accept, thread-per-connection broker.
+
+    Frames:  {"op": "pub", "event": {...}}  — publish
+             {"op": "sub", "types": [...]}   — this conn wants pushes (unused
+                                               by MsgEventBus, kept for the
+                                               wire protocol's generality)
+    Published events land in an in-memory priority queue drained by local
+    ``MsgEventBus`` instances through ``take``.
+    """
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0):
+        self._srv = socket.create_server((host, port))
+        self.address = self._srv.getsockname()
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._heap: list[tuple[int, int, dict]] = []
+        self._seq = itertools.count()
+        self._by_key: dict[str, dict] = {}
+        self._closed = False
+        self.stats = {"published": 0, "merged": 0, "dropped": 0}
+        self._threads: list[threading.Thread] = []
+        self._accept_thread = threading.Thread(
+            target=self._accept_loop, name="msgbroker-accept", daemon=True
+        )
+        self._accept_thread.start()
+
+    # -- network side ------------------------------------------------------
+    def _accept_loop(self) -> None:
+        while not self._closed:
+            try:
+                conn, _ = self._srv.accept()
+            except OSError:
+                return
+            t = threading.Thread(
+                target=self._conn_loop, args=(conn,), daemon=True,
+                name="msgbroker-conn",
+            )
+            t.start()
+            self._threads.append(t)
+
+    def _conn_loop(self, conn: socket.socket) -> None:
+        try:
+            while True:
+                frame = _recv_frame(conn)
+                if frame is None:
+                    return
+                if frame.get("op") == "pub":
+                    self._enqueue(frame["event"])
+                    _send_frame(conn, {"op": "ok"})
+        except OSError:
+            return
+        finally:
+            conn.close()
+
+    # -- queue side ----------------------------------------------------------
+    def _enqueue(self, event_dict: dict) -> None:
+        with self._lock:
+            self.stats["published"] += 1
+            key = event_dict.get("merge_key")
+            if key is not None:
+                existing = self._by_key.get(key)
+                if existing is not None:
+                    existing["priority"] = max(
+                        existing["priority"], event_dict["priority"]
+                    )
+                    self.stats["merged"] += 1
+                    return
+                self._by_key[key] = event_dict
+            heapq.heappush(
+                self._heap,
+                (-int(event_dict["priority"]), next(self._seq), event_dict),
+            )
+            self._cv.notify_all()
+
+    def take(self, limit: int) -> list[dict]:
+        with self._lock:
+            out: list[dict] = []
+            while self._heap and len(out) < limit:
+                _, _, ev = heapq.heappop(self._heap)
+                key = ev.get("merge_key")
+                if key is not None:
+                    self._by_key.pop(key, None)
+                out.append(ev)
+            return out
+
+    def wait(self, timeout: float) -> bool:
+        with self._lock:
+            if self._heap:
+                return True
+            return self._cv.wait(timeout)
+
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def close(self) -> None:
+        self._closed = True
+        try:
+            self._srv.close()
+        except OSError:
+            pass
+
+
+class MsgEventBus(BaseEventBus):
+    """Client bus: publishes through a real TCP round-trip to the broker
+    (so the benchmark measures genuine serialization + transport costs) and
+    consumes from the broker queue."""
+
+    name = "msg"
+    persistent = False
+
+    def __init__(self, broker: MsgBroker | None = None):
+        super().__init__()
+        self._own_broker = broker is None
+        self.broker = broker or MsgBroker()
+        self._local = threading.local()
+        self.stats = {"published": 0, "merged": 0, "consumed": 0}
+
+    def _sock(self) -> socket.socket:
+        sock = getattr(self._local, "sock", None)
+        if sock is None:
+            sock = socket.create_connection(self.broker.address)
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            self._local.sock = sock
+        return sock
+
+    def publish(self, event: Event) -> None:
+        sock = self._sock()
+        _send_frame(sock, {"op": "pub", "event": event.to_dict()})
+        reply = _recv_frame(sock)
+        if reply is None:  # broker went away: at-most-once ⇒ drop silently
+            self._local.sock = None
+            return
+        self.stats["published"] += 1
+        self._notify()
+
+    def consume(
+        self,
+        consumer: str,
+        *,
+        types: Sequence[str] | None = None,
+        limit: int = 32,
+    ) -> list[Event]:
+        taken = self.broker.take(limit if types is None else limit * 4)
+        events: list[Event] = []
+        for d in taken:
+            ev = Event.from_dict(d)
+            if types is None or ev.type in types:
+                events.append(ev)
+                if len(events) >= limit:
+                    break
+            else:
+                # at-most-once: re-enqueue unwanted types best-effort
+                self.broker._enqueue(d)
+        self.stats["consumed"] += len(events)
+        return events
+
+    def pending(self) -> int:
+        return self.broker.pending()
+
+    def wait(self, timeout: float = 1.0) -> bool:
+        return self.broker.wait(timeout)
+
+    def close(self) -> None:
+        super().close()
+        sock = getattr(self._local, "sock", None)
+        if sock is not None:
+            sock.close()
+            self._local.sock = None
+        if self._own_broker:
+            self.broker.close()

@@ -1,0 +1,4 @@
+"""Distributed hyperparameter optimization (paper §4.3)."""
+from repro.hpo.optimizers import RandomSearch, TPE, make_optimizer  # noqa: F401
+from repro.hpo.service import HPOService, SegmentedHPO  # noqa: F401
+from repro.hpo.space import Choice, LogUniform, RandInt, SearchSpace, Uniform  # noqa: F401

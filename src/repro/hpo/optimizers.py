@@ -1,0 +1,154 @@
+"""HPO candidate samplers: random search and a TPE-style Bayesian
+optimizer (paper §4.3: "advanced search strategies such as Bayesian
+optimization" refine the search space from collected metrics)."""
+from __future__ import annotations
+
+import math
+import random
+from typing import Any
+
+from repro.hpo.space import Choice, Dim, LogUniform, RandInt, SearchSpace, Uniform
+
+
+class RandomSearch:
+    name = "random"
+
+    def __init__(self, space: SearchSpace, *, seed: int = 0):
+        self.space = space
+        self.rng = random.Random(seed)
+        self.history: list[tuple[dict[str, Any], float]] = []
+
+    def ask(self, n: int) -> list[dict[str, Any]]:
+        return [self.space.sample(self.rng) for _ in range(n)]
+
+    def tell(self, candidate: dict[str, Any], value: float) -> None:
+        self.history.append((candidate, value))
+
+    def best(self) -> tuple[dict[str, Any], float] | None:
+        if not self.history:
+            return None
+        return min(self.history, key=lambda cv: cv[1])
+
+
+class TPE(RandomSearch):
+    """Tree-structured Parzen Estimator (minimization).
+
+    Split history at the γ-quantile into good/bad sets; model each numeric
+    dim with a Gaussian-kernel density over the set's observed values;
+    draw candidates from the good density and keep the ones maximizing
+    l(x)/g(x).  Choice dims use smoothed categorical frequencies.
+    """
+
+    name = "tpe"
+
+    def __init__(
+        self,
+        space: SearchSpace,
+        *,
+        seed: int = 0,
+        gamma: float = 0.25,
+        n_startup: int = 8,
+        n_ei_candidates: int = 24,
+    ):
+        super().__init__(space, seed=seed)
+        self.gamma = gamma
+        self.n_startup = n_startup
+        self.n_ei = n_ei_candidates
+
+    # -- density helpers ------------------------------------------------------
+    def _to_unit(self, dim: Dim, v: Any) -> float:
+        if isinstance(dim, Uniform):
+            return (v - dim.lo) / (dim.hi - dim.lo)
+        if isinstance(dim, LogUniform):
+            return (math.log(v) - math.log(dim.lo)) / (
+                math.log(dim.hi) - math.log(dim.lo)
+            )
+        if isinstance(dim, RandInt):
+            return (v - dim.lo) / max(1, dim.hi - dim.lo)
+        raise TypeError(dim)
+
+    def _from_unit(self, dim: Dim, u: float) -> Any:
+        u = min(1.0, max(0.0, u))
+        if isinstance(dim, Uniform):
+            return dim.lo + u * (dim.hi - dim.lo)
+        if isinstance(dim, LogUniform):
+            return math.exp(
+                math.log(dim.lo) + u * (math.log(dim.hi) - math.log(dim.lo))
+            )
+        if isinstance(dim, RandInt):
+            return int(round(dim.lo + u * (dim.hi - dim.lo)))
+        raise TypeError(dim)
+
+    @staticmethod
+    def _kde_logpdf(x: float, points: list[float], bw: float) -> float:
+        if not points:
+            return 0.0
+        acc = 0.0
+        for p in points:
+            acc += math.exp(-0.5 * ((x - p) / bw) ** 2)
+        return math.log(max(acc / (len(points) * bw * math.sqrt(2 * math.pi)), 1e-300))
+
+    def _sample_from(self, points: list[float], bw: float) -> float:
+        if not points:
+            return self.rng.random()
+        center = self.rng.choice(points)
+        return center + self.rng.gauss(0.0, bw)
+
+    # -- ask ----------------------------------------------------------------
+    def ask(self, n: int) -> list[dict[str, Any]]:
+        if len(self.history) < self.n_startup:
+            return [self.space.sample(self.rng) for _ in range(n)]
+        ordered = sorted(self.history, key=lambda cv: cv[1])
+        n_good = max(1, int(self.gamma * len(ordered)))
+        good = [c for c, _ in ordered[:n_good]]
+        bad = [c for c, _ in ordered[n_good:]] or good
+        bw = max(0.08, 1.0 / max(2, len(good)))
+        out: list[dict[str, Any]] = []
+        for _ in range(n):
+            best_cand, best_score = None, -math.inf
+            for _ in range(self.n_ei):
+                cand: dict[str, Any] = {}
+                score = 0.0
+                for name, dim in self.space.dims.items():
+                    if isinstance(dim, Choice):
+                        goods = [g[name] for g in good]
+                        opts = dim.options
+                        weights = [
+                            (1.0 + goods.count(o)) for o in opts
+                        ]
+                        tot = sum(weights)
+                        r = self.rng.random() * tot
+                        acc = 0.0
+                        pick = opts[-1]
+                        for o, w in zip(opts, weights):
+                            acc += w
+                            if r <= acc:
+                                pick = o
+                                break
+                        cand[name] = pick
+                        bads = [b[name] for b in bad]
+                        lg = (1.0 + goods.count(pick)) / (len(goods) + len(opts))
+                        gb = (1.0 + bads.count(pick)) / (len(bads) + len(opts))
+                        score += math.log(lg / gb)
+                    else:
+                        gpts = [self._to_unit(dim, g[name]) for g in good]
+                        bpts = [self._to_unit(dim, b[name]) for b in bad]
+                        u = self._sample_from(gpts, bw)
+                        u = min(1.0, max(0.0, u))
+                        cand[name] = self._from_unit(dim, u)
+                        score += self._kde_logpdf(u, gpts, bw) - self._kde_logpdf(
+                            u, bpts, max(bw, 0.15)
+                        )
+                if score > best_score:
+                    best_cand, best_score = cand, score
+            assert best_cand is not None
+            out.append(best_cand)
+        return out
+
+
+def make_optimizer(kind: str, space: SearchSpace, **kw: Any) -> RandomSearch:
+    if kind == "random":
+        return RandomSearch(space, **kw)
+    if kind == "tpe":
+        return TPE(space, **kw)
+    raise ValueError(f"unknown optimizer {kind!r}")

@@ -1,0 +1,97 @@
+"""Hyperparameter search spaces (serializable)."""
+from __future__ import annotations
+
+import math
+import random
+from typing import Any, Mapping
+
+
+class Dim:
+    kind = "base"
+
+    def sample(self, rng: random.Random) -> Any:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    def to_dict(self) -> dict[str, Any]:  # pragma: no cover - abstract
+        raise NotImplementedError
+
+    @staticmethod
+    def from_dict(d: Mapping[str, Any]) -> "Dim":
+        kind = d["kind"]
+        if kind == "uniform":
+            return Uniform(d["lo"], d["hi"])
+        if kind == "loguniform":
+            return LogUniform(d["lo"], d["hi"])
+        if kind == "randint":
+            return RandInt(d["lo"], d["hi"])
+        if kind == "choice":
+            return Choice(list(d["options"]))
+        raise ValueError(f"unknown dim kind {kind!r}")
+
+
+class Uniform(Dim):
+    kind = "uniform"
+
+    def __init__(self, lo: float, hi: float):
+        self.lo, self.hi = float(lo), float(hi)
+
+    def sample(self, rng: random.Random) -> float:
+        return rng.uniform(self.lo, self.hi)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"kind": self.kind, "lo": self.lo, "hi": self.hi}
+
+
+class LogUniform(Dim):
+    kind = "loguniform"
+
+    def __init__(self, lo: float, hi: float):
+        assert lo > 0 and hi > lo
+        self.lo, self.hi = float(lo), float(hi)
+
+    def sample(self, rng: random.Random) -> float:
+        return math.exp(rng.uniform(math.log(self.lo), math.log(self.hi)))
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"kind": self.kind, "lo": self.lo, "hi": self.hi}
+
+
+class RandInt(Dim):
+    kind = "randint"
+
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = int(lo), int(hi)
+
+    def sample(self, rng: random.Random) -> int:
+        return rng.randint(self.lo, self.hi)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"kind": self.kind, "lo": self.lo, "hi": self.hi}
+
+
+class Choice(Dim):
+    kind = "choice"
+
+    def __init__(self, options: list[Any]):
+        self.options = list(options)
+
+    def sample(self, rng: random.Random) -> Any:
+        return rng.choice(self.options)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {"kind": self.kind, "options": self.options}
+
+
+class SearchSpace:
+    def __init__(self, dims: Mapping[str, Dim]):
+        self.dims = dict(dims)
+
+    def sample(self, rng: random.Random) -> dict[str, Any]:
+        return {name: dim.sample(rng) for name, dim in self.dims.items()}
+
+    def to_dict(self) -> dict[str, Any]:
+        return {name: dim.to_dict() for name, dim in self.dims.items()}
+
+    @classmethod
+    def from_dict(cls, d: Mapping[str, Any]) -> "SearchSpace":
+        return cls({name: Dim.from_dict(dd) for name, dd in d.items()})

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the workload plane's compute hot spots.
+
+The paper (a control-plane system) has no kernel-level contribution; these
+kernels serve the *payloads* its Work units execute: flash attention
+(GQA + sliding window), RWKV6 chunked WKV, and Mamba2 SSD — each with a
+pure-jnp oracle in ``ref.py`` and a dispatch wrapper in ``ops.py``.
+"""
+from repro.kernels.flash_attention import flash_attention_pallas  # noqa: F401
+from repro.kernels.rwkv6_wkv import wkv6_pallas  # noqa: F401
+from repro.kernels.ssd_scan import ssd_pallas  # noqa: F401

@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+These are thin re-exports of the model-layer reference implementations so
+the kernels, the models, and the tests all pin to ONE mathematical spec.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import attention_naive
+from repro.models.rwkv import wkv6_recurrent
+from repro.models.ssm import ssd_chunked
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    *,
+    causal: bool = True,
+    window: int = 0,
+) -> jnp.ndarray:
+    """Full-matrix attention (the oracle the flash kernel must match)."""
+    return attention_naive(q, k, v, causal=causal, window=window)
+
+
+def wkv6_ref(r, k, v, logw, u, *, init_state=None):
+    """Defining RWKV6 recurrence (oracle for the chunked WKV kernel)."""
+    return wkv6_recurrent(r, k, v, logw, u, init_state=init_state)
+
+
+def ssd_ref(x, dt, a, b_in, c_in, *, init_state=None):
+    """Chunked-scan SSD in pure jnp — itself validated against the naive
+    per-token recurrence in tests; serves as the kernel oracle."""
+    return ssd_chunked(x, dt, a, b_in, c_in, chunk=x.shape[1], init_state=init_state)

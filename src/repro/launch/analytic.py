@@ -1,0 +1,212 @@
+"""Analytic FLOPs / HBM-traffic model per (arch × shape) — the roofline's
+second source, cross-checked against the trip-count-aware HLO dot parse.
+
+Conventions: *global* quantities (whole step over all chips); callers
+divide by chip count.  MODEL_FLOPS follows the brief: 6·N·D (dense) or
+6·N_active·D (MoE), D = tokens processed by the step.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import math
+
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.ssm import d_inner as _ssm_d_inner
+from repro.models.lm import gemma_partition, zamba_partition
+
+
+_EXACT_CACHE: dict[str, dict[str, int]] = {}
+
+
+def exact_param_counts(cfg: ArchConfig) -> dict[str, int]:
+    """Exact (total, active) parameter counts from the abstract param tree
+    — replaces the closed-form estimates for MODEL_FLOPS accounting."""
+    key = f"{cfg.name}|{cfg.n_layers}|{cfg.d_model}|{cfg.d_ff}|{cfg.vocab_size}"
+    if key in _EXACT_CACHE:
+        return _EXACT_CACHE[key]
+    import jax
+
+    from repro.models.lm import abstract_params
+
+    values, _ = abstract_params(cfg)
+    total = int(sum(math.prod(v.shape) for v in jax.tree.leaves(values)))
+    active = total
+    if cfg.moe.n_experts:
+        # routed experts contribute only top_k of n_experts per token
+        expert = 0
+        for layer_tree in [values.get("layers", {})]:
+            moe = layer_tree.get("moe", {}) if isinstance(layer_tree, dict) else {}
+            for name in ("w_gate", "w_up", "w_down"):
+                if name in moe:
+                    expert += int(math.prod(moe[name].shape))
+        active = total - expert + int(expert * cfg.moe.top_k / cfg.moe.n_experts)
+    _EXACT_CACHE[key] = {"total": total, "active": active}
+    return _EXACT_CACHE[key]
+
+
+def _attn_flops_per_layer(cfg: ArchConfig, s: int, window: int = 0) -> float:
+    """Matmul FLOPs for one attention layer over a batch row of length s.
+    Chunked reference computes the full rectangle (no causal skipping)."""
+    d = cfg.d_model
+    proj = 2 * s * d * (cfg.d_qkv + 2 * cfg.d_kv) + 2 * s * cfg.d_qkv * d
+    kv_span = min(window, s) if window else s
+    scores = 2 * s * kv_span * cfg.n_heads * cfg.d_head * 2  # QK^T and PV
+    return proj + scores
+
+
+def _mlp_flops_per_layer(cfg: ArchConfig, s: int) -> float:
+    return 2 * s * 3 * cfg.d_model * cfg.d_ff
+
+
+def _moe_flops_per_layer(cfg: ArchConfig, s: int) -> float:
+    m = cfg.moe
+    cap_tokens = s * m.top_k * m.capacity_factor  # dispatch buffer rows
+    routed = 2 * cap_tokens * 3 * cfg.d_model * m.d_expert
+    shared = 2 * s * 3 * cfg.d_model * (m.n_shared * m.d_expert)
+    router = 2 * s * cfg.d_model * m.n_experts
+    return routed + shared + router
+
+
+def _rwkv_flops_per_layer(cfg: ArchConfig, s: int, chunk: int = 32) -> float:
+    d = cfg.d_model
+    proj = 2 * s * d * d * 5 + 2 * s * d * d  # r,k,v,w,g + out
+    wkv = 4 * s * chunk * d  # intra-chunk L×L per head (~2 matmul-ish ops)
+    cm = 2 * s * (2 * d * cfg.d_ff / 2 + d * d)  # channel mix (k,v,r)
+    cm = 2 * s * (d * cfg.d_ff + cfg.d_ff * d + d * d)
+    return proj + wkv + cm
+
+
+def _mamba_flops_per_layer(cfg: ArchConfig, s: int, chunk: int = 128) -> float:
+    d = cfg.d_model
+    din = _ssm_d_inner(cfg)
+    n = cfg.ssm.d_state
+    h = din // cfg.ssm.d_head
+    proj = 2 * s * d * (2 * din + 2 * n + h) + 2 * s * din * d
+    # SSD: intra L², states, inter — all per head dim P and state N
+    ssd = 2 * s * chunk * h * (cfg.ssm.d_head + n) + 4 * s * n * din
+    return proj + ssd
+
+
+def forward_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Global forward matmul FLOPs for one step (train/prefill)."""
+    b, s = shape.global_batch, shape.seq_len
+    fam = cfg.family
+    total = 0.0
+    if fam in ("dense", "vlm", "audio") and not cfg.local_global_pattern:
+        total = cfg.n_layers * (
+            _attn_flops_per_layer(cfg, s) + _mlp_flops_per_layer(cfg, s)
+        )
+    elif fam == "dense" and cfg.local_global_pattern:
+        n_super, per, tail = gemma_partition(cfg)
+        local = _attn_flops_per_layer(cfg, s, cfg.sliding_window) + _mlp_flops_per_layer(cfg, s)
+        glob = _attn_flops_per_layer(cfg, s) + _mlp_flops_per_layer(cfg, s)
+        total = n_super * (per * local + glob) + tail * local
+    elif fam == "moe":
+        total = cfg.n_layers * (
+            _attn_flops_per_layer(cfg, s) + _moe_flops_per_layer(cfg, s)
+        )
+    elif fam == "ssm":
+        total = cfg.n_layers * _rwkv_flops_per_layer(cfg, s)
+    elif fam == "hybrid":
+        n_super, per, tail = zamba_partition(cfg)
+        mam = _mamba_flops_per_layer(cfg, s)
+        attn = _attn_flops_per_layer(cfg, s) + _mlp_flops_per_layer(cfg, s)
+        total = (n_super * per + tail) * mam + n_super * attn
+    # embedding head (logits)
+    total += 2 * s * cfg.d_model * cfg.vocab_padded
+    return total * b
+
+
+def step_flops(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, float]:
+    """Analytic step FLOPs (global) + the brief's MODEL_FLOPS."""
+    n_tok = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    n_active = exact_param_counts(cfg)["active"]
+    model_flops = {
+        "train": 6.0,
+        "prefill": 2.0,
+        "decode": 2.0,
+    }[shape.kind] * n_active * n_tok
+    if shape.kind == "train":
+        fwd = forward_flops(cfg, shape)
+        remat_extra = fwd if cfg.remat == "full" else 0.0
+        total = 3 * fwd + remat_extra  # fwd + 2×bwd + recompute
+        # optimizer elementwise ~ 12 flops/param
+        total += 12.0 * cfg.n_params()
+    elif shape.kind == "prefill":
+        total = forward_flops(cfg, shape)
+    else:  # decode: one token per sequence
+        one = ShapeConfig(shape.name, 1, shape.global_batch, "prefill")
+        total = forward_flops(cfg, one)
+        # attention over the cache: 2·S·(d_kv heads…) per layer per seq
+        if cfg.family not in ("ssm",):
+            n_attn = (
+                cfg.n_layers
+                if cfg.family != "hybrid"
+                else zamba_partition(cfg)[0]
+            )
+            if cfg.local_global_pattern:
+                n_super, per, tail = gemma_partition(cfg)
+                span_local = min(cfg.sliding_window, shape.seq_len)
+                cache_flops = (
+                    (n_super * per + tail) * span_local + n_super * shape.seq_len
+                ) * 4 * cfg.n_heads * cfg.d_head
+            else:
+                cache_flops = n_attn * shape.seq_len * 4 * cfg.n_heads * cfg.d_head
+            total += cache_flops * shape.global_batch
+    return {"analytic_flops": total, "model_flops": model_flops}
+
+
+def step_hbm_bytes(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Analytic global HBM traffic per step (order-of-magnitude honest)."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    p = exact_param_counts(cfg)["total"]
+    act_unit = b * s * cfg.d_model * dt
+    if shape.kind == "train":
+        param_traffic = p * dt * (2 + (1 if cfg.remat == "full" else 0))
+        grad_traffic = 2 * p * dt
+        opt_traffic = p * 4 * 6  # read m,v,master + write m,v,master (fp32)
+        act_traffic = cfg.n_layers * act_unit * 12
+        return param_traffic + grad_traffic + opt_traffic + act_traffic
+    if shape.kind == "prefill":
+        return p * dt + cfg.n_layers * act_unit * 6
+    # decode
+    cache = _cache_bytes(cfg, b, s)
+    act = b * cfg.d_model * dt * cfg.n_layers * 8
+    return p * dt + cache + act
+
+
+def _cache_bytes(cfg: ArchConfig, b: int, s: int) -> float:
+    dt = 2 if cfg.dtype == "bfloat16" else 4
+    fam = cfg.family
+    if fam == "ssm":
+        h = cfg.d_model // cfg.rwkv.head_size
+        return cfg.n_layers * b * h * cfg.rwkv.head_size**2 * 4 * 2  # r+w
+    if fam == "hybrid":
+        n_super, per, tail = zamba_partition(cfg)
+        din = _ssm_d_inner(cfg)
+        h = din // cfg.ssm.d_head
+        ssm = (n_super * per + tail) * b * h * cfg.ssm.d_head * cfg.ssm.d_state * 4 * 2
+        kv = n_super * b * s * cfg.d_kv * 2 * dt
+        return ssm + kv
+    n_layers = cfg.n_layers
+    if cfg.local_global_pattern:
+        n_super, per, tail = gemma_partition(cfg)
+        span_local = min(cfg.sliding_window, s)
+        return (
+            (n_super * per + tail) * b * span_local + n_super * b * s
+        ) * cfg.d_kv * 2 * dt
+    return n_layers * b * s * cfg.d_kv * 2 * dt
+
+
+def cell_analytics(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    fl = step_flops(cfg, shape)
+    counts = exact_param_counts(cfg)
+    return {
+        **fl,
+        "analytic_hbm_bytes": step_hbm_bytes(cfg, shape),
+        "n_params": counts["total"],
+        "n_active_params": counts["active"],
+        "useful_ratio": fl["model_flops"] / max(fl["analytic_flops"], 1.0),
+    }

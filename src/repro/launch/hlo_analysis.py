@@ -1,0 +1,211 @@
+"""Trip-count-aware accounting over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop (lax.scan) bodies
+ONCE, so scan-over-layers models under-report FLOPs and collective bytes
+by ~n_layers.  This parser fixes that:
+
+* splits the module into computations,
+* per computation: matmul FLOPs from ``dot`` ops (2·|result|·|contraction|)
+  and collective operand bytes by kind,
+* resolves ``fusion(..., calls=%comp)`` one level and ``while(...)`` with
+  the trip count XLA records in ``backend_config={"known_trip_count":...}``,
+* returns entry-computation totals with every loop body multiplied by its
+  trip count.
+"""
+from __future__ import annotations
+
+import json
+import re
+from typing import Any
+
+COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "f64": 8, "s64": 8, "u64": 8, "c64": 8, "f32": 4, "s32": 4, "u32": 4,
+    "bf16": 2, "f16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(r"(f64|s64|u64|c64|f32|s32|u32|bf16|f16|s16|u16|s8|u8|pred)\[([0-9,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_INSTR = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"calls=%?([\w.\-]+)")
+_WHILE_PARTS = re.compile(r"condition=%?([\w.\-]+), body=%?([\w.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+
+
+def _shape_elems_bytes(type_str: str) -> tuple[int, int]:
+    """(total elements, total bytes) over every array shape in type_str."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+def _first_shape_dims(type_str: str) -> list[int] | None:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return None
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",")] if dims else []
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: dict[str, list[str]] = {}
+        self.entry: str | None = None
+        cur: str | None = None
+        for line in text.splitlines():
+            hdr = _COMP_HDR.match(line.strip()) if "{" in line and "->" in line else None
+            if hdr and not line.strip().startswith("%constant"):
+                cur = hdr.group(1)
+                self.computations[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    self.entry = cur
+                continue
+            if cur is not None:
+                if line.strip() == "}":
+                    cur = None
+                    continue
+                self.computations[cur].append(line)
+        # per-computation name → type table (plus global fallback)
+        self.types: dict[str, dict[str, str]] = {}
+        self.global_types: dict[str, str] = {}
+        for name, lines in self.computations.items():
+            table: dict[str, str] = {}
+            for line in lines:
+                m = _INSTR.match(line)
+                if m:
+                    iname, rhs = m.groups()
+                    t = rhs.split(" ")[0]
+                    table[iname] = t
+                    self.global_types[iname] = t
+            self.types[name] = table
+        self._memo: dict[str, dict[str, Any]] = {}
+
+    # -- per-computation direct costs -------------------------------------
+    def _lookup(self, comp: str, name: str) -> str | None:
+        return self.types.get(comp, {}).get(name) or self.global_types.get(name)
+
+    def _direct_cost(self, comp: str) -> dict[str, Any]:
+        flops = 0.0
+        coll = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+        subcalls: list[tuple[str, int]] = []   # (computation, multiplier)
+        for line in self.computations.get(comp, []):
+            m = _INSTR.match(line)
+            if not m:
+                continue
+            _, rhs = m.groups()
+            opcode_m = re.search(r"\)?\s*([a-z][\w\-]*)\(", rhs)
+            # dots ---------------------------------------------------------
+            if " dot(" in rhs or rhs.startswith("dot("):
+                res_dims = _first_shape_dims(rhs.split(" ")[0])
+                cm = _CONTRACT.search(rhs)
+                k = 1
+                if cm is not None:
+                    argm = re.search(r"dot\(([^)]*)\)", rhs)
+                    if argm:
+                        ops = [o.strip().lstrip("%") for o in argm.group(1).split(",")]
+                        lhs_t = self._lookup(comp, ops[0]) if ops else None
+                        lhs_dims = _first_shape_dims(lhs_t) if lhs_t else None
+                        if lhs_dims is not None and cm.group(1):
+                            for d in cm.group(1).split(","):
+                                di = int(d)
+                                if di < len(lhs_dims):
+                                    k *= lhs_dims[di]
+                if res_dims is not None:
+                    n = 1
+                    for d in res_dims:
+                        n *= d
+                    flops += 2.0 * n * k
+                continue
+            # collectives ----------------------------------------------------
+            matched = False
+            for kind in COLLECTIVES:
+                if re.search(rf"(?:=|\s){kind}(?:-start)?\(", rhs):
+                    if f"{kind}-done" in rhs:
+                        matched = True
+                        break
+                    am = re.search(rf"{kind}(?:-start)?\(([^)]*)\)", rhs)
+                    nbytes = 0
+                    if am:
+                        for op in am.group(1).split(","):
+                            op = op.strip().lstrip("%")
+                            if not op:
+                                continue
+                            t = self._lookup(comp, op)
+                            if t:
+                                nbytes += _shape_elems_bytes(t)[1]
+                    coll[kind]["count"] += 1
+                    coll[kind]["bytes"] += nbytes
+                    matched = True
+                    break
+            if matched:
+                continue
+            # nested structure -------------------------------------------------
+            if " while(" in rhs:
+                wm = _WHILE_PARTS.search(rhs)
+                tm = _TRIP.search(rhs)
+                trip = int(tm.group(1)) if tm else 1
+                if wm:
+                    subcalls.append((wm.group(2), trip))   # body × trip
+                    subcalls.append((wm.group(1), trip))   # cond × trip (cheap)
+            elif "fusion(" in rhs:
+                cm2 = _CALLS.search(rhs)
+                if cm2:
+                    subcalls.append((cm2.group(1), 1))
+            elif re.search(r"\scall\(", rhs) or rhs.startswith("call("):
+                cm2 = _CALLS.search(rhs) or re.search(r"to_apply=%?([\w.\-]+)", rhs)
+                if cm2:
+                    subcalls.append((cm2.group(1), 1))
+            elif "conditional(" in rhs:
+                for br in re.findall(r"(?:true_computation|false_computation|branch_computations=\{)[^,}]*%?([\w.\-]+)", rhs):
+                    subcalls.append((br, 1))
+        return {"flops": flops, "collectives": coll, "subcalls": subcalls}
+
+    def effective_cost(self, comp: str | None = None, _depth: int = 0) -> dict[str, Any]:
+        comp = comp or self.entry
+        if comp is None:
+            return {"flops": 0.0, "collectives": {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}}
+        if comp in self._memo:
+            return self._memo[comp]
+        if _depth > 64:  # pathological recursion guard
+            return {"flops": 0.0, "collectives": {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}}
+        direct = self._direct_cost(comp)
+        flops = direct["flops"]
+        coll = {k: dict(v) for k, v in direct["collectives"].items()}
+        for sub, mult in direct["subcalls"]:
+            if sub == comp:
+                continue
+            sc = self.effective_cost(sub, _depth + 1)
+            flops += mult * sc["flops"]
+            for kind in COLLECTIVES:
+                coll[kind]["count"] += mult * sc["collectives"][kind]["count"]
+                coll[kind]["bytes"] += mult * sc["collectives"][kind]["bytes"]
+        out = {"flops": flops, "collectives": coll}
+        self._memo[comp] = out
+        return out
+
+
+def analyze_hlo(text: str) -> dict[str, Any]:
+    mod = HloModule(text)
+    cost = mod.effective_cost()
+    coll = cost["collectives"]
+    total = sum(v["bytes"] for v in coll.values())
+    return {
+        "dot_flops": cost["flops"],
+        "collectives": {**coll, "total_bytes": total},
+        "n_computations": len(mod.computations),
+    }

@@ -1,0 +1,20 @@
+"""Workload-plane model zoo: the architectures iDDS Work payloads train/serve."""
+from repro.models.config import (  # noqa: F401
+    ArchConfig,
+    MoEConfig,
+    RWKVConfig,
+    SHAPES,
+    SSMConfig,
+    ShapeConfig,
+    cell_is_supported,
+)
+from repro.models.lm import (  # noqa: F401
+    abstract_params,
+    cache_specs,
+    forward_decode,
+    forward_prefill,
+    forward_train,
+    init_lm,
+    init_params_and_specs,
+    zero_caches,
+)

@@ -1,0 +1,60 @@
+"""Input specs: ShapeDtypeStruct stand-ins for every model input — the
+dry-run contract (weak-type-correct, shardable, no device allocation)."""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, ShapeConfig
+from repro.models.lm import cache_specs
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Inputs for train/prefill steps."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    out: dict[str, Any] = {}
+    if cfg.frontend == "audio_stub":
+        out["frame_embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), dt)
+    else:
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.frontend == "vit_stub":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_patches, cfg.d_frontend), dt
+        )
+    if shape.kind == "train":
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """Inputs for one decode step: single new token + caches sized to the
+    context length."""
+    b, s = shape.global_batch, shape.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch: dict[str, Any] = {}
+    if cfg.frontend == "audio_stub":
+        batch["frame_embeds"] = jax.ShapeDtypeStruct((b, 1, cfg.d_model), dt)
+    else:
+        batch["token"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    return {
+        "batch": batch,
+        "caches": cache_specs(cfg, b, s),
+        "position": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def concrete_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> dict[str, Any]:
+    """Real (random) inputs for smoke tests and examples."""
+    key = jax.random.PRNGKey(seed)
+    specs = batch_specs(cfg, shape)
+    out: dict[str, Any] = {}
+    for name, sds in specs.items():
+        key, sub = jax.random.split(key)
+        if jnp.issubdtype(sds.dtype, jnp.integer):
+            out[name] = jax.random.randint(sub, sds.shape, 0, cfg.vocab_size, dtype=sds.dtype)
+        else:
+            out[name] = jax.random.normal(sub, sds.shape, dtype=jnp.float32).astype(sds.dtype)
+    return out

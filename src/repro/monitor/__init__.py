@@ -1,0 +1,2 @@
+"""Monitoring (paper §3.6): internal state dashboards + DAG visualization."""
+from repro.monitor.dashboard import render_dashboard, workflow_graph_dot  # noqa: F401

@@ -1,0 +1,91 @@
+"""Monitoring renderers (paper §3.6).
+
+"iDDS includes a built-in monitoring system that continuously tracks the
+state of both Workflow and Work objects" (Fig. 7) and correlates workflow
+metadata with job execution (Fig. 8); Fig. 11 visualizes task-level DAGs.
+
+* ``render_dashboard(orch)``      — the Fig. 7/8 text analogue: request/
+  transform/processing/content state counts, per-request drill-down with
+  file progress percentages, runtime stats, bus health, live agents.
+* ``workflow_graph_dot(workflow)`` — Fig. 11 analogue: Graphviz DOT of the
+  task-level DAG with status coloring (renderable by any dot viewer).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.workflow import Workflow
+
+_STATUS_COLOR = {
+    "Finished": "palegreen",
+    "SubFinished": "khaki",
+    "Failed": "lightcoral",
+    "Cancelled": "lightgray",
+    "Running": "lightskyblue",
+    "New": "white",
+}
+
+
+def render_dashboard(orch: Any, *, max_requests: int = 10) -> str:
+    """Text dashboard over the orchestrator's stores."""
+    m = orch.monitor_summary()
+    lines: list[str] = []
+    lines.append("=" * 72)
+    lines.append("iDDS monitor")
+    lines.append("=" * 72)
+    for table in ("requests", "transforms", "processings", "contents"):
+        counts = m.get(table, {})
+        total = sum(counts.values())
+        parts = " ".join(f"{k}({v})" for k, v in sorted(counts.items()))
+        lines.append(f"{table:12s} total={total:<7d} {parts}")
+    bus = m.get("bus", {})
+    lines.append(
+        f"{'bus':12s} backend={bus.get('backend')} pending={bus.get('pending')}"
+        f" published={bus.get('published', 0)} merged={bus.get('merged', 0)}"
+        f" merge_ratio={bus.get('merge_ratio', 0.0):.3f}"
+    )
+    rt = m.get("runtime", {})
+    lines.append(
+        f"{'runtime':12s} finished={rt.get('finished_jobs')} failed={rt.get('failed_jobs')}"
+        f" retried={rt.get('retried_jobs')} speculated={rt.get('speculated_jobs')}"
+    )
+    agents = m.get("agents", {})
+    errs = {k: v["errors"] for k, v in agents.items() if v.get("errors")}
+    lines.append(f"{'agents':12s} live={len(agents)} errors={errs or 'none'}")
+    lines.append("-" * 72)
+    lines.append("requests:")
+    rows = orch.stores["requests"].list(limit=max_requests)
+    for row in rows:
+        rid = int(row["request_id"])
+        tf = orch.stores["transforms"].by_request(rid)
+        done = sum(1 for t in tf if t["status"] in ("Finished", "SubFinished"))
+        # file progress across the request's collections (Fig. 8 columns)
+        total_files = processed = 0
+        for t in tf:
+            for coll in orch.stores["collections"].by_transform(int(t["transform_id"])):
+                total_files += int(coll["total_files"] or 0)
+                processed += int(coll["processed_files"] or 0)
+        pct = f"{100.0 * processed / total_files:5.1f}%" if total_files else "    -"
+        lines.append(
+            f"  #{rid:<5d} {row['name'][:32]:32s} {row['status']:12s}"
+            f" tasks {done}/{len(tf):<3d} files {pct}"
+        )
+    return "\n".join(lines)
+
+
+def workflow_graph_dot(wf: Workflow) -> str:
+    """Graphviz DOT of the task-level DAG (Fig. 11 analogue)."""
+    out = ["digraph workflow {", '  rankdir=LR;', '  node [shape=box, style=filled];']
+    for name, work in wf.works.items():
+        status = str(work.status)
+        color = _STATUS_COLOR.get(status, "white")
+        if name in wf.skipped:
+            color = "lightgray"
+            status = "Skipped"
+        label = f"{name}\\n{status}"
+        out.append(f'  "{name}" [label="{label}", fillcolor="{color}"];')
+    for (parent, child), cond in wf.edge_conditions.items():
+        style = ' [style=dashed, label="?"]' if cond is not None else ""
+        out.append(f'  "{parent}" -> "{child}"{style};')
+    out.append("}")
+    return "\n".join(out)

@@ -1,0 +1,10 @@
+"""Optimizer substrate: AdamW (mixed precision, ZeRO-sharded), schedules,
+gradient compression."""
+from repro.optim.adamw import (  # noqa: F401
+    abstract_opt_state,
+    adamw_update,
+    global_norm,
+    init_opt_state,
+)
+from repro.optim.compress import compress_tree, dequantize_int8, quantize_int8  # noqa: F401
+from repro.optim.schedule import constant, cosine_with_warmup  # noqa: F401

@@ -1,0 +1,42 @@
+"""Gradient compression (distributed-optimization trick for the collective
+term): symmetric per-tensor int8 quantization applied to gradients before
+the cross-data-parallel reduction, dequantized after.
+
+With pjit, the all-reduce over the data axes happens inside autodiff; to
+compress the wire format we re-quantize the *already-reduced* gradients is
+pointless — instead the step factory applies ``compress_tree`` to the
+gradients computed from a *local* loss inside shard_map-style setups.  For
+the pjit path we expose it as a precision knob: grads cast to bf16 (2×
+reduction vs fp32) is the always-on default; int8 is available for
+explicit experiments and is exercised by the unit tests for
+quantize/dequantize round-trip error.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_int8(x: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    amax = jnp.maximum(jnp.max(jnp.abs(x.astype(jnp.float32))), 1e-12)
+    scale = amax / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray, dtype: Any = jnp.float32) -> jnp.ndarray:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def compress_tree(grads: Any) -> Any:
+    """Round-trip int8 compression over a gradient tree (error-injection
+    form used to measure accuracy impact; the wire saving itself requires
+    the shard_map manual-collective path)."""
+
+    def rt(g: jnp.ndarray) -> jnp.ndarray:
+        q, s = quantize_int8(g)
+        return dequantize_int8(q, s, g.dtype)
+
+    return jax.tree.map(rt, grads)

@@ -1,0 +1,30 @@
+"""Learning-rate schedules."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(
+    max_lr: float,
+    *,
+    warmup_steps: int = 100,
+    total_steps: int = 10_000,
+    min_ratio: float = 0.1,
+):
+    def schedule(step: jnp.ndarray) -> jnp.ndarray:
+        step = step.astype(jnp.float32)
+        warm = max_lr * step / max(1, warmup_steps)
+        progress = jnp.clip(
+            (step - warmup_steps) / max(1, total_steps - warmup_steps), 0.0, 1.0
+        )
+        cos = max_lr * (min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * progress)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return schedule
+
+
+def constant(lr: float):
+    def schedule(step: jnp.ndarray) -> jnp.ndarray:
+        return jnp.full((), lr, jnp.float32)
+
+    return schedule

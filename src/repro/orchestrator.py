@@ -1,0 +1,252 @@
+"""The iDDS server: database + event bus + agents + workload runtime.
+
+This is the deployable composition of the paper's architecture (Fig. 3):
+requests enter through ``submit_workflow`` (or the REST layer), the Clerk
+decomposes them, the Transformer prepares transforms, the Carrier drives
+the workload runtime, and the Coordinator keeps the bus healthy.  Agents
+run as daemon threads; ``replicas`` spins up multiple copies of every agent
+to exercise horizontal scaling and the idempotent-claim machinery.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+from typing import Any, Callable, Iterator
+
+from repro.agents import (
+    Clerk,
+    Conductor,
+    Coordinator,
+    Finisher,
+    Poller,
+    Receiver,
+    Submitter,
+    Transformer,
+    Trigger,
+)
+from repro.common.constants import (
+    RequestStatus,
+    TERMINAL_REQUEST_STATES,
+)
+from repro.common.exceptions import NotFoundError, ValidationError
+from repro.core.fat import ResultFuture, set_active_session
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+from repro.db.engine import Database
+from repro.db.stores import make_stores
+from repro.eventbus import create_event_bus
+from repro.eventbus.events import abort_request_event, new_request_event
+from repro.runtime.executor import WorkloadRuntime
+
+_AGENT_TYPES = (
+    Clerk,
+    Transformer,
+    Submitter,
+    Poller,
+    Receiver,
+    Trigger,
+    Finisher,
+    Conductor,
+    Coordinator,
+)
+
+
+class Orchestrator:
+    def __init__(
+        self,
+        *,
+        db: Database | None = None,
+        bus_kind: str = "local",
+        runtime: WorkloadRuntime | None = None,
+        poll_period_s: float = 0.05,
+        replicas: int = 1,
+        bus_kwargs: dict[str, Any] | None = None,
+    ):
+        self.db = db or Database(":memory:")
+        self.stores = make_stores(self.db)
+        kw = dict(bus_kwargs or {})
+        if bus_kind == "db":
+            kw.setdefault("db", self.db)
+        self.bus = create_event_bus(bus_kind, **kw)
+        self.runtime = runtime or WorkloadRuntime()
+        self.message_subscribers: list[Callable[[dict[str, Any]], None]] = []
+        self.agents = [
+            agent_cls(self, poll_period_s=poll_period_s, replica=r)
+            for agent_cls in _AGENT_TYPES
+            for r in range(replicas)
+        ]
+        self._started = False
+
+    # -- lifecycle -----------------------------------------------------------
+    def start(self) -> "Orchestrator":
+        if not self._started:
+            for agent in self.agents:
+                agent.start()
+            self._started = True
+        return self
+
+    def stop(self) -> None:
+        for agent in self.agents:
+            agent.stop()
+        for agent in self.agents:
+            agent.join(timeout=2.0)
+        self.runtime.stop()
+        self.bus.close()
+        self._started = False
+
+    def __enter__(self) -> "Orchestrator":
+        return self.start()
+
+    def __exit__(self, *exc: Any) -> None:
+        self.stop()
+
+    # -- request API -------------------------------------------------------------
+    def submit_workflow(
+        self,
+        workflow: Workflow,
+        *,
+        requester: str = "anonymous",
+        scope: str = "default",
+        priority: int = 0,
+    ) -> int:
+        workflow.validate()
+        request_id = self.stores["requests"].add(
+            workflow.name,
+            scope=scope,
+            requester=requester,
+            status=RequestStatus.NEW,
+            priority=priority,
+            workflow=workflow.to_dict(),
+        )
+        self.bus.publish(new_request_event(request_id))
+        return request_id
+
+    def submit_work(self, work: Work, **kw: Any) -> int:
+        wf = Workflow(f"single_{work.name}")
+        wf.add_work(work)
+        return self.submit_workflow(wf, **kw)
+
+    def abort_request(self, request_id: int) -> None:
+        self.bus.publish(abort_request_event(request_id))
+
+    def request_status(self, request_id: int) -> dict[str, Any]:
+        row = self.stores["requests"].get(request_id)
+        transforms = self.stores["transforms"].by_request(request_id)
+        return {
+            "request_id": request_id,
+            "name": row["name"],
+            "status": row["status"],
+            "requester": row["requester"],
+            "transforms": [
+                {
+                    "transform_id": t["transform_id"],
+                    "node_id": t["node_id"],
+                    "status": t["status"],
+                }
+                for t in transforms
+            ],
+        }
+
+    def work_status(self, request_id: int, node_id: str) -> tuple[str, Any]:
+        """(status, results) for one Work — what FaT futures poll."""
+        trow = self.stores["transforms"].by_node(request_id, node_id)
+        if trow is None:
+            try:
+                rrow = self.stores["requests"].get(request_id)
+            except NotFoundError:
+                return ("Unknown", None)
+            if rrow["status"] in [str(s) for s in TERMINAL_REQUEST_STATES]:
+                # workflow ended without ever materializing this work
+                wf = rrow.get("workflow") or {}
+                wd = (wf.get("works") or {}).get(node_id)
+                if wd:
+                    return (
+                        wd.get("metadata", {}).get("status", "Cancelled"),
+                        wd.get("metadata", {}).get("results"),
+                    )
+                return ("Cancelled", None)
+            return ("New", None)
+        meta = trow.get("transform_metadata") or {}
+        return (trow["status"], meta.get("results"))
+
+    def wait_request(
+        self,
+        request_id: int,
+        *,
+        timeout: float = 60.0,
+        interval: float = 0.02,
+    ) -> str:
+        deadline = time.monotonic() + timeout
+        terminal = [str(s) for s in TERMINAL_REQUEST_STATES]
+        while True:
+            row = self.stores["requests"].get(request_id)
+            if row["status"] in terminal:
+                return row["status"]
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"request {request_id} still {row['status']} after {timeout}s"
+                )
+            time.sleep(interval)
+
+    def workflow_snapshot(self, request_id: int) -> Workflow:
+        row = self.stores["requests"].get(request_id)
+        return Workflow.from_dict(row["workflow"])
+
+    # -- monitoring -----------------------------------------------------------
+    def monitor_summary(self) -> dict[str, Any]:
+        db = self.db
+        def _counts(table: str) -> dict[str, int]:
+            return {
+                r["status"]: int(r["n"])
+                for r in db.query(
+                    f"SELECT status, COUNT(*) AS n FROM {table} GROUP BY status"
+                )
+            }
+
+        coord = next(a for a in self.agents if isinstance(a, Coordinator))
+        return {
+            "requests": _counts("requests"),
+            "transforms": _counts("transforms"),
+            "processings": _counts("processings"),
+            "contents": _counts("contents"),
+            "bus": coord.bus_report(),
+            "runtime": dict(self.runtime.stats),
+            "agents": {
+                a.consumer_id: {"cycles": a.cycles, "errors": a.errors}
+                for a in self.agents
+            },
+        }
+
+    # -- Function-as-a-Task session ------------------------------------------
+    @contextlib.contextmanager
+    def session(self, **submit_kw: Any) -> Iterator["Session"]:
+        s = Session(self, **submit_kw)
+        set_active_session(s)
+        try:
+            yield s
+        finally:
+            set_active_session(None)  # type: ignore[arg-type]
+
+
+class Session:
+    """Active FaT session: ``@work_function`` submissions route here."""
+
+    def __init__(self, orch: Orchestrator, **submit_kw: Any):
+        self.orch = orch
+        self.submit_kw = submit_kw
+        self.requests: list[int] = []
+
+    def submit_work(self, work: Work) -> ResultFuture:
+        if not self.orch._started:
+            raise ValidationError("orchestrator not started")
+        request_id = self.orch.submit_work(work, **self.submit_kw)
+        self.requests.append(request_id)
+        return ResultFuture(
+            work.name,
+            lambda name, rid=request_id: self.orch.work_status(rid, name),
+        )
+
+    def submit_workflow(self, wf: Workflow) -> int:
+        request_id = self.orch.submit_workflow(wf, **self.submit_kw)
+        self.requests.append(request_id)
+        return request_id

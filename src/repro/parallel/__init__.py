@@ -1,0 +1,17 @@
+"""Parallelism substrate: logical-axis sharding, parallel context, ZeRO."""
+from repro.parallel.context import (  # noqa: F401
+    ParallelContext,
+    activate,
+    constrain,
+    constrain_residual,
+    current,
+)
+from repro.parallel.sharding import (  # noqa: F401
+    DEFAULT_RULES,
+    FSDP_RULES,
+    count_bytes,
+    sharding_for,
+    spec_for,
+    tree_shardings,
+    zero_shard_specs,
+)

@@ -1,0 +1,67 @@
+"""Active parallel context: lets model code place sharding constraints
+without threading mesh objects through every layer.
+
+Step factories install a context (mesh + rules + toggles); model code
+calls ``constrain(x, axis_names)`` which is a no-op when no context is
+active (single-device smoke tests) — so the same model code runs anywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Any, Iterator, Mapping, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.parallel.sharding import DEFAULT_RULES, MeshAxes, spec_for
+
+_state = threading.local()
+
+
+class ParallelContext:
+    def __init__(
+        self,
+        mesh: Mesh,
+        rules: Mapping[str, MeshAxes] | None = None,
+        *,
+        residual_sharding: bool = False,
+    ):
+        self.mesh = mesh
+        self.rules = dict(rules or DEFAULT_RULES)
+        #: Megatron-SP style sharding of the residual stream (activations'
+        #: embed dim over "model") — a beyond-baseline memory optimization.
+        self.residual_sharding = residual_sharding
+
+
+def current() -> ParallelContext | None:
+    return getattr(_state, "ctx", None)
+
+
+@contextlib.contextmanager
+def activate(ctx: ParallelContext) -> Iterator[ParallelContext]:
+    prev = getattr(_state, "ctx", None)
+    _state.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _state.ctx = prev
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[str | None]) -> jax.Array:
+    """with_sharding_constraint by logical axes; no-op without a context."""
+    ctx = current()
+    if ctx is None:
+        return x
+    spec = spec_for(x.shape, logical_axes, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))
+
+
+def constrain_residual(x: jax.Array) -> jax.Array:
+    """Residual-stream constraint: [B, S, d] → (batch, None, residual?)."""
+    ctx = current()
+    if ctx is None:
+        return x
+    if ctx.residual_sharding:
+        return constrain(x, ("batch", None, "residual"))
+    return constrain(x, ("batch", None, None))

@@ -1,0 +1,4 @@
+"""REST service + auth + client (paper §3.3)."""
+from repro.rest.app import RestApp, RestServer  # noqa: F401
+from repro.rest.auth import AuthService  # noqa: F401
+from repro.rest.client import RestClient  # noqa: F401

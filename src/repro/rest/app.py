@@ -1,0 +1,260 @@
+"""RESTful service (paper §3.3).
+
+The paper deploys Flask behind Apache/WSGI; offline we use the stdlib
+``ThreadingHTTPServer`` with the same architecture:
+
+* a routing table of logical endpoint groups (§3.3.1): ``authentication``,
+  ``ping``, ``request``, ``cache``, ``catalog``, ``monitor``, ``message``,
+  ``log``;
+* *before-request filters* enforcing authentication/authorization per
+  route (the Flask ``before_request`` hook, §3.3.2);
+* JSON request/response bodies throughout.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import re
+import threading
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from typing import Any, Callable
+from urllib.parse import parse_qs, urlparse
+
+from repro.common.exceptions import (
+    AuthenticationError,
+    AuthorizationError,
+    NotFoundError,
+    ReproError,
+)
+from repro.core.fat import GLOBAL_CODE_CACHE
+from repro.core.workflow import Workflow
+from repro.orchestrator import Orchestrator
+from repro.rest.auth import AuthService
+
+Route = tuple[str, re.Pattern[str], str | None, Callable[..., Any]]
+
+
+class RestApp:
+    """Routing + handlers, independent of the HTTP plumbing (testable)."""
+
+    def __init__(self, orch: Orchestrator, auth: AuthService | None = None):
+        self.orch = orch
+        self.auth = auth or AuthService()
+        self.routes: list[Route] = []
+        self._register_routes()
+
+    # -- route registration ---------------------------------------------------
+    def route(self, method: str, pattern: str, role: str | None):
+        def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
+            self.routes.append((method, re.compile(f"^{pattern}$"), role, fn))
+            return fn
+
+        return deco
+
+    def _register_routes(self) -> None:
+        r = self.route
+        # ping ------------------------------------------------------------
+        r("GET", r"/ping", None)(lambda **kw: {"status": "OK"})
+        # authentication ----------------------------------------------------
+        r("POST", r"/auth/register", None)(self._auth_register)
+        r("POST", r"/auth/token", None)(self._auth_token)
+        # request -----------------------------------------------------------
+        r("POST", r"/request", "submit")(self._request_submit)
+        r("GET", r"/request/(?P<request_id>\d+)", "read")(self._request_get)
+        r("POST", r"/request/(?P<request_id>\d+)/abort", "submit")(
+            self._request_abort
+        )
+        # cache ---------------------------------------------------------------
+        r("POST", r"/cache", "submit")(self._cache_put)
+        r("GET", r"/cache/(?P<digest>[0-9a-f]+)", "read")(self._cache_get)
+        # catalog ---------------------------------------------------------------
+        r("GET", r"/catalog/(?P<request_id>\d+)", "read")(self._catalog)
+        # monitor -----------------------------------------------------------------
+        r("GET", r"/monitor", "read")(lambda claims, **kw: self.orch.monitor_summary())
+        r("GET", r"/monitor/health", "read")(self._monitor_health)
+        # message -------------------------------------------------------------------
+        r("POST", r"/message/(?P<request_id>\d+)", "submit")(self._message)
+        # log -------------------------------------------------------------------------
+        r("GET", r"/log/(?P<request_id>\d+)", "read")(self._log)
+
+    # -- dispatch (with the before-request auth filter) -----------------------
+    def dispatch(
+        self,
+        method: str,
+        path: str,
+        body: dict[str, Any] | None,
+        headers: dict[str, str],
+    ) -> tuple[int, dict[str, Any]]:
+        for m, pattern, role, fn in self.routes:
+            if m != method:
+                continue
+            match = pattern.match(path)
+            if not match:
+                continue
+            try:
+                claims: dict[str, Any] | None = None
+                if role is not None:  # before_request filter
+                    token = self._bearer(headers)
+                    claims = self.auth.authorize(token, role)
+                out = fn(claims=claims, body=body or {}, **match.groupdict())
+                return 200, out
+            except AuthenticationError as exc:
+                return 401, {"error": str(exc)}
+            except AuthorizationError as exc:
+                return 403, {"error": str(exc)}
+            except NotFoundError as exc:
+                return 404, {"error": str(exc)}
+            except ReproError as exc:
+                return 400, {"error": str(exc)}
+            except Exception as exc:  # noqa: BLE001
+                return 500, {"error": f"{type(exc).__name__}: {exc}"}
+        return 404, {"error": f"no route for {method} {path}"}
+
+    @staticmethod
+    def _bearer(headers: dict[str, str]) -> str:
+        authz = headers.get("authorization", "")
+        if not authz.lower().startswith("bearer "):
+            raise AuthenticationError("missing bearer token")
+        return authz[7:].strip()
+
+    # -- handlers ------------------------------------------------------------
+    def _auth_register(self, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
+        self.auth.register(body["user"], body.get("groups"))
+        return {"registered": body["user"]}
+
+    def _auth_token(self, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
+        return {"token": self.auth.issue_token(body["user"])}
+
+    def _request_submit(
+        self, claims: dict[str, Any], body: dict[str, Any], **kw: Any
+    ) -> dict[str, Any]:
+        wf = Workflow.from_dict(body["workflow"])
+        request_id = self.orch.submit_workflow(
+            wf,
+            requester=claims["sub"] if claims else "anonymous",
+            priority=int(body.get("priority", 0)),
+        )
+        return {"request_id": request_id}
+
+    def _request_get(self, request_id: str, **kw: Any) -> dict[str, Any]:
+        return self.orch.request_status(int(request_id))
+
+    def _request_abort(self, request_id: str, **kw: Any) -> dict[str, Any]:
+        self.orch.abort_request(int(request_id))
+        return {"aborted": int(request_id)}
+
+    def _cache_put(self, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
+        data = base64.b64decode(body["data"])
+        digest = GLOBAL_CODE_CACHE.put(data)
+        return {"digest": digest}
+
+    def _cache_get(self, digest: str, **kw: Any) -> dict[str, Any]:
+        data = GLOBAL_CODE_CACHE.get(digest)
+        return {"data": base64.b64encode(data).decode()}
+
+    def _catalog(self, request_id: str, **kw: Any) -> dict[str, Any]:
+        rid = int(request_id)
+        out: dict[str, Any] = {"request_id": rid, "collections": []}
+        for trow in self.orch.stores["transforms"].by_request(rid):
+            for coll in self.orch.stores["collections"].by_transform(
+                int(trow["transform_id"])
+            ):
+                out["collections"].append(
+                    {
+                        "coll_id": coll["coll_id"],
+                        "name": coll["name"],
+                        "relation": coll["relation_type"],
+                        "status": coll["status"],
+                        "total_files": coll["total_files"],
+                        "processed_files": coll["processed_files"],
+                        "failed_files": coll["failed_files"],
+                    }
+                )
+        return out
+
+    def _monitor_health(self, **kw: Any) -> dict[str, Any]:
+        return {"agents": self.orch.stores["health"].live_agents()}
+
+    def _message(self, request_id: str, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
+        command = body.get("command")
+        if command == "abort":
+            self.orch.abort_request(int(request_id))
+            return {"ok": True}
+        raise NotFoundError(f"unknown command {command!r}")
+
+    def _log(self, request_id: str, **kw: Any) -> dict[str, Any]:
+        rid = int(request_id)
+        rows = self.orch.stores["transforms"].by_request(rid)
+        return {
+            "request_id": rid,
+            "entries": [
+                {
+                    "transform_id": t["transform_id"],
+                    "node_id": t["node_id"],
+                    "status": t["status"],
+                    "errors": t.get("errors"),
+                    "created_at": t["created_at"],
+                    "updated_at": t["updated_at"],
+                }
+                for t in rows
+            ],
+        }
+
+
+class _Handler(BaseHTTPRequestHandler):
+    app: RestApp
+
+    def _serve(self, method: str) -> None:
+        parsed = urlparse(self.path)
+        body: dict[str, Any] | None = None
+        length = int(self.headers.get("Content-Length") or 0)
+        if length:
+            try:
+                body = json.loads(self.rfile.read(length))
+            except json.JSONDecodeError:
+                self._reply(400, {"error": "invalid JSON body"})
+                return
+        headers = {k.lower(): v for k, v in self.headers.items()}
+        status, payload = self.app.dispatch(method, parsed.path, body, headers)
+        self._reply(status, payload)
+
+    def _reply(self, status: int, payload: dict[str, Any]) -> None:
+        data = json.dumps(payload).encode()
+        self.send_response(status)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(data)))
+        self.end_headers()
+        self.wfile.write(data)
+
+    def do_GET(self) -> None:  # noqa: N802 - stdlib API
+        self._serve("GET")
+
+    def do_POST(self) -> None:  # noqa: N802 - stdlib API
+        self._serve("POST")
+
+    def log_message(self, fmt: str, *args: Any) -> None:  # silence stdout
+        pass
+
+
+class RestServer:
+    """Threaded HTTP server wrapping a RestApp."""
+
+    def __init__(self, app: RestApp, host: str = "127.0.0.1", port: int = 0):
+        handler = type("BoundHandler", (_Handler,), {"app": app})
+        self.httpd = ThreadingHTTPServer((host, port), handler)
+        self.address = self.httpd.server_address
+        self._thread = threading.Thread(
+            target=self.httpd.serve_forever, name="rest-server", daemon=True
+        )
+
+    @property
+    def url(self) -> str:
+        return f"http://{self.address[0]}:{self.address[1]}"
+
+    def start(self) -> "RestServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self.httpd.shutdown()
+        self.httpd.server_close()

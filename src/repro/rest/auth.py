@@ -1,0 +1,99 @@
+"""Authentication & authorization (paper §3.3.2).
+
+The paper supports OIDC tokens (Indigo IAM) and X.509 (GridSite).  Offline,
+we reproduce the three-stage *register → authenticate → authorize* flow
+with HMAC-signed bearer tokens that carry identity + group claims:
+
+* ``register(user, groups)``   — the IAM registration step,
+* ``issue_token(user)``        — the authentication step (login),
+* ``authorize(token, role)``   — the per-request filter step, with the
+  resolved roles cached for a TTL exactly as §3.3.2 describes.
+"""
+from __future__ import annotations
+
+import base64
+import hashlib
+import hmac
+import json
+import secrets
+import threading
+import time
+from typing import Any
+
+from repro.common.exceptions import AuthenticationError, AuthorizationError
+
+# role → groups that hold it
+DEFAULT_ROLE_MAP = {
+    "submit": {"users", "production", "admins"},
+    "read": {"users", "production", "admins", "monitors"},
+    "admin": {"admins"},
+}
+
+
+class AuthService:
+    def __init__(
+        self,
+        *,
+        secret: bytes | None = None,
+        token_ttl_s: float = 3600.0,
+        cache_ttl_s: float = 30.0,
+    ):
+        self._secret = secret or secrets.token_bytes(32)
+        self.token_ttl_s = token_ttl_s
+        self.cache_ttl_s = cache_ttl_s
+        self._users: dict[str, set[str]] = {}
+        self._cache: dict[str, tuple[float, dict[str, Any]]] = {}
+        self._lock = threading.Lock()
+        self.role_map = {k: set(v) for k, v in DEFAULT_ROLE_MAP.items()}
+
+    # -- registration (IAM enrolment) ---------------------------------------
+    def register(self, user: str, groups: list[str] | None = None) -> None:
+        with self._lock:
+            self._users[user] = set(groups or ["users"])
+
+    # -- authentication (issue a signed claim token) -------------------------
+    def issue_token(self, user: str) -> str:
+        with self._lock:
+            if user not in self._users:
+                raise AuthenticationError(f"unknown user {user!r}; register first")
+            groups = sorted(self._users[user])
+        claims = {
+            "sub": user,
+            "groups": groups,
+            "iat": time.time(),
+            "exp": time.time() + self.token_ttl_s,
+        }
+        body = base64.urlsafe_b64encode(json.dumps(claims).encode()).rstrip(b"=")
+        sig = hmac.new(self._secret, body, hashlib.sha256).hexdigest()
+        return f"{body.decode()}.{sig}"
+
+    # -- validation + authorization ---------------------------------------------
+    def validate(self, token: str) -> dict[str, Any]:
+        now = time.time()
+        with self._lock:
+            hit = self._cache.get(token)
+            if hit and hit[0] > now:
+                return hit[1]
+        try:
+            body, sig = token.rsplit(".", 1)
+        except ValueError as exc:
+            raise AuthenticationError("malformed token") from exc
+        expect = hmac.new(self._secret, body.encode(), hashlib.sha256).hexdigest()
+        if not hmac.compare_digest(sig, expect):
+            raise AuthenticationError("bad token signature")
+        pad = "=" * (-len(body) % 4)
+        claims = json.loads(base64.urlsafe_b64decode(body + pad))
+        if claims.get("exp", 0) < now:
+            raise AuthenticationError("token expired")
+        with self._lock:
+            self._cache[token] = (now + self.cache_ttl_s, claims)
+        return claims
+
+    def authorize(self, token: str, role: str) -> dict[str, Any]:
+        claims = self.validate(token)
+        allowed = self.role_map.get(role, set())
+        if not allowed.intersection(claims.get("groups", [])):
+            raise AuthorizationError(
+                f"user {claims.get('sub')!r} lacks role {role!r}"
+            )
+        return claims

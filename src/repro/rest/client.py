@@ -1,0 +1,100 @@
+"""Python client for the REST service (the user-side integration surface)."""
+from __future__ import annotations
+
+import json
+import time
+import urllib.error
+import urllib.request
+from typing import Any
+
+from repro.common.exceptions import ReproError
+from repro.core.workflow import Workflow
+
+_TERMINAL = {"Finished", "SubFinished", "Failed", "Cancelled", "Expired"}
+
+
+class RestClient:
+    def __init__(self, url: str, *, token: str | None = None):
+        self.url = url.rstrip("/")
+        self.token = token
+
+    # -- plumbing -----------------------------------------------------------
+    def _call(
+        self, method: str, path: str, body: dict[str, Any] | None = None
+    ) -> dict[str, Any]:
+        data = json.dumps(body).encode() if body is not None else None
+        req = urllib.request.Request(
+            self.url + path, data=data, method=method
+        )
+        req.add_header("Content-Type", "application/json")
+        if self.token:
+            req.add_header("Authorization", f"Bearer {self.token}")
+        try:
+            with urllib.request.urlopen(req, timeout=30) as resp:
+                return json.loads(resp.read())
+        except urllib.error.HTTPError as exc:
+            try:
+                payload = json.loads(exc.read())
+            except Exception:  # noqa: BLE001
+                payload = {"error": str(exc)}
+            raise ReproError(
+                f"HTTP {exc.code} on {method} {path}: {payload.get('error')}"
+            ) from exc
+
+    # -- auth ------------------------------------------------------------------
+    def register(self, user: str, groups: list[str] | None = None) -> None:
+        self._call("POST", "/auth/register", {"user": user, "groups": groups})
+
+    def login(self, user: str) -> str:
+        token = self._call("POST", "/auth/token", {"user": user})["token"]
+        self.token = token
+        return token
+
+    # -- api ---------------------------------------------------------------------
+    def ping(self) -> bool:
+        return self._call("GET", "/ping").get("status") == "OK"
+
+    def submit(self, workflow: Workflow, *, priority: int = 0) -> int:
+        out = self._call(
+            "POST",
+            "/request",
+            {"workflow": workflow.to_dict(), "priority": priority},
+        )
+        return int(out["request_id"])
+
+    def status(self, request_id: int) -> dict[str, Any]:
+        return self._call("GET", f"/request/{request_id}")
+
+    def abort(self, request_id: int) -> None:
+        self._call("POST", f"/request/{request_id}/abort", {})
+
+    def catalog(self, request_id: int) -> dict[str, Any]:
+        return self._call("GET", f"/catalog/{request_id}")
+
+    def monitor(self) -> dict[str, Any]:
+        return self._call("GET", "/monitor")
+
+    def logs(self, request_id: int) -> dict[str, Any]:
+        return self._call("GET", f"/log/{request_id}")
+
+    def cache_put(self, data: bytes) -> str:
+        import base64
+
+        return self._call(
+            "POST", "/cache", {"data": base64.b64encode(data).decode()}
+        )["digest"]
+
+    def cache_get(self, digest: str) -> bytes:
+        import base64
+
+        return base64.b64decode(self._call("GET", f"/cache/{digest}")["data"])
+
+    def wait(self, request_id: int, *, timeout: float = 60.0, interval: float = 0.1) -> str:
+        deadline = time.monotonic() + timeout
+        while True:
+            st = self.status(request_id)["status"]
+            if st in _TERMINAL:
+                return st
+            if time.monotonic() > deadline:
+                raise TimeoutError(f"request {request_id} still {st}")
+            time.sleep(interval)

@@ -1,0 +1,17 @@
+"""Workload runtime — the PanDA analogue (paper §3.5).
+
+"PanDA handles the scheduling of workloads across large-scale,
+heterogeneous distributed computing resources" — here the resources are
+*mesh slices* of a TPU pod (plus generic CPU slots), and the runtime is an
+in-process executor with the operational behaviours that matter for
+orchestration research: sites with finite slots, job retries, failure and
+straggler injection, speculative re-execution, incremental job release,
+and asynchronous status messages back to the orchestrator (the channel the
+Carrier's Receiver consumes).
+"""
+from repro.runtime.executor import (  # noqa: F401
+    JobInfo,
+    Site,
+    TaskSpec,
+    WorkloadRuntime,
+)

@@ -1,0 +1,513 @@
+"""In-process workload executor with PanDA-like semantics.
+
+A *task* (one iDDS Work ⇒ one PanDA task) comprises ``n_jobs`` jobs.  Jobs
+run on *sites* — named slot pools standing in for pod slices / grid sites.
+The executor provides:
+
+* finite per-site slots + greedy brokering (site preference honoured),
+* per-job retries with relocation (failed attempts prefer another site),
+* fault injection (``failure_rate``) and straggler injection
+  (``straggler_rate`` × ``straggler_factor``),
+* speculative re-execution of stragglers (first copy to finish wins) —
+  payloads must therefore be idempotent, as in any retry-based WMS,
+* **incremental release**: tasks submitted with ``hold_jobs=True`` start
+  with every job HELD; the orchestrator's Trigger agent releases jobs as
+  their input data becomes available (fine-grained Data Carousel, §4.1),
+* asynchronous status messages pushed to a queue the orchestrator's
+  Receiver consumes (event-driven path; polling stays as fallback §3.4.3),
+* elastic site add/remove — removing a site fails its running jobs, which
+  retry elsewhere (fault-tolerance drill used by the tests).
+
+Claiming is O(1) via a global ready-queue of (task, job) references.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import random
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Mapping
+
+from repro.common.exceptions import SchedulingError
+from repro.common.utils import new_uid, utc_now_ts
+from repro.core.fat import encode_result, execute_function_payload
+from repro.core.work import get_task
+
+JobState = str  # Held | Pending | Running | Finished | Failed | Cancelled
+
+_TERMINAL_JOB = {"Finished", "Failed", "Cancelled"}
+_STATE_RANK = {"Finished": 5, "Running": 4, "Pending": 3, "Held": 2, "Failed": 1, "Cancelled": 0}
+
+
+@dataclass
+class TaskSpec:
+    """What the Carrier submits (serialized Work payload + execution knobs)."""
+
+    payload: dict[str, Any]
+    n_jobs: int = 1
+    parameters: dict[str, Any] = field(default_factory=dict)
+    site: str | None = None
+    hold_jobs: bool = False
+    max_job_retries: int = 3
+    name: str = ""
+    # content ids backing each job (fine-grained data binding), parallel to
+    # job indices; optional.
+    job_contents: list[int] | None = None
+
+
+@dataclass
+class JobInfo:
+    index: int
+    state: JobState = "Pending"
+    site: str | None = None
+    attempts: int = 0
+    started_at: float | None = None
+    finished_at: float | None = None
+    result: Any = None
+    error: str | None = None
+    speculated: bool = False
+    avoid_site: str | None = None  # retry relocation hint
+
+
+class Site:
+    """A named slot pool (mesh slice / grid site)."""
+
+    def __init__(self, name: str, slots: int, *, tags: tuple[str, ...] = ()):
+        self.name = name
+        self.slots = slots
+        self.tags = tags
+        self.busy = 0
+        self.drained = False
+        self.lock = threading.Lock()
+
+    def try_acquire(self) -> bool:
+        with self.lock:
+            if self.drained or self.busy >= self.slots:
+                return False
+            self.busy += 1
+            return True
+
+    def release(self) -> None:
+        with self.lock:
+            self.busy = max(0, self.busy - 1)
+
+    def free(self) -> int:
+        with self.lock:
+            return 0 if self.drained else self.slots - self.busy
+
+
+class _Task:
+    def __init__(self, workload_id: str, spec: TaskSpec):
+        self.workload_id = workload_id
+        self.spec = spec
+        self.jobs = [
+            JobInfo(i, state="Held" if spec.hold_jobs else "Pending")
+            for i in range(spec.n_jobs)
+        ]
+        self.extra_jobs: list[JobInfo] = []  # speculative clones
+        self.cancelled = False
+        self.created_at = utc_now_ts()
+        self.lock = threading.Lock()
+
+    def all_jobs(self) -> list[JobInfo]:
+        return self.jobs + self.extra_jobs
+
+    def per_index(self) -> list[JobInfo]:
+        """Collapse speculative clones: best state per index."""
+        best: dict[int, JobInfo] = {}
+        for j in self.all_jobs():
+            cur = best.get(j.index)
+            if cur is None or _STATE_RANK[j.state] > _STATE_RANK[cur.state]:
+                best[j.index] = j
+        return [best[i] for i in sorted(best)]
+
+    def status(self) -> str:
+        with self.lock:
+            states = [j.state for j in self.per_index()]
+        if self.cancelled:
+            return "Cancelled"
+        if any(s in ("Pending", "Running", "Held") for s in states):
+            return "Running" if any(s == "Running" for s in states) else "Submitted"
+        if all(s == "Finished" for s in states):
+            return "Finished"
+        if any(s == "Finished" for s in states):
+            return "SubFinished"
+        return "Failed"
+
+
+class WorkloadRuntime:
+    """Thread-pool workload manager with chaos knobs."""
+
+    def __init__(
+        self,
+        sites: Mapping[str, int] | None = None,
+        *,
+        failure_rate: float = 0.0,
+        straggler_rate: float = 0.0,
+        straggler_factor: float = 8.0,
+        speculative: bool = True,
+        speculate_after_factor: float = 4.0,
+        job_runtime_s: float = 0.0,
+        seed: int = 0,
+        workers: int = 8,
+    ):
+        self.sites: dict[str, Site] = {}
+        for name, slots in (sites or {"site0": 64}).items():
+            self.sites[name] = Site(name, slots)
+        self.failure_rate = failure_rate
+        self.straggler_rate = straggler_rate
+        self.straggler_factor = straggler_factor
+        self.speculative = speculative
+        self.speculate_after_factor = speculate_after_factor
+        self.job_runtime_s = job_runtime_s
+        self.rng = random.Random(seed)
+        self.tasks: dict[str, _Task] = {}
+        self.messages: "queue.Queue[dict[str, Any]]" = queue.Queue()
+        self._ready: collections.deque[tuple[_Task, JobInfo]] = collections.deque()
+        self._lock = threading.Lock()
+        self._wake = threading.Condition(self._lock)
+        self._stop = False
+        self._durations: list[float] = []
+        self.stats = {
+            "submitted_jobs": 0,
+            "finished_jobs": 0,
+            "failed_jobs": 0,
+            "retried_jobs": 0,
+            "speculated_jobs": 0,
+            "injected_failures": 0,
+            "injected_stragglers": 0,
+        }
+        self._threads = [
+            threading.Thread(
+                target=self._worker_loop, name=f"runtime-worker-{i}", daemon=True
+            )
+            for i in range(workers)
+        ]
+        for t in self._threads:
+            t.start()
+        self._monitor = threading.Thread(
+            target=self._monitor_loop, name="runtime-monitor", daemon=True
+        )
+        self._monitor.start()
+
+    # -- public API (what the Carrier uses) --------------------------------
+    def submit(self, spec: TaskSpec) -> str:
+        workload_id = new_uid("wl_")
+        task = _Task(workload_id, spec)
+        with self._lock:
+            self.tasks[workload_id] = task
+            self.stats["submitted_jobs"] += spec.n_jobs
+            if not spec.hold_jobs:
+                for job in task.jobs:
+                    self._ready.append((task, job))
+            self._wake.notify_all()
+        self._emit(workload_id, "task_submitted", {})
+        return workload_id
+
+    def release_jobs(self, workload_id: str, job_indices: list[int]) -> int:
+        """Incremental release (Held → Pending).  Returns #released."""
+        task = self._get(workload_id)
+        released: list[JobInfo] = []
+        with task.lock:
+            for i in job_indices:
+                if 0 <= i < len(task.jobs) and task.jobs[i].state == "Held":
+                    task.jobs[i].state = "Pending"
+                    released.append(task.jobs[i])
+        if released:
+            with self._lock:
+                for job in released:
+                    self._ready.append((task, job))
+                self._wake.notify_all()
+        return len(released)
+
+    def release_jobs_for_contents(
+        self, workload_id: str, content_ids: list[int]
+    ) -> int:
+        task = self._get(workload_id)
+        if not task.spec.job_contents:
+            return 0
+        wanted = set(content_ids)
+        idx = [i for i, cid in enumerate(task.spec.job_contents) if cid in wanted]
+        return self.release_jobs(workload_id, idx)
+
+    def status(self, workload_id: str) -> dict[str, Any]:
+        task = self._get(workload_id)
+        with task.lock:
+            jobs = [
+                {
+                    "index": j.index,
+                    "state": j.state,
+                    "site": j.site,
+                    "attempts": j.attempts,
+                    "error": j.error,
+                }
+                for j in task.per_index()
+            ]
+        return {
+            "workload_id": workload_id,
+            "status": task.status(),
+            "jobs": jobs,
+            "name": task.spec.name,
+        }
+
+    def results(self, workload_id: str) -> list[Any]:
+        task = self._get(workload_id)
+        with task.lock:
+            return [j.result for j in task.per_index()]
+
+    def kill(self, workload_id: str) -> None:
+        task = self._get(workload_id)
+        with task.lock:
+            task.cancelled = True
+            for j in task.all_jobs():
+                if j.state in ("Pending", "Held"):
+                    j.state = "Cancelled"
+        self._emit(workload_id, "task_cancelled", {})
+
+    # -- elastic scaling ----------------------------------------------------
+    def add_site(self, name: str, slots: int) -> None:
+        with self._lock:
+            self.sites[name] = Site(name, slots)
+            self._wake.notify_all()
+
+    def remove_site(self, name: str) -> None:
+        """Drain the site; its running jobs are failed by the monitor and
+        retried elsewhere (node-loss drill)."""
+        site = self.sites.get(name)
+        if site is None:
+            return
+        site.drained = True
+        with self._lock:
+            self._wake.notify_all()
+
+    def total_free_slots(self) -> int:
+        return sum(s.free() for s in self.sites.values())
+
+    def stop(self) -> None:
+        with self._lock:
+            self._stop = True
+            self._wake.notify_all()
+
+    # -- internals -----------------------------------------------------------
+    def _get(self, workload_id: str) -> _Task:
+        with self._lock:
+            task = self.tasks.get(workload_id)
+        if task is None:
+            raise SchedulingError(f"unknown workload {workload_id!r}")
+        return task
+
+    def _emit(self, workload_id: str, kind: str, body: dict[str, Any]) -> None:
+        self.messages.put(
+            {"workload_id": workload_id, "kind": kind, "ts": utc_now_ts(), **body}
+        )
+
+    def _broker_site(self, preference: str | None, avoid: str | None) -> Site | None:
+        """Greedy brokering: preference first, else most-free site, skipping
+        the site a retry is avoiding when alternatives exist."""
+        if preference:
+            site = self.sites.get(preference)
+            if site is not None and site.try_acquire():
+                return site
+        candidates = sorted(self.sites.values(), key=lambda s: -s.free())
+        if avoid is not None and len([s for s in candidates if s.free() > 0]) > 1:
+            candidates = [s for s in candidates if s.name != avoid] + [
+                s for s in candidates if s.name == avoid
+            ]
+        for site in candidates:
+            if site.try_acquire():
+                return site
+        return None
+
+    def _requeue(self, task: _Task, job: JobInfo) -> None:
+        with self._lock:
+            self._ready.append((task, job))
+            self._wake.notify_all()
+
+    def _worker_loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+                item = self._ready.popleft() if self._ready else None
+            if item is None:
+                with self._lock:
+                    if self._stop:
+                        return
+                    self._wake.wait(timeout=0.05)
+                continue
+            task, job = item
+            with task.lock:
+                if job.state != "Pending" or task.cancelled:
+                    continue
+            site = self._broker_site(task.spec.site, job.avoid_site)
+            if site is None:
+                # no capacity: put it back and wait a beat
+                with self._lock:
+                    self._ready.append((task, job))
+                    self._wake.wait(timeout=0.02)
+                continue
+            with task.lock:
+                if job.state != "Pending":
+                    site.release()
+                    continue
+                job.state = "Running"
+                job.site = site.name
+                job.attempts += 1
+                job.started_at = utc_now_ts()
+            self._run_job(task, job, site)
+
+    def _run_job(self, task: _Task, job: JobInfo, site: Site) -> None:
+        spec = task.spec
+        t0 = utc_now_ts()
+        try:
+            # chaos injection ------------------------------------------------
+            if self.straggler_rate and self.rng.random() < self.straggler_rate:
+                self.stats["injected_stragglers"] += 1
+                time.sleep(self.job_runtime_s * self.straggler_factor)
+            elif self.job_runtime_s:
+                time.sleep(self.job_runtime_s)
+            if self.failure_rate and self.rng.random() < self.failure_rate:
+                self.stats["injected_failures"] += 1
+                raise RuntimeError("injected failure")
+            # actual payload --------------------------------------------------
+            result = self._execute_payload(spec, job.index)
+            with task.lock:
+                if job.state != "Running":  # lost a speculation race
+                    return
+                job.state = "Finished"
+                job.result = result
+                job.finished_at = utc_now_ts()
+                for j in task.all_jobs():
+                    if j.index == job.index and j is not job and j.state in (
+                        "Running",
+                        "Pending",
+                    ):
+                        j.state = "Cancelled"
+            self.stats["finished_jobs"] += 1
+            with self._lock:
+                self._durations.append(job.finished_at - t0)
+                if len(self._durations) > 512:
+                    del self._durations[:256]
+            self._emit(
+                task.workload_id,
+                "job_finished",
+                {"job_index": job.index, "site": site.name},
+            )
+        except Exception as exc:  # noqa: BLE001 - payload errors become retries
+            retry = False
+            lost_race = True
+            with task.lock:
+                if job.state == "Running":
+                    lost_race = False
+                    job.error = f"{type(exc).__name__}: {exc}"
+                    if job.attempts <= spec.max_job_retries and not task.cancelled:
+                        job.state = "Pending"
+                        job.avoid_site = job.site
+                        job.site = None
+                        retry = True
+                    else:
+                        job.state = "Failed"
+                        job.finished_at = utc_now_ts()
+            if lost_race:
+                pass  # a cancelled speculative copy; not a failure
+            elif retry:
+                self.stats["retried_jobs"] += 1
+                self._requeue(task, job)
+            else:
+                self.stats["failed_jobs"] += 1
+                self._emit(
+                    task.workload_id,
+                    "job_failed",
+                    {"job_index": job.index, "error": str(exc)},
+                )
+        finally:
+            site.release()
+            if self._task_terminal(task):
+                self._emit(
+                    task.workload_id, "task_terminal", {"status": task.status()}
+                )
+
+    def _execute_payload(self, spec: TaskSpec, job_index: int) -> Any:
+        payload = spec.payload
+        kind = payload.get("kind")
+        if kind == "noop":
+            return None
+        if kind == "function":
+            value = execute_function_payload(payload, job_index=job_index)
+            return encode_result(value)
+        if kind == "registered":
+            fn = get_task(payload["name"])
+            return fn(
+                parameters=spec.parameters,
+                job_index=job_index,
+                n_jobs=spec.n_jobs,
+                payload=payload,
+            )
+        raise SchedulingError(f"unknown payload kind {kind!r}")
+
+    def _task_terminal(self, task: _Task) -> bool:
+        with task.lock:
+            return all(j.state in _TERMINAL_JOB for j in task.per_index())
+
+    # -- monitor: drained sites + speculative execution ----------------------
+    def _median_duration(self) -> float | None:
+        with self._lock:
+            if len(self._durations) < 8:
+                return None
+            vals = sorted(self._durations)
+            return vals[len(vals) // 2]
+
+    def _monitor_loop(self) -> None:
+        while True:
+            with self._lock:
+                if self._stop:
+                    return
+                tasks = list(self.tasks.values())
+            for task in tasks:
+                requeue: list[JobInfo] = []
+                with task.lock:
+                    for job in task.all_jobs():
+                        if job.state != "Running" or job.site is None:
+                            continue
+                        site = self.sites.get(job.site)
+                        if site is not None and site.drained:
+                            job.error = "site drained"
+                            if job.attempts <= task.spec.max_job_retries:
+                                job.state = "Pending"
+                                job.avoid_site = job.site
+                                job.site = None
+                                requeue.append(job)
+                                self.stats["retried_jobs"] += 1
+                            else:
+                                job.state = "Failed"
+                for job in requeue:
+                    self._requeue(task, job)
+            # straggler mitigation: speculative duplicates
+            median = self._median_duration()
+            if self.speculative and median:
+                cutoff = median * self.speculate_after_factor
+                now = utc_now_ts()
+                for task in tasks:
+                    clones: list[JobInfo] = []
+                    with task.lock:
+                        for job in task.all_jobs():
+                            if (
+                                job.state == "Running"
+                                and not job.speculated
+                                and job.started_at is not None
+                                and now - job.started_at > cutoff
+                            ):
+                                job.speculated = True
+                                clone = JobInfo(job.index, state="Pending")
+                                clone.speculated = True
+                                task.extra_jobs.append(clone)
+                                clones.append(clone)
+                                self.stats["speculated_jobs"] += 1
+                    for clone in clones:
+                        self._requeue(task, clone)
+            with self._lock:
+                if self._stop:
+                    return
+                self._wake.wait(timeout=0.05)

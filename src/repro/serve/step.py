@@ -1,0 +1,44 @@
+"""Serving steps: prefill (context ingest) and decode (one token)."""
+from __future__ import annotations
+
+import contextlib
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models.lm import forward_decode, forward_prefill
+from repro.parallel.context import ParallelContext, activate
+
+
+def make_prefill_step(
+    cfg: ArchConfig, *, mesh: Any = None, rules: Any = None
+) -> Callable[[Any, dict[str, Any]], tuple[jnp.ndarray, Any]]:
+    ctx = ParallelContext(mesh, rules) if mesh is not None else None
+
+    def prefill_step(params: Any, batch: dict[str, Any]):
+        cm = activate(ctx) if ctx is not None else contextlib.nullcontext()
+        with cm:
+            return forward_prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_decode_step(
+    cfg: ArchConfig, *, mesh: Any = None, rules: Any = None, sample: bool = False
+) -> Callable[..., tuple[jnp.ndarray, Any]]:
+    """decode_step(params, batch, caches, position) → (token_or_logits,
+    new_caches).  Caches are donated by the jit wrapper in launch/serve."""
+    ctx = ParallelContext(mesh, rules) if mesh is not None else None
+
+    def decode_step(params: Any, batch: dict[str, Any], caches: Any, position: jnp.ndarray):
+        cm = activate(ctx) if ctx is not None else contextlib.nullcontext()
+        with cm:
+            logits, new_caches = forward_decode(params, batch, caches, position, cfg)
+            if sample:
+                next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+                return next_tok[:, None], new_caches
+            return logits, new_caches
+
+    return decode_step

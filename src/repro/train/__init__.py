@@ -1,0 +1,6 @@
+"""Training substrate."""
+from repro.train.step import (  # noqa: F401
+    abstract_train_state,
+    init_train_state,
+    make_train_step,
+)

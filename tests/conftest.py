@@ -1,0 +1,38 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests must see 1 device
+(the 512-device override belongs exclusively to repro.launch.dryrun)."""
+from __future__ import annotations
+
+import pytest
+
+from repro.core.work import register_task
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _base_tasks():
+    register_task("noop", lambda **kw: {})
+    register_task(
+        "emit",
+        lambda parameters, job_index, n_jobs, payload: {
+            "metric": parameters.get("base", 0) + 1,
+            "job": job_index,
+        },
+    )
+    register_task(
+        "echo",
+        lambda parameters, job_index, n_jobs, payload: dict(parameters),
+    )
+    register_task(
+        "fail_always",
+        lambda **kw: (_ for _ in ()).throw(RuntimeError("boom")),
+    )
+    yield
+
+
+@pytest.fixture()
+def orch():
+    from repro.orchestrator import Orchestrator
+
+    o = Orchestrator(poll_period_s=0.03)
+    o.start()
+    yield o
+    o.stop()

@@ -1,0 +1,121 @@
+"""Checkpointing (async/atomic/rotation/elastic restore) and optimizer."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.optim.adamw import adamw_update, init_opt_state
+from repro.optim.schedule import constant, cosine_with_warmup
+
+
+def _state():
+    return {
+        "params": {"w": jnp.arange(6.0).reshape(2, 3), "b": jnp.ones((3,))},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck")
+    state = _state()
+    mgr.save(10, state, blocking=True)
+    step, restored = mgr.restore(state)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(restored["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+    assert int(restored["opt"]["step"]) == 7
+
+
+def test_rotation_keeps_latest(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck", keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, _state(), blocking=True)
+    assert mgr.all_steps() == [3, 4]
+    assert mgr.latest_step() == 4
+
+
+def test_async_save_does_not_block(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck")
+    mgr.save(1, _state())          # returns immediately
+    mgr.wait()
+    assert mgr.latest_step() == 1
+
+
+def test_restore_missing_raises(tmp_path):
+    from repro.common.exceptions import CheckpointError
+
+    mgr = CheckpointManager(tmp_path / "ck")
+    with pytest.raises(CheckpointError):
+        mgr.restore(_state())
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    """Atomicity: only fully-renamed step dirs count."""
+    mgr = CheckpointManager(tmp_path / "ck")
+    (tmp_path / "ck" / "tmp-99").mkdir(parents=True)
+    assert mgr.latest_step() is None
+
+
+def test_elastic_restore_with_sharding(tmp_path):
+    mgr = CheckpointManager(tmp_path / "ck")
+    state = _state()
+    mgr.save(5, state, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    sh = jax.tree.map(lambda _: NamedSharding(mesh, P()), state)
+    step, restored = mgr.restore(state, shardings=sh)
+    assert step == 5
+    assert restored["params"]["w"].sharding == sh["params"]["w"]
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+def test_adamw_converges_on_quadratic():
+    params = {"x": jnp.array([5.0, -3.0])}
+    opt = init_opt_state(params)
+    schedule = constant(0.1)
+
+    def loss_fn(p):
+        return jnp.sum(jnp.square(p["x"] - jnp.array([1.0, 2.0])))
+
+    for _ in range(300):
+        g = jax.grad(loss_fn)(params)
+        params, opt, _ = adamw_update(
+            g, opt, schedule=schedule, weight_decay=0.0, param_dtype=jnp.float32
+        )
+    np.testing.assert_allclose(np.asarray(params["x"]), [1.0, 2.0], atol=0.05)
+
+
+def test_grad_clipping_caps_update():
+    params = {"x": jnp.array([0.0])}
+    opt = init_opt_state(params)
+    g = {"x": jnp.array([1e9])}
+    _, _, metrics = adamw_update(
+        g, opt, schedule=constant(0.1), clip_norm=1.0, param_dtype=jnp.float32
+    )
+    assert float(metrics["grad_norm"]) > 1e8   # raw norm reported pre-clip
+
+
+def test_bf16_params_fp32_master():
+    params = {"x": jnp.ones((4,), jnp.bfloat16)}
+    opt = init_opt_state(params)
+    assert opt["master"]["x"].dtype == jnp.float32
+    g = {"x": jnp.full((4,), 0.5, jnp.bfloat16)}
+    new_p, new_opt, _ = adamw_update(
+        g, opt, schedule=constant(0.01), param_dtype=jnp.bfloat16
+    )
+    assert new_p["x"].dtype == jnp.bfloat16
+    assert new_opt["master"]["x"].dtype == jnp.float32
+
+
+def test_cosine_schedule_shape():
+    sch = cosine_with_warmup(1.0, warmup_steps=10, total_steps=100, min_ratio=0.1)
+    assert float(sch(jnp.int32(0))) == 0.0
+    assert abs(float(sch(jnp.int32(10))) - 1.0) < 1e-6
+    assert float(sch(jnp.int32(100))) == pytest.approx(0.1, abs=1e-5)
+    assert float(sch(jnp.int32(55))) < float(sch(jnp.int32(20)))

@@ -1,0 +1,218 @@
+"""Workflow engine: Work/Workflow/Condition/Parameter semantics, loops,
+dynamic expansion, serialization, Function-as-a-Task."""
+from __future__ import annotations
+
+import pytest
+
+from repro.common.constants import WorkStatus
+from repro.common.exceptions import ValidationError, WorkflowError
+from repro.core import (
+    Condition,
+    Gen,
+    ParameterSet,
+    Ref,
+    Work,
+    Workflow,
+    register_generator,
+    work_function,
+)
+from repro.core.fat import decode_result, execute_function_payload
+from repro.core.statemachine import check_transition
+
+
+# -- parameters -------------------------------------------------------------
+def test_parameter_hierarchy_and_refs():
+    ps = ParameterSet({"a": {"b": 1}})
+    ps["c.d"] = 2
+    assert ps["a.b"] == 1 and ps["c.d"] == 2
+    ps["r"] = Ref("train.outputs.loss")
+    bound = ps.bind({"train": {"outputs": {"loss": 0.5}}})
+    assert bound["r"] == 0.5
+
+
+def test_parameter_ref_default_and_missing():
+    ps = ParameterSet({"r": Ref("nope.x", 7)})
+    assert ps.bind({})["r"] == 7
+    ps2 = ParameterSet({"r": Ref("nope.x")})
+    with pytest.raises(ValidationError):
+        ps2.bind({})
+
+
+def test_parameter_generator():
+    register_generator("double", lambda context, v: v * 2)
+    ps = ParameterSet({"g": Gen("double", v=21)})
+    assert ps.bind({})["g"] == 42
+
+
+def test_parameter_roundtrip():
+    ps = ParameterSet({"x": 1, "r": Ref("a.b"), "g": Gen("double", v=3),
+                       "nest": {"deep": [1, Ref("c.d", 0)]}})
+    ps2 = ParameterSet.from_dict(ps.to_dict())
+    assert ps2.bind({"a": {"b": 9}})["r"] == 9
+    assert ps2.bind({"a": {"b": 9}})["nest"]["deep"][1] == 0
+
+
+# -- conditions ---------------------------------------------------------------
+def test_condition_combinators_and_roundtrip():
+    c = (Condition.compare(Ref("w.outputs.m"), ">", 1)
+         & ~Condition.status("w", "Failed")) | Condition.false()
+    ctx = {"w": {"outputs": {"m": 5}, "status": "Finished"}}
+    assert c.evaluate(ctx)
+    c2 = Condition.from_dict(c.to_dict())
+    assert c2.evaluate(ctx)
+    ctx["w"]["outputs"]["m"] = 0
+    assert not c2.evaluate(ctx)
+
+
+# -- workflow scheduling ---------------------------------------------------------
+def _wf_branch():
+    wf = Workflow("t")
+    for n in ("a", "b", "c", "d"):
+        wf.add_work(Work(n, task="noop"))
+    wf.add_dependency("a", "b", Condition.compare(Ref("a.outputs.x"), ">", 0))
+    wf.add_dependency("a", "c", Condition.compare(Ref("a.outputs.x"), "<=", 0))
+    wf.add_dependency("b", "d")
+    wf.add_dependency("c", "d")
+    return wf
+
+
+def test_conditional_branching_skips_other_branch():
+    wf = _wf_branch()
+    assert [w.name for w in wf.ready_works()] == ["a"]
+    wf.works["a"].status = WorkStatus.FINISHED
+    wf.works["a"].results = {"x": -1}
+    ready = [w.name for w in wf.ready_works()]
+    assert ready == ["c"] and "b" in wf.skipped
+    wf.works["c"].status = WorkStatus.FINISHED
+    assert [w.name for w in wf.ready_works()] == ["d"]
+
+
+def test_failed_hard_dependency_blocks():
+    wf = Workflow("t")
+    wf.add_work(Work("a", task="noop"))
+    wf.add_work(Work("b", task="noop"))
+    wf.add_dependency("a", "b")
+    wf.works["a"].status = WorkStatus.FAILED
+    assert wf.ready_works() == []
+    assert wf.blocked_failed_works() == ["b"]
+
+
+def test_failure_handler_branch_runs_on_failure():
+    wf = Workflow("t")
+    wf.add_work(Work("a", task="noop"))
+    wf.add_work(Work("cleanup", task="noop"))
+    wf.add_dependency("a", "cleanup", Condition.failed("a"))
+    wf.works["a"].status = WorkStatus.FAILED
+    assert [w.name for w in wf.ready_works()] == ["cleanup"]
+
+
+def test_cycle_detection_unconditioned():
+    wf = Workflow("t")
+    wf.add_work(Work("a", task="noop"))
+    wf.add_work(Work("b", task="noop"))
+    wf.add_dependency("a", "b")
+    wf.add_dependency("b", "a")
+    with pytest.raises(WorkflowError):
+        wf.validate()
+
+
+def test_conditioned_cycle_is_legal():
+    wf = Workflow("t")
+    wf.add_work(Work("a", task="noop"))
+    wf.add_work(Work("b", task="noop"))
+    wf.add_dependency("a", "b")
+    wf.add_dependency("b", "a", Condition.compare(Ref("b.outputs.retry"), "==", True))
+    wf.validate()  # conditioned back-edge breaks the cycle
+
+
+def test_loop_expansion_and_termination():
+    wf = Workflow("t")
+    w = wf.add_work(Work("t0", task="noop"))
+    wf.add_loop("L", ["t0"], Condition.compare(Ref("t0.outputs.m"), ">", 0.1),
+                max_iterations=3)
+    w.status = WorkStatus.FINISHED
+    w.results = {"m": 1.0}
+    created = wf.expand_loops()
+    assert [c.name for c in created] == ["t0#1"]
+    assert wf.works["t0#1"].parameters["loop_iteration"] == 1
+    wf.works["t0#1"].status = WorkStatus.FINISHED
+    wf.works["t0#1"].results = {"m": 0.01}   # condition now false
+    assert wf.expand_loops() == []
+    assert wf.is_terminal()
+
+
+def test_loop_respects_max_iterations():
+    wf = Workflow("t")
+    w = wf.add_work(Work("t0", task="noop"))
+    wf.add_loop("L", ["t0"], Condition.true(), max_iterations=2)
+    w.status = WorkStatus.FINISHED
+    assert len(wf.expand_loops()) == 1
+    wf.works["t0#1"].status = WorkStatus.FINISHED
+    assert wf.expand_loops() == []            # hit max_iterations
+
+
+def test_workflow_roundtrip_preserves_everything():
+    wf = _wf_branch()
+    wf.add_loop("L", ["d"], Condition.true(), max_iterations=2)
+    wf.works["a"].status = WorkStatus.FINISHED
+    wf.works["a"].results = {"x": 1}
+    wf.ready_works()
+    d = wf.to_dict()
+    wf2 = Workflow.from_dict(d)
+    assert wf2.works.keys() == wf.works.keys()
+    assert wf2.skipped == wf.skipped
+    assert wf2.loops["L"].max_iterations == 2
+    assert wf2.works["a"].results == {"x": 1}
+
+
+def test_overall_status_mapping():
+    wf = Workflow("t")
+    a = wf.add_work(Work("a", task="noop"))
+    b = wf.add_work(Work("b", task="noop"))
+    a.status = WorkStatus.FINISHED
+    b.status = WorkStatus.FAILED
+    assert wf.overall_status() == WorkStatus.SUBFINISHED
+    b.status = WorkStatus.FINISHED
+    assert wf.overall_status() == WorkStatus.FINISHED
+
+
+# -- state machine ---------------------------------------------------------------
+def test_statemachine_legal_and_illegal():
+    check_transition("transform", "New", "Submitting")
+    check_transition("request", "Transforming", "Finished")
+    with pytest.raises(WorkflowError):
+        check_transition("transform", "Finished", "Running")
+    with pytest.raises(WorkflowError):
+        check_transition("request", "Cancelled", "Transforming")
+
+
+# -- function-as-a-task -------------------------------------------------------------
+def test_fat_serialize_execute_roundtrip():
+    @work_function
+    def mul(a, b):
+        return a * b
+
+    w = mul.make_work(6, 7)
+    assert w.payload["kind"] == "function"
+    out = execute_function_payload(w.payload)
+    assert out == 42
+
+
+def test_fat_map_mode():
+    @work_function
+    def inc(x):
+        return x + 1
+
+    w = inc.make_map_work([10, 20, 30])
+    assert w.n_jobs == 3
+    outs = [execute_function_payload(w.payload, job_index=i) for i in range(3)]
+    assert outs == [11, 21, 31]
+
+
+def test_fat_needs_session_outside_context():
+    @work_function
+    def f():
+        return 1
+
+    with pytest.raises(WorkflowError):
+        f.submit()

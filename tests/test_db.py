@@ -1,0 +1,155 @@
+"""Database layer: schema versioning, stores, idempotent claims, and the
+fine-grained release engine."""
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.common.constants import (
+    CollectionRelation,
+    ContentStatus,
+    RequestStatus,
+)
+from repro.db.engine import Database
+from repro.db.schema import SCHEMA_VERSION
+from repro.db.stores import make_stores
+
+
+@pytest.fixture()
+def db():
+    d = Database(":memory:")
+    yield d
+    d.close()
+
+
+@pytest.fixture()
+def stores(db):
+    return make_stores(db)
+
+
+def test_migrations_apply_in_order(db):
+    assert db.schema_version() == SCHEMA_VERSION
+    tables = {r["name"] for r in db.query(
+        "SELECT name FROM sqlite_master WHERE type='table'")}
+    assert {"requests", "transforms", "collections", "contents",
+            "content_deps", "processings", "messages", "events",
+            "health"} <= tables
+
+
+def test_request_crud_and_poll(stores):
+    rid = stores["requests"].add("wf", workflow={"a": 1}, priority=5)
+    row = stores["requests"].get(rid)
+    assert row["status"] == "New"
+    assert row["workflow"] == {"a": 1}
+    ready = stores["requests"].poll_ready([RequestStatus.NEW])
+    assert [r["request_id"] for r in ready] == [rid]
+    stores["requests"].update(rid, status=RequestStatus.TRANSFORMING)
+    assert stores["requests"].get(rid)["status"] == "Transforming"
+
+
+def test_claim_is_idempotent(stores):
+    rid = stores["requests"].add("wf")
+    assert stores["requests"].claim(rid) is True
+    assert stores["requests"].claim(rid) is False      # second claim loses
+    stores["requests"].unlock(rid)
+    assert stores["requests"].claim(rid) is True
+
+
+def test_claim_stale_recovery(stores):
+    rid = stores["requests"].add("wf")
+    assert stores["requests"].claim(rid)
+    # a stale lock (older than stale_s) can be re-claimed — crash recovery
+    assert stores["requests"].claim(rid, stale_s=-1.0) is True
+
+
+def test_concurrent_claims_single_winner(stores):
+    rid = stores["requests"].add("wf")
+    wins = []
+    barrier = threading.Barrier(8)
+
+    def worker():
+        barrier.wait()
+        if stores["requests"].claim(rid):
+            wins.append(1)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(wins) == 1
+
+
+def _diamond(stores):
+    rid = stores["requests"].add("wf")
+    tid = stores["transforms"].add(rid, "n0")
+    cid = stores["collections"].add(rid, tid, "ds", relation=CollectionRelation.INPUT)
+    ids = stores["contents"].add_many(
+        cid, rid, tid, [{"name": f"f{i}"} for i in range(4)]
+    )
+    #   0 → 2, 1 → 2, 2 → 3
+    stores["contents"].add_deps([(ids[2], ids[0]), (ids[2], ids[1]), (ids[3], ids[2])])
+    return ids
+
+
+def test_release_engine_diamond(stores):
+    ids = _diamond(stores)
+    roots = stores["contents"].activate_roots()
+    assert set(roots) == {ids[0], ids[1]}
+    # only one parent available → no release yet
+    stores["contents"].set_status([ids[0]], ContentStatus.AVAILABLE)
+    assert stores["contents"].release_dependents([ids[0]]) == []
+    stores["contents"].set_status([ids[1]], ContentStatus.AVAILABLE)
+    rel = stores["contents"].release_dependents([ids[1]])
+    assert rel == [ids[2]]
+    stores["contents"].set_status(rel, ContentStatus.AVAILABLE)
+    assert stores["contents"].release_dependents(rel) == [ids[3]]
+
+
+def test_release_is_exactly_once(stores):
+    ids = _diamond(stores)
+    stores["contents"].activate_roots()
+    stores["contents"].set_status(ids[:2], ContentStatus.AVAILABLE)
+    first = stores["contents"].release_dependents(ids[:2])
+    second = stores["contents"].release_dependents(ids[:2])
+    assert first == [ids[2]] and second == []
+
+
+def test_event_store_merge_and_priority(stores):
+    ev = stores["events"]
+    ev.publish("A", {"x": 1}, merge_key="k1", priority=10)
+    assert ev.publish("A", {"x": 2}, merge_key="k1", priority=30) is None
+    ev.publish("B", {"y": 1}, priority=20)
+    batch = ev.claim_batch("c1", limit=10)
+    assert [e["event_type"] for e in batch] == ["A", "B"]   # upgraded prio 30 first
+    assert batch[0]["priority"] == 30
+    ev.ack([e["event_id"] for e in batch])
+    assert ev.pending_count() == 0
+
+
+def test_event_store_stale_requeue(stores):
+    ev = stores["events"]
+    ev.publish("A", {})
+    got = ev.claim_batch("c1")
+    assert len(got) == 1 and ev.pending_count() == 0
+    assert ev.requeue_stale(stale_s=-1) == 1                # force-stale
+    assert ev.pending_count() == 1
+
+
+def test_collection_counters(stores):
+    rid = stores["requests"].add("wf")
+    tid = stores["transforms"].add(rid, "n0")
+    cid = stores["collections"].add(rid, tid, "out", relation=CollectionRelation.OUTPUT)
+    ids = stores["contents"].add_many(cid, rid, tid, [{"name": f"o{i}"} for i in range(5)])
+    stores["contents"].set_status(ids[:3], ContentStatus.AVAILABLE)
+    stores["contents"].set_status(ids[3:4], ContentStatus.FAILED)
+    c = stores["collections"].refresh_counters(cid)
+    assert c == {"total": 5, "processed": 3, "failed": 1}
+
+
+def test_teardown_and_remigrate(db):
+    db.teardown()
+    assert db.schema_version() == 0
+    db.migrate()
+    assert db.schema_version() == SCHEMA_VERSION

@@ -1,0 +1,113 @@
+"""Event bus backends: merge semantics, priority ordering, delivery."""
+from __future__ import annotations
+
+import pytest
+
+from repro.db.engine import Database
+from repro.eventbus import Event, create_event_bus
+from repro.eventbus.events import (
+    poll_processing_event,
+    update_transform_event,
+)
+
+
+def _bus(kind):
+    if kind == "db":
+        return create_event_bus("db", db=Database(":memory:"))
+    return create_event_bus(kind)
+
+
+@pytest.fixture(params=["local", "db", "msg"])
+def bus(request):
+    b = _bus(request.param)
+    yield b
+    b.close()
+
+
+def test_publish_consume_roundtrip(bus):
+    bus.publish(Event(type="T", payload={"v": 42}))
+    evs = bus.consume("c1", limit=5)
+    assert len(evs) == 1 and evs[0].payload["v"] == 42
+    bus.ack(evs)
+    assert bus.pending() == 0
+
+
+def test_merge_same_key(bus):
+    for _ in range(10):
+        bus.publish(update_transform_event(7))
+    evs = bus.consume("c1", limit=50)
+    assert len(evs) == 1
+    stats = bus.broker.stats if hasattr(bus, "broker") else bus.stats
+    assert stats["merged"] == 9
+
+
+def test_priority_upgrade_on_merge(bus):
+    bus.publish(poll_processing_event(1, priority=0))
+    bus.publish(poll_processing_event(1, priority=30))
+    evs = bus.consume("c1", limit=5)
+    assert len(evs) == 1 and evs[0].priority == 30
+
+
+def test_priority_ordering(bus):
+    bus.publish(Event(type="T", payload={"i": 0}, priority=0))
+    bus.publish(Event(type="T", payload={"i": 1}, priority=30))
+    bus.publish(Event(type="T", payload={"i": 2}, priority=10))
+    evs = bus.consume("c1", limit=5)
+    assert [e.payload["i"] for e in evs] == [1, 2, 0]
+
+
+def test_type_filtering(bus):
+    bus.publish(Event(type="A", payload={}))
+    bus.publish(Event(type="B", payload={}))
+    got_a = bus.consume("c1", types=("A",), limit=5)
+    assert [e.type for e in got_a] == ["A"]
+    got_b = bus.consume("c1", types=("B",), limit=5)
+    assert [e.type for e in got_b] == ["B"]
+
+
+def test_distinct_keys_not_merged(bus):
+    for i in range(5):
+        bus.publish(update_transform_event(i))
+    evs = bus.consume("c1", limit=50)
+    assert len(evs) == 5
+
+
+def test_db_bus_persistence_and_recovery():
+    db = Database(":memory:")
+    bus = create_event_bus("db", db=db)
+    bus.publish(Event(type="T", payload={}))
+    evs = bus.consume("c1")
+    assert len(evs) == 1
+    # consumer dies without ack → recover_stale requeues
+    assert bus.recover_stale(stale_s=-1) == 1
+    evs2 = bus.consume("c2")
+    assert len(evs2) == 1
+    bus.ack(evs2)
+    assert bus.pending() == 0
+
+
+def test_msg_bus_at_most_once():
+    bus = _bus("msg")
+    bus.publish(Event(type="T", payload={}))
+    evs = bus.consume("c1")
+    assert len(evs) == 1
+    bus.ack(evs)          # no-op
+    assert bus.pending() == 0  # gone regardless — at-most-once
+    bus.close()
+
+
+def test_wait_wakes_on_publish():
+    import threading, time
+
+    bus = _bus("local")
+    woke = []
+
+    def waiter():
+        woke.append(bus.wait(timeout=5.0))
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    bus.publish(Event(type="T", payload={}))
+    t.join(timeout=2)
+    assert woke == [True]

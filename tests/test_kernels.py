@@ -1,0 +1,171 @@
+"""Pallas kernel validation: shape/dtype sweeps against the ref.py pure-jnp
+oracles, executed in interpret mode on CPU."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import flash_attention_ref, ssd_ref, wkv6_ref
+from repro.kernels.rwkv6_wkv import wkv6_pallas
+from repro.kernels.ssd_scan import ssd_pallas
+
+ATOL = {jnp.float32: 2e-5, jnp.bfloat16: 5e-2}
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,s,hq,hkv,d,block",
+    [
+        (1, 128, 4, 4, 64, 64),     # MHA
+        (2, 128, 4, 2, 64, 32),     # GQA 2:1
+        (1, 256, 8, 1, 128, 64),    # MQA
+        (1, 192, 6, 3, 32, 64),     # non-pow2 seq (padding path)
+        (2, 64, 15, 5, 64, 32),     # smollm-style 15:5 heads
+    ],
+)
+def test_flash_attention_shapes(b, s, hq, hkv, d, block):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d))
+    k = jax.random.normal(ks[1], (b, s, hkv, d))
+    v = jax.random.normal(ks[2], (b, s, hkv, d))
+    ref = flash_attention_ref(q, k, v, causal=True)
+    out = flash_attention_pallas(
+        q, k, v, causal=True, block_q=block, block_kv=block, interpret=True
+    )
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=2e-5)
+
+
+@pytest.mark.parametrize("window", [32, 100])
+def test_flash_attention_window(window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    ref = flash_attention_ref(q, k, v, causal=True, window=window)
+    out = flash_attention_pallas(
+        q, k, v, causal=True, window=window, block_q=64, block_kv=64,
+        interpret=True,
+    )
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64), dtype=dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64), dtype=dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64), dtype=dtype)
+    ref = flash_attention_ref(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        causal=True,
+    )
+    out = flash_attention_pallas(
+        q, k, v, causal=True, block_q=64, block_kv=64, interpret=True
+    ).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=ATOL[dtype])
+    assert out.dtype == jnp.float32
+
+
+def test_flash_attention_block_shape_independence():
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    outs = [
+        flash_attention_pallas(q, k, v, causal=True, block_q=bq, block_kv=bk,
+                               interpret=True)
+        for bq, bk in [(32, 32), (64, 128), (128, 64), (256, 256)]
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# rwkv6 wkv
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,s,h,k,chunk",
+    [(1, 64, 2, 64, 16), (2, 128, 4, 64, 32), (1, 96, 1, 32, 32)],
+)
+def test_wkv6_kernel_shapes(b, s, h, k, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    r = jax.random.normal(ks[0], (b, s, h, k)) * 0.5
+    kk = jax.random.normal(ks[1], (b, s, h, k)) * 0.5
+    v = jax.random.normal(ks[2], (b, s, h, k)) * 0.5
+    logw = -jnp.exp(jax.random.normal(ks[3], (b, s, h, k)) * 0.5)
+    u = jax.random.normal(ks[4], (h, k)) * 0.3
+    y_ref, _ = wkv6_ref(r, kk, v, logw, u)
+    y = wkv6_pallas(r, kk, v, logw, u, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), atol=1e-4)
+
+
+def test_wkv6_kernel_bf16():
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    B, S, H, K = 1, 64, 2, 64
+    r = (jax.random.normal(ks[0], (B, S, H, K)) * 0.5).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (B, S, H, K)) * 0.5).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (B, S, H, K)) * 0.5).astype(jnp.bfloat16)
+    logw = -jnp.exp(jax.random.normal(ks[3], (B, S, H, K)) * 0.5)
+    u = jax.random.normal(ks[4], (H, K)) * 0.3
+    y_ref, _ = wkv6_ref(
+        r.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        logw, u,
+    )
+    y = wkv6_pallas(r, k, v, logw.astype(jnp.bfloat16), u, chunk=16,
+                    interpret=True).astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(y_ref - y))) < 0.08
+
+
+# ---------------------------------------------------------------------------
+# mamba2 ssd
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "b,s,h,p,n,chunk",
+    [(1, 64, 2, 64, 64, 32), (2, 128, 3, 64, 32, 64), (1, 128, 1, 32, 16, 128)],
+)
+def test_ssd_kernel_shapes(b, s, h, p, n, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (b, s, h, p)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    a = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.3)
+    b_in = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    c_in = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    y_ref, _ = ssd_ref(x, dt, a, b_in, c_in)
+    y = ssd_pallas(x, dt, a, b_in, c_in, chunk=chunk, interpret=True)
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y), atol=2e-4)
+
+
+def test_ssd_kernel_chunk_independence():
+    ks = jax.random.split(jax.random.PRNGKey(1), 5)
+    B, S, H, P, N = 1, 128, 2, 32, 32
+    x = jax.random.normal(ks[0], (B, S, H, P)) * 0.5
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    b_in = jax.random.normal(ks[3], (B, S, N)) * 0.5
+    c_in = jax.random.normal(ks[4], (B, S, N)) * 0.5
+    outs = [
+        ssd_pallas(x, dt, a, b_in, c_in, chunk=c, interpret=True)
+        for c in (16, 32, 64, 128)
+    ]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o), atol=2e-4)
+
+
+def test_attention_block_pallas_impl_matches_reference():
+    """Model-level wiring: attention_block(impl='interpret') == chunked."""
+    from repro.configs import smoke_config
+    from repro.models.layers import attention_block, init_attention, split_tree
+
+    cfg = smoke_config("qwen3-4b")
+    tree = init_attention(jax.random.PRNGKey(0), cfg, jnp.float32)
+    params, _ = split_tree(tree)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model))
+    pos = jnp.arange(64)
+    y_ref, _ = attention_block(params, x, cfg, positions=pos, impl="chunked")
+    y_pal, _ = attention_block(params, x, cfg, positions=pos, impl="interpret")
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_pal), atol=3e-5)

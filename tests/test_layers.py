@@ -1,0 +1,97 @@
+"""Attention & layer primitives: all implementations pinned to the naive
+oracle across GQA ratios, windows, and dtypes."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.layers import (
+    apply_rope,
+    attention_chunked,
+    attention_decode,
+    attention_naive,
+    attention_windowed,
+    rms_norm,
+)
+
+
+def _qkv(b=2, s=128, hq=4, hkv=2, d=32, dtype=jnp.float32, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, d), dtype=dtype)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), dtype=dtype)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), dtype=dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1), (15, 5)])
+def test_chunked_matches_naive_gqa(hq, hkv):
+    q, k, v = _qkv(hq=hq, hkv=hkv)
+    ref = attention_naive(q, k, v, causal=True)
+    out = attention_chunked(q, k, v, causal=True, chunk=32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=5e-6)
+
+
+@pytest.mark.parametrize("window", [16, 48, 100])
+def test_windowed_matches_naive(window):
+    q, k, v = _qkv(s=256)
+    ref = attention_naive(q, k, v, causal=True, window=window)
+    out = attention_windowed(q, k, v, window=window, chunk=32)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out), atol=5e-6)
+    out2 = attention_chunked(q, k, v, causal=True, window=window, chunk=64)
+    np.testing.assert_allclose(np.asarray(ref), np.asarray(out2), atol=5e-6)
+
+
+def test_decode_matches_last_position():
+    q, k, v = _qkv(s=96)
+    ref = attention_naive(q, k, v, causal=True)
+    dec = attention_decode(q[:, -1:], k, v, length=jnp.asarray(96))
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(ref[:, -1]), atol=5e-6
+    )
+
+
+def test_decode_with_window():
+    q, k, v = _qkv(s=96)
+    ref = attention_naive(q, k, v, causal=True, window=24)
+    dec = attention_decode(q[:, -1:], k, v, length=jnp.asarray(96), window=24)
+    np.testing.assert_allclose(
+        np.asarray(dec[:, 0]), np.asarray(ref[:, -1]), atol=5e-6
+    )
+
+
+def test_bf16_attention_reasonable():
+    q, k, v = _qkv(dtype=jnp.bfloat16)
+    ref = attention_naive(
+        q.astype(jnp.float32), k.astype(jnp.float32), v.astype(jnp.float32),
+        causal=True,
+    )
+    out = attention_chunked(q, k, v, causal=True, chunk=32).astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(ref - out))) < 0.05   # bf16 tolerance
+
+
+def test_rope_preserves_norm_and_relativity():
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, 8, 2, 16))
+    pos = jnp.arange(8)
+    y = apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(x), axis=-1),
+        np.linalg.norm(np.asarray(y), axis=-1),
+        atol=1e-4,
+    )
+    # relative property: <rope(q,i), rope(k,j)> depends only on i-j
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, 16))
+    k = jax.random.normal(jax.random.PRNGKey(2), (1, 1, 1, 16))
+    def dot_at(i, j):
+        qi = apply_rope(jnp.broadcast_to(q, (1, max(i, j) + 1, 1, 16)), jnp.arange(max(i, j) + 1), 1e4)[0, i, 0]
+        kj = apply_rope(jnp.broadcast_to(k, (1, max(i, j) + 1, 1, 16)), jnp.arange(max(i, j) + 1), 1e4)[0, j, 0]
+        return float(qi @ kj)
+    assert abs(dot_at(5, 3) - dot_at(7, 5)) < 1e-3
+
+
+def test_rms_norm_unit_scale():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+    y = rms_norm(x, jnp.ones((64,)))
+    rms = jnp.sqrt(jnp.mean(jnp.square(y), axis=-1))
+    np.testing.assert_allclose(np.asarray(rms), 1.0, atol=1e-3)

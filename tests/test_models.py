@@ -1,0 +1,196 @@
+"""Per-architecture smoke tests (REDUCED configs, CPU): one train step with
+finite loss + gradient flow, and decode-vs-full-forward consistency."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, smoke_config
+from repro.models import (
+    forward_decode,
+    forward_train,
+    init_params_and_specs,
+    zero_caches,
+)
+from repro.models.config import SHAPES, ShapeConfig, cell_is_supported
+from repro.models.io import batch_specs, concrete_batch, decode_specs
+from repro.train.step import init_train_state, make_train_step
+
+SMOKE_SHAPE = ShapeConfig("smoke", 64, 2, "train")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_step_runs_and_loss_finite(arch):
+    cfg = smoke_config(arch)
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    step = jax.jit(make_train_step(cfg), donate_argnums=(0,))
+    batch = {k: jnp.asarray(v) for k, v in concrete_batch(cfg, SMOKE_SHAPE).items()}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert float(metrics["grad_norm"]) > 0, arch
+    # output shapes: params unchanged structure
+    state2, metrics2 = step(state, batch)
+    assert float(metrics2["loss"]) != float(metrics["loss"])  # params moved
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step_shapes_and_finiteness(arch):
+    cfg = smoke_config(arch)
+    params, _ = init_params_and_specs(jax.random.PRNGKey(0), cfg)
+    caches = zero_caches(cfg, 2, 32)
+    if cfg.frontend == "audio_stub":
+        batch = {"frame_embeds": jnp.zeros((2, 1, cfg.d_model), jnp.float32)}
+    else:
+        batch = {"token": jnp.zeros((2, 1), jnp.int32)}
+    logits, new_caches = jax.jit(
+        lambda p, b, c, pos: forward_decode(p, b, c, pos, cfg)
+    )(params, batch, caches, jnp.int32(0))
+    assert logits.shape == (2, 1, cfg.vocab_padded)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    assert jax.tree.structure(new_caches) == jax.tree.structure(caches)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    [
+        "qwen3-4b", "musicgen-large", "smollm-360m",
+        # the exotic cache paths: nested local/global KV (gemma), hybrid
+        # SSM+shared-attn (zamba), wkv/token-shift states (rwkv6)
+        "gemma3-4b", "zamba2-1.2b", "rwkv6-1.6b",
+    ],
+)
+def test_decode_matches_full_forward(arch):
+    """Greedy decode over a short prompt must match teacher-forced full
+    forward logits position by position (dense-family cache correctness)."""
+    cfg = smoke_config(arch)
+    params, _ = init_params_and_specs(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    if cfg.frontend == "audio_stub":
+        embeds = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model), jnp.float32)
+        full_batch = {
+            "frame_embeds": embeds,
+            "labels": jnp.zeros((B, S), jnp.int32),
+        }
+    else:
+        toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+        full_batch = {"tokens": toks, "labels": toks}
+    # full forward logits at final position
+    from repro.models.lm import forward_trunk, lm_logits, _input_embeds
+
+    x = _input_embeds(params, full_batch, cfg)
+    h, _ = forward_trunk(params, x, cfg)
+    full_logits = lm_logits(params, h, cfg)
+
+    caches = zero_caches(cfg, B, S)
+    dec = jax.jit(lambda p, b, c, pos: forward_decode(p, b, c, pos, cfg))
+    for t in range(S):
+        if cfg.frontend == "audio_stub":
+            db = {"frame_embeds": embeds[:, t : t + 1]}
+        else:
+            db = {"token": toks[:, t : t + 1]}
+        logits, caches = dec(params, db, caches, jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full_logits[:, -1]),
+        atol=2e-3, rtol=1e-3,
+    )
+
+
+def test_moe_decode_matches_full_forward_without_capacity_drops():
+    """MoE decode equals teacher-forced forward when capacity is generous.
+    (With tight capacity they legitimately diverge — batch prefill drops
+    over-capacity assignments, incremental decode never does.)"""
+    import dataclasses
+
+    from repro.models.lm import forward_trunk, lm_logits, _input_embeds
+
+    cfg = smoke_config("olmoe-1b-7b")
+    cfg = cfg.replace(moe=dataclasses.replace(cfg.moe, capacity_factor=16.0))
+    params, _ = init_params_and_specs(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab_size)
+    x = _input_embeds(params, {"tokens": toks}, cfg)
+    h, _ = forward_trunk(params, x, cfg)
+    full_logits = lm_logits(params, h, cfg)
+    caches = zero_caches(cfg, B, S)
+    dec = jax.jit(lambda p, b, c, pos: forward_decode(p, b, c, pos, cfg))
+    for t in range(S):
+        logits, caches = dec(params, {"token": toks[:, t:t+1]}, caches, jnp.int32(t))
+    np.testing.assert_allclose(
+        np.asarray(logits[:, 0]), np.asarray(full_logits[:, -1]),
+        atol=2e-3, rtol=1e-3,
+    )
+
+
+def test_gemma_local_global_partition():
+    from repro.models.lm import gemma_partition
+
+    cfg = get_config("gemma3-4b")
+    n_super, per, tail = gemma_partition(cfg)
+    assert n_super * (per + 1) + tail == cfg.n_layers == 34
+    assert per == 5 and tail == 4
+
+
+def test_zamba_partition_and_shared_weights():
+    from repro.models.lm import zamba_partition
+
+    cfg = get_config("zamba2-1.2b")
+    n_super, per, tail = zamba_partition(cfg)
+    assert n_super * per + tail == cfg.n_layers == 38
+    # one shared attention block in the param tree (weight sharing)
+    scfg = smoke_config("zamba2-1.2b")
+    params, _ = init_params_and_specs(jax.random.PRNGKey(0), scfg)
+    assert "shared_attn" in params
+    wq = params["shared_attn"]["attn"]["wq"]
+    assert wq.ndim == 3  # NOT stacked per application
+
+
+def test_full_configs_match_assignment():
+    expect = {
+        "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "internvl2-2b": (24, 2048, 16, 8, 8192, 92553),
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "mistral-nemo-12b": (40, 5120, 32, 8, 14336, 131072),
+        "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+        "qwen3-4b": (36, 2560, 32, 8, 9728, 151936),
+        "musicgen-large": (48, 2048, 32, 32, 8192, 2048),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 7168, 65536),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }
+    for arch, (L, d, h, kv, ff, v) in expect.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, h, kv, ff, v), arch
+    assert get_config("olmoe-1b-7b").moe.n_experts == 64
+    assert get_config("olmoe-1b-7b").moe.top_k == 8
+    assert get_config("deepseek-moe-16b").moe.top_k == 6
+    assert get_config("deepseek-moe-16b").moe.n_shared == 2
+    assert get_config("zamba2-1.2b").ssm.d_state == 64
+
+
+def test_long_context_skip_policy():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        ok, reason = cell_is_supported(cfg, "long_500k")
+        if arch in ("rwkv6-1.6b", "zamba2-1.2b"):
+            assert ok, arch
+        else:
+            assert not ok and "sub-quadratic" in reason, arch
+
+
+def test_batch_and_decode_specs_cover_all_cells():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name, shape in SHAPES.items():
+            if not cell_is_supported(cfg, name)[0]:
+                continue
+            if shape.kind == "decode":
+                d = decode_specs(cfg, shape)
+                assert "caches" in d and "position" in d
+            else:
+                b = batch_specs(cfg, shape)
+                assert any(k in b for k in ("tokens", "frame_embeds"))
+                if shape.kind == "train":
+                    assert "labels" in b

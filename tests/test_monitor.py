@@ -1,0 +1,38 @@
+"""Monitoring (paper §3.6): dashboard rendering + DAG visualization."""
+from __future__ import annotations
+
+from repro.common.constants import WorkStatus
+from repro.core import Condition, Ref, Work, Workflow
+from repro.monitor import render_dashboard, workflow_graph_dot
+
+
+def test_dashboard_renders_live_state(orch):
+    wf = Workflow("monwf")
+    wf.add_work(Work("a", task="emit"))
+    wf.add_work(Work("b", task="emit"))
+    wf.add_dependency("a", "b")
+    rid = orch.submit_workflow(wf)
+    orch.wait_request(rid, timeout=30)
+    text = render_dashboard(orch)
+    assert "iDDS monitor" in text
+    assert "monwf" in text
+    assert "Finished" in text
+    assert "tasks 2/2" in text
+    assert "errors=none" in text
+
+
+def test_workflow_graph_dot_structure():
+    wf = Workflow("g")
+    for n in ("a", "b", "c"):
+        wf.add_work(Work(n, task="noop"))
+    wf.add_dependency("a", "b")
+    wf.add_dependency("a", "c", Condition.compare(Ref("a.outputs.x"), ">", 0))
+    wf.works["a"].status = WorkStatus.FINISHED
+    wf.works["a"].results = {"x": -1}
+    wf.ready_works()  # marks c's sibling branch state
+    dot = workflow_graph_dot(wf)
+    assert dot.startswith("digraph workflow {")
+    assert '"a" -> "b";' in dot
+    assert '"a" -> "c" [style=dashed, label="?"];' in dot
+    assert "palegreen" in dot          # finished node colored
+    assert dot.count('" [label=') == 3

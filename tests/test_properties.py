@@ -1,0 +1,185 @@
+"""Hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import random
+
+from hypothesis import given, settings, strategies as st
+
+from repro.common.constants import ContentStatus, CollectionRelation
+from repro.core.condition import Condition
+from repro.core.dag import DirectedGraph
+from repro.core.parameter import ParameterSet, Ref
+from repro.db.engine import Database
+from repro.db.stores import make_stores
+from repro.eventbus import Event, LocalEventBus
+
+
+# ---------------------------------------------------------------------------
+# random DAG strategy: edges only i->j with i<j  (guaranteed acyclic)
+# ---------------------------------------------------------------------------
+@st.composite
+def dags(draw, max_nodes=24):
+    n = draw(st.integers(min_value=1, max_value=max_nodes))
+    edges = set()
+    for j in range(1, n):
+        for i in range(j):
+            if draw(st.booleans()):
+                edges.add((i, j))
+    return n, sorted(edges)
+
+
+@given(dags())
+@settings(max_examples=40, deadline=None)
+def test_topological_order_respects_edges(dag):
+    n, edges = dag
+    g = DirectedGraph()
+    for i in range(n):
+        g.add_node(i)
+    for a, b in edges:
+        g.add_edge(a, b)
+    order = g.topological_order()
+    pos = {v: i for i, v in enumerate(order)}
+    assert len(order) == n
+    for a, b in edges:
+        assert pos[a] < pos[b]
+
+
+@given(dags())
+@settings(max_examples=30, deadline=None)
+def test_layers_are_antichains(dag):
+    n, edges = dag
+    g = DirectedGraph()
+    for i in range(n):
+        g.add_node(i)
+    for a, b in edges:
+        g.add_edge(a, b)
+    eset = set(edges)
+    for layer in g.layers():
+        for a in layer:
+            for b in layer:
+                assert (a, b) not in eset and (b, a) not in eset
+
+
+@given(dags(), st.randoms(use_true_random=False))
+@settings(max_examples=25, deadline=None)
+def test_release_engine_activates_every_node_exactly_once(dag, rnd):
+    """Drive the DB release engine over a random DAG with a random
+    completion order; every content must activate exactly once, and never
+    before all its dependencies are available."""
+    n, edges = dag
+    db = Database(":memory:")
+    stores = make_stores(db)
+    rid = stores["requests"].add("prop")
+    tid = stores["transforms"].add(rid, "n")
+    cid = stores["collections"].add(rid, tid, "ds", relation=CollectionRelation.INPUT)
+    ids = stores["contents"].add_many(
+        cid, rid, tid, [{"name": f"f{i}"} for i in range(n)]
+    )
+    stores["contents"].add_deps([(ids[b], ids[a]) for a, b in edges])
+    deps = {b: {a for a, bb in edges if bb == b} for b in range(n)}
+
+    activated: set[int] = set()
+    available: set[int] = set()
+    frontier = stores["contents"].activate_roots()
+    for cid_ in frontier:
+        activated.add(ids.index(cid_))
+    # process in random order until all done
+    guard = 0
+    while len(available) < n and guard < 3 * n + 10:
+        guard += 1
+        ready = [i for i in range(n) if i in activated and i not in available]
+        if not ready:
+            break
+        pick = rnd.choice(ready)
+        # invariant: all deps available before activation
+        assert deps.get(pick, set()) <= available
+        available.add(pick)
+        stores["contents"].set_status([ids[pick]], ContentStatus.AVAILABLE)
+        newly = stores["contents"].release_dependents([ids[pick]])
+        for c in newly:
+            i = ids.index(c)
+            assert i not in activated, "double activation"
+            activated.add(i)
+    assert available == set(range(n))
+    db.close()
+
+
+# ---------------------------------------------------------------------------
+# event bus: merge + priority invariants
+# ---------------------------------------------------------------------------
+@given(
+    st.lists(
+        st.tuples(st.integers(0, 5), st.integers(0, 30)), min_size=1, max_size=60
+    )
+)
+@settings(max_examples=40, deadline=None)
+def test_local_bus_delivers_each_merge_key_once(items):
+    bus = LocalEventBus()
+    for key, prio in items:
+        bus.publish(Event(type="T", payload={"k": key}, priority=prio,
+                          merge_key=f"k{key}"))
+    evs = bus.consume("c", limit=1000)
+    keys = [e.payload["k"] for e in evs]
+    assert sorted(set(k for k, _ in items)) == sorted(keys)
+    # delivered priority = max over published priorities for that key
+    want = {}
+    for k, p in items:
+        want[k] = max(want.get(k, -1), p)
+    for e in evs:
+        assert e.priority == want[e.payload["k"]]
+    assert bus.pending() == 0
+
+
+@given(st.lists(st.integers(0, 30), min_size=1, max_size=50))
+@settings(max_examples=40, deadline=None)
+def test_local_bus_priority_monotone(prios):
+    bus = LocalEventBus()
+    for i, p in enumerate(prios):
+        bus.publish(Event(type="T", payload={"i": i}, priority=p))
+    evs = bus.consume("c", limit=1000)
+    got = [e.priority for e in evs]
+    assert got == sorted(got, reverse=True)
+    assert len(evs) == len(prios)
+
+
+# ---------------------------------------------------------------------------
+# parameters / conditions
+# ---------------------------------------------------------------------------
+_scalars = st.one_of(st.integers(-5, 5), st.booleans(), st.text(max_size=4))
+
+
+@given(st.dictionaries(st.text(min_size=1, max_size=6).filter(lambda s: "." not in s and "$" not in s), _scalars, max_size=8))
+@settings(max_examples=50, deadline=None)
+def test_parameterset_roundtrip_and_bind_identity(d):
+    ps = ParameterSet(d)
+    ps2 = ParameterSet.from_dict(ps.to_dict())
+    assert ps2.bind({}) == ps.bind({})
+    assert ps2.bind({}) == d
+
+
+@given(st.integers(-10, 10), st.integers(-10, 10))
+@settings(max_examples=50, deadline=None)
+def test_condition_compare_semantics(a, b):
+    ctx = {"w": {"outputs": {"v": a}}}
+    for op, fn in [("<", a < b), ("<=", a <= b), (">", a > b),
+                   (">=", a >= b), ("==", a == b), ("!=", a != b)]:
+        c = Condition.compare(Ref("w.outputs.v"), op, b)
+        c2 = Condition.from_dict(c.to_dict())
+        assert c2.evaluate(ctx) == fn
+
+
+# ---------------------------------------------------------------------------
+# int8 gradient compression error bound
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=64))
+@settings(max_examples=40, deadline=None)
+def test_int8_quantization_error_bound(vals):
+    import numpy as np
+
+    from repro.optim.compress import dequantize_int8, quantize_int8
+
+    x = np.asarray(vals, dtype=np.float32)
+    q, s = quantize_int8(x)
+    back = np.asarray(dequantize_int8(q, s))
+    amax = np.abs(x).max()
+    assert np.all(np.abs(back - x) <= amax / 127.0 + 1e-6)

@@ -1,0 +1,110 @@
+"""REST service: routing, auth filters, endpoint groups, client."""
+from __future__ import annotations
+
+import pytest
+
+from repro.common.exceptions import ReproError
+from repro.core import Work, Workflow
+from repro.rest import AuthService, RestApp, RestClient, RestServer
+
+
+@pytest.fixture()
+def server(orch):
+    app = RestApp(orch)
+    srv = RestServer(app).start()
+    yield srv, app
+    srv.stop()
+
+
+@pytest.fixture()
+def client(server):
+    srv, app = server
+    cli = RestClient(srv.url)
+    cli.register("alice", ["users"])
+    cli.login("alice")
+    return cli
+
+
+def test_ping_unauthenticated(server):
+    srv, _ = server
+    assert RestClient(srv.url).ping()
+
+
+def test_submit_requires_auth(server):
+    srv, _ = server
+    cli = RestClient(srv.url)
+    wf = Workflow("x")
+    wf.add_work(Work("a", task="noop"))
+    with pytest.raises(ReproError, match="401"):
+        cli.submit(wf)
+
+
+def test_authz_role_enforcement(server, orch):
+    srv, app = server
+    cli = RestClient(srv.url)
+    cli.register("watcher", ["monitors"])     # read-only group
+    cli.login("watcher")
+    assert cli.monitor()["bus"]["backend"] == "local"
+    wf = Workflow("x")
+    wf.add_work(Work("a", task="noop"))
+    with pytest.raises(ReproError, match="403"):
+        cli.submit(wf)
+
+
+def test_submit_status_catalog_log_flow(client, orch):
+    from repro.core import CollectionSpec
+
+    wf = Workflow("restflow")
+    wf.add_work(Work("a", task="emit",
+                     inputs=[CollectionSpec("in.ds", n_files=3)]))
+    rid = client.submit(wf)
+    assert client.wait(rid, timeout=30) == "Finished"
+    st = client.status(rid)
+    assert st["requester"] == "alice"
+    cat = client.catalog(rid)
+    assert any(c["relation"] == "Input" and c["total_files"] == 3
+               for c in cat["collections"])
+    logs = client.logs(rid)
+    assert logs["entries"][0]["status"] == "Finished"
+
+
+def test_abort_via_message_endpoint(client, orch):
+    import time
+
+    from repro.core.work import register_task
+
+    register_task("rest_slow", lambda **kw: time.sleep(5) or {})
+    wf = Workflow("abortable")
+    wf.add_work(Work("s", task="rest_slow", n_jobs=2))
+    rid = client.submit(wf)
+    time.sleep(0.3)
+    client.abort(rid)
+    assert client.wait(rid, timeout=30) == "Cancelled"
+
+
+def test_cache_endpoints(client):
+    digest = client.cache_put(b"payload-bytes")
+    assert client.cache_get(digest) == b"payload-bytes"
+
+
+def test_token_expiry_and_bad_signature():
+    auth = AuthService(token_ttl_s=-1)
+    auth.register("bob")
+    token = auth.issue_token("bob")
+    from repro.common.exceptions import AuthenticationError
+
+    with pytest.raises(AuthenticationError, match="expired"):
+        auth.validate(token)
+    auth2 = AuthService()
+    auth2.register("bob")
+    good = auth2.issue_token("bob")
+    with pytest.raises(AuthenticationError):
+        auth2.validate(good[:-4] + "0000")
+
+
+def test_monitor_health_endpoint(client, orch):
+    import time
+
+    time.sleep(1.2)  # allow heartbeats to land
+    health = orch.stores["health"].live_agents()
+    assert len(health) >= 5  # all agent types heartbeating

@@ -1,0 +1,134 @@
+"""Workload runtime (PanDA analogue): retries, chaos injection, speculative
+execution, incremental release, elastic sites."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.core.work import register_task
+from repro.runtime.executor import TaskSpec, WorkloadRuntime
+
+
+@pytest.fixture()
+def runtime():
+    rt = WorkloadRuntime(sites={"s0": 8}, workers=8)
+    yield rt
+    rt.stop()
+
+
+def _wait_terminal(rt, wl, timeout=20.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        st = rt.status(wl)
+        if st["status"] in ("Finished", "SubFinished", "Failed", "Cancelled"):
+            return st
+        time.sleep(0.02)
+    raise TimeoutError(rt.status(wl))
+
+
+def test_basic_submit_finish(runtime):
+    register_task("rt_ok", lambda **kw: {"v": kw["job_index"]})
+    wl = runtime.submit(TaskSpec(payload={"kind": "registered", "name": "rt_ok"}, n_jobs=4))
+    st = _wait_terminal(runtime, wl)
+    assert st["status"] == "Finished"
+    assert [r["v"] for r in runtime.results(wl)] == [0, 1, 2, 3]
+
+
+def test_retries_on_flaky_payload(runtime):
+    attempts = {}
+
+    def flaky(parameters, job_index, n_jobs, payload):
+        n = attempts.get(job_index, 0) + 1
+        attempts[job_index] = n
+        if n < 3:
+            raise RuntimeError("flaky")
+        return {"ok": True}
+
+    register_task("rt_flaky", flaky)
+    wl = runtime.submit(
+        TaskSpec(payload={"kind": "registered", "name": "rt_flaky"}, n_jobs=2,
+                 max_job_retries=5)
+    )
+    st = _wait_terminal(runtime, wl)
+    assert st["status"] == "Finished"
+    assert all(a == 3 for a in attempts.values())
+    assert runtime.stats["retried_jobs"] >= 4
+
+
+def test_exhausted_retries_fail_task(runtime):
+    register_task("rt_dead", lambda **kw: (_ for _ in ()).throw(RuntimeError("x")))
+    wl = runtime.submit(
+        TaskSpec(payload={"kind": "registered", "name": "rt_dead"}, n_jobs=1,
+                 max_job_retries=1)
+    )
+    st = _wait_terminal(runtime, wl)
+    assert st["status"] == "Failed"
+
+
+def test_injected_failures_recovered_by_retries():
+    rt = WorkloadRuntime(sites={"s0": 8}, failure_rate=0.3, seed=7, workers=8)
+    register_task("rt_ok2", lambda **kw: {})
+    wl = rt.submit(TaskSpec(payload={"kind": "registered", "name": "rt_ok2"},
+                            n_jobs=16, max_job_retries=8))
+    st = _wait_terminal(rt, wl, timeout=30)
+    assert st["status"] == "Finished"
+    assert rt.stats["injected_failures"] > 0
+    rt.stop()
+
+
+def test_straggler_speculation():
+    rt = WorkloadRuntime(
+        sites={"s0": 16},
+        straggler_rate=0.1,
+        straggler_factor=60.0,
+        job_runtime_s=0.02,
+        speculate_after_factor=3.0,
+        seed=3,
+        workers=16,
+    )
+    register_task("rt_sleepy", lambda **kw: {})
+    wl = rt.submit(TaskSpec(payload={"kind": "registered", "name": "rt_sleepy"},
+                            n_jobs=48))
+    st = _wait_terminal(rt, wl, timeout=30)
+    assert st["status"] == "Finished"
+    # mitigation engaged: at least one speculative copy launched
+    assert rt.stats["speculated_jobs"] >= 1
+    rt.stop()
+
+
+def test_hold_and_incremental_release(runtime):
+    register_task("rt_held", lambda **kw: {})
+    wl = runtime.submit(
+        TaskSpec(payload={"kind": "registered", "name": "rt_held"}, n_jobs=4,
+                 hold_jobs=True, job_contents=[101, 102, 103, 104])
+    )
+    time.sleep(0.2)
+    assert runtime.status(wl)["status"] == "Submitted"  # all held
+    assert runtime.release_jobs_for_contents(wl, [101, 103]) == 2
+    time.sleep(0.3)
+    states = {j["index"]: j["state"] for j in runtime.status(wl)["jobs"]}
+    assert states[0] == "Finished" and states[2] == "Finished"
+    assert states[1] == "Held" and states[3] == "Held"
+    runtime.release_jobs_for_contents(wl, [102, 104])
+    assert _wait_terminal(runtime, wl)["status"] == "Finished"
+
+
+def test_site_preference_and_brokering():
+    rt = WorkloadRuntime(sites={"sA": 4, "sB": 4}, workers=4)
+    register_task("rt_site", lambda **kw: {})
+    wl = rt.submit(TaskSpec(payload={"kind": "registered", "name": "rt_site"},
+                            n_jobs=4, site="sB"))
+    st = _wait_terminal(rt, wl)
+    assert all(j["site"] == "sB" for j in st["jobs"])
+    rt.stop()
+
+
+def test_kill_cancels_pending(runtime):
+    register_task("rt_slow", lambda **kw: time.sleep(3) or {})
+    wl = runtime.submit(TaskSpec(payload={"kind": "registered", "name": "rt_slow"},
+                                 n_jobs=32))
+    time.sleep(0.1)
+    runtime.kill(wl)
+    st = _wait_terminal(runtime, wl, timeout=10)
+    assert st["status"] == "Cancelled"

@@ -1,0 +1,178 @@
+"""End-to-end orchestration behaviour (the paper's architecture working as
+one system): submission → Clerk → Transformer → Carrier → runtime →
+Finisher → request completion, plus failure handling, aborts, data-aware
+fine-grained release, and horizontal agent scaling."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.common.constants import ContentStatus, WorkStatus
+from repro.core import Condition, CollectionSpec, Ref, Work, Workflow, register_task
+from repro.orchestrator import Orchestrator
+from repro.runtime.executor import WorkloadRuntime
+
+
+def test_linear_chain_with_parameter_passing(orch):
+    wf = Workflow("chain")
+    wf.add_work(Work("w0", task="emit", parameters={"base": 10}))
+    wf.add_work(Work("w1", task="echo", parameters={"got": Ref("w0.outputs.metric")}))
+    wf.add_dependency("w0", "w1")
+    rid = orch.submit_workflow(wf)
+    assert orch.wait_request(rid, timeout=30) == "Finished"
+    _, res = orch.work_status(rid, "w1")
+    assert res["got"] == 11          # parameter flowed through the DAG
+
+
+def test_conditional_branch_executes_one_side(orch):
+    wf = Workflow("branch")
+    wf.add_work(Work("gate", task="emit", parameters={"base": 99}))
+    wf.add_work(Work("big", task="noop"))
+    wf.add_work(Work("small", task="noop"))
+    wf.add_dependency("gate", "big", Condition.compare(Ref("gate.outputs.metric"), ">", 50))
+    wf.add_dependency("gate", "small", Condition.compare(Ref("gate.outputs.metric"), "<=", 50))
+    rid = orch.submit_workflow(wf)
+    assert orch.wait_request(rid, timeout=30) == "Finished"
+    snap = orch.workflow_snapshot(rid)
+    assert snap.works["big"].status == WorkStatus.FINISHED
+    assert "small" in snap.skipped
+
+
+def test_loop_workflow_iterates_until_condition_false(orch):
+    calls = []
+
+    def counter(parameters, job_index, n_jobs, payload):
+        calls.append(1)
+        return {"n": len(calls)}
+
+    register_task("counter", counter)
+    wf = Workflow("loop")
+    wf.add_work(Work("step", task="counter"))
+    wf.add_loop("L", ["step"], Condition.compare(Ref("step.outputs.n"), "<", 3),
+                max_iterations=10)
+    rid = orch.submit_workflow(wf)
+    assert orch.wait_request(rid, timeout=30) == "Finished"
+    assert len(calls) == 3           # ran until n >= 3
+
+
+def test_failed_payload_retries_then_fails_request(orch):
+    wf = Workflow("failing")
+    wf.add_work(Work("bad", task="fail_always", max_retries=1))
+    rid = orch.submit_workflow(wf)
+    status = orch.wait_request(rid, timeout=40)
+    assert status == "Failed"
+
+
+def test_abort_request(orch):
+    register_task("slow", lambda **kw: time.sleep(5) or {})
+    wf = Workflow("abortme")
+    wf.add_work(Work("s", task="slow", n_jobs=4))
+    rid = orch.submit_workflow(wf)
+    time.sleep(0.3)
+    orch.abort_request(rid)
+    status = orch.wait_request(rid, timeout=30)
+    assert status == "Cancelled"
+
+
+def test_multi_job_work_collects_all_results(orch):
+    wf = Workflow("many")
+    wf.add_work(Work("m", task="emit", n_jobs=6))
+    rid = orch.submit_workflow(wf)
+    assert orch.wait_request(rid, timeout=30) == "Finished"
+    _, res = orch.work_status(rid, "m")
+    assert sorted(r["job"] for r in res["job_results"]) == list(range(6))
+
+
+def test_fat_submit_and_map(orch):
+    from repro.core import work_function
+
+    @work_function
+    def square(x):
+        return x * x
+
+    with orch.session() as s:
+        f1 = square.submit(9)
+        f2 = square.map([1, 2, 3])
+        assert f1.result(timeout=30) == 81
+        assert f2.result(timeout=30) == [1, 4, 9]
+
+
+def test_data_aware_work_released_by_staging(orch):
+    """Fine-grained release: a data-aware work's jobs stay HELD until the
+    carousel stages their input files."""
+    wf = Workflow("carousel")
+    files = [f"tape.f{i}" for i in range(4)]
+    w = Work(
+        "proc",
+        task="emit",
+        n_jobs=4,
+        inputs=[CollectionSpec("tape.ds", files=files)],
+        resources={"data_aware": True},
+    )
+    wf.add_work(w)
+    rid = orch.submit_workflow(wf)
+    # wait for submission (jobs held)
+    deadline = time.time() + 20
+    tid = None
+    while time.time() < deadline:
+        st = orch.request_status(rid)
+        if st["transforms"] and st["transforms"][0]["status"] in ("Submitted", "Running"):
+            tid = st["transforms"][0]["transform_id"]
+            break
+        time.sleep(0.05)
+    assert tid is not None, "transform never submitted"
+    time.sleep(0.3)
+    assert orch.request_status(rid)["status"] not in ("Finished", "Failed"), \
+        "jobs ran before data was staged"
+    # stage the files (what the tape simulator does on recall completion)
+    rows = orch.stores["contents"].by_transform(tid, status=ContentStatus.NEW)
+    ids = [int(r["content_id"]) for r in rows]
+    orch.stores["contents"].set_status(ids, ContentStatus.AVAILABLE)
+    for prow in orch.stores["processings"].by_transform(tid):
+        meta = prow.get("processing_metadata") or {}
+        if meta.get("workload_id"):
+            orch.runtime.release_jobs_for_contents(meta["workload_id"], ids)
+    assert orch.wait_request(rid, timeout=30) == "Finished"
+
+
+def test_horizontal_scaling_replicas():
+    orch = Orchestrator(poll_period_s=0.03, replicas=3)
+    with orch:
+        wf = Workflow("scaled")
+        prev = None
+        for i in range(8):
+            wf.add_work(Work(f"n{i}", task="emit", parameters={"base": i}))
+            if prev is not None:
+                wf.add_dependency(prev, f"n{i}")
+            prev = f"n{i}"
+        rid = orch.submit_workflow(wf)
+        assert orch.wait_request(rid, timeout=60) == "Finished"
+        errors = {a.consumer_id: a.errors for a in orch.agents if a.errors}
+        assert not errors, f"agent errors with replicas: {errors}"
+
+
+def test_node_loss_recovery():
+    """Elastic drill: drain a site mid-run; jobs relocate and finish."""
+    register_task("slowish", lambda **kw: time.sleep(0.2) or {"ok": 1})
+    runtime = WorkloadRuntime(sites={"siteA": 4, "siteB": 4}, workers=8)
+    orch = Orchestrator(poll_period_s=0.03, runtime=runtime)
+    with orch:
+        wf = Workflow("lossy")
+        wf.add_work(Work("w", task="slowish", n_jobs=8, max_retries=3))
+        rid = orch.submit_workflow(wf)
+        time.sleep(0.25)
+        runtime.remove_site("siteA")
+        assert orch.wait_request(rid, timeout=60) == "Finished"
+
+
+def test_monitor_summary_counts(orch):
+    wf = Workflow("mon")
+    wf.add_work(Work("a", task="emit"))
+    rid = orch.submit_workflow(wf)
+    orch.wait_request(rid, timeout=30)
+    m = orch.monitor_summary()
+    assert m["requests"].get("Finished", 0) >= 1
+    assert m["transforms"].get("Finished", 0) >= 1
+    assert m["runtime"]["finished_jobs"] >= 1
+    assert m["bus"]["backend"] == "local"
