@@ -1,0 +1,159 @@
+"""Data-aware brokering vs greedy first-fit (repro.broker).
+
+Two measurements:
+
+1. **Placement throughput** — push/pop/done cycles through the
+   ``PriorityBroker`` (fair-share + throttle), single-threaded.  The
+   acceptance floor is 10k placements/sec; the heap-based queues should
+   clear it by orders of magnitude.
+
+2. **Locality-skewed workload** — an event-driven simulation (virtual
+   time, no sleeps): N jobs arrive as a Poisson stream, each reading one
+   1 GiB content whose single replica is skewed 70/20/10 across three
+   16-slot sites.  A job placed off-replica pays a transfer (bytes, plus
+   extra runtime at 0.5 GiB/s — transfers don't just cost network, they
+   stretch the job).  ``greedy`` places on the most-free site (the seed
+   executor's policy); ``data_aware`` places via the real ``CostModel``.
+   Reported: bytes moved and makespan — the broker must move ≥30% fewer
+   bytes at equal or better makespan.
+"""
+from __future__ import annotations
+
+import heapq
+import random
+import time
+from collections import deque
+from typing import Any
+
+from repro.broker import CostModel, PriorityBroker, ReplicaCatalog, Throttler
+
+GIB = 1 << 30
+SITES = {"siteA": 16, "siteB": 16, "siteC": 16}
+SKEW = {"siteA": 0.70, "siteB": 0.20, "siteC": 0.10}
+BASE_RUNTIME_S = 1.0
+BANDWIDTH_BPS = GIB / 2.0  # off-replica placement adds 2 s per GiB
+
+
+def _placement_throughput(n: int = 20000, users: int = 32) -> dict[str, Any]:
+    rng = random.Random(0)
+    broker = PriorityBroker(throttler=Throttler(max_inflight_per_user=64))
+    jobs = [(i, f"user{rng.randrange(users)}", rng.randrange(10)) for i in range(n)]
+    t0 = time.perf_counter()
+    for item, user, prio in jobs:
+        broker.push(item, user=user, priority=prio)
+    popped = 0
+    while True:
+        got = broker.pop()
+        if got is None:
+            break
+        popped += 1
+        # release immediately: measures pure queue machinery, one full
+        # push→pop→done placement cycle per job
+        broker.done(jobs[got][1])
+    dt = time.perf_counter() - t0
+    assert popped == n, f"lost placements: {popped}/{n}"
+    return {
+        "name": "broker/placement_throughput",
+        "us_per_call": dt / n * 1e6,
+        "derived": {"placements_per_sec": round(n / dt), "jobs": n, "users": users},
+    }
+
+
+def _simulate(
+    policy: str, *, n_jobs: int = 600, arrival_rate: float = 18.0, seed: int = 1
+) -> dict[str, Any]:
+    """Event-driven placement simulation in virtual time.
+
+    Jobs arrive at ``arrival_rate``/s, sized so the skew-heavy site's
+    own traffic (70% of arrivals) fits inside its 16 slots — placement
+    then usually has a real choice of sites, the regime where brokering
+    matters.  (At full saturation every policy degenerates to "run
+    wherever a slot frees".)  A data-blind policy additionally inflates
+    every misplaced job by its transfer time, which is what pushes its
+    makespan past the data-aware broker's.
+    """
+    rng = random.Random(seed)
+    catalog = ReplicaCatalog(default_bytes=GIB)
+    homes = rng.choices(list(SKEW), weights=list(SKEW.values()), k=n_jobs)
+    for content, home in enumerate(homes):
+        catalog.register(content, home, GIB)
+    cost = CostModel(catalog=catalog)
+
+    free = dict(SITES)
+    running: list[tuple[float, str]] = []  # (finish_time, site)
+    arrivals = deque()
+    t = 0.0
+    for content in range(n_jobs):
+        t += rng.expovariate(arrival_rate)
+        arrivals.append((t, content))
+    ready: deque[int] = deque()
+    now, bytes_moved = 0.0, 0
+    while arrivals or ready or running:
+        while arrivals and arrivals[0][0] <= now:
+            ready.append(arrivals.popleft()[1])
+        if ready and any(f > 0 for f in free.values()):
+            content = ready.popleft()
+            if policy == "greedy":
+                # the seed executor: most-free site, data-blind
+                site = max(free, key=lambda s: (free[s], s))
+            else:
+                ranked = cost.rank(list(free.items()), content=content)
+                site = next(s for s in ranked if free[s] > 0)
+            moved = catalog.bytes_to_move(content, site)
+            bytes_moved += moved
+            free[site] -= 1
+            heapq.heappush(
+                running, (now + BASE_RUNTIME_S + moved / BANDWIDTH_BPS, site)
+            )
+            continue
+        # idle until the next event: a job finishing or a job arriving
+        nxt = []
+        if running:
+            nxt.append(running[0][0])
+        if arrivals:
+            nxt.append(arrivals[0][0])
+        now = max(now, min(nxt))
+        while running and running[0][0] <= now:
+            _, site = heapq.heappop(running)
+            free[site] += 1
+    return {"bytes_moved": bytes_moved, "makespan_s": now, "jobs": n_jobs}
+
+
+def run() -> list[dict[str, Any]]:
+    rows: list[dict[str, Any]] = [_placement_throughput()]
+
+    results: dict[str, dict[str, Any]] = {}
+    for policy in ("greedy", "data_aware"):
+        t0 = time.perf_counter()
+        sim = _simulate(policy)
+        dt = time.perf_counter() - t0
+        results[policy] = sim
+        rows.append(
+            {
+                "name": f"broker/locality/{policy}",
+                "us_per_call": dt / sim["jobs"] * 1e6,
+                "derived": {
+                    "bytes_moved_gib": round(sim["bytes_moved"] / GIB, 1),
+                    "makespan_s": round(sim["makespan_s"], 2),
+                },
+            }
+        )
+    g, d = results["greedy"], results["data_aware"]
+    saved = 1.0 - d["bytes_moved"] / max(1, g["bytes_moved"])
+    rows.append(
+        {
+            "name": "broker/locality/savings",
+            "us_per_call": 0.0,
+            "derived": {
+                "bytes_saved_frac": round(saved, 3),
+                "makespan_ratio": round(d["makespan_s"] / g["makespan_s"], 3),
+                "meets_30pct_floor": saved >= 0.30,
+            },
+        }
+    )
+    return rows
+
+
+if __name__ == "__main__":
+    for row in run():
+        print(row)

@@ -1,6 +1,7 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows.  Modules:
+  broker     — §2.2/§3.4.3 data-aware brokering vs greedy (repro.broker)
   carousel   — Fig. 9  (fine-grained Data Carousel)
   dag        — Fig. 10/11 (Rubin 100k-job DAG release)
   eventbus   — §3.2.2 backends + Coordinator merging
@@ -25,6 +26,7 @@ def main() -> None:
 
     from benchmarks import (
         bench_al,
+        bench_broker,
         bench_carousel,
         bench_dag,
         bench_eventbus,
@@ -35,6 +37,7 @@ def main() -> None:
     )
 
     modules = {
+        "broker": bench_broker,
         "carousel": bench_carousel,
         "dag": bench_dag,
         "eventbus": bench_eventbus,

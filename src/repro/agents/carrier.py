@@ -86,6 +86,11 @@ class Submitter(BaseAgent):
             meta = row.get("processing_metadata") or {}
             data_aware = bool(meta.get("data_aware"))
             params = trow["work"]["template"].get("bound_parameters") or {}
+            # fair-share identity + priority ride through the TaskSpec so the
+            # runtime's broker can order multi-tenant traffic (work-level
+            # priority wins; request priority is the fallback).
+            req = self.stores["requests"].get(int(row["request_id"]))
+            priority = int(trow.get("priority") or 0) or int(req.get("priority") or 0)
             spec = TaskSpec(
                 payload=dict(work.payload),
                 n_jobs=work.n_jobs,
@@ -94,6 +99,8 @@ class Submitter(BaseAgent):
                 hold_jobs=data_aware,
                 max_job_retries=work.max_retries,
                 name=work.name,
+                user=req.get("requester") or "anonymous",
+                priority=priority,
                 job_contents=meta.get("job_contents") or None,
             )
             workload_id = self.orch.runtime.submit(spec)
@@ -293,10 +300,15 @@ class Receiver(BaseAgent):
             out_ids = meta.get("output_content_ids") or []
             ji = int(msg.get("job_index", -1))
             if 0 <= ji < len(out_ids):
+                site = msg.get("site")
+                if site:
+                    # the output materialized where the job ran — register the
+                    # replica so downstream placement is data-aware
+                    self.orch.runtime.broker.catalog.register(out_ids[ji], site)
                 self.stores["contents"].set_status(
                     [out_ids[ji]], ContentStatus.AVAILABLE
                 )
-                self.publish(data_available_event(0, [out_ids[ji]]))
+                self.publish(data_available_event(0, [out_ids[ji]], site=site))
         elif kind == "job_failed":
             self.publish(poll_processing_event(pid, priority=15))
 
@@ -313,8 +325,16 @@ class Trigger(BaseAgent):
 
     def handle_event(self, event: Event) -> None:
         content_ids = [int(c) for c in event.payload.get("content_ids") or []]
-        if content_ids:
-            self.release(content_ids)
+        if not content_ids:
+            return
+        site = event.payload.get("site")
+        if site:
+            # staged/produced files become replicas at their landing site so
+            # staging *drives* placement (data-aware Carousel)
+            catalog = self.orch.runtime.broker.catalog
+            for cid in content_ids:
+                catalog.register(cid, site)
+        self.release(content_ids)
 
     def lazy_poll(self) -> bool:
         # fallback: activate any NEW contents whose deps are all available

@@ -146,15 +146,19 @@ class Transformer(BaseAgent):
         return input_ids, job_contents
 
     def _broker_site(self, work: Work) -> str | None:
-        """Pick the execution slice: honour explicit pins, else choose the
-        site with the most free slots that satisfies the resource tags."""
+        """Pick the execution slice: honour explicit pins; constrain to the
+        best tag-satisfying site when resource tags are requested.  With no
+        pin and no tags, return None — per-job placement is then decided by
+        the runtime's data-aware broker (repro.broker), which sees replica
+        locality and site health that a transform-level pin would mask."""
         if work.site:
             return work.site
-        runtime = self.orch.runtime
         want = work.resources.get("tags") or ()
+        if not want:
+            return None
         best, best_free = None, -1
-        for site in runtime.sites.values():
-            if want and not set(want).issubset(set(site.tags)):
+        for site in self.orch.runtime.sites.values():
+            if not set(want).issubset(set(site.tags)):
                 continue
             free = site.free()
             if free > best_free:

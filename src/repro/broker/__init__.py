@@ -1,0 +1,108 @@
+"""Data-aware brokering & admission control (paper §2.2/§3.4.3).
+
+The subsystem that turns the executor's greedy first-fit into the
+paper's "intelligent dispatch": a ``ReplicaCatalog`` (which site holds
+what data), a ``CostModel`` (free slots + bytes-to-move + site-health
+EWMAs), and a ``PriorityBroker``/``Throttler`` pair (multi-tenant
+fair-share with admission quotas).  ``DataAwareBroker`` bundles the
+three so the WorkloadRuntime, the Orchestrator's agents, and the Data
+Carousel all share one brokering state.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Iterable
+
+from repro.broker.catalog import DEFAULT_BYTES, ContentKey, ReplicaCatalog
+from repro.broker.cost import CostModel, SiteHealth
+from repro.broker.policy import PriorityBroker, Throttler
+
+__all__ = [
+    "DEFAULT_BYTES",
+    "ContentKey",
+    "CostModel",
+    "DataAwareBroker",
+    "PriorityBroker",
+    "ReplicaCatalog",
+    "SiteHealth",
+    "Throttler",
+]
+
+
+class DataAwareBroker:
+    """Catalog + cost model + fair-share queue behind one interface.
+
+    The WorkloadRuntime drives it with four calls:
+
+    * ``push(item, user=, priority=)`` / ``pop()`` / ``done(user)`` —
+      admission-controlled fair-share dispatch queue;
+    * ``rank_sites(free_by_site, content=, avoid=)`` — placement order;
+    * ``account_placement(content, site)`` — charge (and remember) the
+      transfer a placement implies; returns bytes moved;
+    * ``record_outcome(site, ...)`` — feed the health EWMAs.
+    """
+
+    def __init__(
+        self,
+        *,
+        catalog: ReplicaCatalog | None = None,
+        health: SiteHealth | None = None,
+        cost_model: CostModel | None = None,
+        throttler: Throttler | None = None,
+    ):
+        self.catalog = catalog or (cost_model.catalog if cost_model else ReplicaCatalog())
+        self.health = health or (cost_model.health if cost_model else SiteHealth())
+        self.cost_model = cost_model or CostModel(self.catalog, self.health)
+        self.queue = PriorityBroker(throttler=throttler)
+        self.bytes_moved = 0
+        self._bytes_lock = threading.Lock()
+
+    # -- dispatch queue ------------------------------------------------------
+    def push(self, item: Any, *, user: str = "anonymous", priority: int = 0) -> None:
+        self.queue.push(item, user=user, priority=priority)
+
+    def pop(self) -> Any | None:
+        return self.queue.pop()
+
+    def done(self, user: str) -> None:
+        self.queue.done(user)
+
+    def __len__(self) -> int:
+        return len(self.queue)
+
+    # -- placement -----------------------------------------------------------
+    def rank_sites(
+        self,
+        free_by_site: Iterable[tuple[str, int]],
+        *,
+        content: ContentKey | None = None,
+        avoid: str | None = None,
+    ) -> list[str]:
+        return self.cost_model.rank(free_by_site, content=content, avoid=avoid)
+
+    def account_placement(self, content: ContentKey | None, site: str) -> int:
+        if content is None:
+            return 0
+        moved = self.catalog.ensure(content, site)
+        if moved:
+            with self._bytes_lock:
+                self.bytes_moved += moved
+        return moved
+
+    # -- adaptive feedback ---------------------------------------------------
+    def record_outcome(
+        self, site: str | None, *, failed: bool = False, straggler: bool = False
+    ) -> None:
+        if site:
+            self.health.record(site, failed=failed, straggler=straggler)
+
+    def summary(self) -> dict[str, Any]:
+        return {
+            "catalog": self.catalog.summary(),
+            "health": self.health.summary(),
+            "queued": len(self.queue),
+            "bytes_moved": self.bytes_moved,
+            "throttle_rejections": (
+                self.queue.throttler.rejections if self.queue.throttler else 0
+            ),
+        }

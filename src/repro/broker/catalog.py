@@ -1,0 +1,143 @@
+"""Replica catalog — the Rucio stand-in (paper §2.2, arXiv:2007.01791).
+
+iDDS brokers against a data-management system that knows, for every file
+or dataset, *which sites already hold a replica and how large it is*.
+``ReplicaCatalog`` is that content→site map with byte accounting:
+
+* ``register(content, site)`` — a replica landed at ``site`` (staging
+  completed, an upstream job produced it there, or a transfer finished);
+* ``bytes_to_move(content, site)`` — the transfer cost the CostModel
+  charges a placement candidate (0 when a local replica exists);
+* ``ensure(content, site)`` — simulate the transfer a placement implies:
+  returns the bytes actually moved and records the new replica so later
+  jobs reading the same content are free;
+* registration hooks let agents (Trigger, Carousel) observe catalog
+  growth without polling.
+
+Contents are keyed by whatever the caller uses to name data: integer
+content ids (the DB layer), or file/dataset name strings (the Carousel).
+All operations are O(1) under one lock.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Callable, Hashable, Iterable
+
+ContentKey = Hashable
+
+#: default replica size when the caller does not know (256 MiB)
+DEFAULT_BYTES = 1 << 28
+
+
+class ReplicaCatalog:
+    """Thread-safe content → {site} map with per-site byte accounting."""
+
+    def __init__(self, *, default_bytes: int = DEFAULT_BYTES):
+        self.default_bytes = int(default_bytes)
+        self._replicas: dict[ContentKey, set[str]] = {}
+        self._sizes: dict[ContentKey, int] = {}
+        self._site_bytes: dict[str, int] = {}
+        self._hooks: list[Callable[[ContentKey, str, int], None]] = []
+        self._lock = threading.Lock()
+        self.registered = 0  # replica registrations (monotonic)
+
+    # -- registration --------------------------------------------------------
+    def register(
+        self, content: ContentKey, site: str, n_bytes: int | None = None
+    ) -> bool:
+        """Record a replica of ``content`` at ``site``.
+
+        Returns True if this was a new replica (idempotent re-registration
+        returns False).  Hooks fire only for new replicas.  A content's
+        size is fixed by its first registration — later ``n_bytes`` values
+        are ignored so re-staging the same file cannot silently rewrite the
+        size the cost model (and per-site byte accounting) already charged.
+        """
+        with self._lock:
+            if content in self._sizes:
+                size = self._sizes[content]
+            else:
+                size = int(n_bytes) if n_bytes is not None else self.default_bytes
+                self._sizes[content] = size
+            sites = self._replicas.setdefault(content, set())
+            if site in sites:
+                return False
+            sites.add(site)
+            self._site_bytes[site] = self._site_bytes.get(site, 0) + size
+            self.registered += 1
+            hooks = list(self._hooks)
+        for hook in hooks:
+            try:
+                hook(content, site, size)
+            except Exception:  # noqa: BLE001 - observer errors must not break brokering
+                pass
+        return True
+
+    def register_dataset(
+        self,
+        files: Iterable[ContentKey],
+        site: str,
+        *,
+        bytes_per_file: int | None = None,
+    ) -> int:
+        """Bulk registration (dataset-level Rucio rule).  Returns #new."""
+        return sum(1 for f in files if self.register(f, site, bytes_per_file))
+
+    def unregister_site(self, site: str) -> int:
+        """Drop every replica at ``site`` (site loss / buffer eviction).
+        Returns the number of replicas removed."""
+        removed = 0
+        with self._lock:
+            for sites in self._replicas.values():
+                if site in sites:
+                    sites.discard(site)
+                    removed += 1
+            self._site_bytes.pop(site, None)
+        return removed
+
+    def add_hook(self, fn: Callable[[ContentKey, str, int], None]) -> None:
+        with self._lock:
+            self._hooks.append(fn)
+
+    # -- queries -------------------------------------------------------------
+    def replicas(self, content: ContentKey) -> frozenset[str]:
+        with self._lock:
+            return frozenset(self._replicas.get(content) or ())
+
+    def has_replica(self, content: ContentKey, site: str) -> bool:
+        with self._lock:
+            return site in (self._replicas.get(content) or ())
+
+    def size_of(self, content: ContentKey) -> int:
+        with self._lock:
+            return self._sizes.get(content, self.default_bytes)
+
+    def bytes_to_move(self, content: ContentKey, site: str) -> int:
+        """Transfer cost of running a job that reads ``content`` at ``site``."""
+        with self._lock:
+            sites = self._replicas.get(content)
+            if sites and site in sites:
+                return 0
+            return self._sizes.get(content, self.default_bytes)
+
+    def ensure(self, content: ContentKey, site: str) -> int:
+        """Make ``content`` available at ``site``; returns bytes moved (0 when
+        a replica already exists).  The moved replica is registered so the
+        transfer is paid at most once per (content, site)."""
+        moved = self.bytes_to_move(content, site)
+        if moved:
+            self.register(content, site)
+        return moved
+
+    def site_bytes(self, site: str) -> int:
+        with self._lock:
+            return self._site_bytes.get(site, 0)
+
+    def summary(self) -> dict[str, Any]:
+        with self._lock:
+            return {
+                "contents": len(self._replicas),
+                "replicas": sum(len(s) for s in self._replicas.values()),
+                "registered": self.registered,
+                "site_bytes": dict(self._site_bytes),
+            }

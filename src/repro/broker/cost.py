@@ -1,0 +1,124 @@
+"""Placement cost model — free slots, bytes-to-move, site health EWMA.
+
+The adaptive half of the paper's "intelligent dispatch": candidate sites
+are scored by
+
+    score = w_bytes · GiB_to_move           (data locality, ReplicaCatalog)
+          + w_queue / (free_slots + 1)      (capacity pressure)
+          + w_fail · failure_EWMA           (adaptive: recent job failures)
+          + w_straggler · straggler_EWMA    (adaptive: recent slow nodes)
+          + avoid_penalty                   (retry relocation hint)
+
+Lower is better.  ``SiteHealth`` keeps exponentially-weighted moving
+averages of per-site failure and straggler rates, so the broker steers
+new placements away from sites that have recently been failing or
+running slow — and steers back once they recover (the EWMA decays with
+every successful job).  Related work (arXiv:2510.00828) measures transfer
+cost as the dominant scheduling signal, hence the bytes term defaults to
+the heaviest weight.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Iterable
+
+from repro.broker.catalog import ContentKey, ReplicaCatalog
+
+_GIB = float(1 << 30)
+
+
+class SiteHealth:
+    """Per-site EWMA of failure / straggler outcomes (thread-safe)."""
+
+    def __init__(self, *, alpha: float = 0.25):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha must be in (0, 1], got {alpha}")
+        self.alpha = alpha
+        self._fail: dict[str, float] = {}
+        self._straggler: dict[str, float] = {}
+        self._lock = threading.Lock()
+
+    def record(
+        self, site: str, *, failed: bool = False, straggler: bool = False
+    ) -> None:
+        """Fold one job outcome into the site's EWMAs."""
+        a = self.alpha
+        with self._lock:
+            self._fail[site] = (1 - a) * self._fail.get(site, 0.0) + a * float(failed)
+            self._straggler[site] = (1 - a) * self._straggler.get(site, 0.0) + a * float(
+                straggler
+            )
+
+    def failure_rate(self, site: str) -> float:
+        with self._lock:
+            return self._fail.get(site, 0.0)
+
+    def straggler_rate(self, site: str) -> float:
+        with self._lock:
+            return self._straggler.get(site, 0.0)
+
+    def summary(self) -> dict[str, dict[str, float]]:
+        with self._lock:
+            sites = set(self._fail) | set(self._straggler)
+            return {
+                s: {
+                    "failure_ewma": round(self._fail.get(s, 0.0), 4),
+                    "straggler_ewma": round(self._straggler.get(s, 0.0), 4),
+                }
+                for s in sites
+            }
+
+
+class CostModel:
+    """Scores and ranks candidate sites; lower score = better placement."""
+
+    def __init__(
+        self,
+        catalog: ReplicaCatalog | None = None,
+        health: SiteHealth | None = None,
+        *,
+        w_bytes: float = 2.0,
+        w_queue: float = 4.0,
+        w_fail: float = 8.0,
+        w_straggler: float = 2.0,
+        avoid_penalty: float = 1e6,
+    ):
+        self.catalog = catalog or ReplicaCatalog()
+        self.health = health or SiteHealth()
+        self.w_bytes = w_bytes
+        self.w_queue = w_queue
+        self.w_fail = w_fail
+        self.w_straggler = w_straggler
+        self.avoid_penalty = avoid_penalty
+
+    def score(
+        self,
+        site: str,
+        free_slots: int,
+        *,
+        content: ContentKey | None = None,
+        avoid: str | None = None,
+    ) -> float:
+        s = self.w_queue / (max(0, free_slots) + 1)
+        if content is not None:
+            s += self.w_bytes * (self.catalog.bytes_to_move(content, site) / _GIB)
+        s += self.w_fail * self.health.failure_rate(site)
+        s += self.w_straggler * self.health.straggler_rate(site)
+        if avoid is not None and site == avoid:
+            s += self.avoid_penalty
+        return s
+
+    def rank(
+        self,
+        free_by_site: Iterable[tuple[str, int]],
+        *,
+        content: ContentKey | None = None,
+        avoid: str | None = None,
+    ) -> list[str]:
+        """Candidate sites best-first (deterministic: score, then name)."""
+        scored = [
+            (self.score(name, free, content=content, avoid=avoid), name)
+            for name, free in free_by_site
+        ]
+        scored.sort()
+        return [name for _, name in scored]

@@ -1,0 +1,198 @@
+"""Admission control: fair-share priority queues + in-flight throttling.
+
+Multi-tenant brokering (paper §3.4.3: "availability, efficiency, and
+policy constraints") needs two mechanisms the greedy executor lacked:
+
+* ``Throttler`` — per-user (and global) in-flight job quotas.  A user at
+  quota is not *rejected*; their queued jobs simply stop being dispatched
+  until one of their running jobs completes — backpressure, not drop.
+* ``PriorityBroker`` — a two-level queue: virtual-time fair sharing
+  *across* users (weighted round-robin, as in HTCondor/fair-share batch
+  schedulers), strict priority *within* a user.  Every push/pop is
+  O(log n) so the broker survives heavy multi-tenant traffic.
+
+The virtual-time scheme: each user carries a ``vtime`` that advances by
+``1/share`` per dispatched job; the user with the smallest vtime goes
+next.  Users joining late start at the current virtual front so they
+cannot starve incumbents by replaying history.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+from typing import Any
+
+
+class Throttler:
+    """In-flight quotas with backpressure semantics.
+
+    ``try_admit`` either takes an admission ticket (True) or signals the
+    caller to keep the job queued (False).  Every successful admission
+    must be paired with exactly one ``release``.
+    """
+
+    def __init__(
+        self,
+        *,
+        max_inflight_total: int | None = None,
+        max_inflight_per_user: int | None = None,
+        user_quotas: dict[str, int] | None = None,
+    ):
+        self.max_inflight_total = max_inflight_total
+        self.max_inflight_per_user = max_inflight_per_user
+        self.user_quotas = dict(user_quotas or {})
+        self._inflight: dict[str, int] = {}
+        self._total = 0
+        self._lock = threading.Lock()
+        self.rejections = 0  # admission refusals (backpressure events)
+
+    def _quota(self, user: str) -> int | None:
+        if user in self.user_quotas:
+            return self.user_quotas[user]
+        return self.max_inflight_per_user
+
+    def try_admit(self, user: str) -> bool:
+        with self._lock:
+            if (
+                self.max_inflight_total is not None
+                and self._total >= self.max_inflight_total
+            ):
+                self.rejections += 1
+                return False
+            quota = self._quota(user)
+            if quota is not None and self._inflight.get(user, 0) >= quota:
+                self.rejections += 1
+                return False
+            self._inflight[user] = self._inflight.get(user, 0) + 1
+            self._total += 1
+            return True
+
+    def release(self, user: str) -> None:
+        with self._lock:
+            n = self._inflight.get(user, 0)
+            if n <= 1:
+                self._inflight.pop(user, None)
+            else:
+                self._inflight[user] = n - 1
+            self._total = max(0, self._total - 1)
+
+    def inflight(self, user: str | None = None) -> int:
+        with self._lock:
+            if user is None:
+                return self._total
+            return self._inflight.get(user, 0)
+
+
+class PriorityBroker:
+    """Fair-share across users, priority within a user, O(log n) per op.
+
+    ``pop`` takes an admission ticket from the throttler for the chosen
+    user; the caller MUST call ``done(user)`` once the dispatched item
+    leaves execution (finished, failed, requeued, or skipped) — that both
+    frees the quota slot and re-activates the user's queue if it was
+    blocked by backpressure.
+    """
+
+    def __init__(self, *, throttler: Throttler | None = None):
+        self.throttler = throttler
+        self._heaps: dict[str, list[tuple[int, int, Any]]] = {}
+        self._active: list[tuple[float, int, str]] = []  # (vtime, seq, user)
+        self._active_set: set[str] = set()
+        self._blocked: set[str] = set()
+        self._vtime: dict[str, float] = {}
+        self._share: dict[str, float] = {}
+        self._seq = itertools.count()
+        self._size = 0
+        self._lock = threading.Lock()
+        self.pops = 0
+
+    # -- configuration -------------------------------------------------------
+    def set_share(self, user: str, share: float) -> None:
+        """Fair-share weight (default 1.0): a share-2 user is dispatched
+        twice as often as a share-1 user under contention."""
+        if share <= 0:
+            raise ValueError(f"share must be > 0, got {share}")
+        with self._lock:
+            self._share[user] = float(share)
+
+    # -- queue ops -----------------------------------------------------------
+    def push(self, item: Any, *, user: str = "anonymous", priority: int = 0) -> None:
+        with self._lock:
+            heap = self._heaps.setdefault(user, [])
+            heapq.heappush(heap, (-int(priority), next(self._seq), item))
+            self._size += 1
+            if user not in self._blocked:
+                self._activate(user)
+
+    def pop(self) -> Any | None:
+        """Next item under fair-share + throttle policy, or None when empty
+        or fully backpressured."""
+        with self._lock:
+            while self._active:
+                vt, _, user = heapq.heappop(self._active)
+                if user not in self._active_set:
+                    continue  # stale entry
+                self._active_set.discard(user)
+                heap = self._heaps.get(user)
+                if not heap:
+                    continue
+                if self.throttler is not None and not self.throttler.try_admit(user):
+                    self._blocked.add(user)  # backpressure: park the user
+                    continue
+                _, _, item = heapq.heappop(heap)
+                self._size -= 1
+                if not heap:
+                    del self._heaps[user]
+                self._vtime[user] = vt + 1.0 / self._share.get(user, 1.0)
+                if user in self._heaps:
+                    # continuously-backlogged user: keep the exact vtime so
+                    # share weights hold (no floor — that's only for joiners)
+                    self._activate(user, floor=False)
+                self.pops += 1
+                return item
+            return None
+
+    def done(self, user: str) -> None:
+        """An admitted item left execution: release quota, unpark users."""
+        with self._lock:
+            if self.throttler is not None:
+                self.throttler.release(user)
+            # freed capacity may admit ANY parked user — e.g. one refused on
+            # the *global* cap before it ever had in-flight work — so wake
+            # them all; pop() re-parks whoever is still over quota.
+            blocked, self._blocked = self._blocked, set()
+            for u in blocked:
+                if self._heaps.get(u):
+                    self._activate(u)
+
+    # -- introspection -------------------------------------------------------
+    def __len__(self) -> int:
+        with self._lock:
+            return self._size
+
+    def qsize(self, user: str | None = None) -> int:
+        with self._lock:
+            if user is None:
+                return self._size
+            return len(self._heaps.get(user) or ())
+
+    def queued_users(self) -> list[str]:
+        with self._lock:
+            return sorted(u for u, h in self._heaps.items() if h)
+
+    def blocked_users(self) -> list[str]:
+        with self._lock:
+            return sorted(self._blocked)
+
+    # -- internals (call with lock held) -------------------------------------
+    def _activate(self, user: str, *, floor: bool = True) -> None:
+        if user in self._active_set:
+            return
+        vt = self._vtime.get(user, 0.0)
+        if floor and self._active:
+            # a user (re)joining the backlog starts at the virtual front so
+            # it cannot replay idle history and starve incumbents
+            vt = max(vt, self._active[0][0])
+        heapq.heappush(self._active, (vt, next(self._seq), user))
+        self._active_set.add(user)

@@ -26,6 +26,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.broker import ReplicaCatalog
 from repro.common.utils import utc_now_ts
 
 
@@ -67,10 +68,16 @@ class TapeSimulator:
         drives: int = 4,
         latency_s: float = 0.01,
         file_bytes: int = 1 << 20,
+        catalog: ReplicaCatalog | None = None,
+        buffer_site: str = "tape-buffer",
     ):
         self.drives = drives
         self.latency_s = latency_s
         self.file_bytes = file_bytes
+        # when a broker catalog is attached, every staged file is registered
+        # as a replica at ``buffer_site`` so staging drives placement
+        self.catalog = catalog
+        self.buffer_site = buffer_site
         self.metrics = StagingMetrics()
         self._q: list[tuple[str, Callable[[str], None]]] = []
         self._cv = threading.Condition()
@@ -124,6 +131,8 @@ class TapeSimulator:
                 )
                 if self.metrics.first_stage_at is None:
                     self.metrics.first_stage_at = utc_now_ts()
+            if self.catalog is not None:
+                self.catalog.register(file, self.buffer_site, self.file_bytes)
             try:
                 cb(file)
             except Exception:  # noqa: BLE001 - staging callback is best-effort
@@ -139,10 +148,18 @@ def run_carousel(
     file_bytes: int = 1 << 20,
     consume_s: float = 0.0,
     on_available: Callable[[str], None] | None = None,
+    catalog: ReplicaCatalog | None = None,
+    buffer_site: str = "tape-buffer",
 ) -> dict[str, Any]:
     """Run a staging campaign and CONSUME each file (simulated processing),
     honouring the mode's release policy.  Returns metrics summary."""
-    tape = TapeSimulator(drives=drives, latency_s=latency_s, file_bytes=file_bytes)
+    tape = TapeSimulator(
+        drives=drives,
+        latency_s=latency_s,
+        file_bytes=file_bytes,
+        catalog=catalog,
+        buffer_site=buffer_site,
+    )
     staged: list[str] = []
     done = threading.Event()
     lock = threading.Lock()

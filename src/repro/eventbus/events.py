@@ -141,10 +141,14 @@ def trigger_release_event(transform_id: int, content_ids: list[int]) -> Event:
     )
 
 
-def data_available_event(coll_id: int, content_ids: list[int]) -> Event:
+def data_available_event(
+    coll_id: int, content_ids: list[int], site: str | None = None
+) -> Event:
+    """``site`` (when known) is where the data landed — the Trigger registers
+    it as a replica so placement follows staging."""
     return Event(
         type=str(EventType.DATA_AVAILABLE),
-        payload={"coll_id": coll_id, "content_ids": content_ids},
+        payload={"coll_id": coll_id, "content_ids": content_ids, "site": site},
         priority=int(EventPriority.HIGH),
     )
 

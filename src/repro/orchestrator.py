@@ -69,6 +69,9 @@ class Orchestrator:
             kw.setdefault("db", self.db)
         self.bus = create_event_bus(bus_kind, **kw)
         self.runtime = runtime or WorkloadRuntime()
+        # the data-aware brokering subsystem (replica catalog, cost model,
+        # fair-share admission) — shared by the runtime and the agents
+        self.broker = self.runtime.broker
         self.message_subscribers: list[Callable[[dict[str, Any]], None]] = []
         self.agents = [
             agent_cls(self, poll_period_s=poll_period_s, replica=r)
@@ -211,6 +214,7 @@ class Orchestrator:
             "contents": _counts("contents"),
             "bus": coord.bus_report(),
             "runtime": dict(self.runtime.stats),
+            "broker": self.broker.summary(),
             "agents": {
                 a.consumer_id: {"cycles": a.cycles, "errors": a.errors}
                 for a in self.agents

@@ -25,6 +25,7 @@ from repro.common.exceptions import (
     AuthorizationError,
     NotFoundError,
     ReproError,
+    ValidationError,
 )
 from repro.core.fat import GLOBAL_CODE_CACHE
 from repro.core.workflow import Workflow
@@ -129,10 +130,29 @@ class RestApp:
         self, claims: dict[str, Any], body: dict[str, Any], **kw: Any
     ) -> dict[str, Any]:
         wf = Workflow.from_dict(body["workflow"])
+        # ``user`` (delegated submission) and ``priority`` feed the broker's
+        # fair-share queues; default requester is the authenticated subject.
+        # Submitting on behalf of ANOTHER identity spends that identity's
+        # fair share and quota, so it needs the admin role.
+        requester = claims["sub"] if claims else "anonymous"
+        delegated = body.get("user")
+        if delegated and delegated != requester:
+            admin_groups = self.auth.role_map.get("admin", set())
+            if not claims or not admin_groups.intersection(
+                claims.get("groups", [])
+            ):
+                raise AuthorizationError(
+                    "submitting as another user requires the admin role"
+                )
+            requester = delegated
+        try:
+            priority = int(body.get("priority", 0))
+        except (TypeError, ValueError) as exc:
+            raise ValidationError(f"priority must be an integer: {exc}") from exc
         request_id = self.orch.submit_workflow(
             wf,
-            requester=claims["sub"] if claims else "anonymous",
-            priority=int(body.get("priority", 0)),
+            requester=requester,
+            priority=priority,
         )
         return {"request_id": request_id}
 

@@ -54,12 +54,15 @@ class RestClient:
     def ping(self) -> bool:
         return self._call("GET", "/ping").get("status") == "OK"
 
-    def submit(self, workflow: Workflow, *, priority: int = 0) -> int:
-        out = self._call(
-            "POST",
-            "/request",
-            {"workflow": workflow.to_dict(), "priority": priority},
-        )
+    def submit(
+        self, workflow: Workflow, *, priority: int = 0, user: str | None = None
+    ) -> int:
+        """Submit a workflow; ``priority``/``user`` feed the broker's
+        fair-share queues (``user`` defaults to the authenticated subject)."""
+        body: dict[str, Any] = {"workflow": workflow.to_dict(), "priority": priority}
+        if user is not None:
+            body["user"] = user
+        out = self._call("POST", "/request", body)
         return int(out["request_id"])
 
     def status(self, request_id: int) -> dict[str, Any]:

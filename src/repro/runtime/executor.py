@@ -4,8 +4,14 @@ A *task* (one iDDS Work ⇒ one PanDA task) comprises ``n_jobs`` jobs.  Jobs
 run on *sites* — named slot pools standing in for pod slices / grid sites.
 The executor provides:
 
-* finite per-site slots + greedy brokering (site preference honoured),
-* per-job retries with relocation (failed attempts prefer another site),
+* finite per-site slots + data-aware brokering (``repro.broker``): site
+  preference honoured first, then candidates ranked by free slots,
+  bytes-to-move against the replica catalog, and per-site failure /
+  straggler EWMAs,
+* multi-tenant admission: jobs are queued per-user with fair-share
+  ordering and optional in-flight quotas (backpressure, not rejection),
+* per-job retries with relocation (failed attempts are re-brokered away
+  from the failing site — avoid-hint plus its degraded health score),
 * fault injection (``failure_rate``) and straggler injection
   (``straggler_rate`` × ``straggler_factor``),
 * speculative re-execution of stragglers (first copy to finish wins) —
@@ -18,11 +24,11 @@ The executor provides:
 * elastic site add/remove — removing a site fails its running jobs, which
   retry elsewhere (fault-tolerance drill used by the tests).
 
-Claiming is O(1) via a global ready-queue of (task, job) references.
+Claiming is O(log n) via the broker's fair-share queue of (task, job)
+references.
 """
 from __future__ import annotations
 
-import collections
 import queue
 import random
 import threading
@@ -30,6 +36,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Mapping
 
+from repro.broker import DataAwareBroker
 from repro.common.exceptions import SchedulingError
 from repro.common.utils import new_uid, utc_now_ts
 from repro.core.fat import encode_result, execute_function_payload
@@ -52,6 +59,9 @@ class TaskSpec:
     hold_jobs: bool = False
     max_job_retries: int = 3
     name: str = ""
+    # multi-tenant brokering: fair-share identity + within-user priority
+    user: str = "anonymous"
+    priority: int = 0
     # content ids backing each job (fine-grained data binding), parallel to
     # job indices; optional.
     job_contents: list[int] | None = None
@@ -152,10 +162,13 @@ class WorkloadRuntime:
         job_runtime_s: float = 0.0,
         seed: int = 0,
         workers: int = 8,
+        broker: DataAwareBroker | None = None,
     ):
         self.sites: dict[str, Site] = {}
         for name, slots in (sites or {"site0": 64}).items():
             self.sites[name] = Site(name, slots)
+        # explicit None-check: an idle broker is len()==0 and thus falsy
+        self.broker = broker if broker is not None else DataAwareBroker()
         self.failure_rate = failure_rate
         self.straggler_rate = straggler_rate
         self.straggler_factor = straggler_factor
@@ -165,7 +178,6 @@ class WorkloadRuntime:
         self.rng = random.Random(seed)
         self.tasks: dict[str, _Task] = {}
         self.messages: "queue.Queue[dict[str, Any]]" = queue.Queue()
-        self._ready: collections.deque[tuple[_Task, JobInfo]] = collections.deque()
         self._lock = threading.Lock()
         self._wake = threading.Condition(self._lock)
         self._stop = False
@@ -178,6 +190,7 @@ class WorkloadRuntime:
             "speculated_jobs": 0,
             "injected_failures": 0,
             "injected_stragglers": 0,
+            "bytes_moved": 0,
         }
         self._threads = [
             threading.Thread(
@@ -201,7 +214,7 @@ class WorkloadRuntime:
             self.stats["submitted_jobs"] += spec.n_jobs
             if not spec.hold_jobs:
                 for job in task.jobs:
-                    self._ready.append((task, job))
+                    self._enqueue(task, job)
             self._wake.notify_all()
         self._emit(workload_id, "task_submitted", {})
         return workload_id
@@ -218,7 +231,7 @@ class WorkloadRuntime:
         if released:
             with self._lock:
                 for job in released:
-                    self._ready.append((task, job))
+                    self._enqueue(task, job)
                 self._wake.notify_all()
         return len(released)
 
@@ -274,11 +287,13 @@ class WorkloadRuntime:
 
     def remove_site(self, name: str) -> None:
         """Drain the site; its running jobs are failed by the monitor and
-        retried elsewhere (node-loss drill)."""
+        re-brokered elsewhere (node-loss drill).  Its replicas leave the
+        catalog so the cost model stops treating it as data-local."""
         site = self.sites.get(name)
         if site is None:
             return
         site.drained = True
+        self.broker.catalog.unregister_site(name)
         with self._lock:
             self._wake.notify_all()
 
@@ -303,26 +318,52 @@ class WorkloadRuntime:
             {"workload_id": workload_id, "kind": kind, "ts": utc_now_ts(), **body}
         )
 
-    def _broker_site(self, preference: str | None, avoid: str | None) -> Site | None:
-        """Greedy brokering: preference first, else most-free site, skipping
-        the site a retry is avoiding when alternatives exist."""
-        if preference:
-            site = self.sites.get(preference)
+    def _job_content(self, spec: TaskSpec, job: JobInfo) -> Any | None:
+        if spec.job_contents and job.index < len(spec.job_contents):
+            return spec.job_contents[job.index]
+        return None
+
+    def _broker_site(self, task: _Task, job: JobInfo) -> Site | None:
+        """Data-aware brokering: explicit pin first, then sites in cost-model
+        order (free slots, bytes-to-move vs the replica catalog, health
+        EWMAs, retry-avoid penalty).  Charges the implied transfer."""
+        spec = task.spec
+        content = self._job_content(spec, job)
+        if spec.site:
+            site = self.sites.get(spec.site)
             if site is not None and site.try_acquire():
+                self._charge_move(content, site.name)
                 return site
-        candidates = sorted(self.sites.values(), key=lambda s: -s.free())
-        if avoid is not None and len([s for s in candidates if s.free() > 0]) > 1:
-            candidates = [s for s in candidates if s.name != avoid] + [
-                s for s in candidates if s.name == avoid
-            ]
-        for site in candidates:
+        with self._lock:
+            candidates = list(self.sites.values())
+        ranked = self.broker.rank_sites(
+            [(s.name, s.free()) for s in candidates],
+            content=content,
+            avoid=job.avoid_site,
+        )
+        by_name = {s.name: s for s in candidates}
+        for name in ranked:
+            site = by_name[name]
             if site.try_acquire():
+                self._charge_move(content, site.name)
                 return site
         return None
 
+    def _charge_move(self, content: Any | None, site_name: str) -> None:
+        moved = self.broker.account_placement(content, site_name)
+        if moved:
+            with self._lock:  # counter races under concurrent workers
+                self.stats["bytes_moved"] += moved
+
+    def _enqueue(self, task: _Task, job: JobInfo) -> None:
+        """Queue a Pending job through the broker's fair-share queue."""
+        self.broker.push(
+            (task, job), user=task.spec.user, priority=task.spec.priority
+        )
+
     def _requeue(self, task: _Task, job: JobInfo) -> None:
         with self._lock:
-            self._ready.append((task, job))
+            self._enqueue(task, job)
             self._wake.notify_all()
 
     def _worker_loop(self) -> None:
@@ -330,7 +371,9 @@ class WorkloadRuntime:
             with self._lock:
                 if self._stop:
                     return
-                item = self._ready.popleft() if self._ready else None
+            # pop takes an admission ticket for the job's user; every path
+            # below must pair it with exactly one broker.done(user).
+            item = self.broker.pop()
             if item is None:
                 with self._lock:
                     if self._stop:
@@ -338,19 +381,23 @@ class WorkloadRuntime:
                     self._wake.wait(timeout=0.05)
                 continue
             task, job = item
+            user = task.spec.user
             with task.lock:
                 if job.state != "Pending" or task.cancelled:
+                    self.broker.done(user)
                     continue
-            site = self._broker_site(task.spec.site, job.avoid_site)
+            site = self._broker_site(task, job)
             if site is None:
-                # no capacity: put it back and wait a beat
+                # no capacity: hand back the ticket, requeue, wait a beat
+                self.broker.done(user)
                 with self._lock:
-                    self._ready.append((task, job))
+                    self._enqueue(task, job)
                     self._wake.wait(timeout=0.02)
                 continue
             with task.lock:
                 if job.state != "Pending":
                     site.release()
+                    self.broker.done(user)
                     continue
                 job.state = "Running"
                 job.site = site.name
@@ -386,6 +433,7 @@ class WorkloadRuntime:
                     ):
                         j.state = "Cancelled"
             self.stats["finished_jobs"] += 1
+            self.broker.record_outcome(site.name)  # success decays the EWMAs
             with self._lock:
                 self._durations.append(job.finished_at - t0)
                 if len(self._durations) > 512:
@@ -413,9 +461,11 @@ class WorkloadRuntime:
             if lost_race:
                 pass  # a cancelled speculative copy; not a failure
             elif retry:
+                self.broker.record_outcome(site.name, failed=True)
                 self.stats["retried_jobs"] += 1
                 self._requeue(task, job)
             else:
+                self.broker.record_outcome(site.name, failed=True)
                 self.stats["failed_jobs"] += 1
                 self._emit(
                     task.workload_id,
@@ -424,6 +474,7 @@ class WorkloadRuntime:
                 )
         finally:
             site.release()
+            self.broker.done(task.spec.user)  # give back the admission ticket
             if self._task_terminal(task):
                 self._emit(
                     task.workload_id, "task_terminal", {"status": task.status()}
@@ -474,6 +525,7 @@ class WorkloadRuntime:
                         site = self.sites.get(job.site)
                         if site is not None and site.drained:
                             job.error = "site drained"
+                            self.broker.record_outcome(job.site, failed=True)
                             if job.attempts <= task.spec.max_job_retries:
                                 job.state = "Pending"
                                 job.avoid_site = job.site
@@ -500,6 +552,9 @@ class WorkloadRuntime:
                                 and now - job.started_at > cutoff
                             ):
                                 job.speculated = True
+                                self.broker.record_outcome(
+                                    job.site, straggler=True
+                                )
                                 clone = JobInfo(job.index, state="Pending")
                                 clone.speculated = True
                                 task.extra_jobs.append(clone)

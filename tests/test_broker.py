@@ -1,0 +1,359 @@
+"""Data-aware brokering & admission control (repro.broker): replica
+catalog, cost ranking, throttle backpressure, fair-share ordering, and
+the executor/orchestrator integration."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.broker import (
+    CostModel,
+    DataAwareBroker,
+    PriorityBroker,
+    ReplicaCatalog,
+    SiteHealth,
+    Throttler,
+)
+from repro.core.work import register_task
+from repro.runtime.executor import TaskSpec, WorkloadRuntime
+
+GIB = 1 << 30
+
+
+# ---------------------------------------------------------------------------
+# ReplicaCatalog
+# ---------------------------------------------------------------------------
+def test_catalog_register_and_bytes_to_move():
+    cat = ReplicaCatalog(default_bytes=100)
+    assert cat.register(1, "sA", 500)
+    assert not cat.register(1, "sA")  # idempotent
+    assert cat.replicas(1) == {"sA"}
+    assert cat.bytes_to_move(1, "sA") == 0
+    assert cat.bytes_to_move(1, "sB") == 500
+    assert cat.bytes_to_move(999, "sA") == 100  # unknown content: default size
+    assert cat.site_bytes("sA") == 500
+
+
+def test_catalog_ensure_pays_transfer_once():
+    cat = ReplicaCatalog()
+    cat.register("f1", "sA", 64)
+    assert cat.ensure("f1", "sB") == 64  # transfer
+    assert cat.ensure("f1", "sB") == 0  # replica now local
+    assert cat.replicas("f1") == {"sA", "sB"}
+
+
+def test_catalog_unregister_site_and_hooks():
+    cat = ReplicaCatalog()
+    seen: list[tuple] = []
+    cat.add_hook(lambda c, s, b: seen.append((c, s, b)))
+    cat.register_dataset(["a", "b"], "sA", bytes_per_file=10)
+    assert seen == [("a", "sA", 10), ("b", "sA", 10)]
+    assert cat.unregister_site("sA") == 2
+    assert cat.bytes_to_move("a", "sA") == 10  # replica gone
+    assert cat.site_bytes("sA") == 0
+
+
+# ---------------------------------------------------------------------------
+# CostModel + SiteHealth
+# ---------------------------------------------------------------------------
+def test_cost_ranking_prefers_replica_site():
+    cat = ReplicaCatalog(default_bytes=GIB)
+    cat.register(7, "sB", GIB)
+    cost = CostModel(catalog=cat)
+    ranked = cost.rank([("sA", 8), ("sB", 8), ("sC", 8)], content=7)
+    assert ranked[0] == "sB"
+
+
+def test_cost_ranking_prefers_free_slots_without_data():
+    cost = CostModel()
+    assert cost.rank([("sA", 1), ("sB", 16)]) == ["sB", "sA"]
+
+
+def test_cost_ranking_penalizes_failing_site_and_recovers():
+    health = SiteHealth(alpha=0.5)
+    cost = CostModel(health=health)
+    for _ in range(4):
+        health.record("sA", failed=True)
+    assert cost.rank([("sA", 8), ("sB", 8)]) == ["sB", "sA"]
+    assert health.failure_rate("sA") > 0.9
+    for _ in range(16):
+        health.record("sA")  # successes decay the EWMA
+    assert health.failure_rate("sA") < 0.01
+    # all else equal again → deterministic name tie-break
+    assert cost.rank([("sA", 8), ("sB", 8)])[0] in ("sA", "sB")
+
+
+def test_cost_ranking_avoid_hint_ranks_last():
+    cost = CostModel()
+    assert cost.rank([("sA", 16), ("sB", 1)], avoid="sA") == ["sB", "sA"]
+
+
+# ---------------------------------------------------------------------------
+# Throttler + PriorityBroker
+# ---------------------------------------------------------------------------
+def test_throttler_backpressure_and_release():
+    q = PriorityBroker(throttler=Throttler(max_inflight_per_user=2))
+    for i in range(5):
+        q.push(i, user="alice")
+    assert q.pop() is not None and q.pop() is not None
+    assert q.pop() is None  # alice at quota: backpressure, not loss
+    assert q.blocked_users() == ["alice"]
+    assert len(q) == 3
+    q.done("alice")
+    assert q.pop() is not None  # quota slot freed → dispatch resumes
+    assert q.throttler.rejections >= 1
+
+
+def test_global_cap_park_is_released_by_other_users_completion():
+    """A user refused on the *global* cap (with no in-flight work of their
+    own) must be woken when anyone's completion frees capacity."""
+    q = PriorityBroker(throttler=Throttler(max_inflight_total=1))
+    q.push("a1", user="alice")
+    q.push("b1", user="bob")
+    assert q.pop() == "a1"  # fills the global cap
+    assert q.pop() is None  # bob parked on the global cap
+    assert q.blocked_users() == ["bob"]
+    q.done("alice")  # alice's completion must unpark bob
+    assert q.pop() == "b1"
+
+
+def test_catalog_size_fixed_at_first_registration():
+    cat = ReplicaCatalog()
+    cat.register("f", "s1", 1 << 30)
+    cat.register("f", "s2", 1 << 20)  # later sizes are ignored
+    assert cat.size_of("f") == 1 << 30
+    assert cat.bytes_to_move("f", "s3") == 1 << 30
+    assert cat.site_bytes("s1") == cat.site_bytes("s2") == 1 << 30
+
+
+def test_throttler_global_cap_and_user_quota_override():
+    t = Throttler(max_inflight_total=3, user_quotas={"vip": 3}, max_inflight_per_user=1)
+    assert t.try_admit("u1") and not t.try_admit("u1")  # per-user default 1
+    assert t.try_admit("vip") and t.try_admit("vip")
+    assert not t.try_admit("u2")  # global cap of 3 reached
+    t.release("vip")
+    assert t.try_admit("u2")
+    assert t.inflight() == 3
+
+
+def test_fair_share_alternates_users():
+    q = PriorityBroker()
+    for i in range(4):
+        q.push(("alice", i), user="alice")
+    for i in range(4):
+        q.push(("bob", i), user="bob")
+    order = [q.pop()[0] for _ in range(8)]
+    # strict alternation under equal shares — no user monopolizes
+    assert order == ["alice", "bob"] * 4
+
+
+def test_fair_share_weighted_shares():
+    q = PriorityBroker()
+    q.set_share("heavy", 2.0)
+    for i in range(20):
+        q.push(("heavy", i), user="heavy")
+        q.push(("light", i), user="light")
+    first12 = [q.pop()[0] for _ in range(12)]
+    assert first12.count("heavy") == 8  # 2:1 dispatch ratio
+    assert first12.count("light") == 4
+
+
+def test_priority_orders_within_user():
+    q = PriorityBroker()
+    q.push("low", user="u", priority=0)
+    q.push("high", user="u", priority=10)
+    q.push("mid", user="u", priority=5)
+    assert [q.pop() for _ in range(3)] == ["high", "mid", "low"]
+
+
+# ---------------------------------------------------------------------------
+# Executor integration
+# ---------------------------------------------------------------------------
+def _wait_terminal(rt, wl, timeout=20.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        st = rt.status(wl)
+        if st["status"] in ("Finished", "SubFinished", "Failed", "Cancelled"):
+            return st
+        time.sleep(0.02)
+    raise TimeoutError(rt.status(wl))
+
+
+def test_executor_places_jobs_at_replica_site():
+    rt = WorkloadRuntime(sites={"sA": 8, "sB": 8}, workers=4)
+    try:
+        for cid in (11, 12, 13, 14):
+            rt.broker.catalog.register(cid, "sB", GIB)
+        register_task("bk_local", lambda **kw: {})
+        wl = rt.submit(
+            TaskSpec(
+                payload={"kind": "registered", "name": "bk_local"},
+                n_jobs=4,
+                job_contents=[11, 12, 13, 14],
+            )
+        )
+        st = _wait_terminal(rt, wl)
+        assert st["status"] == "Finished"
+        assert all(j["site"] == "sB" for j in st["jobs"])
+        assert rt.stats["bytes_moved"] == 0  # every placement was data-local
+    finally:
+        rt.stop()
+
+
+def test_executor_accounts_bytes_for_off_replica_placement():
+    rt = WorkloadRuntime(sites={"sA": 4}, workers=2)
+    try:
+        rt.broker.catalog.register(21, "elsewhere", 7 * GIB)
+        register_task("bk_move", lambda **kw: {})
+        wl = rt.submit(
+            TaskSpec(
+                payload={"kind": "registered", "name": "bk_move"},
+                n_jobs=1,
+                job_contents=[21],
+            )
+        )
+        assert _wait_terminal(rt, wl)["status"] == "Finished"
+        assert rt.stats["bytes_moved"] == 7 * GIB
+        # the transfer registered a new replica: re-running is free
+        assert rt.broker.catalog.bytes_to_move(21, "sA") == 0
+    finally:
+        rt.stop()
+
+
+def test_remove_site_relocates_retries_via_broker_ranking():
+    """Node-loss drill: jobs running on a removed site must be re-brokered
+    to surviving sites (not merely avoid_site), the dead site's replicas
+    must leave the catalog, and its health EWMA must degrade."""
+    rt = WorkloadRuntime(sites={"sA": 8, "sB": 8}, workers=8, job_runtime_s=0.15)
+    try:
+        contents = list(range(100, 108))
+        for cid in contents:  # all data on sA → initial placement pins there
+            rt.broker.catalog.register(cid, "sA", GIB)
+        register_task("bk_elastic", lambda **kw: {})
+        wl = rt.submit(
+            TaskSpec(
+                payload={"kind": "registered", "name": "bk_elastic"},
+                n_jobs=8,
+                job_contents=contents,
+                max_job_retries=4,
+            )
+        )
+        deadline = time.time() + 5
+        while time.time() < deadline:
+            if any(j["site"] == "sA" for j in rt.status(wl)["jobs"]):
+                break
+            time.sleep(0.01)
+        rt.remove_site("sA")
+        st = _wait_terminal(rt, wl)
+        assert st["status"] == "Finished"
+        final_sites = {j["site"] for j in st["jobs"]}
+        assert final_sites <= {"sB"}  # everything relocated
+        assert rt.stats["retried_jobs"] >= 1
+        assert rt.broker.health.failure_rate("sA") > 0.0
+        assert rt.broker.catalog.replicas(contents[0]) >= {"sB"}  # re-staged
+        assert rt.stats["bytes_moved"] >= len(contents) * GIB  # relocation paid
+    finally:
+        rt.stop()
+
+
+def test_executor_fair_share_under_throttle():
+    """One user's flood must not starve another, and per-user quotas bound
+    concurrent execution (backpressure keeps the rest queued)."""
+    rt = WorkloadRuntime(
+        sites={"sA": 8},
+        workers=8,
+        job_runtime_s=0.05,
+        broker=DataAwareBroker(throttler=Throttler(max_inflight_per_user=2)),
+    )
+    try:
+        running_peak = {"alice": 0, "bob": 0}
+        running_now = {"alice": 0, "bob": 0}
+        import threading
+
+        lock = threading.Lock()
+
+        def tracked(parameters, job_index, n_jobs, payload):
+            user = payload["who"]
+            with lock:
+                running_now[user] += 1
+                running_peak[user] = max(running_peak[user], running_now[user])
+            time.sleep(0.03)
+            with lock:
+                running_now[user] -= 1
+            return {}
+
+        register_task("bk_tracked", tracked)
+        wls = [
+            rt.submit(
+                TaskSpec(
+                    payload={"kind": "registered", "name": "bk_tracked", "who": who},
+                    n_jobs=8,
+                    user=who,
+                )
+            )
+            for who in ("alice", "bob")
+        ]
+        for wl in wls:
+            assert _wait_terminal(rt, wl)["status"] == "Finished"
+        assert running_peak["alice"] <= 2 and running_peak["bob"] <= 2
+        assert rt.broker.queue.throttler.rejections > 0  # backpressure engaged
+    finally:
+        rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# Orchestrator / REST pass-through
+# ---------------------------------------------------------------------------
+def test_orchestrator_passes_user_and_priority_to_taskspec(orch):
+    from repro.core.work import Work
+
+    rid = orch.submit_work(
+        Work("bk_prio", task="noop", priority=7), requester="alice", priority=3
+    )
+    orch.wait_request(rid, timeout=30)
+    specs = [t.spec for t in orch.runtime.tasks.values() if t.spec.name == "bk_prio"]
+    assert specs, "workload never reached the runtime"
+    assert specs[0].user == "alice"
+    assert specs[0].priority == 7  # work-level priority wins over request's
+    assert "broker" in orch.monitor_summary()
+
+
+def test_rest_delegated_submission_requires_admin(orch):
+    from repro.core.work import Work
+    from repro.core.workflow import Workflow
+    from repro.rest.app import RestApp
+
+    app = RestApp(orch)
+    app.auth.register("mallory", ["users"])
+    app.auth.register("op", ["admins"])
+    wf = Workflow("deleg")
+    wf.add_work(Work("a", task="noop"))
+    body = {"workflow": wf.to_dict(), "user": "alice"}
+
+    def submit_as(user):
+        token = app.auth.issue_token(user)
+        return app.dispatch(
+            "POST", "/request", body, {"authorization": f"Bearer {token}"}
+        )
+
+    status, out = submit_as("mallory")  # plain user may not spoof alice
+    assert status == 403 and "admin" in out["error"]
+    status, out = submit_as("op")  # admins may delegate
+    assert status == 200
+    row = orch.stores["requests"].get(out["request_id"])
+    assert row["requester"] == "alice"
+
+
+def test_carousel_registers_staged_replicas():
+    from repro.data.carousel import run_carousel
+
+    cat = ReplicaCatalog()
+    files = [f"f{i}" for i in range(6)]
+    out = run_carousel(
+        files, mode="file", drives=2, latency_s=0.001, file_bytes=32,
+        catalog=cat, buffer_site="buf",
+    )
+    assert out["staged_files"] == 6
+    assert all(cat.has_replica(f, "buf") for f in files)
+    assert cat.site_bytes("buf") == 6 * 32

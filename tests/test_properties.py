@@ -3,7 +3,11 @@ from __future__ import annotations
 
 import random
 
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.common.constants import ContentStatus, CollectionRelation
 from repro.core.condition import Condition
