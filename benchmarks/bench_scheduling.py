@@ -1,12 +1,19 @@
 """§3.4.3 — hybrid scheduling: event-driven latency vs lazy-poll fallback,
-and orchestration overhead per job through the full stack."""
+and orchestration overhead per job through the full stack.
+
+``BENCH_SMOKE=1`` shrinks every scenario (CI smoke: catches hot-path
+regressions fast without paying the full sizes).
+"""
 from __future__ import annotations
 
+import os
 import time
 from typing import Any
 
 from repro.core import Work, Workflow, register_task
 from repro.orchestrator import Orchestrator
+
+_SMOKE = bool(int(os.environ.get("BENCH_SMOKE", "0") or "0"))
 
 
 def _measure_completion(orch: Orchestrator, n_works: int) -> float:
@@ -19,17 +26,50 @@ def _measure_completion(orch: Orchestrator, n_works: int) -> float:
     return time.perf_counter() - t0
 
 
+def _overhead_scenario(n_works: int, n_jobs: int, *, repeats: int = 2) -> dict[str, Any]:
+    """End-to-end orchestration overhead for ``n_works × n_jobs`` noop
+    jobs; best-of-``repeats`` (each on a fresh orchestrator) to damp
+    scheduler noise on shared machines."""
+    total = n_works * n_jobs
+    best_dt, best_m = None, None
+    for _ in range(repeats):
+        orch = Orchestrator(poll_period_s=0.02)
+        with orch:
+            register_task("bench_noop4", lambda **kw: {})
+            wf = Workflow("scale")
+            for i in range(n_works):
+                wf.add_work(Work(f"w{i}", task="bench_noop4", n_jobs=n_jobs))
+            t0 = time.perf_counter()
+            rid = orch.submit_workflow(wf)
+            orch.wait_request(rid, timeout=240)
+            dt = time.perf_counter() - t0
+            m = orch.monitor_summary()
+        if best_dt is None or dt < best_dt:
+            best_dt, best_m = dt, m
+    assert best_dt is not None and best_m is not None
+    return {
+        "name": f"scheduling/overhead_{total}_jobs",
+        "us_per_call": best_dt * 1e6 / total,
+        "derived": {
+            "jobs_per_s": int(total / best_dt),
+            "bus_merge_ratio": round(best_m["bus"].get("merge_ratio", 0.0), 3),
+            "wall_s": round(best_dt, 2),
+        },
+    }
+
+
 def run() -> list[dict[str, Any]]:
     register_task("bench_noop", lambda **kw: {})
     rows: list[dict[str, Any]] = []
 
     # event-driven (bus on) vs pure lazy-poll (bus DISABLED — §3.4.3):
     # same poll period; only the event path differs.
+    reps = 1 if _SMOKE else 3
     for label, bus_kind in (("event_driven", "local"), ("lazy_poll_only", "null")):
         orch = Orchestrator(poll_period_s=0.2, bus_kind=bus_kind)
         with orch:
             _measure_completion(orch, 1)  # warm
-            dts = [_measure_completion(orch, 1) for _ in range(3)]
+            dts = [_measure_completion(orch, 1) for _ in range(reps)]
         rows.append(
             {
                 "name": f"scheduling/{label}/single_work_latency",
@@ -38,27 +78,10 @@ def run() -> list[dict[str, Any]]:
             }
         )
 
-    # orchestration overhead per job at scale (64 works × 4 jobs)
-    orch = Orchestrator(poll_period_s=0.02)
-    with orch:
-        register_task("bench_noop4", lambda **kw: {})
-        wf = Workflow("scale")
-        for i in range(64):
-            wf.add_work(Work(f"w{i}", task="bench_noop4", n_jobs=4))
-        t0 = time.perf_counter()
-        rid = orch.submit_workflow(wf)
-        orch.wait_request(rid, timeout=240)
-        dt = time.perf_counter() - t0
-        m = orch.monitor_summary()
-    rows.append(
-        {
-            "name": "scheduling/overhead_256_jobs",
-            "us_per_call": dt * 1e6 / 256,
-            "derived": {
-                "jobs_per_s": int(256 / dt),
-                "bus_merge_ratio": round(m["bus"].get("merge_ratio", 0.0), 3),
-                "wall_s": round(dt, 2),
-            },
-        }
-    )
+    # orchestration overhead per job at scale
+    if _SMOKE:
+        rows.append(_overhead_scenario(16, 4, repeats=1))
+    else:
+        rows.append(_overhead_scenario(64, 4, repeats=3))   # overhead_256_jobs
+        rows.append(_overhead_scenario(128, 16))            # overhead_2048_jobs
     return rows

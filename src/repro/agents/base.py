@@ -37,6 +37,11 @@ class BaseAgent:
     #: event types this agent consumes
     event_types: tuple[str, ...] = ()
     name = "base"
+    #: when True, an idle lazy poll is skipped while the database write
+    #: generation is unchanged (nothing can have become due except by time;
+    #: a full poll still runs at least every 4× poll_period_s as the
+    #: correctness fallback).  Agents polling non-DB sources disable it.
+    db_gated_poll = True
 
     def __init__(
         self,
@@ -49,6 +54,7 @@ class BaseAgent:
         self.orch = orch
         self.bus: BaseEventBus = orch.bus
         self.stores = orch.stores
+        self.db = orch.db
         self.poll_period_s = poll_period_s
         self.batch_size = batch_size
         self.replica = replica
@@ -56,6 +62,9 @@ class BaseAgent:
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._last_poll = 0.0
+        self._last_real_poll = 0.0
+        self._last_poll_gen = -1
+        self._last_poll_did = True
         self._last_heartbeat = 0.0
         self.cycles = 0
         self.errors = 0
@@ -98,26 +107,38 @@ class BaseAgent:
             )
             if events:
                 did = True
-                handled: list[Event] = []
-                for ev in events:
-                    try:
-                        self.handle_event(ev)
-                        handled.append(ev)
-                    except Exception:  # noqa: BLE001
-                        self.errors += 1
-                        logger.error(
-                            "%s event %s error:\n%s",
-                            self.consumer_id,
-                            ev.type,
-                            traceback.format_exc(),
-                        )
-                        handled.append(ev)  # ack anyway; lazy poll will retry
-                self.bus.ack(handled)
+                try:
+                    self.handle_events(events)
+                except Exception:  # noqa: BLE001
+                    self.errors += 1
+                    logger.error(
+                        "%s batch error:\n%s",
+                        self.consumer_id,
+                        traceback.format_exc(),
+                    )
+                self.bus.ack(events)  # ack regardless; lazy poll retries
         now = utc_now_ts()
         if now - self._last_poll >= self.poll_period_s:
             self._last_poll = now
-            if self.lazy_poll():
-                did = True
+            # idle-poll gating: when the last poll found nothing and no
+            # write transaction has committed since, a rescan cannot find
+            # work — skip it (bounded: a real poll still runs every 4
+            # periods to catch time-based wakeups like next_poll_at).
+            gen = self.db.write_gen
+            if (
+                self.db_gated_poll
+                and not self._last_poll_did
+                and gen == self._last_poll_gen
+                and now - self._last_real_poll < self.poll_period_s * 4
+            ):
+                pass
+            else:
+                self._last_real_poll = now
+                self._last_poll_gen = gen  # read before polling: writes
+                # landing mid-poll bump the gen and force the next poll
+                self._last_poll_did = self.lazy_poll()
+                if self._last_poll_did:
+                    did = True
         if now - self._last_heartbeat >= max(1.0, self.poll_period_s * 10):
             self._last_heartbeat = now
             try:
@@ -129,6 +150,22 @@ class BaseAgent:
         return did
 
     # -- to implement ------------------------------------------------------------
+    def handle_events(self, events: Sequence[Event]) -> None:
+        """Consume one claimed batch.  The default dispatches per event
+        (errors isolated per event); batch-first agents override this to
+        merge the whole batch into grouped store operations."""
+        for ev in events:
+            try:
+                self.handle_event(ev)
+            except Exception:  # noqa: BLE001
+                self.errors += 1
+                logger.error(
+                    "%s event %s error:\n%s",
+                    self.consumer_id,
+                    ev.type,
+                    traceback.format_exc(),
+                )
+
     def handle_event(self, event: Event) -> None:  # pragma: no cover - abstract
         raise NotImplementedError
 
@@ -138,9 +175,23 @@ class BaseAgent:
         return False
 
     # -- helpers --------------------------------------------------------------
+    def _guarded(self, fn, *args: object, **kw: object):
+        """Run one item of a claimed batch; a failure is logged and counted
+        but does not abort the rest of the batch."""
+        try:
+            return fn(*args, **kw)
+        except Exception:  # noqa: BLE001
+            self.errors += 1
+            logger.error(
+                "%s batch item error:\n%s", self.consumer_id, traceback.format_exc()
+            )
+            return None
+
     def publish(self, *events: Event) -> None:
-        for ev in events:
-            self.bus.publish(ev)
+        if len(events) == 1:
+            self.bus.publish(events[0])
+        elif events:
+            self.bus.publish_many(events)
 
     def defer(self, seconds: float) -> float:
         return utc_now_ts() + seconds

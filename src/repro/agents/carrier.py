@@ -14,23 +14,30 @@ scalable):
   downstream jobs/contents as inputs become available.
 * **Finisher** — finalizes transforms when processings terminate.
 * **Conductor**— delivers outbound messages to external subscribers.
+
+All sub-agents are batch-first (§3.4.3 at scale): lazy polls claim a whole
+batch of due rows in one ``claim_ready`` statement, event handlers merge a
+consumed batch into grouped store operations, and the Receiver drains the
+runtime's message queue in one sweep — grouping ``job_finished`` by
+workload, caching ``output_content_ids`` per processing, and emitting one
+merged ``data_available`` event plus one ``set_status`` per sweep.
 """
 from __future__ import annotations
 
+import logging
 import queue
-from typing import Any
+from typing import Any, Sequence
 
 from repro.common.constants import (
-    CollectionRelation,
     ContentStatus,
     EventType,
     MessageDestination,
     ProcessingStatus,
     TransformStatus,
 )
-from repro.common.exceptions import NotFoundError
+from repro.common.exceptions import SchedulingError
+from repro.common.utils import new_uid, utc_now_ts
 from repro.core.statemachine import check_transition
-from repro.core.work import Work
 from repro.agents.base import BaseAgent
 from repro.eventbus.events import (
     Event,
@@ -40,6 +47,8 @@ from repro.eventbus.events import (
     update_transform_event,
 )
 from repro.runtime.executor import TaskSpec
+
+logger = logging.getLogger(__name__)
 
 _RUNTIME_TO_PROCESSING = {
     "Submitted": ProcessingStatus.SUBMITTED,
@@ -52,64 +61,120 @@ _RUNTIME_TO_PROCESSING = {
 
 _TERMINAL_RUNTIME = {"Finished", "SubFinished", "Failed", "Cancelled"}
 
+#: processing states the Finisher treats as final
+_TERMINAL_PSTATES = {
+    str(ProcessingStatus.FINISHED),
+    str(ProcessingStatus.SUBFINISHED),
+    str(ProcessingStatus.FAILED),
+    str(ProcessingStatus.TIMEOUT),
+    str(ProcessingStatus.CANCELLED),
+}
+
 
 class Submitter(BaseAgent):
     name = "carrier-submitter"
     event_types = (str(EventType.SUBMIT_PROCESSING),)
 
-    def handle_event(self, event: Event) -> None:
-        pid = event.payload.get("processing_id")
-        if pid is not None:
-            self.process(int(pid))
+    def handle_events(self, events: Sequence[Event]) -> None:
+        pids = [
+            int(ev.payload["processing_id"])
+            for ev in events
+            if ev.payload.get("processing_id") is not None
+        ]
+        rows = self.stores["processings"].claim_by_ids(
+            pids, [ProcessingStatus.NEW]
+        )
+        self._process_rows(rows)
 
     def lazy_poll(self) -> bool:
-        rows = self.stores["processings"].poll_ready(
+        rows = self.stores["processings"].claim_ready(
             [ProcessingStatus.NEW], limit=self.batch_size
         )
-        for row in rows:
-            self.process(int(row["processing_id"]))
-        return bool(rows)
+        return self._process_rows(rows)
 
-    def process(self, processing_id: int) -> None:
-        processings = self.stores["processings"]
+    def _process_rows(self, rows: list[dict[str, Any]]) -> bool:
+        if not rows:
+            return False
+        # prefetch the whole batch's transforms, request identities, and
+        # output content ids in three grouped queries instead of 3 point
+        # reads per row
+        tids = [int(r["transform_id"]) for r in rows]
+        tmap = self.stores["transforms"].get_many(tids)
+        rmap = self.stores["requests"].get_many(
+            [int(r["request_id"]) for r in rows],
+            columns=("requester", "priority"),
+        )
+        omap = self.stores["contents"].output_ids_by_transforms(tids)
         try:
-            row = processings.get(processing_id)
-        except NotFoundError:
-            return
+            for row in rows:
+                tid = int(row["transform_id"])
+                self._guarded(
+                    self._process_claimed,
+                    row,
+                    trow=tmap.get(tid),
+                    req=rmap.get(int(row["request_id"])),
+                    out_ids=omap.get(tid, []),
+                )
+        finally:
+            self.stores["processings"].unlock_many(
+                [int(r["processing_id"]) for r in rows]
+            )
+        return True
+
+    def _process_claimed(
+        self,
+        row: dict[str, Any],
+        *,
+        trow: dict[str, Any] | None = None,
+        req: dict[str, Any] | None = None,
+        out_ids: list[int] | None = None,
+    ) -> None:
         if row["status"] != str(ProcessingStatus.NEW):
             return
-        if not processings.claim(processing_id):
-            return
-        try:
-            trow = self.stores["transforms"].get(int(row["transform_id"]))
-            work = Work.from_dict(trow["work"])
-            meta = row.get("processing_metadata") or {}
-            data_aware = bool(meta.get("data_aware"))
-            params = trow["work"]["template"].get("bound_parameters") or {}
-            # fair-share identity + priority ride through the TaskSpec so the
-            # runtime's broker can order multi-tenant traffic (work-level
-            # priority wins; request priority is the fallback).
-            req = self.stores["requests"].get(int(row["request_id"]))
-            priority = int(trow.get("priority") or 0) or int(req.get("priority") or 0)
-            spec = TaskSpec(
-                payload=dict(work.payload),
-                n_jobs=work.n_jobs,
-                parameters=params,
-                site=row.get("site"),
-                hold_jobs=data_aware,
-                max_job_retries=work.max_retries,
-                name=work.name,
-                user=req.get("requester") or "anonymous",
-                priority=priority,
-                job_contents=meta.get("job_contents") or None,
+        processing_id = int(row["processing_id"])
+        transform_id = int(row["transform_id"])
+        if trow is None:
+            trow = self.stores["transforms"].get(transform_id)
+        # the serialized Work template carries everything the TaskSpec
+        # needs — no Work object materialization on the hot path
+        tmpl = (trow["work"] or {}).get("template") or {}
+        meta = row.get("processing_metadata") or {}
+        data_aware = bool(meta.get("data_aware"))
+        params = tmpl.get("bound_parameters") or {}
+        # fair-share identity + priority ride through the TaskSpec so the
+        # runtime's broker can order multi-tenant traffic (work-level
+        # priority wins; request priority is the fallback).  Selective
+        # columns: the workflow blob is never needed here.
+        if req is None:
+            req = self.stores["requests"].get(
+                int(row["request_id"]), columns=("requester", "priority")
             )
-            workload_id = self.orch.runtime.submit(spec)
-            # register output content ids in job order so the Receiver can
-            # mark them available as individual jobs finish
-            out_ids = self._output_content_ids(int(row["transform_id"]))
-            meta.update({"workload_id": workload_id, "output_content_ids": out_ids})
-            check_transition("processing", row["status"], ProcessingStatus.SUBMITTING)
-            processings.update(
+        priority = int(trow.get("priority") or 0) or int(req.get("priority") or 0)
+        spec = TaskSpec(
+            payload=dict(tmpl.get("payload") or {}),
+            n_jobs=int(tmpl.get("n_jobs", 1)),
+            parameters=params,
+            site=row.get("site"),
+            hold_jobs=data_aware,
+            max_job_retries=int(tmpl.get("max_retries", 3)),
+            name=tmpl.get("name", ""),
+            user=req.get("requester") or "anonymous",
+            priority=priority,
+            job_contents=meta.get("job_contents") or None,
+        )
+        # register output content ids in job order so the Receiver can
+        # mark them available as individual jobs finish (one id-only join
+        # instead of per-collection content scans).  The workload id is
+        # pre-generated and persisted BEFORE runtime.submit: the row stays
+        # claimed across the window, and instant jobs can no longer emit
+        # messages that beat their own metadata into the database.
+        workload_id = new_uid("wl_")
+        if out_ids is None:
+            out_ids = self.stores["contents"].output_ids_by_transform(transform_id)
+        meta.update({"workload_id": workload_id, "output_content_ids": out_ids})
+        check_transition("processing", row["status"], ProcessingStatus.SUBMITTING)
+        with self.db.batch():  # coalesce the state writes into one tx
+            self.stores["processings"].update(
                 processing_id,
                 status=ProcessingStatus.SUBMITTED,
                 workload_id=workload_id,
@@ -118,32 +183,31 @@ class Submitter(BaseAgent):
                 next_poll_at=self.defer(self.poll_period_s),
             )
             self.stores["transforms"].update(
-                int(row["transform_id"]), status=TransformStatus.SUBMITTED
+                transform_id, status=TransformStatus.SUBMITTED
             )
-            if data_aware:
-                # kick the Trigger once for inputs that are already available
-                avail = [
-                    c["content_id"]
-                    for c in self.stores["contents"].by_transform(
-                        int(row["transform_id"]), status=ContentStatus.AVAILABLE
-                    )
-                ]
-                held = meta.get("job_contents") or []
-                pre = [c for c in held if c in set(avail)]
-                if pre:
-                    self.orch.runtime.release_jobs_for_contents(workload_id, pre)
-            self.publish(poll_processing_event(processing_id))
-        finally:
-            processings.unlock(processing_id)
-
-    def _output_content_ids(self, transform_id: int) -> list[int]:
-        out: list[int] = []
-        for coll in self.stores["collections"].by_transform(
-            transform_id, CollectionRelation.OUTPUT
-        ):
-            rows = self.stores["contents"].by_collection(int(coll["coll_id"]))
-            out.extend(int(r["content_id"]) for r in rows)
-        return out
+        try:
+            self.orch.runtime.submit(spec, workload_id=workload_id)
+        except Exception:
+            # the runtime rejected the task: the processing can never run
+            self.stores["processings"].update(
+                processing_id, status=ProcessingStatus.FAILED
+            )
+            raise
+        if data_aware:
+            # kick the Trigger once for inputs that are already available
+            avail = {
+                int(c["content_id"])
+                for c in self.stores["contents"].by_transform(
+                    transform_id,
+                    status=ContentStatus.AVAILABLE,
+                    columns=("content_id",),
+                )
+            }
+            held = meta.get("job_contents") or []
+            pre = [c for c in held if c in avail]
+            if pre:
+                self.orch.runtime.release_jobs_for_contents(workload_id, pre)
+        self.publish(poll_processing_event(processing_id))
 
 
 class Poller(BaseAgent):
@@ -153,138 +217,316 @@ class Poller(BaseAgent):
         str(EventType.UPDATE_PROCESSING),
         str(EventType.TERMINATE_PROCESSING),
     )
+    #: a SUBMITTED/RUNNING processing whose workload stays unknown to the
+    #: runtime this long is an orphan (e.g. submit crashed mid-window, or
+    #: the in-memory runtime restarted) and fails so the work can retry
+    orphan_timeout_s = 300.0
 
-    def handle_event(self, event: Event) -> None:
-        pid = event.payload.get("processing_id")
-        if pid is not None:
-            self.process(int(pid))
+    def handle_events(self, events: Sequence[Event]) -> None:
+        pids = [
+            int(ev.payload["processing_id"])
+            for ev in events
+            if ev.payload.get("processing_id") is not None
+        ]
+        rows = self.stores["processings"].claim_by_ids(
+            pids, [ProcessingStatus.SUBMITTED, ProcessingStatus.RUNNING]
+        )
+        self._process_rows(rows)
 
     def lazy_poll(self) -> bool:
-        rows = self.stores["processings"].poll_ready(
+        rows = self.stores["processings"].claim_ready(
             [ProcessingStatus.SUBMITTED, ProcessingStatus.RUNNING],
             limit=self.batch_size,
         )
-        for row in rows:
-            self.process(int(row["processing_id"]))
-        return bool(rows)
+        return self._process_rows(rows)
 
-    def process(self, processing_id: int) -> None:
-        processings = self.stores["processings"]
+    def _process_rows(self, rows: list[dict[str, Any]]) -> bool:
+        """Two-phase sweep: per row, PLAN from runtime state (reads only,
+        errors isolated); then apply every planned write in ONE
+        transaction; then publish events — strictly after commit, so no
+        consumer ever acts on a pre-commit snapshot."""
+        if not rows:
+            return False
         try:
-            row = processings.get(processing_id)
-        except NotFoundError:
-            return
+            plans = [p for row in rows if (p := self._guarded(self._plan_row, row))]
+            if plans:
+                with self.db.batch():
+                    for writes, _ in plans:
+                        for write in writes:
+                            write()
+                events = [ev for _, evs in plans for ev in evs]
+                if events:
+                    self.publish(*events)
+        finally:
+            self.stores["processings"].unlock_many(
+                [int(r["processing_id"]) for r in rows]
+            )
+        return True
+
+    def _plan_row(
+        self, row: dict[str, Any]
+    ) -> tuple[list[Any], list[Event]] | None:
+        """Phase 1: inspect runtime state and decide — returns (writes,
+        events) where writes are zero-argument store calls to run inside
+        the batch transaction.  No database writes happen here."""
         if row["status"] not in (
             str(ProcessingStatus.SUBMITTED),
             str(ProcessingStatus.RUNNING),
         ):
-            return
-        if not processings.claim(processing_id):
-            return
+            return None
+        processing_id = int(row["processing_id"])
+        processings = self.stores["processings"]
+        meta = row.get("processing_metadata") or {}
+        workload_id = meta.get("workload_id") or row.get("workload_id")
+        if not workload_id:
+            return None
         try:
-            meta = row.get("processing_metadata") or {}
-            workload_id = meta.get("workload_id") or row.get("workload_id")
-            if not workload_id:
-                return
             st = self.orch.runtime.status(workload_id)
-            runtime_status = st["status"]
-            if runtime_status in _TERMINAL_RUNTIME:
-                results = self.orch.runtime.results(workload_id)
-                meta["results"] = results
-                meta["job_states"] = [j["state"] for j in st["jobs"]]
-                new_status = _RUNTIME_TO_PROCESSING[runtime_status]
-                check_transition("processing", row["status"], new_status)
-                processings.update(
+        except SchedulingError:
+            # persisted but not (or no longer) known to the runtime.
+            # Usually transient — the Submitter's claimed persist→submit
+            # window — so re-check shortly; but past the orphan deadline
+            # (crash inside that window, or a runtime restart that forgot
+            # every workload) fail the processing so the retry machinery
+            # can resubmit the work.
+            ref = float(row.get("submitted_at") or row.get("updated_at") or 0.0)
+            if ref and utc_now_ts() - ref > self.orphan_timeout_s:
+                check_transition(
+                    "processing", row["status"], ProcessingStatus.FAILED
+                )
+                return (
+                    [
+                        lambda: processings.update(
+                            processing_id,
+                            status=ProcessingStatus.FAILED,
+                            errors={"orphan": "workload unknown to runtime"},
+                        )
+                    ],
+                    [
+                        update_transform_event(
+                            int(row["transform_id"]), priority=20
+                        )
+                    ],
+                )
+            return (
+                [
+                    lambda: processings.update(
+                        processing_id,
+                        next_poll_at=self.defer(self.poll_period_s),
+                    )
+                ],
+                [],
+            )
+        runtime_status = st["status"]
+        writes: list[Any] = []
+        events: list[Event] = []
+        if runtime_status in _TERMINAL_RUNTIME:
+            results = self.orch.runtime.results(workload_id)
+            meta["results"] = results
+            meta["job_states"] = [j["state"] for j in st["jobs"]]
+            new_status = _RUNTIME_TO_PROCESSING[runtime_status]
+            check_transition("processing", row["status"], new_status)
+            writes.append(
+                lambda: processings.update(
                     processing_id,
                     status=new_status,
                     processing_metadata=meta,
                     finished_at=self.defer(0),
                 )
-                self._mark_outputs(meta, st)
-                self.publish(
-                    update_transform_event(int(row["transform_id"]), priority=20)
+            )
+            finished, failed = self._map_outputs(meta, st)
+            contents = self.stores["contents"]
+            if finished:
+                writes.append(
+                    lambda: contents.set_status(finished, ContentStatus.AVAILABLE)
                 )
-            else:
-                new_status = _RUNTIME_TO_PROCESSING.get(
-                    runtime_status, ProcessingStatus.RUNNING
+                events.append(data_available_event(0, finished))
+            if failed:
+                writes.append(
+                    lambda: contents.set_status(failed, ContentStatus.FAILED)
                 )
-                if str(new_status) != row["status"]:
-                    check_transition("processing", row["status"], new_status)
-                    processings.update(processing_id, status=new_status)
-                processings.update(
-                    processing_id, next_poll_at=self.defer(self.poll_period_s * 2)
+            events.append(
+                update_transform_event(int(row["transform_id"]), priority=20)
+            )
+        else:
+            new_status = _RUNTIME_TO_PROCESSING.get(
+                runtime_status, ProcessingStatus.RUNNING
+            )
+            if str(new_status) != row["status"]:
+                check_transition("processing", row["status"], new_status)
+                writes.append(
+                    lambda: processings.update(processing_id, status=new_status)
                 )
-                self.publish(poll_processing_event(processing_id))
-        finally:
-            processings.unlock(processing_id)
+            writes.append(
+                lambda: processings.update(
+                    processing_id,
+                    next_poll_at=self.defer(self.poll_period_s * 2),
+                )
+            )
+            events.append(poll_processing_event(processing_id))
+        return writes, events
 
-    def _mark_outputs(self, meta: dict[str, Any], st: dict[str, Any]) -> None:
-        """Mark per-job output contents Available/Failed and cascade."""
+    def _map_outputs(
+        self, meta: dict[str, Any], st: dict[str, Any]
+    ) -> tuple[list[int], list[int]]:
+        """Map per-job output contents to (finished, failed) id lists —
+        strictly 1:1 by job index."""
         out_ids = meta.get("output_content_ids") or []
         if not out_ids:
-            return
+            return [], []
+        jobs = {j["index"]: j["state"] for j in st["jobs"]}
+        if len(out_ids) > len(jobs):
+            # 1:1 job↔output mapping only; never wrap around the job list
+            logger.warning(
+                "workload %s: %d output contents but only %d jobs; "
+                "the excess contents are skipped",
+                st.get("workload_id"),
+                len(out_ids),
+                len(jobs),
+            )
         finished: list[int] = []
         failed: list[int] = []
-        jobs = {j["index"]: j["state"] for j in st["jobs"]}
-        n_jobs = max(len(jobs), 1)
         for i, cid in enumerate(out_ids):
-            state = jobs.get(i % n_jobs)
+            state = jobs.get(i)
             if state == "Finished":
                 finished.append(cid)
             elif state in ("Failed", "Cancelled"):
                 failed.append(cid)
-        contents = self.stores["contents"]
-        if finished:
-            contents.set_status(finished, ContentStatus.AVAILABLE)
-            self.publish(data_available_event(0, finished))
-        if failed:
-            contents.set_status(failed, ContentStatus.FAILED)
+        return finished, failed
 
 
 class Receiver(BaseAgent):
     """Consumes the workload runtime's async message stream (the PanDA →
     iDDS callback channel) and turns it into bus events — the event-driven
-    fast path; the Poller remains the lazy fallback."""
+    fast path; the Poller remains the lazy fallback.
+
+    The queue is drained in ONE sweep per cycle: ``job_finished`` messages
+    are grouped by workload, output content ids are cached per processing
+    (evicted on ``task_terminal``), and the whole sweep produces a single
+    contents ``set_status`` plus one merged ``data_available`` event."""
 
     name = "carrier-receiver"
     event_types = ()
+    #: drains the runtime's in-memory queue, not the database — the
+    #: write-generation gate must never skip it
+    db_gated_poll = False
+
+    #: sweeps an unresolvable job_finished message survives before the
+    #: Poller's terminal fallback is trusted to cover it
+    max_requeues = 50
 
     def __init__(self, *a: Any, **kw: Any):
         super().__init__(*a, **kw)
         self._wl_to_processing: dict[str, int] = {}
+        self._out_ids: dict[int, list[int]] = {}
+        self._pending: list[dict[str, Any]] = []
 
     def lazy_poll(self) -> bool:
-        drained = 0
+        q = self.orch.runtime.messages
+        msgs: list[dict[str, Any]] = []
         while True:
             try:
-                msg = self.orch.runtime.messages.get_nowait()
+                msgs.append(q.get_nowait())
             except queue.Empty:
                 break
-            drained += 1
-            self._handle_runtime_message(msg)
-        return drained > 0
+        carried, self._pending = self._pending, []
+        if not msgs and not carried:
+            return False
+        handled = self._handle_sweep(carried + msgs)
+        # carried-only sweeps that resolved nothing are not "work" — report
+        # idle so the agent sleeps instead of busy-retrying the metadata
+        return bool(msgs) or handled
 
-    def _processing_for(self, workload_id: str) -> int | None:
-        if workload_id in self._wl_to_processing:
-            return self._wl_to_processing[workload_id]
-        row = self.stores["processings"].db.query_one(
-            "SELECT processing_id FROM processings WHERE workload_id=?",
-            (workload_id,),
-        )
-        if row is None:
-            return None
-        pid = int(row["processing_id"])
-        self._wl_to_processing[workload_id] = pid
-        return pid
-
-    def _handle_runtime_message(self, msg: dict[str, Any]) -> None:
-        kind = msg.get("kind")
-        workload_id = msg.get("workload_id", "")
-        pid = self._processing_for(workload_id)
-        if pid is None:
-            return
-        if kind == "task_terminal":
-            self.publish(
+    def _handle_sweep(self, msgs: Sequence[dict[str, Any]]) -> bool:
+        # resolve every unknown workload in the sweep with ONE query…
+        unknown = {
+            wl
+            for m in msgs
+            if (wl := m.get("workload_id", "")) and wl not in self._wl_to_processing
+        }
+        if unknown:
+            self._wl_to_processing.update(
+                self.stores["processings"].ids_for_workloads(list(unknown))
+            )
+        # …and group job_finished by workload/processing so each
+        # processing's output_content_ids resolve once per sweep, not once
+        # per message
+        job_finished: dict[int, list[dict[str, Any]]] = {}
+        terminal_pids: list[int] = []
+        failed_pids: list[int] = []
+        for msg in msgs:
+            kind = msg.get("kind")
+            workload_id = msg.get("workload_id", "")
+            pid = self._wl_to_processing.get(workload_id)
+            if pid is None:
+                continue
+            if kind == "job_finished":
+                job_finished.setdefault(pid, []).append(msg)
+            elif kind == "task_terminal":
+                terminal_pids.append(pid)
+                # evict per-workload caches — without this both maps grow
+                # without bound over the server's lifetime
+                self._wl_to_processing.pop(workload_id, None)
+                self._out_ids.pop(pid, None)
+            elif kind == "job_failed":
+                failed_pids.append(pid)
+        # one grouped metadata fetch for every uncached processing;
+        # "output_content_ids absent" means the Submitter hasn't persisted
+        # yet (leave uncached → messages requeue), while an empty list is
+        # a real answer (work with no outputs) and is cached too
+        missing = [pid for pid in job_finished if pid not in self._out_ids]
+        if missing:
+            metas = self.stores["processings"].metadata_many(missing)
+            for pid, meta in metas.items():
+                if "output_content_ids" in meta:
+                    self._out_ids[pid] = [
+                        int(c) for c in meta.get("output_content_ids") or []
+                    ]
+        finished: list[tuple[int, str | None]] = []  # (content_id, site)
+        for pid, pid_msgs in job_finished.items():
+            out_ids = self._out_ids.get(pid)
+            if out_ids is None:
+                # the Submitter hasn't persisted output_content_ids yet —
+                # carry the messages to the next sweep (bounded; the
+                # Poller's terminal fallback covers pathological cases)
+                for msg in pid_msgs:
+                    n = int(msg.get("_requeues", 0))
+                    if n < self.max_requeues:
+                        msg["_requeues"] = n + 1
+                        self._pending.append(msg)
+                    else:
+                        logger.warning(
+                            "%s: dropping job_finished for processing %d "
+                            "(workload %s) after %d sweeps without "
+                            "output_content_ids; the Poller's terminal "
+                            "fallback will finalize it",
+                            self.consumer_id,
+                            pid,
+                            msg.get("workload_id"),
+                            n,
+                        )
+                continue
+            if not out_ids:
+                continue  # work produces no per-job outputs
+            for msg in pid_msgs:
+                # fine-grained: flag the job's output content available NOW
+                # so downstream jobs release without waiting for the task
+                ji = int(msg.get("job_index", -1))
+                if 0 <= ji < len(out_ids):
+                    finished.append((out_ids[ji], msg.get("site")))
+        events: list[Event] = []
+        if finished:
+            catalog = self.orch.runtime.broker.catalog
+            for cid, site in finished:
+                if site:
+                    # the output materialized where the job ran — register
+                    # the replica so downstream placement is data-aware
+                    catalog.register(cid, site)
+            avail = [cid for cid, _ in finished]
+            self.stores["contents"].set_status(avail, ContentStatus.AVAILABLE)
+            events.append(data_available_event(0, avail))
+        for pid in dict.fromkeys(terminal_pids):
+            events.append(
                 Event(
                     type=str(EventType.UPDATE_PROCESSING),
                     payload={"processing_id": pid},
@@ -292,30 +534,22 @@ class Receiver(BaseAgent):
                     merge_key=f"pr:update:{pid}",
                 )
             )
-        elif kind == "job_finished":
-            # fine-grained: flag the job's output content available NOW so
-            # downstream jobs release without waiting for task completion
-            row = self.stores["processings"].get(pid)
-            meta = row.get("processing_metadata") or {}
-            out_ids = meta.get("output_content_ids") or []
-            ji = int(msg.get("job_index", -1))
-            if 0 <= ji < len(out_ids):
-                site = msg.get("site")
-                if site:
-                    # the output materialized where the job ran — register the
-                    # replica so downstream placement is data-aware
-                    self.orch.runtime.broker.catalog.register(out_ids[ji], site)
-                self.stores["contents"].set_status(
-                    [out_ids[ji]], ContentStatus.AVAILABLE
-                )
-                self.publish(data_available_event(0, [out_ids[ji]], site=site))
-        elif kind == "job_failed":
-            self.publish(poll_processing_event(pid, priority=15))
+        for pid in dict.fromkeys(failed_pids):
+            events.append(poll_processing_event(pid, priority=15))
+        # the grouped metadata fetch above may have re-cached a pid whose
+        # task_terminal arrived in this same sweep — re-evict so the maps
+        # stay bounded
+        for pid in terminal_pids:
+            self._out_ids.pop(pid, None)
+        if events:
+            self.publish(*events)
+        return bool(events)
 
 
 class Trigger(BaseAgent):
     """Evaluates dependency graphs and triggers downstream work (job-level
-    DAG engine, §3.1.1): released contents → released runtime jobs."""
+    DAG engine, §3.1.1): released contents → released runtime jobs.  A
+    consumed event batch is merged into ONE release sweep."""
 
     name = "carrier-trigger"
     event_types = (
@@ -323,18 +557,22 @@ class Trigger(BaseAgent):
         str(EventType.TRIGGER_RELEASE),
     )
 
-    def handle_event(self, event: Event) -> None:
-        content_ids = [int(c) for c in event.payload.get("content_ids") or []]
-        if not content_ids:
-            return
-        site = event.payload.get("site")
-        if site:
-            # staged/produced files become replicas at their landing site so
-            # staging *drives* placement (data-aware Carousel)
-            catalog = self.orch.runtime.broker.catalog
-            for cid in content_ids:
-                catalog.register(cid, site)
-        self.release(content_ids)
+    def handle_events(self, events: Sequence[Event]) -> None:
+        content_ids: list[int] = []
+        catalog = self.orch.runtime.broker.catalog
+        for ev in events:
+            cids = [int(c) for c in ev.payload.get("content_ids") or []]
+            if not cids:
+                continue
+            site = ev.payload.get("site")
+            if site:
+                # staged/produced files become replicas at their landing
+                # site so staging *drives* placement (data-aware Carousel)
+                for cid in cids:
+                    catalog.register(cid, site)
+            content_ids.extend(cids)
+        if content_ids:
+            self.release(list(dict.fromkeys(content_ids)))
 
     def lazy_poll(self) -> bool:
         # fallback: activate any NEW contents whose deps are all available
@@ -357,62 +595,133 @@ class Trigger(BaseAgent):
         activated = contents.release_dependents(available_ids)
         if not activated:
             return
-        # group activated contents by transform and release the held jobs
+        # group activated contents by transform with one id-only query
+        # (was a contents.get per activated row), then flip them all
+        # Available in one statement
+        tmap = contents.transform_ids(activated)
         by_transform: dict[int, list[int]] = {}
         for cid in activated:
-            row = contents.get(cid)
-            by_transform.setdefault(int(row["transform_id"]), []).append(cid)
+            tid = tmap.get(cid)
+            if tid is not None:
+                by_transform.setdefault(tid, []).append(cid)
+        contents.set_status(activated, ContentStatus.AVAILABLE)
+        wl_map = self.stores["processings"].workload_map(list(by_transform))
         for tid, ids in by_transform.items():
-            contents.set_status(ids, ContentStatus.AVAILABLE)
-            for prow in self.stores["processings"].by_transform(tid):
-                meta = prow.get("processing_metadata") or {}
-                wl = meta.get("workload_id")
-                if wl:
-                    try:
-                        self.orch.runtime.release_jobs_for_contents(wl, ids)
-                    except Exception:  # noqa: BLE001 - workload may be gone
-                        pass
-            self.publish(update_transform_event(tid))
+            for wl in wl_map.get(tid, ()):
+                try:
+                    self.orch.runtime.release_jobs_for_contents(wl, ids)
+                except Exception:  # noqa: BLE001 - workload may be gone
+                    pass
+        events = [update_transform_event(tid) for tid in by_transform]
         # cascade: newly available contents may unlock further layers
-        self.publish(data_available_event(0, [c for v in by_transform.values() for c in v]))
+        events.append(data_available_event(0, activated))
+        self.publish(*events)
 
 
 class Finisher(BaseAgent):
     name = "carrier-finisher"
     event_types = (str(EventType.UPDATE_TRANSFORM),)
 
-    def handle_event(self, event: Event) -> None:
-        tid = event.payload.get("transform_id")
-        if tid is not None:
-            self.process(int(tid))
+    def handle_events(self, events: Sequence[Event]) -> None:
+        tids = [
+            int(ev.payload["transform_id"])
+            for ev in events
+            if ev.payload.get("transform_id") is not None
+        ]
+        rows = self.stores["transforms"].claim_by_ids(
+            tids, [TransformStatus.SUBMITTED, TransformStatus.RUNNING]
+        )
+        self._process_rows(rows)
 
     def lazy_poll(self) -> bool:
-        rows = self.stores["transforms"].poll_ready(
+        rows = self.stores["transforms"].claim_ready(
             [TransformStatus.SUBMITTED, TransformStatus.RUNNING],
             limit=self.batch_size,
         )
-        did = False
-        for row in rows:
-            did = self.process(int(row["transform_id"])) or did
-        return did
+        return self._process_rows(rows)
 
-    def process(self, transform_id: int) -> bool:
-        transforms = self.stores["transforms"]
-        try:
-            trow = transforms.get(transform_id)
-        except NotFoundError:
+    def _process_rows(self, rows: list[dict[str, Any]]) -> bool:
+        """Two-phase sweep (see Poller._process_rows): plan per row with
+        reads only, apply every write in one transaction, publish after
+        commit.  Non-terminal rows collapse into two ``update_many``
+        next-poll pushes."""
+        if not rows:
             return False
+        # grouped prefetch: processings for the whole batch, collections
+        # only for the transforms whose latest processing is terminal (the
+        # only rows that ever look at them)
+        tids = [int(r["transform_id"]) for r in rows]
+        prefetched = self.stores["processings"].by_transforms(tids)
+        term_set = {
+            tid
+            for tid in tids
+            if prefetched.get(tid)
+            and prefetched[tid][-1]["status"] in _TERMINAL_PSTATES
+        }
+        coll_map = self.stores["collections"].by_transforms(list(term_set))
+        transforms = self.stores["transforms"]
+        plans: list[tuple[list[Any], list[Event]]] = []
+        defer_short: list[int] = []
+        defer_long: list[int] = []
+        try:
+            for row in rows:
+                tid = int(row["transform_id"])
+                plan = self._guarded(
+                    self._plan_row,
+                    row,
+                    prows=prefetched.get(tid),
+                    # terminal transforms with zero collections get [] so
+                    # _plan_row doesn't re-query per row
+                    colls=coll_map.get(tid, [] if tid in term_set else None),
+                )
+                if plan == "defer_short":
+                    defer_short.append(tid)
+                elif plan == "defer_long":
+                    defer_long.append(tid)
+                elif plan is not None:
+                    plans.append(plan)
+            if plans or defer_short or defer_long:
+                with self.db.batch():
+                    for writes, _ in plans:
+                        for write in writes:
+                            write()
+                    if defer_short:
+                        transforms.update_many(
+                            defer_short,
+                            next_poll_at=self.defer(self.poll_period_s * 2),
+                        )
+                    if defer_long:
+                        transforms.update_many(
+                            defer_long,
+                            next_poll_at=self.defer(self.poll_period_s * 4),
+                        )
+                events = [ev for _, evs in plans for ev in evs]
+                if events:
+                    self.publish(*events)
+        finally:
+            transforms.unlock_many([int(r["transform_id"]) for r in rows])
+        return bool(plans)
+
+    def _plan_row(
+        self,
+        trow: dict[str, Any],
+        *,
+        prows: list[dict[str, Any]] | None = None,
+        colls: list[dict[str, Any]] | None = None,
+    ):
+        """Phase 1: decide what (if anything) finalizes.  Returns
+        ``None`` (not finishable), ``"defer_short"``/``"defer_long"``
+        (push next_poll_at), or ``(writes, events)``."""
+        transform_id = int(trow["transform_id"])
         if trow["status"] not in (
             str(TransformStatus.SUBMITTED),
             str(TransformStatus.RUNNING),
         ):
-            return False
-        prows = self.stores["processings"].by_transform(transform_id)
+            return None
+        if prows is None:
+            prows = self.stores["processings"].by_transform(transform_id)
         if not prows:
-            transforms.update(
-                transform_id, next_poll_at=self.defer(self.poll_period_s * 4)
-            )
-            return False
+            return "defer_long"
         latest = prows[-1]
         pstat = latest["status"]
         terminal_map = {
@@ -423,48 +732,47 @@ class Finisher(BaseAgent):
             str(ProcessingStatus.CANCELLED): TransformStatus.CANCELLED,
         }
         if pstat not in terminal_map:
-            transforms.update(
-                transform_id, next_poll_at=self.defer(self.poll_period_s * 2)
-            )
-            return False
-        if not transforms.claim(transform_id):
-            return False
-        try:
-            work = Work.from_dict(trow["work"])
-            meta = latest.get("processing_metadata") or {}
-            results = self._fold_results(work, meta.get("results") or [])
-            new_status = terminal_map[pstat]
-            check_transition("transform", trow["status"], new_status)
-            # refresh collection counters
-            for coll in self.stores["collections"].by_transform(transform_id):
-                self.stores["collections"].refresh_counters(int(coll["coll_id"]))
-            tmeta = trow.get("transform_metadata") or {}
-            tmeta["results"] = results
+            return "defer_short"
+        tmpl = (trow["work"] or {}).get("template") or {}
+        meta = latest.get("processing_metadata") or {}
+        results = self._fold_results(tmpl, meta.get("results") or [])
+        new_status = terminal_map[pstat]
+        check_transition("transform", trow["status"], new_status)
+        tmeta = trow.get("transform_metadata") or {}
+        tmeta["results"] = results
+        if colls is None:
+            colls = self.stores["collections"].by_transform(transform_id)
+        coll_ids = [int(c["coll_id"]) for c in colls]
+        collections = self.stores["collections"]
+        transforms = self.stores["transforms"]
+        messages = self.stores["messages"]
+        request_id = int(trow["request_id"])
+
+        def _apply() -> None:
+            for cid in coll_ids:  # refresh collection counters
+                collections.refresh_counters(cid)
             transforms.update(
                 transform_id, status=new_status, transform_metadata=tmeta
             )
-            self.stores["messages"].add(
+            messages.add(
                 "work_finished",
                 MessageDestination.OUTSIDE,
                 {
                     "transform_id": transform_id,
-                    "request_id": int(trow["request_id"]),
+                    "request_id": request_id,
                     "node_id": trow["node_id"],
                     "status": str(new_status),
                     "results": results,
                 },
-                request_id=int(trow["request_id"]),
+                request_id=request_id,
                 transform_id=transform_id,
             )
-            self.publish(
-                update_request_event(int(trow["request_id"]), priority=20)
-            )
-            return True
-        finally:
-            transforms.unlock(transform_id)
 
-    def _fold_results(self, work: Work, results: list[Any]) -> dict[str, Any]:
-        """Fold job results into the Work's result dict.
+        return [_apply], [update_request_event(request_id, priority=20)]
+
+    def _fold_results(self, tmpl: dict[str, Any], results: list[Any]) -> dict[str, Any]:
+        """Fold job results into the Work's result dict (straight off the
+        serialized template — no Work object materialization).
 
         * function payloads: single job → {"return": blob}; map-mode →
           {"job_returns": [...]}.
@@ -472,13 +780,15 @@ class Finisher(BaseAgent):
           Conditions can reference ``Ref("<work>.outputs.<key>")``.
         """
         folded: dict[str, Any] = {}
-        if work.payload.get("kind") == "function":
-            if work.n_jobs == 1:
+        payload = tmpl.get("payload") or {}
+        n_jobs = int(tmpl.get("n_jobs", 1))
+        if payload.get("kind") == "function":
+            if n_jobs == 1:
                 folded["return"] = results[0] if results else None
             else:
                 folded["job_returns"] = results
             return folded
-        if work.n_jobs == 1 and results and isinstance(results[0], dict):
+        if n_jobs == 1 and results and isinstance(results[0], dict):
             folded.update(results[0])
         elif results:
             folded["job_results"] = results
@@ -486,10 +796,18 @@ class Finisher(BaseAgent):
 
 
 class Conductor(BaseAgent):
-    """Sends execution status updates to external systems (outbox drain)."""
+    """Sends execution status updates to external systems (outbox drain).
+
+    Delivery is bounded: a message failing ``max_delivery_retries``
+    consecutive drains is marked Failed and dropped from the outbox, so one
+    persistently broken subscriber cannot wedge delivery forever."""
 
     name = "carrier-conductor"
     event_types = (str(EventType.MSG_OUTBOX),)
+
+    def __init__(self, *a: Any, max_delivery_retries: int = 5, **kw: Any):
+        super().__init__(*a, **kw)
+        self.max_delivery_retries = max_delivery_retries
 
     def handle_event(self, event: Event) -> None:
         self.lazy_poll()
@@ -501,6 +819,7 @@ class Conductor(BaseAgent):
         if not msgs:
             return False
         delivered: list[int] = []
+        failed: list[int] = []
         for msg in msgs:
             ok = True
             for cb in self.orch.message_subscribers:
@@ -508,8 +827,19 @@ class Conductor(BaseAgent):
                     cb(msg)
                 except Exception:  # noqa: BLE001 - subscriber errors logged only
                     ok = False
-            if ok:
-                delivered.append(int(msg["msg_id"]))
+            (delivered if ok else failed).append(int(msg["msg_id"]))
         if delivered:
             self.stores["messages"].mark_delivered(delivered)
+        if failed:
+            dropped = self.stores["messages"].bump_retries(
+                failed, max_retries=self.max_delivery_retries
+            )
+            if dropped:
+                logger.warning(
+                    "%s: %d outbox message(s) exceeded %d delivery retries; "
+                    "marked Failed",
+                    self.consumer_id,
+                    dropped,
+                    self.max_delivery_retries,
+                )
         return True

@@ -51,26 +51,97 @@ class Clerk(BaseAgent):
         str(EventType.ABORT_REQUEST),
     )
 
-    def handle_event(self, event: Event) -> None:
-        request_id = event.payload.get("request_id")
-        if request_id is None:
+    #: deserialized-Workflow cache entries kept (LRU-ish eviction)
+    wf_cache_size = 256
+
+    def __init__(self, *a: Any, **kw: Any):
+        super().__init__(*a, **kw)
+        # request_id → (rev, Workflow): claims are exclusive and every
+        # persist bumps ``_rev`` inside the blob, so when the stored rev
+        # matches we can skip rebuilding the Workflow object graph
+        # (Work/Condition/Parameter materialization — the dominant CPU
+        # cost for large requests; the raw json decode still happens in
+        # the row read).  LRU: hits are moved to the end.
+        self._wf_cache: dict[int, tuple[int, Workflow]] = {}
+
+    def _load_workflow(self, request_id: int, blob: Any) -> tuple[Workflow, int]:
+        rev = 0
+        if isinstance(blob, dict):
+            rev = int(blob.get("_rev") or 0)
+        hit = self._wf_cache.get(request_id)
+        if hit is not None and rev and hit[0] == rev:
+            # refresh recency so long-running requests survive eviction
+            self._wf_cache.pop(request_id)
+            self._wf_cache[request_id] = hit
+            return hit[1], rev
+        return Workflow.from_dict(blob), rev
+
+    def _persist_blob(self, request_id: int, wf: Workflow, rev: int) -> dict[str, Any]:
+        blob = wf.to_dict()
+        blob["_rev"] = rev + 1
+        self._wf_cache.pop(request_id, None)  # re-insert at the LRU tail
+        self._wf_cache[request_id] = (rev + 1, wf)
+        while len(self._wf_cache) > self.wf_cache_size:
+            self._wf_cache.pop(next(iter(self._wf_cache)))
+        return blob
+
+    def handle_events(self, events) -> None:
+        aborts: list[int] = []
+        updates: list[int] = []
+        for ev in events:
+            rid = ev.payload.get("request_id")
+            if rid is None:
+                continue
+            if ev.type == str(EventType.ABORT_REQUEST):
+                aborts.append(int(rid))
+            else:
+                updates.append(int(rid))
+        for rid in dict.fromkeys(aborts):
+            self._guarded(self.process_request, rid, abort=True)
+        updates = [r for r in dict.fromkeys(updates) if r not in aborts]
+        # same skip-set as process_request: anything not fully terminal may
+        # still progress (FAILED/SUBFINISHED can retry into TRANSFORMING)
+        rows = self.stores["requests"].claim_by_ids(
+            updates,
+            [
+                RequestStatus.NEW,
+                RequestStatus.READY,
+                RequestStatus.TRANSFORMING,
+                RequestStatus.FAILED,
+                RequestStatus.SUBFINISHED,
+                RequestStatus.SUSPENDED,
+                RequestStatus.CANCELLING,
+            ],
+        )
+        if not rows:
             return
-        abort = event.type == str(EventType.ABORT_REQUEST)
-        self.process_request(int(request_id), abort=abort)
+        try:
+            for row in rows:
+                self._guarded(self._process_claimed, row)
+        finally:
+            self.stores["requests"].unlock_many(
+                [int(r["request_id"]) for r in rows]
+            )
 
     def lazy_poll(self) -> bool:
-        rows = self.stores["requests"].poll_ready(
+        rows = self.stores["requests"].claim_ready(
             [RequestStatus.NEW, RequestStatus.READY, RequestStatus.TRANSFORMING],
             limit=self.batch_size,
         )
-        for row in rows:
-            self.process_request(int(row["request_id"]))
-        return bool(rows)
+        if not rows:
+            return False
+        try:
+            for row in rows:
+                self._guarded(self._process_claimed, row)
+        finally:
+            self.stores["requests"].unlock_many(
+                [int(r["request_id"]) for r in rows]
+            )
+        return True
 
     # -- core logic -----------------------------------------------------------
     def process_request(self, request_id: int, *, abort: bool = False) -> None:
         requests = self.stores["requests"]
-        transforms = self.stores["transforms"]
         try:
             row = requests.get(request_id)
         except NotFoundError:
@@ -84,29 +155,50 @@ class Clerk(BaseAgent):
         if not requests.claim(request_id):
             return
         try:
-            wf = Workflow.from_dict(row["workflow"])
-            if abort:
-                self._abort(request_id, wf)
-                return
+            self._process_claimed(row, abort=abort)
+        finally:
+            requests.unlock(request_id)
+
+    def _process_claimed(self, row: dict[str, Any], *, abort: bool = False) -> None:
+        request_id = int(row["request_id"])
+        if row["status"] in (
+            str(RequestStatus.FINISHED),
+            str(RequestStatus.CANCELLED),
+            str(RequestStatus.EXPIRED),
+        ):
+            return
+        wf, rev = self._load_workflow(request_id, row["workflow"])
+        if abort:
+            self._wf_cache.pop(request_id, None)
+            self._abort(request_id, wf)
+            return
+        try:
             progressed = self._sync_from_transforms(request_id, wf)
             wf.expand_loops()
             self._apply_expansions(wf)
-            created = self._launch_ready(request_id, wf)
-            self._retry_failed(request_id, wf)
-            # persist evolved metadata
-            new_status = self._request_status(wf, row["status"])
-            check_transition("request", row["status"], new_status)
-            requests.update(
-                request_id,
-                workflow=wf.to_dict(),
-                status=new_status,
-                next_poll_at=self.defer(self.poll_period_s * 4),
-            )
-            if created or progressed:
-                # more scheduling may be unlocked right away
-                self.publish(update_request_event(request_id))
-        finally:
-            requests.unlock(request_id)
+            with self.db.batch():  # transform inserts + request update: one tx
+                created, events = self._launch_ready(request_id, wf)
+                self._retry_failed(request_id, wf)
+                # persist evolved metadata
+                new_status = self._request_status(wf, row["status"])
+                check_transition("request", row["status"], new_status)
+                self.stores["requests"].update(
+                    request_id,
+                    workflow=self._persist_blob(request_id, wf, rev),
+                    status=new_status,
+                    next_poll_at=self.defer(self.poll_period_s * 4),
+                )
+        except BaseException:
+            # the (possibly cached) Workflow object was mutated but the
+            # transaction rolled back — drop it so the next cycle rebuilds
+            # from the last persisted blob instead of a corrupt object
+            self._wf_cache.pop(request_id, None)
+            raise
+        if created or progressed:
+            # more scheduling may be unlocked right away
+            events.append(update_request_event(request_id))
+        if events:
+            self.publish(*events)
 
     def _sync_from_transforms(self, request_id: int, wf: Workflow) -> bool:
         """Mirror transform rows back into Work metadata."""
@@ -143,9 +235,12 @@ class Clerk(BaseAgent):
             wf.expand(new_works, [tuple(e) for e in exp.get("deps", [])])
             work.results["_expansion_applied"] = True
 
-    def _launch_ready(self, request_id: int, wf: Workflow) -> int:
+    def _launch_ready(self, request_id: int, wf: Workflow) -> tuple[int, list[Any]]:
+        """Create transforms for ready works; returns (#created, events to
+        publish once the enclosing transaction commits)."""
         transforms = self.stores["transforms"]
         created = 0
+        events: list[Any] = []
         ctx = wf.context()
         for work in wf.ready_works():
             if work.transform_id is not None:
@@ -167,8 +262,8 @@ class Clerk(BaseAgent):
             work.transform_id = tid
             work.status = WorkStatus.RUNNING
             created += 1
-            self.publish(new_transform_event(tid))
-        return created
+            events.append(new_transform_event(tid))
+        return created, events
 
     def _retry_failed(self, request_id: int, wf: Workflow) -> None:
         transforms = self.stores["transforms"]

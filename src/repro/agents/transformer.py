@@ -22,50 +22,67 @@ from repro.common.constants import (
     ProcessingStatus,
     TransformStatus,
 )
-from repro.common.exceptions import NotFoundError
 from repro.core.statemachine import check_transition
-from repro.core.work import Work
 from repro.agents.base import BaseAgent
-from repro.eventbus.events import Event, submit_processing_event
+from repro.eventbus.events import submit_processing_event
 
 
 class Transformer(BaseAgent):
     name = "transformer"
     event_types = (str(EventType.NEW_TRANSFORM),)
 
-    def handle_event(self, event: Event) -> None:
-        tid = event.payload.get("transform_id")
-        if tid is not None:
-            self.process_transform(int(tid))
+    def handle_events(self, events) -> None:
+        tids = [
+            int(ev.payload["transform_id"])
+            for ev in events
+            if ev.payload.get("transform_id") is not None
+        ]
+        rows = self.stores["transforms"].claim_by_ids(
+            tids, [TransformStatus.NEW, TransformStatus.READY]
+        )
+        if not rows:
+            return
+        try:
+            for row in rows:
+                self._guarded(self._process_claimed, row)
+        finally:
+            self.stores["transforms"].unlock_many(
+                [int(r["transform_id"]) for r in rows]
+            )
 
     def lazy_poll(self) -> bool:
-        rows = self.stores["transforms"].poll_ready(
+        rows = self.stores["transforms"].claim_ready(
             [TransformStatus.NEW, TransformStatus.READY],
             limit=self.batch_size,
         )
-        for row in rows:
-            self.process_transform(int(row["transform_id"]))
-        return bool(rows)
+        if not rows:
+            return False
+        try:
+            for row in rows:
+                self._guarded(self._process_claimed, row)
+        finally:
+            self.stores["transforms"].unlock_many(
+                [int(r["transform_id"]) for r in rows]
+            )
+        return True
 
     # -- core logic -----------------------------------------------------------
-    def process_transform(self, transform_id: int) -> None:
-        transforms = self.stores["transforms"]
-        try:
-            row = transforms.get(transform_id)
-        except NotFoundError:
-            return
+    def _process_claimed(self, row: dict[str, Any]) -> None:
         if row["status"] not in (str(TransformStatus.NEW), str(TransformStatus.READY)):
             return
-        if not transforms.claim(transform_id):
-            return
-        try:
-            work = Work.from_dict(row["work"])
-            request_id = int(row["request_id"])
-            data_aware = bool(work.resources.get("data_aware"))
+        transform_id = int(row["transform_id"])
+        # the serialized template has everything this agent needs — no
+        # Work object materialization on the hot path
+        tmpl = (row["work"] or {}).get("template") or {}
+        request_id = int(row["request_id"])
+        resources = tmpl.get("resources") or {}
+        data_aware = bool(resources.get("data_aware"))
+        site = self._broker_site(tmpl.get("site"), resources)
+        check_transition("transform", row["status"], TransformStatus.SUBMITTING)
+        with self.db.batch():  # collections+contents+processing+status: one tx
             input_ids, job_contents = self._register_collections(
-                request_id, transform_id, work, data_aware
+                request_id, transform_id, tmpl, data_aware
             )
-            site = self._broker_site(work)
             processing_id = self.stores["processings"].add(
                 transform_id,
                 request_id,
@@ -76,22 +93,19 @@ class Transformer(BaseAgent):
                     "data_aware": data_aware,
                 },
             )
-            check_transition("transform", row["status"], TransformStatus.SUBMITTING)
-            transforms.update(
+            self.stores["transforms"].update(
                 transform_id,
                 status=TransformStatus.SUBMITTING,
                 site=site,
                 next_poll_at=self.defer(self.poll_period_s * 4),
             )
-            self.publish(submit_processing_event(processing_id))
-        finally:
-            transforms.unlock(transform_id)
+        self.publish(submit_processing_event(processing_id))
 
     def _register_collections(
         self,
         request_id: int,
         transform_id: int,
-        work: Work,
+        tmpl: dict[str, Any],
         data_aware: bool,
     ) -> tuple[list[int], list[int]]:
         """Create input/output collections & file-granular contents.
@@ -102,40 +116,43 @@ class Transformer(BaseAgent):
         """
         colls = self.stores["collections"]
         contents = self.stores["contents"]
+        n_jobs = int(tmpl.get("n_jobs", 1))
         input_ids: list[int] = []
         job_contents: list[int] = []
-        for spec in work.inputs:
+        for spec in tmpl.get("inputs") or []:
+            files = list(spec.get("files") or [])
             coll_id = colls.add(
                 request_id,
                 transform_id,
-                spec.name,
+                spec["name"],
                 relation=CollectionRelation.INPUT,
-                scope=spec.scope,
+                scope=spec.get("scope", "default"),
                 status=CollectionStatus.OPEN,
-                total_files=len(spec.files),
+                total_files=len(files),
             )
             status = ContentStatus.NEW if data_aware else ContentStatus.AVAILABLE
             ids = contents.add_many(
                 coll_id,
                 request_id,
                 transform_id,
-                [{"name": f, "status": status} for f in spec.files],
+                [{"name": f, "status": status} for f in files],
             )
             input_ids.extend(ids)
             if not job_contents:
-                job_contents = ids[: work.n_jobs]
-        for spec in work.outputs:
+                job_contents = ids[:n_jobs]
+        for spec in tmpl.get("outputs") or []:
+            files = list(spec.get("files") or [])
             coll_id = colls.add(
                 request_id,
                 transform_id,
-                spec.name,
+                spec["name"],
                 relation=CollectionRelation.OUTPUT,
-                scope=spec.scope,
+                scope=spec.get("scope", "default"),
                 status=CollectionStatus.OPEN,
-                total_files=len(spec.files) or work.n_jobs,
+                total_files=len(files) or n_jobs,
             )
-            names = spec.files or [
-                f"{spec.name}.job{i:06d}" for i in range(work.n_jobs)
+            names = files or [
+                f"{spec['name']}.job{i:06d}" for i in range(n_jobs)
             ]
             contents.add_many(
                 coll_id,
@@ -145,22 +162,24 @@ class Transformer(BaseAgent):
             )
         return input_ids, job_contents
 
-    def _broker_site(self, work: Work) -> str | None:
+    def _broker_site(
+        self, site: str | None, resources: dict[str, Any]
+    ) -> str | None:
         """Pick the execution slice: honour explicit pins; constrain to the
         best tag-satisfying site when resource tags are requested.  With no
         pin and no tags, return None — per-job placement is then decided by
         the runtime's data-aware broker (repro.broker), which sees replica
         locality and site health that a transform-level pin would mask."""
-        if work.site:
-            return work.site
-        want = work.resources.get("tags") or ()
+        if site:
+            return site
+        want = resources.get("tags") or ()
         if not want:
             return None
         best, best_free = None, -1
-        for site in self.orch.runtime.sites.values():
-            if not set(want).issubset(set(site.tags)):
+        for cand in self.orch.runtime.sites.values():
+            if not set(want).issubset(set(cand.tags)):
                 continue
-            free = site.free()
+            free = cand.free()
             if free > best_free:
-                best, best_free = site.name, free
+                best, best_free = cand.name, free
         return best

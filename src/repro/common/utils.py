@@ -4,8 +4,10 @@ from __future__ import annotations
 import enum
 import itertools
 import json
+import os
+import random
+import threading
 import time
-import uuid
 from datetime import datetime, timezone
 from typing import Any, Callable, Iterable, Iterator, Sequence, TypeVar
 
@@ -20,8 +22,15 @@ def utc_now_ts() -> float:
     return time.time()
 
 
+# id generation sits on the per-workload/per-work hot path: an os.urandom
+# syscall per id (uuid4) is measurable there, so seed a PRNG once instead.
+_uid_rng = random.Random(int.from_bytes(os.urandom(16), "big"))
+_uid_lock = threading.Lock()
+
+
 def new_uid(prefix: str = "") -> str:
-    u = uuid.uuid4().hex[:16]
+    with _uid_lock:
+        u = f"{_uid_rng.getrandbits(64):016x}"
     return f"{prefix}{u}" if prefix else u
 
 

@@ -5,6 +5,23 @@ SQLite) + Alembic (schema versioning, §3.2.1).  Here sqlite3 is the one
 backend available offline; the engine keeps the same shape: a versioned
 schema with ordered migrations, dynamic create/teardown for tests, and
 thread-safe access for multi-threaded agent deployments.
+
+Hot-path design (§3.4.3 scaling):
+
+* **prepared-statement cache** — every connection keeps a large sqlite3
+  statement cache so the per-call cost of repeated agent queries is a bind
+  + step, not a re-parse;
+* **lock-free WAL reads** — file databases run in WAL mode where readers
+  never block (MVCC snapshots), so ``query`` skips the process-global lock
+  entirely; only the shared ':memory:' connection still serializes;
+* **write coalescing** — ``batch()`` opens one transaction for the current
+  thread and every store write issued inside it (``tx``/``execute``/
+  ``insert``/``executemany``) joins that transaction instead of paying its
+  own BEGIN/COMMIT.  Agents wrap multi-write handlers in it;
+* **RETURNING portability** — ``supports_returning`` gates the
+  single-statement ``UPDATE … RETURNING`` claim primitives; stores fall
+  back to an equivalent SELECT→UPDATE inside one transaction on older
+  SQLite (< 3.35).
 """
 from __future__ import annotations
 
@@ -15,6 +32,13 @@ from typing import Any, Iterator, Sequence
 
 from repro.common.exceptions import DatabaseError
 from repro.db.schema import MIGRATIONS, SCHEMA_VERSION
+
+#: UPDATE/DELETE … RETURNING requires SQLite >= 3.35.0.
+SUPPORTS_RETURNING = sqlite3.sqlite_version_info >= (3, 35, 0)
+
+#: per-connection prepared-statement cache (sqlite3 default is 128; agent
+#: workloads cycle through a few hundred distinct statements).
+_STMT_CACHE_SIZE = 512
 
 
 class Database:
@@ -33,6 +57,11 @@ class Database:
         self._local = threading.local()
         self._lock = threading.RLock()
         self._mem_conn: sqlite3.Connection | None = None
+        self.supports_returning = SUPPORTS_RETURNING
+        #: bumped on every committed write transaction; lets pollers skip
+        #: scans when nothing can possibly have changed (idle-poll gating)
+        self.write_gen = 0
+        self._gen_lock = threading.Lock()
         if self._memory:
             # One shared connection guarded by a lock: ':memory:' DBs are
             # per-connection, so threads must share.
@@ -46,6 +75,7 @@ class Database:
             timeout=30.0,
             check_same_thread=False,
             isolation_level=None,  # autocommit; we BEGIN explicitly
+            cached_statements=_STMT_CACHE_SIZE,
         )
         conn.row_factory = sqlite3.Row
         conn.execute("PRAGMA foreign_keys=ON")
@@ -65,16 +95,29 @@ class Database:
             self._local.conn = conn
         return conn
 
+    # -- transactions ------------------------------------------------------
+    def _batch_conn(self) -> sqlite3.Connection | None:
+        return getattr(self._local, "batch_conn", None)
+
     @contextmanager
     def tx(self) -> Iterator[sqlite3.Connection]:
-        """Write transaction.  Serialized by a process-level lock for
-        ':memory:' databases; file databases rely on sqlite's own locking."""
+        """Write transaction.  Joins the thread's open ``batch()`` when one
+        is active (write coalescing); otherwise serialized by a process
+        lock for ':memory:' databases, while WAL file databases rely on
+        sqlite's own locking."""
+        bc = self._batch_conn()
+        if bc is not None:
+            # nested inside batch(): the enclosing transaction owns
+            # BEGIN/COMMIT; statements simply accumulate.
+            yield bc
+            return
         conn = self._conn()
-        with self._lock:
+        with self._write_guard():
             try:
                 conn.execute("BEGIN IMMEDIATE")
                 yield conn
                 conn.execute("COMMIT")
+                self._bump_gen()
             except BaseException:
                 try:
                     conn.execute("ROLLBACK")
@@ -82,17 +125,65 @@ class Database:
                     pass
                 raise
 
+    @contextmanager
+    def batch(self) -> Iterator[sqlite3.Connection]:
+        """Coalesce every store write issued by this thread into ONE
+        transaction (the agent hot-path optimisation: N rows per cycle cost
+        one fsync/lock round-trip instead of N).  Reentrant — nested
+        ``batch()``/``tx()`` calls join the outer transaction."""
+        if self._batch_conn() is not None:
+            yield self._batch_conn()
+            return
+        conn = self._conn()
+        with self._write_guard():
+            try:
+                conn.execute("BEGIN IMMEDIATE")
+                self._local.batch_conn = conn
+                try:
+                    yield conn
+                finally:
+                    self._local.batch_conn = None
+                conn.execute("COMMIT")
+                self._bump_gen()
+            except BaseException:
+                try:
+                    conn.execute("ROLLBACK")
+                except sqlite3.Error:  # pragma: no cover
+                    pass
+                raise
+
+    def _bump_gen(self) -> None:
+        # read-modify-write must be atomic: concurrent file-DB writers
+        # commit without holding the process lock, and a lost increment
+        # would let the idle-poll gate skip work that is actually due
+        with self._gen_lock:
+            self.write_gen += 1
+
+    @contextmanager
+    def _write_guard(self) -> Iterator[None]:
+        if self._memory:
+            with self._lock:
+                yield
+        else:
+            # WAL file DBs: BEGIN IMMEDIATE + busy timeout arbitrate
+            # between writer threads/processes; no process lock needed.
+            yield
+
     # -- query helpers ---------------------------------------------------
     def query(self, sql: str, params: Sequence[Any] = ()) -> list[sqlite3.Row]:
-        with self._lock:
-            return list(self._conn().execute(sql, params).fetchall())
+        if self._memory:
+            with self._lock:
+                return list(self._conn().execute(sql, params).fetchall())
+        # WAL readers never block (and never take the process lock).
+        return list(self._conn().execute(sql, params).fetchall())
 
     def query_one(self, sql: str, params: Sequence[Any] = ()) -> sqlite3.Row | None:
         rows = self.query(sql, params)
         return rows[0] if rows else None
 
     def execute(self, sql: str, params: Sequence[Any] = ()) -> int:
-        """Single write statement in its own transaction; returns rowcount."""
+        """Single write statement; joins the active batch when one is open,
+        otherwise runs in its own transaction.  Returns rowcount."""
         with self.tx() as conn:
             cur = conn.execute(sql, params)
             return cur.rowcount

@@ -15,7 +15,7 @@ and the Data Carousel file-level staging (§4.1).
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 3
+SCHEMA_VERSION = 4
 
 _V1 = [
     """
@@ -178,10 +178,19 @@ _V3 = [
     "CREATE INDEX idx_events_merge ON events(merge_key, status)",
 ]
 
+_V4 = [
+    # Conductor outbox: bounded redelivery (a persistently failing
+    # subscriber must not wedge the outbox forever).
+    "ALTER TABLE messages ADD COLUMN retries INTEGER NOT NULL DEFAULT 0",
+    # Receiver hot path: workload_id → processing_id lookups.
+    "CREATE INDEX idx_processings_workload ON processings(workload_id)",
+]
+
 # Ordered (version, statements) pairs — forward migrations only, applied in
 # sequence by Database.migrate().
 MIGRATIONS: list[tuple[int, list[str]]] = [
     (1, _V1),
     (2, _V2),
     (3, _V3),
+    (4, _V4),
 ]

@@ -8,6 +8,16 @@ The two roles the paper assigns the database (§3.2.1) are implemented here:
    scheduling: rows idle beyond ``next_poll_at``) and ``claim``/``unlock``
    (idempotent triggering: status+timestamp updates so concurrent agents
    never double-process, §3.4.3).
+
+Hot-path primitives (batched orchestration):
+
+* ``claim_ready(statuses, limit)`` — ONE statement (``UPDATE … RETURNING``
+  on modern SQLite; an equivalent SELECT→UPDATE in one transaction
+  otherwise) that atomically claims a batch of due rows and returns them,
+  replacing the poll→get→claim→unlock round-trips per row;
+* ``unlock_many`` / ``update_many`` — set-based releases and updates;
+* selective-column reads (``columns=…``) so hot readers stop fetching and
+  JSON-decoding workflow/work/metadata blobs they never look at.
 """
 from __future__ import annotations
 
@@ -96,13 +106,39 @@ class RequestStore(_BaseStore):
             ),
         )
 
-    def get(self, request_id: int) -> dict[str, Any]:
+    def get(
+        self, request_id: int, *, columns: Sequence[str] | None = None
+    ) -> dict[str, Any]:
+        cols = "*" if columns is None else ",".join(columns)
         row = self.db.query_one(
-            "SELECT * FROM requests WHERE request_id=?", (request_id,)
+            f"SELECT {cols} FROM requests WHERE request_id=?", (request_id,)
         )
         if row is None:
             raise NotFoundError(f"request {request_id} not found")
         return _row_to_dict(row)
+
+    def get_many(
+        self,
+        request_ids: Sequence[int],
+        *,
+        columns: Sequence[str] | None = None,
+    ) -> dict[int, dict[str, Any]]:
+        """Batch PK fetch (one query); missing ids are simply absent."""
+        cols = (
+            "*"
+            if columns is None
+            else ",".join(dict.fromkeys(["request_id", *columns]))
+        )
+        out: dict[int, dict[str, Any]] = {}
+        for block in chunked(list(dict.fromkeys(request_ids)), 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT {cols} FROM requests WHERE request_id IN ({marks})",
+                list(block),
+            ):
+                d = _row_to_dict(r)
+                out[int(d["request_id"])] = d
+        return out
 
     def list(
         self, *, status: RequestStatus | None = None, limit: int = 100
@@ -148,6 +184,36 @@ class RequestStore(_BaseStore):
             [str(s) for s in statuses] + [now, limit],
         )
         return [_row_to_dict(r) for r in rows]
+
+    def claim_ready(
+        self,
+        statuses: Sequence[RequestStatus],
+        *,
+        limit: int = 16,
+        now: float | None = None,
+        stale_s: float = 300.0,
+    ) -> list[dict[str, Any]]:
+        """Single-statement batched claim of due rows (already locked)."""
+        return _claim_ready(
+            self.db,
+            "requests",
+            "request_id",
+            statuses,
+            limit=limit,
+            order="priority DESC, request_id",
+            now=now,
+            stale_s=stale_s,
+        )
+
+    def unlock_many(self, request_ids: Sequence[int]) -> None:
+        _unlock_many(self.db, "requests", "request_id", request_ids)
+
+    def claim_by_ids(
+        self, request_ids: Sequence[int], statuses: Sequence[RequestStatus]
+    ) -> list[dict[str, Any]]:
+        return _claim_by_ids(
+            self.db, "requests", "request_id", request_ids, statuses
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +261,19 @@ class TransformStore(_BaseStore):
             raise NotFoundError(f"transform {transform_id} not found")
         return _row_to_dict(row)
 
+    def get_many(self, transform_ids: Sequence[int]) -> dict[int, dict[str, Any]]:
+        """Batch PK fetch (one query); missing ids are simply absent."""
+        out: dict[int, dict[str, Any]] = {}
+        for block in chunked(list(dict.fromkeys(transform_ids)), 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT * FROM transforms WHERE transform_id IN ({marks})",
+                list(block),
+            ):
+                d = _row_to_dict(r)
+                out[int(d["transform_id"])] = d
+        return out
+
     def by_request(self, request_id: int) -> list[dict[str, Any]]:
         rows = self.db.query(
             "SELECT * FROM transforms WHERE request_id=? ORDER BY transform_id",
@@ -238,6 +317,41 @@ class TransformStore(_BaseStore):
             [str(s) for s in statuses] + [now, limit],
         )
         return [_row_to_dict(r) for r in rows]
+
+    def claim_ready(
+        self,
+        statuses: Sequence[TransformStatus],
+        *,
+        limit: int = 16,
+        now: float | None = None,
+        stale_s: float = 300.0,
+    ) -> list[dict[str, Any]]:
+        """Single-statement batched claim of due rows (already locked)."""
+        return _claim_ready(
+            self.db,
+            "transforms",
+            "transform_id",
+            statuses,
+            limit=limit,
+            order="priority DESC, transform_id",
+            now=now,
+            stale_s=stale_s,
+        )
+
+    def unlock_many(self, transform_ids: Sequence[int]) -> None:
+        _unlock_many(self.db, "transforms", "transform_id", transform_ids)
+
+    def claim_by_ids(
+        self, transform_ids: Sequence[int], statuses: Sequence[TransformStatus]
+    ) -> list[dict[str, Any]]:
+        return _claim_by_ids(
+            self.db, "transforms", "transform_id", transform_ids, statuses
+        )
+
+    def update_many(self, transform_ids: Sequence[int], **fields: Any) -> int:
+        return _update_many(
+            self.db, "transforms", "transform_id", transform_ids, fields
+        )
 
 
 # ---------------------------------------------------------------------------
@@ -294,6 +408,21 @@ class CollectionStore(_BaseStore):
                 (transform_id, str(relation)),
             )
         return [_row_to_dict(r) for r in rows]
+
+    def by_transforms(
+        self, transform_ids: Sequence[int]
+    ) -> dict[int, list[dict[str, Any]]]:
+        """transform_id → collections for a whole batch in one query."""
+        out: dict[int, list[dict[str, Any]]] = {}
+        for block in chunked(list(dict.fromkeys(transform_ids)), 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT * FROM collections WHERE transform_id IN ({marks})",
+                list(block),
+            ):
+                d = _row_to_dict(r)
+                out.setdefault(int(d["transform_id"]), []).append(d)
+        return out
 
     def update(self, coll_id: int, **fields: Any) -> None:
         _update_row(self.db, "collections", "coll_id", coll_id, fields)
@@ -405,18 +534,67 @@ class ContentStore(_BaseStore):
         return [_row_to_dict(r) for r in self.db.query(sql, params)]
 
     def by_transform(
-        self, transform_id: int, *, status: ContentStatus | None = None
+        self,
+        transform_id: int,
+        *,
+        status: ContentStatus | None = None,
+        columns: Sequence[str] | None = None,
     ) -> list[dict[str, Any]]:
+        cols = "*" if columns is None else ",".join(columns)
         if status is None:
             rows = self.db.query(
-                "SELECT * FROM contents WHERE transform_id=?", (transform_id,)
+                f"SELECT {cols} FROM contents WHERE transform_id=?",
+                (transform_id,),
             )
         else:
             rows = self.db.query(
-                "SELECT * FROM contents WHERE transform_id=? AND status=?",
+                f"SELECT {cols} FROM contents WHERE transform_id=? AND status=?",
                 (transform_id, str(status)),
             )
         return [_row_to_dict(r) for r in rows]
+
+    def transform_ids(self, content_ids: Sequence[int]) -> dict[int, int]:
+        """content_id → transform_id for a batch, in one grouped query
+        (replaces the Trigger's per-content ``get`` N+1)."""
+        out: dict[int, int] = {}
+        for block in chunked(content_ids, 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT content_id, transform_id FROM contents "
+                f"WHERE content_id IN ({marks})",
+                list(block),
+            ):
+                out[int(r["content_id"])] = int(r["transform_id"])
+        return out
+
+    def output_ids_by_transform(self, transform_id: int) -> list[int]:
+        """All output-collection content ids for a transform, one query
+        (id-only: no metadata decode)."""
+        rows = self.db.query(
+            "SELECT c.content_id FROM contents c "
+            "JOIN collections k ON k.coll_id=c.coll_id "
+            "WHERE k.transform_id=? AND k.relation_type=? "
+            "ORDER BY c.coll_id, c.content_id",
+            (transform_id, str(CollectionRelation.OUTPUT)),
+        )
+        return [int(r["content_id"]) for r in rows]
+
+    def output_ids_by_transforms(
+        self, transform_ids: Sequence[int]
+    ) -> dict[int, list[int]]:
+        """``output_ids_by_transform`` for a whole batch in one query."""
+        out: dict[int, list[int]] = {}
+        for block in chunked(list(dict.fromkeys(transform_ids)), 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                "SELECT k.transform_id AS tid, c.content_id FROM contents c "
+                "JOIN collections k ON k.coll_id=c.coll_id "
+                f"WHERE k.transform_id IN ({marks}) AND k.relation_type=? "
+                "ORDER BY c.coll_id, c.content_id",
+                list(block) + [str(CollectionRelation.OUTPUT)],
+            ):
+                out.setdefault(int(r["tid"]), []).append(int(r["content_id"]))
+        return out
 
     def set_status(self, content_ids: Sequence[int], status: ContentStatus) -> int:
         if not content_ids:
@@ -474,31 +652,62 @@ class ContentStore(_BaseStore):
                     "WHERE content_id IN (SELECT cid FROM _dec)",
                     (now,),
                 )
-                rows = conn.execute(
-                    "UPDATE contents SET status=?, updated_at=? "
-                    "WHERE dep_count<=0 AND status=? "
-                    "AND content_id IN (SELECT cid FROM _dec) "
-                    "RETURNING content_id",
-                    (str(ContentStatus.ACTIVATED), now, str(ContentStatus.NEW)),
-                ).fetchall()
-                activated.extend(int(r["content_id"]) for r in rows)
+                act_where = (
+                    "dep_count<=0 AND status=? "
+                    "AND content_id IN (SELECT cid FROM _dec)"
+                )
+                if self.db.supports_returning:
+                    rows = conn.execute(
+                        f"UPDATE contents SET status=?, updated_at=? "
+                        f"WHERE {act_where} RETURNING content_id",
+                        (str(ContentStatus.ACTIVATED), now, str(ContentStatus.NEW)),
+                    ).fetchall()
+                    activated.extend(int(r["content_id"]) for r in rows)
+                else:
+                    rows = conn.execute(
+                        f"SELECT content_id FROM contents WHERE {act_where}",
+                        (str(ContentStatus.NEW),),
+                    ).fetchall()
+                    ids = [int(r["content_id"]) for r in rows]
+                    for sub in chunked(ids, 8000):  # bound variable limit
+                        marks = ",".join("?" for _ in sub)
+                        conn.execute(
+                            f"UPDATE contents SET status=?, updated_at=? "
+                            f"WHERE content_id IN ({marks})",
+                            [str(ContentStatus.ACTIVATED), now] + list(sub),
+                        )
+                    activated.extend(ids)
         return activated
 
     def activate_roots(self, transform_id: int | None = None) -> list[int]:
         """Activate contents with no dependencies (DAG roots)."""
         now = utc_now_ts()
-        sql = (
-            "UPDATE contents SET status=?, updated_at=? "
-            "WHERE dep_count<=0 AND status=?"
-        )
-        params: list[Any] = [str(ContentStatus.ACTIVATED), now, str(ContentStatus.NEW)]
+        where = "dep_count<=0 AND status=?"
+        params: list[Any] = [str(ContentStatus.NEW)]
         if transform_id is not None:
-            sql += " AND transform_id=?"
+            where += " AND transform_id=?"
             params.append(transform_id)
-        sql += " RETURNING content_id"
+        if self.db.supports_returning:
+            with self.db.tx() as conn:
+                rows = conn.execute(
+                    f"UPDATE contents SET status=?, updated_at=? WHERE {where} "
+                    "RETURNING content_id",
+                    [str(ContentStatus.ACTIVATED), now] + params,
+                ).fetchall()
+            return [int(r["content_id"]) for r in rows]
         with self.db.tx() as conn:
-            rows = conn.execute(sql, params).fetchall()
-        return [int(r["content_id"]) for r in rows]
+            rows = conn.execute(
+                f"SELECT content_id FROM contents WHERE {where}", params
+            ).fetchall()
+            ids = [int(r["content_id"]) for r in rows]
+            for block in chunked(ids, 8000):
+                marks = ",".join("?" for _ in block)
+                conn.execute(
+                    f"UPDATE contents SET status=?, updated_at=? "
+                    f"WHERE content_id IN ({marks})",
+                    [str(ContentStatus.ACTIVATED), now] + list(block),
+                )
+        return ids
 
     def count_by_status(self, transform_id: int) -> dict[str, int]:
         rows = self.db.query(
@@ -553,6 +762,22 @@ class ProcessingStore(_BaseStore):
         )
         return [_row_to_dict(r) for r in rows]
 
+    def by_transforms(
+        self, transform_ids: Sequence[int]
+    ) -> dict[int, list[dict[str, Any]]]:
+        """transform_id → processings for a whole batch in one query."""
+        out: dict[int, list[dict[str, Any]]] = {}
+        for block in chunked(transform_ids, 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT * FROM processings WHERE transform_id IN ({marks}) "
+                "ORDER BY processing_id",
+                list(block),
+            ):
+                d = _row_to_dict(r)
+                out.setdefault(int(d["transform_id"]), []).append(d)
+        return out
+
     def update(self, processing_id: int, **fields: Any) -> None:
         _update_row(self.db, "processings", "processing_id", processing_id, fields)
 
@@ -582,6 +807,84 @@ class ProcessingStore(_BaseStore):
             [str(s) for s in statuses] + [now, limit],
         )
         return [_row_to_dict(r) for r in rows]
+
+    def claim_ready(
+        self,
+        statuses: Sequence[ProcessingStatus],
+        *,
+        limit: int = 16,
+        now: float | None = None,
+        stale_s: float = 300.0,
+    ) -> list[dict[str, Any]]:
+        """Single-statement batched claim of due rows (already locked)."""
+        return _claim_ready(
+            self.db,
+            "processings",
+            "processing_id",
+            statuses,
+            limit=limit,
+            order="processing_id",
+            now=now,
+            stale_s=stale_s,
+        )
+
+    def unlock_many(self, processing_ids: Sequence[int]) -> None:
+        _unlock_many(self.db, "processings", "processing_id", processing_ids)
+
+    def claim_by_ids(
+        self, processing_ids: Sequence[int], statuses: Sequence[ProcessingStatus]
+    ) -> list[dict[str, Any]]:
+        return _claim_by_ids(
+            self.db, "processings", "processing_id", processing_ids, statuses
+        )
+
+    def ids_for_workloads(self, workload_ids: Sequence[str]) -> dict[str, int]:
+        """Batch workload_id → processing_id resolution (one query)."""
+        out: dict[str, int] = {}
+        for block in chunked(list(dict.fromkeys(workload_ids)), 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT workload_id, processing_id FROM processings "
+                f"WHERE workload_id IN ({marks})",
+                list(block),
+            ):
+                out[str(r["workload_id"])] = int(r["processing_id"])
+        return out
+
+    def metadata_many(
+        self, processing_ids: Sequence[int]
+    ) -> dict[int, dict[str, Any]]:
+        """processing_id → metadata blob for a batch (one query)."""
+        out: dict[int, dict[str, Any]] = {}
+        for block in chunked(list(dict.fromkeys(processing_ids)), 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT processing_id, processing_metadata FROM processings "
+                f"WHERE processing_id IN ({marks})",
+                list(block),
+            ):
+                d = _row_to_dict(r)
+                out[int(d["processing_id"])] = d.get("processing_metadata") or {}
+        return out
+
+    def workload_map(
+        self, transform_ids: Sequence[int]
+    ) -> dict[int, list[str]]:
+        """transform_id → [workload_id] for a batch of transforms in one
+        id-only query (no metadata JSON decode)."""
+        out: dict[int, list[str]] = {}
+        for block in chunked(transform_ids, 8000):
+            marks = ",".join("?" for _ in block)
+            for r in self.db.query(
+                f"SELECT transform_id, workload_id FROM processings "
+                f"WHERE transform_id IN ({marks}) AND workload_id IS NOT NULL "
+                "ORDER BY processing_id",
+                list(block),
+            ):
+                out.setdefault(int(r["transform_id"]), []).append(
+                    str(r["workload_id"])
+                )
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -633,6 +936,27 @@ class MessageStore(_BaseStore):
             [str(MessageStatus.DELIVERED), utc_now_ts()] + list(msg_ids),
         )
 
+    def bump_retries(
+        self, msg_ids: Sequence[int], *, max_retries: int = 5
+    ) -> int:
+        """Record failed delivery attempts; messages exceeding the retry
+        budget flip to Failed so a persistently broken subscriber cannot
+        wedge the outbox forever.  Returns how many were failed out."""
+        if not msg_ids:
+            return 0
+        marks = ",".join("?" for _ in msg_ids)
+        with self.db.tx() as conn:
+            conn.execute(
+                f"UPDATE messages SET retries=retries+1 WHERE msg_id IN ({marks})",
+                list(msg_ids),
+            )
+            cur = conn.execute(
+                f"UPDATE messages SET status=? "
+                f"WHERE msg_id IN ({marks}) AND retries>=?",
+                [str(MessageStatus.FAILED)] + list(msg_ids) + [max_retries],
+            )
+            return cur.rowcount
+
 
 # ---------------------------------------------------------------------------
 # Events (DBEventBus persistence)
@@ -651,33 +975,81 @@ class EventStore(_BaseStore):
         Returns the event_id, or None when merged away."""
         now = utc_now_ts()
         with self.db.tx() as conn:
-            if merge_key is not None:
-                cur = conn.execute(
-                    "UPDATE events SET priority=MAX(priority,?) "
-                    "WHERE merge_key=? AND status='New'",
-                    (priority, merge_key),
-                )
-                if cur.rowcount:
-                    return None
-            cur = conn.execute(
-                "INSERT INTO events(event_type,priority,merge_key,payload,status,"
-                "created_at) VALUES (?,?,?,?,'New',?)",
-                (event_type, priority, merge_key, json_dumps(payload), now),
+            return self._publish_on(
+                conn, event_type, payload, priority, merge_key, now
             )
-            return int(cur.lastrowid)
+
+    def _publish_on(
+        self,
+        conn: Any,
+        event_type: str,
+        payload: Any,
+        priority: int,
+        merge_key: str | None,
+        now: float,
+    ) -> int | None:
+        if merge_key is not None:
+            cur = conn.execute(
+                "UPDATE events SET priority=MAX(priority,?) "
+                "WHERE merge_key=? AND status='New'",
+                (priority, merge_key),
+            )
+            if cur.rowcount:
+                return None
+        cur = conn.execute(
+            "INSERT INTO events(event_type,priority,merge_key,payload,status,"
+            "created_at) VALUES (?,?,?,?,'New',?)",
+            (event_type, priority, merge_key, json_dumps(payload), now),
+        )
+        return int(cur.lastrowid)
+
+    def publish_many(
+        self, items: Sequence[tuple[str, Any, int, str | None]]
+    ) -> list[int | None]:
+        """Publish N events in ONE transaction (merge semantics preserved
+        per event).  ``items`` are (event_type, payload, priority,
+        merge_key) tuples; returns per-event ids (None when merged)."""
+        if not items:
+            return []
+        now = utc_now_ts()
+        out: list[int | None] = []
+        with self.db.tx() as conn:
+            for event_type, payload, priority, merge_key in items:
+                out.append(
+                    self._publish_on(
+                        conn, event_type, payload, priority, merge_key, now
+                    )
+                )
+        return out
 
     def claim_batch(self, consumer: str, *, limit: int = 32) -> list[dict[str, Any]]:
         """Atomically claim the highest-priority pending events."""
         now = utc_now_ts()
-        with self.db.tx() as conn:
-            rows = conn.execute(
-                "UPDATE events SET status='Claimed', claimed_by=?, claimed_at=? "
-                "WHERE event_id IN ("
-                "  SELECT event_id FROM events WHERE status='New'"
-                "  ORDER BY priority DESC, event_id LIMIT ?)"
-                " RETURNING *",
-                (consumer, now, limit),
-            ).fetchall()
+        sel = (
+            "SELECT event_id FROM events WHERE status='New' "
+            "ORDER BY priority DESC, event_id LIMIT ?"
+        )
+        if self.db.supports_returning:
+            with self.db.tx() as conn:
+                rows = conn.execute(
+                    "UPDATE events SET status='Claimed', claimed_by=?, "
+                    f"claimed_at=? WHERE event_id IN ({sel}) RETURNING *",
+                    (consumer, now, limit),
+                ).fetchall()
+        else:
+            with self.db.tx() as conn:
+                ids = [r[0] for r in conn.execute(sel, (limit,)).fetchall()]
+                if not ids:
+                    return []
+                marks = ",".join("?" for _ in ids)
+                conn.execute(
+                    "UPDATE events SET status='Claimed', claimed_by=?, "
+                    f"claimed_at=? WHERE event_id IN ({marks})",
+                    [consumer, now] + ids,
+                )
+                rows = conn.execute(
+                    f"SELECT * FROM events WHERE event_id IN ({marks})", ids
+                ).fetchall()
         out = [_row_to_dict(r) for r in rows]
         out.sort(key=lambda e: (-int(e["priority"]), int(e["event_id"])))
         return out
@@ -780,6 +1152,160 @@ def _claim_row(
         (now, key_val, now - stale_s),
     )
     return n > 0
+
+
+def _claim_ready(
+    db: Database,
+    table: str,
+    key: str,
+    statuses: Sequence[Any],
+    *,
+    limit: int,
+    order: str,
+    now: float | None = None,
+    stale_s: float = 300.0,
+) -> list[dict[str, Any]]:
+    """Atomically claim a batch of due rows in ONE statement and return
+    them already locked — the claim-batch primitive that replaces the
+    per-row poll→get→claim→unlock sequence (4 transactions → 1).
+
+    Rows qualify when their status matches, ``next_poll_at`` has passed,
+    and they are unlocked (or the lock is stale — crash recovery keeps the
+    idempotent-claim semantics of ``_claim_row``)."""
+    now = utc_now_ts() if now is None else now
+    marks = ",".join("?" for _ in statuses)
+    where = (
+        f"status IN ({marks}) AND next_poll_at<=? "
+        "AND (locking=0 OR updated_at<?)"
+    )
+    sel_params = [str(s) for s in statuses] + [now, now - stale_s]
+    sel = (
+        f"SELECT {key} FROM {table} WHERE {where} ORDER BY {order} LIMIT ?"
+    )
+    # read-only pre-check: idle polls (the overwhelmingly common case for a
+    # fleet of agents) must not pay for a write transaction
+    if not db.query_one(sel.replace("LIMIT ?", "LIMIT 1"), sel_params):
+        return []
+    if db.supports_returning:
+        with db.tx() as conn:
+            rows = conn.execute(
+                f"UPDATE {table} SET locking=1, updated_at=? "
+                f"WHERE {key} IN ({sel}) RETURNING *",
+                [now] + sel_params + [limit],
+            ).fetchall()
+        return [_row_to_dict(r) for r in rows]
+    with db.tx() as conn:
+        ids = [r[0] for r in conn.execute(sel, sel_params + [limit]).fetchall()]
+        if not ids:
+            return []
+        id_marks = ",".join("?" for _ in ids)
+        conn.execute(
+            f"UPDATE {table} SET locking=1, updated_at=? "
+            f"WHERE {key} IN ({id_marks})",
+            [now] + ids,
+        )
+        rows = conn.execute(
+            f"SELECT * FROM {table} WHERE {key} IN ({id_marks})", ids
+        ).fetchall()
+    return [_row_to_dict(r) for r in rows]
+
+
+def _claim_by_ids(
+    db: Database,
+    table: str,
+    key: str,
+    ids: Sequence[int],
+    statuses: Sequence[Any],
+    *,
+    stale_s: float = 300.0,
+) -> list[dict[str, Any]]:
+    """Claim a specific id set (one statement): the event-path analogue of
+    ``_claim_ready``.  Only rows still in ``statuses`` and unlocked (or
+    stale) are claimed and returned; rows another replica holds are simply
+    absent from the result."""
+    if not ids:
+        return []
+    now = utc_now_ts()
+    ids = list(dict.fromkeys(ids))
+    id_marks = ",".join("?" for _ in ids)
+    st_marks = ",".join("?" for _ in statuses)
+    where = (
+        f"{key} IN ({id_marks}) AND status IN ({st_marks}) "
+        "AND (locking=0 OR updated_at<?)"
+    )
+    params = list(ids) + [str(s) for s in statuses] + [now - stale_s]
+    # read-only pre-check (see _claim_ready): no write tx when nothing to do
+    if not db.query_one(
+        f"SELECT {key} FROM {table} WHERE {where} LIMIT 1", params
+    ):
+        return []
+    if db.supports_returning:
+        with db.tx() as conn:
+            rows = conn.execute(
+                f"UPDATE {table} SET locking=1, updated_at=? WHERE {where} "
+                "RETURNING *",
+                [now] + params,
+            ).fetchall()
+        return [_row_to_dict(r) for r in rows]
+    with db.tx() as conn:
+        got = [
+            r[0]
+            for r in conn.execute(
+                f"SELECT {key} FROM {table} WHERE {where}", params
+            ).fetchall()
+        ]
+        if not got:
+            return []
+        got_marks = ",".join("?" for _ in got)
+        conn.execute(
+            f"UPDATE {table} SET locking=1, updated_at=? "
+            f"WHERE {key} IN ({got_marks})",
+            [now] + got,
+        )
+        rows = conn.execute(
+            f"SELECT * FROM {table} WHERE {key} IN ({got_marks})", got
+        ).fetchall()
+    return [_row_to_dict(r) for r in rows]
+
+
+def _unlock_many(db: Database, table: str, key: str, ids: Sequence[int]) -> None:
+    if not ids:
+        return
+    now = utc_now_ts()
+    for block in chunked(ids, 8000):
+        marks = ",".join("?" for _ in block)
+        db.execute(
+            f"UPDATE {table} SET locking=0, updated_at=? "
+            f"WHERE {key} IN ({marks})",
+            [now] + list(block),
+        )
+
+
+def _update_many(
+    db: Database, table: str, key: str, ids: Sequence[int], fields: dict[str, Any]
+) -> int:
+    """Apply the same field updates to many rows in one statement."""
+    if not ids or not fields:
+        return 0
+    sets: list[str] = []
+    params: list[Any] = []
+    for name, value in fields.items():
+        sets.append(f"{name}=?")
+        if name in _JSON_FIELDS and value is not None and not isinstance(value, str):
+            value = json_dumps(value)
+        elif hasattr(value, "value"):  # enums
+            value = str(value)
+        params.append(value)
+    sets.append("updated_at=?")
+    params.append(utc_now_ts())
+    n = 0
+    for block in chunked(ids, 8000):
+        marks = ",".join("?" for _ in block)
+        n += db.execute(
+            f"UPDATE {table} SET {', '.join(sets)} WHERE {key} IN ({marks})",
+            params + list(block),
+        )
+    return n
 
 
 def make_stores(db: Database) -> dict[str, Any]:

@@ -39,6 +39,17 @@ class DBEventBus(BaseEventBus):
             self.stats["merged"] += 1
         self._notify()
 
+    def publish_many(self, events) -> None:
+        evs = list(events)
+        if not evs:
+            return
+        ids = self._store.publish_many(
+            [(e.type, e.payload, e.priority, e.merge_key) for e in evs]
+        )
+        self.stats["published"] += len(ids)
+        self.stats["merged"] += sum(1 for i in ids if i is None)
+        self._notify()
+
     def consume(
         self,
         consumer: str,

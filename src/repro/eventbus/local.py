@@ -42,20 +42,32 @@ class LocalEventBus(BaseEventBus):
         heapq.heappush(heap, (-event.priority, next(self._seq), event))
         self._entries[id(event)] = self._entries.get(id(event), 0) + 1
 
+    def _publish_locked(self, event: Event) -> None:
+        self.stats["published"] += 1
+        if event.merge_key is not None:
+            existing = self._pending_by_key.get(event.merge_key)
+            if existing is not None:
+                if event.priority > existing.priority:
+                    existing.priority = event.priority
+                    self._push(existing)  # earlier entry skipped at pop
+                self.stats["merged"] += 1
+                return
+            self._pending_by_key[event.merge_key] = event
+        self._push(event)
+        self._count += 1
+
     def publish(self, event: Event) -> None:
         with self._lock:
-            self.stats["published"] += 1
-            if event.merge_key is not None:
-                existing = self._pending_by_key.get(event.merge_key)
-                if existing is not None:
-                    if event.priority > existing.priority:
-                        existing.priority = event.priority
-                        self._push(existing)  # earlier entry skipped at pop
-                    self.stats["merged"] += 1
-                    return
-                self._pending_by_key[event.merge_key] = event
-            self._push(event)
-            self._count += 1
+            self._publish_locked(event)
+        self._notify()
+
+    def publish_many(self, events) -> None:
+        evs = list(events)
+        if not evs:
+            return
+        with self._lock:  # one lock round-trip and one wakeup for the batch
+            for event in evs:
+                self._publish_locked(event)
         self._notify()
 
     def consume(

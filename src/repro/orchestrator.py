@@ -10,6 +10,8 @@ to exercise horizontal scaling and the idempotent-claim machinery.
 from __future__ import annotations
 
 import contextlib
+import sys
+import threading
 import time
 from typing import Any, Callable, Iterator
 
@@ -50,6 +52,33 @@ _AGENT_TYPES = (
     Coordinator,
 )
 
+# sys.setswitchinterval is process-global: refcount so overlapping
+# orchestrator lifetimes share one tightened interval and the ORIGINAL
+# value is restored only when the last one stops.
+_switch_lock = threading.Lock()
+_switch_users = 0
+_switch_saved: float | None = None
+
+
+def _acquire_switch_interval(interval_s: float) -> None:
+    global _switch_users, _switch_saved
+    with _switch_lock:
+        if _switch_users == 0:
+            _switch_saved = sys.getswitchinterval()
+            sys.setswitchinterval(interval_s)
+        _switch_users += 1
+
+
+def _release_switch_interval() -> None:
+    global _switch_users, _switch_saved
+    with _switch_lock:
+        if _switch_users == 0:
+            return
+        _switch_users -= 1
+        if _switch_users == 0 and _switch_saved is not None:
+            sys.setswitchinterval(_switch_saved)
+            _switch_saved = None
+
 
 class Orchestrator:
     def __init__(
@@ -60,7 +89,9 @@ class Orchestrator:
         runtime: WorkloadRuntime | None = None,
         poll_period_s: float = 0.05,
         replicas: int = 1,
+        batch_size: int = 64,
         bus_kwargs: dict[str, Any] | None = None,
+        switch_interval_s: float | None = 0.001,
     ):
         self.db = db or Database(":memory:")
         self.stores = make_stores(self.db)
@@ -74,15 +105,31 @@ class Orchestrator:
         self.broker = self.runtime.broker
         self.message_subscribers: list[Callable[[dict[str, Any]], None]] = []
         self.agents = [
-            agent_cls(self, poll_period_s=poll_period_s, replica=r)
+            agent_cls(
+                self,
+                poll_period_s=poll_period_s,
+                batch_size=batch_size,
+                replica=r,
+            )
             for agent_cls in _AGENT_TYPES
             for r in range(replicas)
         ]
         self._started = False
+        # agent threads are short-burst IO/lock-bound; the interpreter's
+        # default 5 ms switch interval turns every lock handoff into a
+        # scheduling quantum.  A tighter interval cuts hot-path latency.
+        # NOTE: this is process-global (refcounted, restored when the last
+        # orchestrator stops) — embedders whose own threads are CPU-bound
+        # should pass switch_interval_s=None to opt out.
+        self._switch_interval_s = switch_interval_s
+        self._holds_switch_interval = False
 
     # -- lifecycle -----------------------------------------------------------
     def start(self) -> "Orchestrator":
         if not self._started:
+            if self._switch_interval_s is not None:
+                _acquire_switch_interval(self._switch_interval_s)
+                self._holds_switch_interval = True
             for agent in self.agents:
                 agent.start()
             self._started = True
@@ -95,6 +142,9 @@ class Orchestrator:
             agent.join(timeout=2.0)
         self.runtime.stop()
         self.bus.close()
+        if self._holds_switch_interval:
+            _release_switch_interval()
+            self._holds_switch_interval = False
         self._started = False
 
     def __enter__(self) -> "Orchestrator":
@@ -182,7 +232,8 @@ class Orchestrator:
         deadline = time.monotonic() + timeout
         terminal = [str(s) for s in TERMINAL_REQUEST_STATES]
         while True:
-            row = self.stores["requests"].get(request_id)
+            # status-only read: never decode the workflow blob while polling
+            row = self.stores["requests"].get(request_id, columns=("status",))
             if row["status"] in terminal:
                 return row["status"]
             if time.monotonic() > deadline:

@@ -120,6 +120,10 @@ class _Task:
         self.cancelled = False
         self.created_at = utc_now_ts()
         self.lock = threading.Lock()
+        # sticky terminal flag: once every job reaches a terminal state the
+        # monitor stops rescanning this task (a long-lived runtime would
+        # otherwise pay O(total tasks ever) per monitor tick forever)
+        self.terminal = False
 
     def all_jobs(self) -> list[JobInfo]:
         return self.jobs + self.extra_jobs
@@ -206,8 +210,11 @@ class WorkloadRuntime:
         self._monitor.start()
 
     # -- public API (what the Carrier uses) --------------------------------
-    def submit(self, spec: TaskSpec) -> str:
-        workload_id = new_uid("wl_")
+    def submit(self, spec: TaskSpec, *, workload_id: str | None = None) -> str:
+        """Submit a task.  ``workload_id`` may be pre-generated by the
+        caller so it can persist the id *before* the first job message can
+        possibly be emitted (closes the metadata race on instant jobs)."""
+        workload_id = workload_id or new_uid("wl_")
         task = _Task(workload_id, spec)
         with self._lock:
             self.tasks[workload_id] = task
@@ -500,7 +507,12 @@ class WorkloadRuntime:
 
     def _task_terminal(self, task: _Task) -> bool:
         with task.lock:
-            return all(j.state in _TERMINAL_JOB for j in task.per_index())
+            if task.terminal:
+                return True
+            if all(j.state in _TERMINAL_JOB for j in task.per_index()):
+                task.terminal = True
+                return True
+            return False
 
     # -- monitor: drained sites + speculative execution ----------------------
     def _median_duration(self) -> float | None:
@@ -515,7 +527,9 @@ class WorkloadRuntime:
             with self._lock:
                 if self._stop:
                     return
-                tasks = list(self.tasks.values())
+                # terminal tasks can never need drain-failover or
+                # speculation again — skip them instead of rescanning
+                tasks = [t for t in self.tasks.values() if not t.terminal]
             for task in tasks:
                 requeue: list[JobInfo] = []
                 with task.lock:
