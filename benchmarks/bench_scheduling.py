@@ -58,6 +58,65 @@ def _overhead_scenario(n_works: int, n_jobs: int, *, repeats: int = 2) -> dict[s
     }
 
 
+def _lifecycle_scenario(
+    n_works: int, n_jobs: int, *, cycles: int = 100
+) -> dict[str, Any]:
+    """Control-plane storm: suspend/resume the request through the
+    lifecycle kernel while ``n_works × n_jobs`` jobs are in flight.  Each
+    command is a claimed, validated, cascading transaction over every
+    transform — the cost of centralizing lifecycle authority."""
+    from repro.common.exceptions import ReproError
+    from repro.runtime.executor import WorkloadRuntime
+
+    total = n_works * n_jobs
+    runtime = WorkloadRuntime(workers=32)
+    orch = Orchestrator(poll_period_s=0.02, runtime=runtime)
+    with orch:
+        register_task(
+            "bench_slow", lambda **kw: __import__("time").sleep(0.05) or {}
+        )
+        wf = Workflow("lifecycle_storm")
+        for i in range(n_works):
+            wf.add_work(Work(f"w{i}", task="bench_slow", n_jobs=n_jobs))
+        rid = orch.submit_workflow(wf)
+        deadline = time.monotonic() + 30
+        while orch.request_status(rid)["status"] != "Transforming":
+            if time.monotonic() > deadline:
+                raise RuntimeError("request never started transforming")
+            time.sleep(0.005)
+        done = 0
+        t0 = time.perf_counter()
+        for _ in range(cycles):
+            try:
+                orch.suspend_request(rid)
+                done += 1
+                orch.resume_request(rid)
+                done += 1
+            except ReproError:
+                # distinguish "request went terminal mid-storm" (stop) from
+                # a transient busy-claim loss (keep commanding)
+                st = orch.request_status(rid)["status"]
+                if st not in ("Transforming", "Suspended"):
+                    break
+        dt = time.perf_counter() - t0
+        try:
+            orch.resume_request(rid)
+        except ReproError:
+            pass
+        orch.wait_request(rid, timeout=240)
+    return {
+        "name": f"scheduling/lifecycle_commands/{total}_jobs_in_flight",
+        # us_per_call is meaningless with zero successful commands: report 0
+        # and let `commands: 0` flag the degenerate run
+        "us_per_call": (dt * 1e6 / done) if done else 0.0,
+        "derived": {
+            "commands": done,
+            "commands_per_s": int(done / dt) if dt and done else 0,
+            "n_works": n_works,
+        },
+    }
+
+
 def run() -> list[dict[str, Any]]:
     register_task("bench_noop", lambda **kw: {})
     rows: list[dict[str, Any]] = []
@@ -81,7 +140,10 @@ def run() -> list[dict[str, Any]]:
     # orchestration overhead per job at scale
     if _SMOKE:
         rows.append(_overhead_scenario(16, 4, repeats=1))
+        rows.append(_lifecycle_scenario(8, 2, cycles=10))
     else:
         rows.append(_overhead_scenario(64, 4, repeats=3))   # overhead_256_jobs
         rows.append(_overhead_scenario(128, 16))            # overhead_2048_jobs
+        # suspend/resume storm over 256 in-flight jobs (lifecycle kernel)
+        rows.append(_lifecycle_scenario(64, 4, cycles=100))
     return rows

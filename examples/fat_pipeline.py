@@ -25,7 +25,9 @@ def make_design(seed):
 def simulate(design):
     """'Simulate + reconstruct' one design; return its resolution metric."""
     import math
+    import time
 
+    time.sleep(0.2)  # long enough to pause mid-flight (control-plane demo)
     r, L = design["radius"], design["layers"]
     resolution = abs(r - 1.3) + 0.05 * abs(L - 5) + 0.01 * math.sin(r * L)
     return {"design": design, "resolution": resolution}
@@ -38,15 +40,41 @@ def summarize(results):
             "n_evaluated": len(results)}
 
 
+def _pause_resume_demo(orch, request_id) -> None:
+    """Exercise the lifecycle kernel's control plane on an in-flight
+    request: suspend (drain-style pause), then resume where it left off.
+    Over REST this is client.suspend(...)/client.resume(...) — see
+    examples/quickstart.py; here we call the same kernel commands through
+    the orchestrator."""
+    import time
+
+    from repro.common.exceptions import ReproError
+
+    for _ in range(200):
+        if orch.request_status(request_id)["status"] == "Transforming":
+            break
+        time.sleep(0.01)
+    try:
+        orch.suspend_request(request_id)
+        print(f"  paused request {request_id} "
+              f"({orch.request_status(request_id)['status']}) — resuming")
+        orch.resume_request(request_id)
+    except ReproError:
+        pass  # it finished before we could pause — nothing to demo
+
+
 def main() -> None:
     runtime = WorkloadRuntime(sites={"grid": 4, "hpc": 4}, workers=8)
     with Orchestrator(poll_period_s=0.05, runtime=runtime) as orch:
-        with orch.session():
+        with orch.session() as sess:
             best = None
             # iterative refinement loop — plain Python as the Workflow
             for round_i in range(3):
                 designs = [make_design.submit(round_i * 10 + i) for i in range(4)]
                 sims = [simulate.submit(d.result(timeout=60)) for d in designs]
+                if round_i == 0:
+                    # control-plane detour: pause/resume a live simulation
+                    _pause_resume_demo(orch, sess.requests[-1])
                 results = [s.result(timeout=60) for s in sims]
                 summary = summarize.submit(results).result(timeout=60)
                 print(f"round {round_i}: best resolution "

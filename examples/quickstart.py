@@ -2,15 +2,19 @@
 
 Builds a conditional DAG workflow (template style), submits it to an
 in-process orchestrator (database + event bus + agents + workload
-runtime), then runs a Function-as-a-Task submission — the paper's two
-workflow representation styles side by side.
+runtime), runs a Function-as-a-Task submission — the paper's two workflow
+representation styles side by side — and finishes with the REST control
+plane: pausing and resuming a live request through the lifecycle kernel.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 from __future__ import annotations
 
+import time
+
 from repro.core import Condition, Ref, Work, Workflow, register_task, work_function
 from repro.orchestrator import Orchestrator
+from repro.rest import RestApp, RestClient, RestServer
 
 
 def main() -> None:
@@ -52,6 +56,29 @@ def main() -> None:
             print(f"fib(20) via distributed FaT = {future.result(timeout=30)}")
             batch = fib.map([5, 10, 15])
             print(f"fib map [5,10,15] = {batch.result(timeout=30)}")
+
+        # ---- control plane over REST (lifecycle kernel commands) --------
+        register_task("slow_step", lambda **kw: time.sleep(0.3) or {})
+        srv = RestServer(RestApp(orch)).start()
+        try:
+            cli = RestClient(srv.url)
+            cli.register("ops", ["users"])
+            cli.login("ops")
+            wf2 = Workflow("pausable")
+            for i in range(3):
+                wf2.add_work(Work(f"step{i}", task="slow_step", n_jobs=2))
+            rid = cli.submit(wf2)
+            deadline = time.monotonic() + 15
+            while cli.status(rid)["status"] != "Transforming":
+                if time.monotonic() > deadline:
+                    raise TimeoutError(f"request {rid} never started")
+                time.sleep(0.02)
+            cli.suspend(rid)  # one transaction: request + every transform
+            print(f"request {rid} suspended: {cli.status(rid)['status']}")
+            cli.resume(rid)   # picks up exactly where it left off
+            print(f"request {rid} resumed -> {cli.wait(rid, timeout=30)}")
+        finally:
+            srv.stop()
 
 
 if __name__ == "__main__":

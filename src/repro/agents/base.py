@@ -55,6 +55,9 @@ class BaseAgent:
         self.bus: BaseEventBus = orch.bus
         self.stores = orch.stores
         self.db = orch.db
+        #: the lifecycle kernel: the only path to status mutations and
+        #: event publication (transactional outbox)
+        self.kernel = orch.kernel
         self.poll_period_s = poll_period_s
         self.batch_size = batch_size
         self.replica = replica
@@ -188,10 +191,9 @@ class BaseAgent:
             return None
 
     def publish(self, *events: Event) -> None:
-        if len(events) == 1:
-            self.bus.publish(events[0])
-        elif events:
-            self.bus.publish_many(events)
+        """Publish through the lifecycle kernel (transactional outbox when
+        durable) — agents never talk to the bus directly."""
+        self.kernel.emit(*events)
 
     def defer(self, seconds: float) -> float:
         return utc_now_ts() + seconds

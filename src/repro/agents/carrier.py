@@ -20,13 +20,18 @@ batch of due rows in one ``claim_ready`` statement, event handlers merge a
 consumed batch into grouped store operations, and the Receiver drains the
 runtime's message queue in one sweep — grouping ``job_finished`` by
 workload, caching ``output_content_ids`` per processing, and emitting one
-merged ``data_available`` event plus one ``set_status`` per sweep.
+merged ``data_available`` event plus one contents flip per sweep.
+
+Every status mutation and event publication goes through the lifecycle
+kernel (``repro.lifecycle``): agents PLAN from reads, then hand the plan to
+``kernel.apply`` which validates transitions against the current row state
+and commits writes + outbox events in one transaction.
 """
 from __future__ import annotations
 
 import logging
 import queue
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 from repro.common.constants import (
     ContentStatus,
@@ -37,7 +42,7 @@ from repro.common.constants import (
 )
 from repro.common.exceptions import SchedulingError
 from repro.common.utils import new_uid, utc_now_ts
-from repro.core.statemachine import check_transition
+from repro.lifecycle import LifecycleTx, transform_status_for_processing
 from repro.agents.base import BaseAgent
 from repro.eventbus.events import (
     Event,
@@ -172,25 +177,42 @@ class Submitter(BaseAgent):
         if out_ids is None:
             out_ids = self.stores["contents"].output_ids_by_transform(transform_id)
         meta.update({"workload_id": workload_id, "output_content_ids": out_ids})
-        check_transition("processing", row["status"], ProcessingStatus.SUBMITTING)
-        with self.db.batch():  # coalesce the state writes into one tx
-            self.stores["processings"].update(
+
+        def plan(txn: LifecycleTx) -> None:
+            # New→Submitting→Submitted collapsed into one validated write.
+            # strict=False: a concurrent cancel since the claim turns this
+            # into a no-op and the workload is never submitted.
+            applied = txn.transition(
+                "processing",
                 processing_id,
-                status=ProcessingStatus.SUBMITTED,
+                ProcessingStatus.SUBMITTED,
+                via=ProcessingStatus.SUBMITTING,
+                strict=False,
                 workload_id=workload_id,
                 processing_metadata=meta,
                 submitted_at=self.defer(0),
                 next_poll_at=self.defer(self.poll_period_s),
             )
-            self.stores["transforms"].update(
-                transform_id, status=TransformStatus.SUBMITTED
+            if applied is None:
+                return
+            # the transform may have been cancelled since it was prepared —
+            # strict=False loses that race gracefully
+            txn.transition(
+                "transform", transform_id, TransformStatus.SUBMITTED,
+                strict=False,
             )
+
+        if not self.kernel.apply(plan).applied:
+            return  # lost the race to a cancel: nothing was submitted
         try:
             self.orch.runtime.submit(spec, workload_id=workload_id)
         except Exception:
             # the runtime rejected the task: the processing can never run
-            self.stores["processings"].update(
-                processing_id, status=ProcessingStatus.FAILED
+            self.kernel.apply(
+                lambda txn: txn.transition(
+                    "processing", processing_id, ProcessingStatus.FAILED,
+                    strict=False,
+                )
             )
             raise
         if data_aware:
@@ -242,21 +264,22 @@ class Poller(BaseAgent):
 
     def _process_rows(self, rows: list[dict[str, Any]]) -> bool:
         """Two-phase sweep: per row, PLAN from runtime state (reads only,
-        errors isolated); then apply every planned write in ONE
-        transaction; then publish events — strictly after commit, so no
-        consumer ever acts on a pre-commit snapshot."""
+        errors isolated); then hand every planned write to ONE
+        ``kernel.apply`` — state changes and their events commit in one
+        transaction, publication happens strictly after commit."""
         if not rows:
             return False
         try:
             plans = [p for row in rows if (p := self._guarded(self._plan_row, row))]
             if plans:
-                with self.db.batch():
-                    for writes, _ in plans:
+
+                def sweep(txn: LifecycleTx) -> None:
+                    for writes, evs in plans:
                         for write in writes:
-                            write()
-                events = [ev for _, evs in plans for ev in evs]
-                if events:
-                    self.publish(*events)
+                            write(txn)
+                        txn.emit(*evs)
+
+                self._guarded(self.kernel.apply, sweep)
         finally:
             self.stores["processings"].unlock_many(
                 [int(r["processing_id"]) for r in rows]
@@ -265,10 +288,10 @@ class Poller(BaseAgent):
 
     def _plan_row(
         self, row: dict[str, Any]
-    ) -> tuple[list[Any], list[Event]] | None:
+    ) -> tuple[list[Callable[[LifecycleTx], Any]], list[Event]] | None:
         """Phase 1: inspect runtime state and decide — returns (writes,
-        events) where writes are zero-argument store calls to run inside
-        the batch transaction.  No database writes happen here."""
+        events) where writes are ``txn -> None`` calls the kernel runs
+        inside its apply transaction.  No database writes happen here."""
         if row["status"] not in (
             str(ProcessingStatus.SUBMITTED),
             str(ProcessingStatus.RUNNING),
@@ -291,14 +314,13 @@ class Poller(BaseAgent):
             # can resubmit the work.
             ref = float(row.get("submitted_at") or row.get("updated_at") or 0.0)
             if ref and utc_now_ts() - ref > self.orphan_timeout_s:
-                check_transition(
-                    "processing", row["status"], ProcessingStatus.FAILED
-                )
                 return (
                     [
-                        lambda: processings.update(
+                        lambda txn: txn.transition(
+                            "processing",
                             processing_id,
-                            status=ProcessingStatus.FAILED,
+                            ProcessingStatus.FAILED,
+                            strict=False,
                             errors={"orphan": "workload unknown to runtime"},
                         )
                     ],
@@ -310,7 +332,7 @@ class Poller(BaseAgent):
                 )
             return (
                 [
-                    lambda: processings.update(
+                    lambda txn: processings.update(
                         processing_id,
                         next_poll_at=self.defer(self.poll_period_s),
                     )
@@ -318,47 +340,51 @@ class Poller(BaseAgent):
                 [],
             )
         runtime_status = st["status"]
-        writes: list[Any] = []
+        writes: list[Callable[[LifecycleTx], Any]] = []
         events: list[Event] = []
         if runtime_status in _TERMINAL_RUNTIME:
             results = self.orch.runtime.results(workload_id)
             meta["results"] = results
             meta["job_states"] = [j["state"] for j in st["jobs"]]
             new_status = _RUNTIME_TO_PROCESSING[runtime_status]
-            check_transition("processing", row["status"], new_status)
-            writes.append(
-                lambda: processings.update(
+            finished, failed = self._map_outputs(meta, st)
+            transform_id = int(row["transform_id"])
+
+            def finalize(txn: LifecycleTx) -> None:
+                # ONE closure so the contents flip and the events are gated
+                # on the processing transition actually applying — a
+                # concurrent cancel cascade must not leave a cancelled
+                # request with AVAILABLE outputs and a release cascade
+                applied = txn.transition(
+                    "processing",
                     processing_id,
-                    status=new_status,
+                    new_status,
+                    strict=False,
                     processing_metadata=meta,
                     finished_at=self.defer(0),
                 )
-            )
-            finished, failed = self._map_outputs(meta, st)
-            contents = self.stores["contents"]
-            if finished:
-                writes.append(
-                    lambda: contents.set_status(finished, ContentStatus.AVAILABLE)
-                )
-                events.append(data_available_event(0, finished))
-            if failed:
-                writes.append(
-                    lambda: contents.set_status(failed, ContentStatus.FAILED)
-                )
-            events.append(
-                update_transform_event(int(row["transform_id"]), priority=20)
-            )
+                if applied is None:
+                    return
+                if finished:
+                    txn.set_contents(finished, ContentStatus.AVAILABLE)
+                    txn.emit(data_available_event(0, finished))
+                if failed:
+                    txn.set_contents(failed, ContentStatus.FAILED)
+                txn.emit(update_transform_event(transform_id, priority=20))
+
+            writes.append(finalize)
         else:
             new_status = _RUNTIME_TO_PROCESSING.get(
                 runtime_status, ProcessingStatus.RUNNING
             )
             if str(new_status) != row["status"]:
-                check_transition("processing", row["status"], new_status)
                 writes.append(
-                    lambda: processings.update(processing_id, status=new_status)
+                    lambda txn: txn.transition(
+                        "processing", processing_id, new_status, strict=False
+                    )
                 )
             writes.append(
-                lambda: processings.update(
+                lambda txn: processings.update(
                     processing_id,
                     next_poll_at=self.defer(self.poll_period_s * 2),
                 )
@@ -403,7 +429,7 @@ class Receiver(BaseAgent):
     The queue is drained in ONE sweep per cycle: ``job_finished`` messages
     are grouped by workload, output content ids are cached per processing
     (evicted on ``task_terminal``), and the whole sweep produces a single
-    contents ``set_status`` plus one merged ``data_available`` event."""
+    kernel-applied contents flip plus one merged ``data_available`` event."""
 
     name = "carrier-receiver"
     event_types = ()
@@ -515,6 +541,7 @@ class Receiver(BaseAgent):
                 if 0 <= ji < len(out_ids):
                     finished.append((out_ids[ji], msg.get("site")))
         events: list[Event] = []
+        avail: list[int] = []
         if finished:
             catalog = self.orch.runtime.broker.catalog
             for cid, site in finished:
@@ -523,7 +550,6 @@ class Receiver(BaseAgent):
                     # the replica so downstream placement is data-aware
                     catalog.register(cid, site)
             avail = [cid for cid, _ in finished]
-            self.stores["contents"].set_status(avail, ContentStatus.AVAILABLE)
             events.append(data_available_event(0, avail))
         for pid in dict.fromkeys(terminal_pids):
             events.append(
@@ -541,8 +567,14 @@ class Receiver(BaseAgent):
         # stay bounded
         for pid in terminal_pids:
             self._out_ids.pop(pid, None)
-        if events:
-            self.publish(*events)
+        if avail or events:
+            # the contents flip and its data_available event commit together
+            def sweep(txn: LifecycleTx) -> None:
+                if avail:
+                    txn.set_contents(avail, ContentStatus.AVAILABLE)
+                txn.emit(*events)
+
+            self.kernel.apply(sweep)
         return bool(events)
 
 
@@ -592,19 +624,31 @@ class Trigger(BaseAgent):
 
     def release(self, available_ids: list[int]) -> None:
         contents = self.stores["contents"]
-        activated = contents.release_dependents(available_ids)
-        if not activated:
-            return
-        # group activated contents by transform with one id-only query
-        # (was a contents.get per activated row), then flip them all
-        # Available in one statement
-        tmap = contents.transform_ids(activated)
         by_transform: dict[int, list[int]] = {}
-        for cid in activated:
-            tid = tmap.get(cid)
-            if tid is not None:
-                by_transform.setdefault(tid, []).append(cid)
-        contents.set_status(activated, ContentStatus.AVAILABLE)
+
+        def plan(txn: LifecycleTx) -> None:
+            activated = txn.release_dependents(available_ids)
+            if not activated:
+                return
+            # group activated contents by transform with one id-only query
+            # (was a contents.get per activated row), then flip them all
+            # Available in one statement
+            tmap = contents.transform_ids(activated)
+            for cid in activated:
+                tid = tmap.get(cid)
+                if tid is not None:
+                    by_transform.setdefault(tid, []).append(cid)
+            txn.set_contents(activated, ContentStatus.AVAILABLE)
+            events = [update_transform_event(tid) for tid in by_transform]
+            # cascade: newly available contents may unlock further layers
+            events.append(data_available_event(0, activated))
+            txn.emit(*events)
+
+        self.kernel.apply(plan)
+        if not by_transform:
+            return
+        # runtime job release is a post-commit side effect: consumers of the
+        # committed events and the runtime agree on the contents' status
         wl_map = self.stores["processings"].workload_map(list(by_transform))
         for tid, ids in by_transform.items():
             for wl in wl_map.get(tid, ()):
@@ -612,10 +656,6 @@ class Trigger(BaseAgent):
                     self.orch.runtime.release_jobs_for_contents(wl, ids)
                 except Exception:  # noqa: BLE001 - workload may be gone
                     pass
-        events = [update_transform_event(tid) for tid in by_transform]
-        # cascade: newly available contents may unlock further layers
-        events.append(data_available_event(0, activated))
-        self.publish(*events)
 
 
 class Finisher(BaseAgent):
@@ -681,10 +721,12 @@ class Finisher(BaseAgent):
                 elif plan is not None:
                     plans.append(plan)
             if plans or defer_short or defer_long:
-                with self.db.batch():
-                    for writes, _ in plans:
+
+                def sweep(txn: LifecycleTx) -> None:
+                    for writes, evs in plans:
                         for write in writes:
-                            write()
+                            write(txn)
+                        txn.emit(*evs)
                     if defer_short:
                         transforms.update_many(
                             defer_short,
@@ -695,9 +737,8 @@ class Finisher(BaseAgent):
                             defer_long,
                             next_poll_at=self.defer(self.poll_period_s * 4),
                         )
-                events = [ev for _, evs in plans for ev in evs]
-                if events:
-                    self.publish(*events)
+
+                self._guarded(self.kernel.apply, sweep)
         finally:
             transforms.unlock_many([int(r["transform_id"]) for r in rows])
         return bool(plans)
@@ -724,37 +765,31 @@ class Finisher(BaseAgent):
             return "defer_long"
         latest = prows[-1]
         pstat = latest["status"]
-        terminal_map = {
-            str(ProcessingStatus.FINISHED): TransformStatus.FINISHED,
-            str(ProcessingStatus.SUBFINISHED): TransformStatus.SUBFINISHED,
-            str(ProcessingStatus.FAILED): TransformStatus.FAILED,
-            str(ProcessingStatus.TIMEOUT): TransformStatus.FAILED,
-            str(ProcessingStatus.CANCELLED): TransformStatus.CANCELLED,
-        }
-        if pstat not in terminal_map:
+        # the kernel's rollup table: terminal processing → transform status
+        new_status = transform_status_for_processing(pstat)
+        if new_status is None:
             return "defer_short"
         tmpl = (trow["work"] or {}).get("template") or {}
         meta = latest.get("processing_metadata") or {}
         results = self._fold_results(tmpl, meta.get("results") or [])
-        new_status = terminal_map[pstat]
-        check_transition("transform", trow["status"], new_status)
         tmeta = trow.get("transform_metadata") or {}
         tmeta["results"] = results
         if colls is None:
             colls = self.stores["collections"].by_transform(transform_id)
         coll_ids = [int(c["coll_id"]) for c in colls]
         collections = self.stores["collections"]
-        transforms = self.stores["transforms"]
-        messages = self.stores["messages"]
         request_id = int(trow["request_id"])
 
-        def _apply() -> None:
+        def _apply(txn: LifecycleTx) -> None:
+            applied = txn.transition(
+                "transform", transform_id, new_status, strict=False,
+                transform_metadata=tmeta,
+            )
+            if applied is None:
+                return  # lost the race to a peer replica: nothing to finalize
             for cid in coll_ids:  # refresh collection counters
                 collections.refresh_counters(cid)
-            transforms.update(
-                transform_id, status=new_status, transform_metadata=tmeta
-            )
-            messages.add(
+            txn.message(
                 "work_finished",
                 MessageDestination.OUTSIDE,
                 {

@@ -13,34 +13,23 @@ from typing import Any
 from repro.common.constants import (
     EventType,
     RequestStatus,
-    TransformStatus,
     WorkStatus,
-    TERMINAL_TRANSFORM_STATES,
 )
-from repro.common.exceptions import NotFoundError
-from repro.core.statemachine import check_transition
+from repro.common.exceptions import NotFoundError, WorkflowError
 from repro.core.work import Work
 from repro.core.workflow import Workflow
+from repro.lifecycle import (
+    LifecycleTx,
+    request_status_for_work,
+    work_status_for_transform,
+)
 from repro.agents.base import BaseAgent
 from repro.eventbus.events import (
     Event,
+    abort_request_event,
     new_transform_event,
     update_request_event,
 )
-
-_TF_TO_WORK = {
-    TransformStatus.FINISHED: WorkStatus.FINISHED,
-    TransformStatus.SUBFINISHED: WorkStatus.SUBFINISHED,
-    TransformStatus.FAILED: WorkStatus.FAILED,
-    TransformStatus.CANCELLED: WorkStatus.CANCELLED,
-}
-
-_WF_TO_REQ = {
-    WorkStatus.FINISHED: RequestStatus.FINISHED,
-    WorkStatus.SUBFINISHED: RequestStatus.SUBFINISHED,
-    WorkStatus.FAILED: RequestStatus.FAILED,
-    WorkStatus.CANCELLED: RequestStatus.CANCELLED,
-}
 
 
 class Clerk(BaseAgent):
@@ -99,8 +88,10 @@ class Clerk(BaseAgent):
         for rid in dict.fromkeys(aborts):
             self._guarded(self.process_request, rid, abort=True)
         updates = [r for r in dict.fromkeys(updates) if r not in aborts]
-        # same skip-set as process_request: anything not fully terminal may
-        # still progress (FAILED/SUBFINISHED can retry into TRANSFORMING)
+        # anything not fully terminal may still progress
+        # (FAILED/SUBFINISHED can retry into TRANSFORMING); SUSPENDED is
+        # deliberately absent — a suspended request must stay frozen until
+        # the kernel's resume command re-enters it at TRANSFORMING
         rows = self.stores["requests"].claim_by_ids(
             updates,
             [
@@ -109,7 +100,6 @@ class Clerk(BaseAgent):
                 RequestStatus.TRANSFORMING,
                 RequestStatus.FAILED,
                 RequestStatus.SUBFINISHED,
-                RequestStatus.SUSPENDED,
                 RequestStatus.CANCELLING,
             ],
         )
@@ -141,6 +131,19 @@ class Clerk(BaseAgent):
 
     # -- core logic -----------------------------------------------------------
     def process_request(self, request_id: int, *, abort: bool = False) -> None:
+        if abort:
+            # cancel cascade is kernel-owned (it claims the row itself)
+            self._wf_cache.pop(request_id, None)
+            try:
+                self.kernel.abort_request(request_id)
+            except NotFoundError:
+                pass
+            except WorkflowError:
+                # the row stayed claimed by a peer past the kernel's spin —
+                # the event is already consumed, so requeue the abort
+                # instead of silently dropping the user's cancel
+                self.publish(abort_request_event(request_id))
+            return
         requests = self.stores["requests"]
         try:
             row = requests.get(request_id)
@@ -155,11 +158,11 @@ class Clerk(BaseAgent):
         if not requests.claim(request_id):
             return
         try:
-            self._process_claimed(row, abort=abort)
+            self._process_claimed(row)
         finally:
             requests.unlock(request_id)
 
-    def _process_claimed(self, row: dict[str, Any], *, abort: bool = False) -> None:
+    def _process_claimed(self, row: dict[str, Any]) -> None:
         request_id = int(row["request_id"])
         if row["status"] in (
             str(RequestStatus.FINISHED),
@@ -168,37 +171,38 @@ class Clerk(BaseAgent):
         ):
             return
         wf, rev = self._load_workflow(request_id, row["workflow"])
-        if abort:
-            self._wf_cache.pop(request_id, None)
-            self._abort(request_id, wf)
-            return
         try:
             progressed = self._sync_from_transforms(request_id, wf)
             wf.expand_loops()
             self._apply_expansions(wf)
-            with self.db.batch():  # transform inserts + request update: one tx
+
+            def plan(txn: LifecycleTx) -> None:
+                # transform inserts + request update + events: one tx
                 created, events = self._launch_ready(request_id, wf)
                 self._retry_failed(request_id, wf)
-                # persist evolved metadata
+                # persist evolved metadata; the kernel validates the rollup
+                # against the request's CURRENT status (a concurrent
+                # suspend/cancel beats a stale snapshot)
                 new_status = self._request_status(wf, row["status"])
-                check_transition("request", row["status"], new_status)
-                self.stores["requests"].update(
+                txn.transition(
+                    "request",
                     request_id,
+                    new_status,
                     workflow=self._persist_blob(request_id, wf, rev),
-                    status=new_status,
                     next_poll_at=self.defer(self.poll_period_s * 4),
                 )
+                if created or progressed:
+                    # more scheduling may be unlocked right away
+                    events.append(update_request_event(request_id))
+                txn.emit(*events)
+
+            self.kernel.apply(plan)
         except BaseException:
             # the (possibly cached) Workflow object was mutated but the
             # transaction rolled back — drop it so the next cycle rebuilds
             # from the last persisted blob instead of a corrupt object
             self._wf_cache.pop(request_id, None)
             raise
-        if created or progressed:
-            # more scheduling may be unlocked right away
-            events.append(update_request_event(request_id))
-        if events:
-            self.publish(*events)
 
     def _sync_from_transforms(self, request_id: int, wf: Workflow) -> bool:
         """Mirror transform rows back into Work metadata."""
@@ -207,13 +211,16 @@ class Clerk(BaseAgent):
             work = wf.works.get(trow["node_id"])
             if work is None:
                 continue
+            meta = trow.get("transform_metadata") or {}
+            if meta.get("superseded"):
+                # a retry (Clerk-local or kernel retry_request) replaced this
+                # row — never re-adopt it into the work
+                continue
             if work.transform_id is None:
                 work.transform_id = int(trow["transform_id"])
             if work.transform_id != int(trow["transform_id"]):
                 continue  # superseded (retry) row
-            status = TransformStatus(trow["status"])
-            new_ws = _TF_TO_WORK.get(status, WorkStatus.RUNNING)
-            meta = trow.get("transform_metadata") or {}
+            new_ws = work_status_for_transform(trow["status"])
             results = meta.get("results")
             if results is not None and work.results != results:
                 work.results = results
@@ -285,29 +292,7 @@ class Clerk(BaseAgent):
 
     def _request_status(self, wf: Workflow, old: str) -> RequestStatus:
         if wf.is_terminal():
-            return _WF_TO_REQ.get(wf.overall_status(), RequestStatus.FAILED)
+            return request_status_for_work(wf.overall_status())
         if old == str(RequestStatus.NEW):
             return RequestStatus.TRANSFORMING
         return RequestStatus(old) if old != str(RequestStatus.READY) else RequestStatus.TRANSFORMING
-
-    def _abort(self, request_id: int, wf: Workflow) -> None:
-        transforms = self.stores["transforms"]
-        for trow in transforms.by_request(request_id):
-            if trow["status"] not in [str(s) for s in TERMINAL_TRANSFORM_STATES]:
-                transforms.update(trow["transform_id"], status=TransformStatus.CANCELLED)
-                for prow in self.stores["processings"].by_transform(
-                    trow["transform_id"]
-                ):
-                    meta = prow.get("processing_metadata") or {}
-                    wl = meta.get("workload_id") or prow.get("workload_id")
-                    if wl:
-                        try:
-                            self.orch.runtime.kill(wl)
-                        except Exception:  # noqa: BLE001
-                            pass
-        for work in wf.works.values():
-            if work.status in (WorkStatus.NEW, WorkStatus.READY, WorkStatus.RUNNING):
-                work.status = WorkStatus.CANCELLED
-        self.stores["requests"].update(
-            request_id, workflow=wf.to_dict(), status=RequestStatus.CANCELLED
-        )

@@ -38,6 +38,14 @@ class Coordinator(BaseAgent):
             if n:
                 self.recovered += n
                 did = True
+        # lifecycle-outbox recovery: rows committed by a replica that died
+        # between commit and drain (or whose drain claim went stale) are
+        # requeued and published here — the crash-safety half of the
+        # transactional outbox
+        n = self.kernel.recover(stale_s=self.stale_claim_s)
+        if n:
+            self.recovered += n
+            did = True
         # keep the Conductor's outbox moving even when nothing publishes
         self.publish(msg_outbox_event())
         return did

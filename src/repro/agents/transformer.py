@@ -22,7 +22,7 @@ from repro.common.constants import (
     ProcessingStatus,
     TransformStatus,
 )
-from repro.core.statemachine import check_transition
+from repro.lifecycle import LifecycleTx
 from repro.agents.base import BaseAgent
 from repro.eventbus.events import submit_processing_event
 
@@ -78,8 +78,22 @@ class Transformer(BaseAgent):
         resources = tmpl.get("resources") or {}
         data_aware = bool(resources.get("data_aware"))
         site = self._broker_site(tmpl.get("site"), resources)
-        check_transition("transform", row["status"], TransformStatus.SUBMITTING)
-        with self.db.batch():  # collections+contents+processing+status: one tx
+
+        def plan(txn: LifecycleTx) -> None:
+            # collections+contents+processing+status+event: one transaction.
+            # Transition FIRST: if a concurrent suspend/cancel moved the row
+            # since it was claimed, the kernel skips it and nothing else in
+            # this plan runs — no orphan collections/processings.
+            applied = txn.transition(
+                "transform",
+                transform_id,
+                TransformStatus.SUBMITTING,
+                strict=False,
+                site=site,
+                next_poll_at=self.defer(self.poll_period_s * 4),
+            )
+            if applied is None:
+                return
             input_ids, job_contents = self._register_collections(
                 request_id, transform_id, tmpl, data_aware
             )
@@ -93,13 +107,9 @@ class Transformer(BaseAgent):
                     "data_aware": data_aware,
                 },
             )
-            self.stores["transforms"].update(
-                transform_id,
-                status=TransformStatus.SUBMITTING,
-                site=site,
-                next_poll_at=self.defer(self.poll_period_s * 4),
-            )
-        self.publish(submit_processing_event(processing_id))
+            txn.emit(submit_processing_event(processing_id))
+
+        self.kernel.apply(plan)
 
     def _register_collections(
         self,

@@ -1,133 +1,15 @@
-"""Work/Request/Processing lifecycle state machines (paper §3.1.2).
+"""Compatibility shim — the state machines moved to ``repro.lifecycle``.
 
-"iDDS employs a state machine to track the lifecycle of each Work unit,
-from submission through execution to completion or failure."
-
-Transitions outside the table raise ``WorkflowError`` — agents rely on this
-to detect races that slipped past the idempotent-claim layer.
+The transition tables and ``check_transition`` now live in
+``repro.lifecycle.transitions`` (the lifecycle kernel is their only
+writer); this module re-exports them so existing imports keep working.
 """
 from __future__ import annotations
 
-from typing import Mapping
-
-from repro.common.constants import (
-    ProcessingStatus,
-    RequestStatus,
-    TransformStatus,
+from repro.lifecycle.transitions import (  # noqa: F401
+    PROCESSING_TRANSITIONS,
+    REQUEST_TRANSITIONS,
+    TRANSFORM_TRANSITIONS,
+    can_transition,
+    check_transition,
 )
-from repro.common.exceptions import WorkflowError
-
-REQUEST_TRANSITIONS: Mapping[RequestStatus, frozenset[RequestStatus]] = {
-    RequestStatus.NEW: frozenset(
-        {RequestStatus.READY, RequestStatus.TRANSFORMING, RequestStatus.FAILED,
-         RequestStatus.FINISHED, RequestStatus.SUBFINISHED,  # empty workflow
-         RequestStatus.CANCELLING, RequestStatus.CANCELLED}
-    ),
-    RequestStatus.READY: frozenset(
-        {RequestStatus.TRANSFORMING, RequestStatus.FAILED,
-         RequestStatus.CANCELLING, RequestStatus.CANCELLED}
-    ),
-    RequestStatus.TRANSFORMING: frozenset(
-        {RequestStatus.TRANSFORMING, RequestStatus.FINISHED, RequestStatus.SUBFINISHED,
-         RequestStatus.FAILED, RequestStatus.CANCELLING, RequestStatus.CANCELLED,
-         RequestStatus.SUSPENDED, RequestStatus.EXPIRED}
-    ),
-    RequestStatus.CANCELLING: frozenset(
-        {RequestStatus.CANCELLED, RequestStatus.FAILED}
-    ),
-    RequestStatus.SUSPENDED: frozenset(
-        {RequestStatus.TRANSFORMING, RequestStatus.CANCELLED, RequestStatus.EXPIRED}
-    ),
-    # terminal states
-    RequestStatus.FINISHED: frozenset(),
-    RequestStatus.SUBFINISHED: frozenset({RequestStatus.TRANSFORMING}),  # retry
-    RequestStatus.FAILED: frozenset({RequestStatus.TRANSFORMING}),      # retry
-    RequestStatus.CANCELLED: frozenset(),
-    RequestStatus.EXPIRED: frozenset(),
-}
-
-TRANSFORM_TRANSITIONS: Mapping[TransformStatus, frozenset[TransformStatus]] = {
-    TransformStatus.NEW: frozenset(
-        {TransformStatus.READY, TransformStatus.SUBMITTING,  # atomic prep+submit
-         TransformStatus.FAILED, TransformStatus.CANCELLED}
-    ),
-    TransformStatus.READY: frozenset(
-        {TransformStatus.TRANSFORMING, TransformStatus.SUBMITTING,
-         TransformStatus.FAILED, TransformStatus.CANCELLED}
-    ),
-    TransformStatus.TRANSFORMING: frozenset(
-        {TransformStatus.SUBMITTING, TransformStatus.FAILED,
-         TransformStatus.CANCELLED}
-    ),
-    TransformStatus.SUBMITTING: frozenset(
-        {TransformStatus.SUBMITTED, TransformStatus.FAILED,
-         TransformStatus.CANCELLED}
-    ),
-    TransformStatus.SUBMITTED: frozenset(
-        {TransformStatus.RUNNING, TransformStatus.FINISHED,
-         TransformStatus.SUBFINISHED, TransformStatus.FAILED,
-         TransformStatus.CANCELLED}
-    ),
-    TransformStatus.RUNNING: frozenset(
-        {TransformStatus.RUNNING, TransformStatus.FINISHED,
-         TransformStatus.SUBFINISHED, TransformStatus.FAILED,
-         TransformStatus.CANCELLED, TransformStatus.SUSPENDED}
-    ),
-    TransformStatus.SUSPENDED: frozenset(
-        {TransformStatus.RUNNING, TransformStatus.CANCELLED}
-    ),
-    # terminal-ish
-    TransformStatus.FINISHED: frozenset(),
-    TransformStatus.SUBFINISHED: frozenset(
-        {TransformStatus.READY}  # retry path re-prepares the transform
-    ),
-    TransformStatus.FAILED: frozenset({TransformStatus.READY}),
-    TransformStatus.CANCELLED: frozenset(),
-}
-
-PROCESSING_TRANSITIONS: Mapping[ProcessingStatus, frozenset[ProcessingStatus]] = {
-    ProcessingStatus.NEW: frozenset(
-        {ProcessingStatus.SUBMITTING, ProcessingStatus.CANCELLED,
-         ProcessingStatus.FAILED}
-    ),
-    ProcessingStatus.SUBMITTING: frozenset(
-        {ProcessingStatus.SUBMITTED, ProcessingStatus.FAILED,
-         ProcessingStatus.CANCELLED}
-    ),
-    ProcessingStatus.SUBMITTED: frozenset(
-        {ProcessingStatus.RUNNING, ProcessingStatus.FINISHED,
-         ProcessingStatus.SUBFINISHED, ProcessingStatus.FAILED,
-         ProcessingStatus.TIMEOUT, ProcessingStatus.CANCELLED}
-    ),
-    ProcessingStatus.RUNNING: frozenset(
-        {ProcessingStatus.RUNNING, ProcessingStatus.FINISHED,
-         ProcessingStatus.SUBFINISHED, ProcessingStatus.FAILED,
-         ProcessingStatus.TIMEOUT, ProcessingStatus.CANCELLED}
-    ),
-    ProcessingStatus.FINISHED: frozenset(),
-    ProcessingStatus.SUBFINISHED: frozenset(),
-    ProcessingStatus.FAILED: frozenset(),
-    ProcessingStatus.TIMEOUT: frozenset(),
-    ProcessingStatus.CANCELLED: frozenset(),
-}
-
-
-def check_transition(kind: str, old: object, new: object) -> None:
-    """Raise WorkflowError when old→new is not a legal transition."""
-    table: Mapping
-    if kind == "request":
-        table, enum_cls = REQUEST_TRANSITIONS, RequestStatus
-    elif kind == "transform":
-        table, enum_cls = TRANSFORM_TRANSITIONS, TransformStatus
-    elif kind == "processing":
-        table, enum_cls = PROCESSING_TRANSITIONS, ProcessingStatus
-    else:
-        raise WorkflowError(f"unknown state-machine kind {kind!r}")
-    old_s = enum_cls(str(old))
-    new_s = enum_cls(str(new))
-    if old_s == new_s:
-        return
-    if new_s not in table[old_s]:
-        raise WorkflowError(
-            f"illegal {kind} transition {old_s.value} -> {new_s.value}"
-        )

@@ -15,7 +15,7 @@ and the Data Carousel file-level staging (§4.1).
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 4
+SCHEMA_VERSION = 5
 
 _V1 = [
     """
@@ -186,6 +186,28 @@ _V4 = [
     "CREATE INDEX idx_processings_workload ON processings(workload_id)",
 ]
 
+_V5 = [
+    # Lifecycle-kernel transactional outbox: state changes and the events
+    # they raise commit in ONE transaction; a post-commit drain publishes
+    # rows to the bus (claimed idempotently, so replicas never
+    # double-publish) and deletes them.  Rows here are events the bus has
+    # not yet seen — never a long-lived archive.
+    """
+    CREATE TABLE outbox (
+        outbox_id       INTEGER PRIMARY KEY AUTOINCREMENT,
+        event_type      TEXT NOT NULL,
+        priority        INTEGER NOT NULL DEFAULT 0,
+        merge_key       TEXT,
+        payload         TEXT,
+        status          TEXT NOT NULL DEFAULT 'New',  -- New | Claimed
+        claimed_by      TEXT,
+        claimed_at      REAL,
+        created_at      REAL NOT NULL
+    )
+    """,
+    "CREATE INDEX idx_outbox_status ON outbox(status, outbox_id)",
+]
+
 # Ordered (version, statements) pairs — forward migrations only, applied in
 # sequence by Database.migrate().
 MIGRATIONS: list[tuple[int, list[str]]] = [
@@ -193,4 +215,5 @@ MIGRATIONS: list[tuple[int, list[str]]] = [
     (2, _V2),
     (3, _V3),
     (4, _V4),
+    (5, _V5),
 ]

@@ -1078,6 +1078,90 @@ class EventStore(_BaseStore):
 
 
 # ---------------------------------------------------------------------------
+# Outbox (lifecycle kernel: transactional event publication)
+# ---------------------------------------------------------------------------
+class OutboxStore(_BaseStore):
+    """Rows are events committed with their state change but not yet
+    published to the bus.  ``add_many`` joins the caller's open
+    ``Database.batch()`` (the kernel's apply transaction); ``claim_new`` is
+    the idempotent-claim primitive that lets N replicas drain one outbox
+    without double-publishing."""
+
+    def add_many(self, events: Sequence[Any]) -> int:
+        if not events:
+            return 0
+        now = utc_now_ts()
+        return self.db.executemany(
+            "INSERT INTO outbox(event_type,priority,merge_key,payload,"
+            "status,created_at) VALUES (?,?,?,?,'New',?)",
+            [
+                (e.type, int(e.priority), e.merge_key, json_dumps(e.payload), now)
+                for e in events
+            ],
+        )
+
+    def claim_new(self, consumer: str, *, limit: int = 256) -> list[dict[str, Any]]:
+        """Atomically claim a batch of unpublished rows (oldest first)."""
+        now = utc_now_ts()
+        sel = (
+            "SELECT outbox_id FROM outbox WHERE status='New' "
+            "ORDER BY outbox_id LIMIT ?"
+        )
+        # read-only pre-check: idle drains must not pay for a write tx
+        if not self.db.query_one(sel.replace("LIMIT ?", "LIMIT 1")):
+            return []
+        if self.db.supports_returning:
+            with self.db.tx() as conn:
+                rows = conn.execute(
+                    "UPDATE outbox SET status='Claimed', claimed_by=?, "
+                    f"claimed_at=? WHERE outbox_id IN ({sel}) RETURNING *",
+                    (consumer, now, limit),
+                ).fetchall()
+        else:
+            with self.db.tx() as conn:
+                ids = [r[0] for r in conn.execute(sel, (limit,)).fetchall()]
+                if not ids:
+                    return []
+                marks = ",".join("?" for _ in ids)
+                conn.execute(
+                    "UPDATE outbox SET status='Claimed', claimed_by=?, "
+                    f"claimed_at=? WHERE outbox_id IN ({marks})",
+                    [consumer, now] + ids,
+                )
+                rows = conn.execute(
+                    f"SELECT * FROM outbox WHERE outbox_id IN ({marks})", ids
+                ).fetchall()
+        out = [_row_to_dict(r) for r in rows]
+        out.sort(key=lambda r: int(r["outbox_id"]))
+        return out
+
+    def delete(self, outbox_ids: Sequence[int]) -> int:
+        if not outbox_ids:
+            return 0
+        n = 0
+        for block in chunked(outbox_ids, 8000):
+            marks = ",".join("?" for _ in block)
+            n += self.db.execute(
+                f"DELETE FROM outbox WHERE outbox_id IN ({marks})", list(block)
+            )
+        return n
+
+    def requeue_stale(self, *, stale_s: float = 30.0) -> int:
+        """Rows a dead replica claimed but never published go back to New
+        (crash recovery — the Coordinator sweeps this)."""
+        cutoff = utc_now_ts() - stale_s
+        return self.db.execute(
+            "UPDATE outbox SET status='New', claimed_by=NULL "
+            "WHERE status='Claimed' AND claimed_at<=?",
+            (cutoff,),
+        )
+
+    def pending_count(self) -> int:
+        row = self.db.query_one("SELECT COUNT(*) AS n FROM outbox")
+        return int(row["n"]) if row else 0
+
+
+# ---------------------------------------------------------------------------
 # Health (agent heartbeats)
 # ---------------------------------------------------------------------------
 class HealthStore(_BaseStore):
@@ -1317,5 +1401,6 @@ def make_stores(db: Database) -> dict[str, Any]:
         "processings": ProcessingStore(db),
         "messages": MessageStore(db),
         "events": EventStore(db),
+        "outbox": OutboxStore(db),
         "health": HealthStore(db),
     }

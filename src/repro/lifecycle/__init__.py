@@ -1,0 +1,28 @@
+"""repro.lifecycle — the transactional lifecycle kernel (paper §3.1.2, §3.4).
+
+One authority owns (a) the legal-transition tables, (b) the cascade/rollup
+rules (terminal-content → processing, transform → request, retry, cancel/
+suspend/expire propagation), and (c) the transactional event outbox that
+makes state-change + event-publication atomic.  Agents are thin adapters
+around ``LifecycleKernel.apply``.
+"""
+from repro.lifecycle.kernel import (  # noqa: F401
+    LifecycleKernel,
+    LifecycleTx,
+    Plan,
+)
+from repro.lifecycle.transitions import (  # noqa: F401
+    PROCESSING_TRANSITIONS,
+    PROCESSING_TO_TRANSFORM,
+    REQUEST_TRANSITIONS,
+    RETRY_EDGES,
+    TABLES,
+    TRANSFORM_TO_WORK,
+    TRANSFORM_TRANSITIONS,
+    WORK_TO_REQUEST,
+    can_transition,
+    check_transition,
+    request_status_for_work,
+    transform_status_for_processing,
+    work_status_for_transform,
+)

@@ -1,0 +1,512 @@
+"""The lifecycle kernel: ONE transactional transition engine + event outbox.
+
+The paper tracks every Request/Transform/Processing through an explicit
+state machine with message-driven agents reacting to transitions (§3.1.2,
+§3.4).  Here that authority is a single object:
+
+* **transition engine** — every status mutation goes through
+  ``LifecycleTx.transition``, which validates against the legal-transition
+  tables (``repro.lifecycle.transitions``) using the row's *current*
+  database status read inside the transaction — never a stale snapshot —
+  so two replicas can share one database without divergent decisions;
+* **transactional outbox** — events recorded during an ``apply`` commit in
+  the SAME ``Database.batch()`` transaction as the state writes (schema v5
+  ``outbox`` table) and are published by a drain step strictly after
+  commit.  A consumer therefore never observes an event for a rolled-back
+  transition, and a crash between commit and drain loses nothing: the next
+  drain (any replica's — rows are idempotently claimed) delivers exactly
+  once;
+* **cascade/rollup command surface** — abort/suspend/resume/retry/expire
+  propagate down the request→transform→processing tree (and resume back
+  up) in one transaction, replacing the per-agent reimplementations.
+
+With a non-persistent bus (LocalEventBus) the outbox would add durability
+the bus itself cannot honour, so the kernel skips the table and publishes
+buffered events after commit — same no-events-for-rolled-back-transitions
+guarantee, zero extra write transactions on the hot path.  Persistent
+buses (DBEventBus) get the durable outbox by default.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from contextlib import contextmanager
+from typing import Any, Callable, Iterator, Sequence
+
+from repro.common.constants import (
+    ContentStatus,
+    MessageDestination,
+    ProcessingStatus,
+    RequestStatus,
+    TransformStatus,
+    EventPriority,
+    TERMINAL_REQUEST_STATES,
+    TERMINAL_TRANSFORM_STATES,
+    WorkStatus,
+)
+from repro.common.exceptions import NotFoundError, WorkflowError
+from repro.common.utils import utc_now_ts
+from repro.core.workflow import Workflow
+from repro.db.engine import Database
+from repro.eventbus.base import BaseEventBus
+from repro.eventbus.events import Event, update_request_event
+from repro.lifecycle.transitions import check_transition
+
+logger = logging.getLogger(__name__)
+
+#: kind → (store key / table, primary key column)
+_KIND_TABLE = {
+    "request": ("requests", "request_id"),
+    "transform": ("transforms", "transform_id"),
+    "processing": ("processings", "processing_id"),
+}
+
+#: a Plan is the unit agents hand to ``apply``: called with the live
+#: transaction context, it issues transitions/emits/messages/kills.
+Plan = Callable[["LifecycleTx"], Any]
+
+
+class LifecycleTx:
+    """In-transaction command context.
+
+    All store writes issued through (or during) an ``apply`` join one
+    ``Database.batch()`` transaction; events and runtime kills recorded
+    here are *side effects* and run strictly after commit — so nothing
+    external ever observes a rolled-back transition.
+    """
+
+    def __init__(self, kernel: "LifecycleKernel"):
+        self.kernel = kernel
+        self.stores = kernel.stores
+        self.events: list[Event] = []
+        self.kills: list[str] = []
+        #: (kind, id, new_status) actually applied — introspection/tests
+        self.applied: list[tuple[str, int, str]] = []
+
+    # -- status transitions ------------------------------------------------
+    def current_status(self, kind: str, entity_id: int) -> str:
+        table, pk = _KIND_TABLE[kind]
+        row = self.kernel.db.query_one(
+            f"SELECT status FROM {table} WHERE {pk}=?", (entity_id,)
+        )
+        if row is None:
+            raise NotFoundError(f"{kind} {entity_id} not found")
+        return str(row["status"])
+
+    def transition(
+        self,
+        kind: str,
+        entity_id: int,
+        new_status: Any,
+        *,
+        via: Any = None,
+        strict: bool = True,
+        **fields: Any,
+    ) -> str | None:
+        """Validated status write.  The OLD status is the row's current
+        database value read inside this transaction (never a caller
+        snapshot), so concurrent replicas cannot smuggle an illegal edge
+        through a stale read.  ``via`` validates a collapsed two-hop write
+        (e.g. New→Submitting→Submitted persisted as one Submitted write).
+        ``strict=False`` turns an illegal transition into a logged no-op —
+        the rollup-sweep mode where losing a race to a peer replica is
+        normal.  Extra ``fields`` are written with the status (and still
+        written when the status is already current)."""
+        table, _ = _KIND_TABLE[kind]
+        old = self.current_status(kind, entity_id)
+        new = str(new_status)
+        if old != new:
+            try:
+                if via is not None:
+                    check_transition(kind, old, via)
+                    check_transition(kind, str(via), new)
+                else:
+                    check_transition(kind, old, new)
+            except WorkflowError:
+                if strict:
+                    raise
+                logger.debug(
+                    "lifecycle: skipping illegal %s %d transition %s -> %s",
+                    kind, entity_id, old, new,
+                )
+                return None
+        self.stores[table].update(entity_id, status=new_status, **fields)
+        self.applied.append((kind, entity_id, new))
+        return new
+
+    # -- content status (no transition table: contents are data, not work) --
+    def set_contents(self, content_ids: Sequence[int], status: ContentStatus) -> int:
+        return self.stores["contents"].set_status(content_ids, status)
+
+    def release_dependents(self, available_ids: Sequence[int]) -> list[int]:
+        """Fine-grained DAG release (dep_count decrement + activation),
+        inside this transaction."""
+        return self.stores["contents"].release_dependents(available_ids)
+
+    # -- side effects (run after commit) -----------------------------------
+    def emit(self, *events: Event) -> None:
+        """Queue events for post-commit publication (via the outbox when
+        the kernel is durable)."""
+        self.events.extend(events)
+
+    def message(
+        self,
+        msg_type: str,
+        destination: MessageDestination,
+        content: Any,
+        **ids: Any,
+    ) -> int:
+        """Append an outbound message (Conductor outbox) in-transaction."""
+        return self.stores["messages"].add(msg_type, destination, content, **ids)
+
+    def kill(self, workload_id: str) -> None:
+        """Request a runtime workload kill, executed after commit."""
+        self.kills.append(workload_id)
+
+
+class LifecycleKernel:
+    """Central transition authority shared by every agent and the REST
+    control plane.  Thread-safe: each ``apply`` is one transaction on the
+    calling thread."""
+
+    def __init__(
+        self,
+        db: Database,
+        stores: dict[str, Any],
+        bus: BaseEventBus,
+        *,
+        runtime: Any = None,
+        consumer_id: str = "kernel-0",
+        durable: bool | None = None,
+    ):
+        self.db = db
+        self.stores = stores
+        self.bus = bus
+        self.runtime = runtime
+        self.consumer_id = consumer_id
+        #: durable = events ride the persistent outbox table; default: only
+        #: when the bus itself is persistent (a durable outbox feeding a
+        #: lossy in-process bus buys nothing and costs hot-path writes)
+        self.durable = bus.persistent if durable is None else durable
+
+    # -- the one write path ------------------------------------------------
+    def apply(self, *plans: Plan, drain: bool = True) -> LifecycleTx:
+        """Run ``plans`` inside ONE write transaction; after commit, execute
+        the recorded side effects (runtime kills, event publication).  On
+        any exception the whole transaction rolls back and no side effect
+        runs.  ``drain=False`` commits outbox rows without publishing them
+        (crash-window simulation in tests; the Coordinator's recovery drain
+        picks them up)."""
+        txn = LifecycleTx(self)
+        with self.db.batch():
+            for plan in plans:
+                plan(txn)
+            if self.durable and txn.events:
+                self.stores["outbox"].add_many(txn.events)
+        # -- post-commit side effects only below this line --
+        for workload_id in txn.kills:
+            if self.runtime is None:
+                continue
+            try:
+                self.runtime.kill(workload_id)
+            except Exception:  # noqa: BLE001 - workload may be gone already
+                pass
+        if txn.events:
+            if self.durable:
+                if drain:
+                    self.drain()
+            elif len(txn.events) == 1:
+                self.bus.publish(txn.events[0])
+            else:
+                self.bus.publish_many(txn.events)
+        return txn
+
+    def emit(self, *events: Event) -> None:
+        """Publish events through the kernel (outbox when durable).  The
+        fire-and-forget path agents use outside an ``apply``."""
+        if not events:
+            return
+        if self.durable:
+            self.apply(lambda txn: txn.emit(*events))
+        elif len(events) == 1:
+            self.bus.publish(events[0])
+        else:
+            self.bus.publish_many(events)
+
+    # -- outbox drain ------------------------------------------------------
+    def drain(self, *, limit: int = 256) -> int:
+        """Publish committed-but-unpublished outbox rows.  Rows are claimed
+        idempotently first, so concurrent replicas never double-publish a
+        live row; publish + delete then run in ONE transaction, so with a
+        bus that persists into this same database (DBEventBus) delivery is
+        exactly-once even across a mid-drain crash.  For buses with
+        non-transactional publication the crash window between publish and
+        commit downgrades to at-least-once (the Coordinator requeues the
+        stale claim; event merge keys absorb the duplicates)."""
+        if not self.durable:
+            return 0
+        outbox = self.stores["outbox"]
+        total = 0
+        while True:
+            rows = outbox.claim_new(self.consumer_id, limit=limit)
+            if not rows:
+                return total
+            events = [
+                Event(
+                    type=r["event_type"],
+                    payload=r.get("payload") or {},
+                    priority=int(r["priority"]),
+                    merge_key=r.get("merge_key"),
+                )
+                for r in rows
+            ]
+            with self.db.batch():
+                self.bus.publish_many(events)
+                outbox.delete([int(r["outbox_id"]) for r in rows])
+            total += len(rows)
+            if len(rows) < limit:
+                return total
+
+    def recover(self, *, stale_s: float = 30.0) -> int:
+        """Crash recovery: requeue outbox rows a dead replica claimed but
+        never published, then drain everything pending."""
+        if not self.durable:
+            return 0
+        self.stores["outbox"].requeue_stale(stale_s=stale_s)
+        return self.drain()
+
+    def outbox_pending(self) -> int:
+        return self.stores["outbox"].pending_count() if self.durable else 0
+
+    # -- command surface (the control plane) -------------------------------
+    @contextmanager
+    def _claimed_request(self, request_id: int) -> Iterator[dict[str, Any]]:
+        """Claim the request row (idempotent-claim layer) so a cascade never
+        interleaves with an agent holding the same request; raises
+        NotFoundError for unknown ids and WorkflowError when the row stays
+        busy — both surfaced to REST as 404/409."""
+        requests = self.stores["requests"]
+        requests.get(request_id, columns=("request_id",))  # 404 fast
+        deadline = time.monotonic() + 2.0
+        while not requests.claim(request_id):
+            if time.monotonic() > deadline:
+                raise WorkflowError(f"request {request_id} is busy; retry")
+            time.sleep(0.005)
+        try:
+            yield requests.get(request_id)
+        finally:
+            requests.unlock(request_id)
+
+    def _load_workflow(self, row: dict[str, Any]) -> Workflow | None:
+        blob = row.get("workflow")
+        if not blob:
+            return None
+        try:
+            return Workflow.from_dict(blob)
+        except Exception:  # noqa: BLE001 - corrupt blob: cascade without it
+            logger.warning(
+                "lifecycle: request %s workflow blob undecodable; "
+                "cascading without work-status mirror", row.get("request_id"),
+            )
+            return None
+
+    @staticmethod
+    def _blob(wf: Workflow) -> dict[str, Any]:
+        blob = wf.to_dict()
+        # drop the Clerk's cache revision: a kernel-side edit must force the
+        # Clerk to rebuild from the persisted blob, never reuse a cached
+        # object graph that predates this command
+        blob.pop("_rev", None)
+        return blob
+
+    def _cancel_tree(self, txn: LifecycleTx, request_id: int) -> None:
+        """Cancel every non-terminal transform/processing under a request
+        and queue runtime kills for their workloads."""
+        transforms = self.stores["transforms"].by_request(request_id)
+        live_tids: list[int] = []
+        for trow in transforms:
+            if trow["status"] in [str(s) for s in TERMINAL_TRANSFORM_STATES]:
+                continue
+            live_tids.append(int(trow["transform_id"]))
+            txn.transition(
+                "transform", int(trow["transform_id"]),
+                TransformStatus.CANCELLED, strict=False,
+            )
+        if not live_tids:
+            return
+        for prows in self.stores["processings"].by_transforms(live_tids).values():
+            for prow in prows:
+                txn.transition(
+                    "processing", int(prow["processing_id"]),
+                    ProcessingStatus.CANCELLED, strict=False,
+                )
+                meta = prow.get("processing_metadata") or {}
+                workload_id = meta.get("workload_id") or prow.get("workload_id")
+                if workload_id:
+                    txn.kill(str(workload_id))
+
+    def _finalize_request(
+        self, row: dict[str, Any], final: RequestStatus
+    ) -> None:
+        """Shared cancel-style finalization: cancel the whole tree, mark
+        live works cancelled in the blob, and land the request on
+        ``final`` — the one cascade behind both abort and expire."""
+        request_id = int(row["request_id"])
+        wf = self._load_workflow(row)
+
+        def plan(txn: LifecycleTx) -> None:
+            self._cancel_tree(txn, request_id)
+            fields: dict[str, Any] = {}
+            if wf is not None:
+                for work in wf.works.values():
+                    if work.status in (
+                        WorkStatus.NEW, WorkStatus.READY, WorkStatus.RUNNING
+                    ):
+                        work.status = WorkStatus.CANCELLED
+                fields["workflow"] = self._blob(wf)
+            txn.transition("request", request_id, final, **fields)
+
+        self.apply(plan)
+
+    def abort_request(self, request_id: int) -> bool:
+        """Cancel a request and its whole tree.  No-op (False) when the
+        request is already terminal."""
+        with self._claimed_request(request_id) as row:
+            if row["status"] in [str(s) for s in TERMINAL_REQUEST_STATES]:
+                return False
+            self._finalize_request(row, RequestStatus.CANCELLED)
+            return True
+
+    def suspend_request(self, request_id: int) -> None:
+        """Pause a request: the request leaves the Clerk's claimable set and
+        un-submitted transforms are parked.  Already-submitted processings
+        drain (their results are kept); rollup resumes on ``resume``."""
+        with self._claimed_request(request_id) as row:
+
+            def plan(txn: LifecycleTx) -> None:
+                txn.transition("request", request_id, RequestStatus.SUSPENDED)
+                for trow in self.stores["transforms"].by_request(request_id):
+                    st = str(trow["status"])
+                    if st not in (
+                        str(TransformStatus.NEW),
+                        str(TransformStatus.READY),
+                        str(TransformStatus.RUNNING),
+                    ):
+                        continue
+                    meta = trow.get("transform_metadata") or {}
+                    meta["suspended_from"] = st
+                    txn.transition(
+                        "transform", int(trow["transform_id"]),
+                        TransformStatus.SUSPENDED, strict=False,
+                        transform_metadata=meta,
+                    )
+
+            self.apply(plan)
+
+    def resume_request(self, request_id: int) -> None:
+        """Resume a suspended request: parked transforms return to their
+        pre-suspension status and the Clerk is kicked."""
+        with self._claimed_request(request_id) as row:
+            if row["status"] != str(RequestStatus.SUSPENDED):
+                # without this guard a Failed request would silently
+                # "resume" through the FAILED→TRANSFORMING retry edge with
+                # no works reset — that path belongs to retry_request
+                raise WorkflowError(
+                    f"request {request_id} is {row['status']}: only "
+                    "Suspended requests can be resumed"
+                )
+
+            def plan(txn: LifecycleTx) -> None:
+                txn.transition(
+                    "request", request_id, RequestStatus.TRANSFORMING,
+                    next_poll_at=0,
+                )
+                for trow in self.stores["transforms"].by_request(request_id):
+                    if str(trow["status"]) != str(TransformStatus.SUSPENDED):
+                        continue
+                    meta = trow.get("transform_metadata") or {}
+                    prev = meta.pop("suspended_from", None)
+                    # a transform suspended before submission re-enters at
+                    # READY (the Transformer re-prepares it); a running one
+                    # resumes RUNNING
+                    back = (
+                        TransformStatus.RUNNING
+                        if prev == str(TransformStatus.RUNNING)
+                        else TransformStatus.READY
+                    )
+                    txn.transition(
+                        "transform", int(trow["transform_id"]), back,
+                        strict=False, transform_metadata=meta, next_poll_at=0,
+                    )
+                txn.emit(
+                    update_request_event(
+                        request_id, priority=int(EventPriority.HIGH)
+                    )
+                )
+
+            self.apply(plan)
+
+    def retry_request(self, request_id: int) -> int:
+        """Give a Failed/SubFinished request a fresh retry budget: failed
+        works reset to NEW (retries zeroed — each retry command grants
+        ``max_retries`` fresh bounded attempts), their transform rows are
+        superseded, and the request re-enters TRANSFORMING.  Returns the
+        number of works reset."""
+        with self._claimed_request(request_id) as row:
+            if row["status"] not in (
+                str(RequestStatus.FAILED),
+                str(RequestStatus.SUBFINISHED),
+            ):
+                raise WorkflowError(
+                    f"request {request_id} is {row['status']}: only "
+                    "Failed/SubFinished requests can be retried"
+                )
+            wf = self._load_workflow(row)
+            if wf is None:
+                raise WorkflowError(
+                    f"request {request_id} has no workflow to retry"
+                )
+            superseded: list[int] = []
+            reset = 0
+            for work in wf.works.values():
+                if work.status not in (WorkStatus.FAILED, WorkStatus.SUBFINISHED):
+                    continue
+                work.status = WorkStatus.NEW
+                work.retries = 0
+                work.results = {}
+                if work.transform_id is not None:
+                    superseded.append(int(work.transform_id))
+                    work.transform_id = None
+                reset += 1
+
+            def plan(txn: LifecycleTx) -> None:
+                for tid in superseded:
+                    try:
+                        self.stores["transforms"].update(
+                            tid, transform_metadata={"superseded": True}
+                        )
+                    except NotFoundError:
+                        pass
+                txn.transition(
+                    "request", request_id, RequestStatus.TRANSFORMING,
+                    workflow=self._blob(wf), next_poll_at=0,
+                )
+                txn.emit(
+                    update_request_event(
+                        request_id, priority=int(EventPriority.HIGH)
+                    )
+                )
+
+            self.apply(plan)
+            return reset
+
+    def expire_request(self, request_id: int) -> None:
+        """Expire a request past its lifetime: cancel the tree (like abort)
+        but finalize as EXPIRED — the terminal state nothing retries."""
+        with self._claimed_request(request_id) as row:
+            if row["status"] in [str(s) for s in TERMINAL_REQUEST_STATES]:
+                raise WorkflowError(
+                    f"request {request_id} is already terminal "
+                    f"({row['status']})"
+                )
+            self._finalize_request(row, RequestStatus.EXPIRED)

@@ -1,0 +1,214 @@
+"""Legal-transition tables for Request/Transform/Processing (paper §3.1.2).
+
+"iDDS employs a state machine to track the lifecycle of each Work unit,
+from submission through execution to completion or failure."
+
+This module is the single authority on which state changes are legal and on
+how terminal states roll up the tree (processing → transform → work →
+request).  Every table that used to live in ``core/statemachine.py`` or be
+re-declared privately inside an agent (Finisher's terminal map, Clerk's
+work/request maps) now lives here; agents and the lifecycle kernel consult
+these tables — nothing else may encode a transition rule.
+
+Transitions outside the table raise ``WorkflowError`` — the kernel relies
+on this to detect races that slipped past the idempotent-claim layer, and
+the REST layer maps it to HTTP 409.
+"""
+from __future__ import annotations
+
+from typing import Mapping
+
+from repro.common.constants import (
+    ProcessingStatus,
+    RequestStatus,
+    TransformStatus,
+    WorkStatus,
+)
+from repro.common.exceptions import WorkflowError
+
+REQUEST_TRANSITIONS: Mapping[RequestStatus, frozenset[RequestStatus]] = {
+    RequestStatus.NEW: frozenset(
+        {RequestStatus.READY, RequestStatus.TRANSFORMING, RequestStatus.FAILED,
+         RequestStatus.FINISHED, RequestStatus.SUBFINISHED,  # empty workflow
+         RequestStatus.CANCELLING, RequestStatus.CANCELLED,
+         RequestStatus.EXPIRED}  # queued requests can expire
+    ),
+    RequestStatus.READY: frozenset(
+        {RequestStatus.TRANSFORMING, RequestStatus.FAILED,
+         RequestStatus.CANCELLING, RequestStatus.CANCELLED,
+         RequestStatus.EXPIRED}
+    ),
+    RequestStatus.TRANSFORMING: frozenset(
+        {RequestStatus.TRANSFORMING, RequestStatus.FINISHED, RequestStatus.SUBFINISHED,
+         RequestStatus.FAILED, RequestStatus.CANCELLING, RequestStatus.CANCELLED,
+         RequestStatus.SUSPENDED, RequestStatus.EXPIRED}
+    ),
+    RequestStatus.CANCELLING: frozenset(
+        {RequestStatus.CANCELLED, RequestStatus.FAILED}
+    ),
+    RequestStatus.SUSPENDED: frozenset(
+        {RequestStatus.TRANSFORMING, RequestStatus.CANCELLED, RequestStatus.EXPIRED}
+    ),
+    # terminal states
+    RequestStatus.FINISHED: frozenset(),
+    RequestStatus.SUBFINISHED: frozenset({RequestStatus.TRANSFORMING}),  # retry
+    RequestStatus.FAILED: frozenset({RequestStatus.TRANSFORMING}),      # retry
+    RequestStatus.CANCELLED: frozenset(),
+    RequestStatus.EXPIRED: frozenset(),
+}
+
+TRANSFORM_TRANSITIONS: Mapping[TransformStatus, frozenset[TransformStatus]] = {
+    TransformStatus.NEW: frozenset(
+        {TransformStatus.READY, TransformStatus.SUBMITTING,  # atomic prep+submit
+         TransformStatus.FAILED, TransformStatus.CANCELLED,
+         TransformStatus.SUSPENDED}  # request-level suspend before prep
+    ),
+    TransformStatus.READY: frozenset(
+        {TransformStatus.TRANSFORMING, TransformStatus.SUBMITTING,
+         TransformStatus.FAILED, TransformStatus.CANCELLED,
+         TransformStatus.SUSPENDED}
+    ),
+    TransformStatus.TRANSFORMING: frozenset(
+        {TransformStatus.SUBMITTING, TransformStatus.FAILED,
+         TransformStatus.CANCELLED}
+    ),
+    TransformStatus.SUBMITTING: frozenset(
+        {TransformStatus.SUBMITTED, TransformStatus.FAILED,
+         TransformStatus.CANCELLED}
+    ),
+    TransformStatus.SUBMITTED: frozenset(
+        {TransformStatus.RUNNING, TransformStatus.FINISHED,
+         TransformStatus.SUBFINISHED, TransformStatus.FAILED,
+         TransformStatus.CANCELLED}
+    ),
+    TransformStatus.RUNNING: frozenset(
+        {TransformStatus.RUNNING, TransformStatus.FINISHED,
+         TransformStatus.SUBFINISHED, TransformStatus.FAILED,
+         TransformStatus.CANCELLED, TransformStatus.SUSPENDED}
+    ),
+    TransformStatus.SUSPENDED: frozenset(
+        {TransformStatus.READY,  # resume a transform suspended before submit
+         TransformStatus.RUNNING, TransformStatus.CANCELLED}
+    ),
+    # terminal-ish
+    TransformStatus.FINISHED: frozenset(),
+    TransformStatus.SUBFINISHED: frozenset(
+        {TransformStatus.READY}  # retry path re-prepares the transform
+    ),
+    TransformStatus.FAILED: frozenset({TransformStatus.READY}),
+    TransformStatus.CANCELLED: frozenset(),
+}
+
+PROCESSING_TRANSITIONS: Mapping[ProcessingStatus, frozenset[ProcessingStatus]] = {
+    ProcessingStatus.NEW: frozenset(
+        {ProcessingStatus.SUBMITTING, ProcessingStatus.CANCELLED,
+         ProcessingStatus.FAILED}
+    ),
+    ProcessingStatus.SUBMITTING: frozenset(
+        {ProcessingStatus.SUBMITTED, ProcessingStatus.FAILED,
+         ProcessingStatus.CANCELLED}
+    ),
+    ProcessingStatus.SUBMITTED: frozenset(
+        {ProcessingStatus.RUNNING, ProcessingStatus.FINISHED,
+         ProcessingStatus.SUBFINISHED, ProcessingStatus.FAILED,
+         ProcessingStatus.TIMEOUT, ProcessingStatus.CANCELLED}
+    ),
+    ProcessingStatus.RUNNING: frozenset(
+        {ProcessingStatus.RUNNING, ProcessingStatus.FINISHED,
+         ProcessingStatus.SUBFINISHED, ProcessingStatus.FAILED,
+         ProcessingStatus.TIMEOUT, ProcessingStatus.CANCELLED}
+    ),
+    ProcessingStatus.FINISHED: frozenset(),
+    ProcessingStatus.SUBFINISHED: frozenset(),
+    ProcessingStatus.FAILED: frozenset(),
+    ProcessingStatus.TIMEOUT: frozenset(),
+    ProcessingStatus.CANCELLED: frozenset(),
+}
+
+TABLES: Mapping[str, tuple[Mapping, type]] = {
+    "request": (REQUEST_TRANSITIONS, RequestStatus),
+    "transform": (TRANSFORM_TRANSITIONS, TransformStatus),
+    "processing": (PROCESSING_TRANSITIONS, ProcessingStatus),
+}
+
+#: The documented exits out of otherwise-terminal states: bounded retry.
+#: Property tests assert these are the ONLY terminal exits.
+RETRY_EDGES: Mapping[str, frozenset[tuple[object, object]]] = {
+    "request": frozenset(
+        {(RequestStatus.FAILED, RequestStatus.TRANSFORMING),
+         (RequestStatus.SUBFINISHED, RequestStatus.TRANSFORMING)}
+    ),
+    "transform": frozenset(
+        {(TransformStatus.FAILED, TransformStatus.READY),
+         (TransformStatus.SUBFINISHED, TransformStatus.READY)}
+    ),
+    "processing": frozenset(),
+}
+
+# -- rollup tables (terminal child status → parent status) -------------------
+#: terminal processing → transform finalization (was private to Finisher)
+PROCESSING_TO_TRANSFORM: Mapping[ProcessingStatus, TransformStatus] = {
+    ProcessingStatus.FINISHED: TransformStatus.FINISHED,
+    ProcessingStatus.SUBFINISHED: TransformStatus.SUBFINISHED,
+    ProcessingStatus.FAILED: TransformStatus.FAILED,
+    ProcessingStatus.TIMEOUT: TransformStatus.FAILED,
+    ProcessingStatus.CANCELLED: TransformStatus.CANCELLED,
+}
+
+#: transform row status → in-memory Work status (was private to Clerk)
+TRANSFORM_TO_WORK: Mapping[TransformStatus, WorkStatus] = {
+    TransformStatus.FINISHED: WorkStatus.FINISHED,
+    TransformStatus.SUBFINISHED: WorkStatus.SUBFINISHED,
+    TransformStatus.FAILED: WorkStatus.FAILED,
+    TransformStatus.CANCELLED: WorkStatus.CANCELLED,
+}
+
+#: overall workflow status → request finalization (was private to Clerk)
+WORK_TO_REQUEST: Mapping[WorkStatus, RequestStatus] = {
+    WorkStatus.FINISHED: RequestStatus.FINISHED,
+    WorkStatus.SUBFINISHED: RequestStatus.SUBFINISHED,
+    WorkStatus.FAILED: RequestStatus.FAILED,
+    WorkStatus.CANCELLED: RequestStatus.CANCELLED,
+}
+
+
+def transform_status_for_processing(
+    pstatus: object,
+) -> TransformStatus | None:
+    """Transform finalization for a terminal processing status (None while
+    the processing is still live)."""
+    return PROCESSING_TO_TRANSFORM.get(ProcessingStatus(str(pstatus)))
+
+
+def work_status_for_transform(tstatus: object) -> WorkStatus:
+    """Work mirror of a transform row status (RUNNING while live)."""
+    return TRANSFORM_TO_WORK.get(TransformStatus(str(tstatus)), WorkStatus.RUNNING)
+
+
+def request_status_for_work(wstatus: object) -> RequestStatus:
+    """Request finalization for a terminal overall workflow status."""
+    return WORK_TO_REQUEST.get(WorkStatus(str(wstatus)), RequestStatus.FAILED)
+
+
+def check_transition(kind: str, old: object, new: object) -> None:
+    """Raise WorkflowError when old→new is not a legal transition."""
+    if kind not in TABLES:
+        raise WorkflowError(f"unknown state-machine kind {kind!r}")
+    table, enum_cls = TABLES[kind]
+    old_s = enum_cls(str(old))
+    new_s = enum_cls(str(new))
+    if old_s == new_s:
+        return
+    if new_s not in table[old_s]:
+        raise WorkflowError(
+            f"illegal {kind} transition {old_s.value} -> {new_s.value}"
+        )
+
+
+def can_transition(kind: str, old: object, new: object) -> bool:
+    """True when old→new (or old==new) is legal."""
+    try:
+        check_transition(kind, old, new)
+    except WorkflowError:
+        return False
+    return True

@@ -38,6 +38,7 @@ from repro.db.engine import Database
 from repro.db.stores import make_stores
 from repro.eventbus import create_event_bus
 from repro.eventbus.events import abort_request_event, new_request_event
+from repro.lifecycle import LifecycleKernel
 from repro.runtime.executor import WorkloadRuntime
 
 _AGENT_TYPES = (
@@ -104,6 +105,15 @@ class Orchestrator:
         # fair-share admission) — shared by the runtime and the agents
         self.broker = self.runtime.broker
         self.message_subscribers: list[Callable[[dict[str, Any]], None]] = []
+        # the lifecycle kernel: the ONE transactional transition engine all
+        # agents and the REST control plane write state through
+        self.kernel = LifecycleKernel(
+            self.db,
+            self.stores,
+            self.bus,
+            runtime=self.runtime,
+            consumer_id=f"kernel-{id(self):x}",
+        )
         self.agents = [
             agent_cls(
                 self,
@@ -171,7 +181,7 @@ class Orchestrator:
             priority=priority,
             workflow=workflow.to_dict(),
         )
-        self.bus.publish(new_request_event(request_id))
+        self.kernel.emit(new_request_event(request_id))
         return request_id
 
     def submit_work(self, work: Work, **kw: Any) -> int:
@@ -180,7 +190,22 @@ class Orchestrator:
         return self.submit_workflow(wf, **kw)
 
     def abort_request(self, request_id: int) -> None:
-        self.bus.publish(abort_request_event(request_id))
+        """Asynchronous cancel: the Clerk consumes the event and routes it
+        into the kernel's abort cascade."""
+        self.kernel.emit(abort_request_event(request_id))
+
+    # -- lifecycle control plane (synchronous kernel commands) ----------------
+    def suspend_request(self, request_id: int) -> None:
+        self.kernel.suspend_request(request_id)
+
+    def resume_request(self, request_id: int) -> None:
+        self.kernel.resume_request(request_id)
+
+    def retry_request(self, request_id: int) -> int:
+        return self.kernel.retry_request(request_id)
+
+    def expire_request(self, request_id: int) -> None:
+        self.kernel.expire_request(request_id)
 
     def request_status(self, request_id: int) -> dict[str, Any]:
         row = self.stores["requests"].get(request_id)

@@ -26,6 +26,7 @@ from repro.common.exceptions import (
     NotFoundError,
     ReproError,
     ValidationError,
+    WorkflowError,
 )
 from repro.core.fat import GLOBAL_CODE_CACHE
 from repro.core.workflow import Workflow
@@ -65,6 +66,14 @@ class RestApp:
         r("POST", r"/request/(?P<request_id>\d+)/abort", "submit")(
             self._request_abort
         )
+        # lifecycle control plane: synchronous kernel commands (404 on
+        # unknown request, 409 on an illegal transition)
+        r(
+            "POST",
+            r"/request/(?P<request_id>\d+)"
+            r"/(?P<command>suspend|resume|retry|expire)",
+            "submit",
+        )(self._request_command)
         # cache ---------------------------------------------------------------
         r("POST", r"/cache", "submit")(self._cache_put)
         r("GET", r"/cache/(?P<digest>[0-9a-f]+)", "read")(self._cache_get)
@@ -105,6 +114,9 @@ class RestApp:
                 return 403, {"error": str(exc)}
             except NotFoundError as exc:
                 return 404, {"error": str(exc)}
+            except WorkflowError as exc:
+                # illegal lifecycle transition → conflict with current state
+                return 409, {"error": str(exc)}
             except ReproError as exc:
                 return 400, {"error": str(exc)}
             except Exception as exc:  # noqa: BLE001
@@ -162,6 +174,16 @@ class RestApp:
     def _request_abort(self, request_id: str, **kw: Any) -> dict[str, Any]:
         self.orch.abort_request(int(request_id))
         return {"aborted": int(request_id)}
+
+    def _request_command(
+        self, request_id: str, command: str, **kw: Any
+    ) -> dict[str, Any]:
+        rid = int(request_id)
+        out = getattr(self.orch, f"{command}_request")(rid)
+        reply: dict[str, Any] = {"request_id": rid, "command": command}
+        if command == "retry":
+            reply["works_reset"] = int(out or 0)
+        return reply
 
     def _cache_put(self, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
         data = base64.b64decode(body["data"])

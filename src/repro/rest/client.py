@@ -71,6 +71,27 @@ class RestClient:
     def abort(self, request_id: int) -> None:
         self._call("POST", f"/request/{request_id}/abort", {})
 
+    # -- lifecycle control plane (HTTP 404 unknown request / 409 illegal
+    # transition, both raised as ReproError with the status in the message)
+    def suspend(self, request_id: int) -> None:
+        """Pause a running request; already-submitted jobs drain, rollup
+        stops until ``resume``."""
+        self._call("POST", f"/request/{request_id}/suspend", {})
+
+    def resume(self, request_id: int) -> None:
+        """Resume a suspended request where it left off."""
+        self._call("POST", f"/request/{request_id}/resume", {})
+
+    def retry(self, request_id: int) -> int:
+        """Grant a Failed/SubFinished request a fresh retry budget; returns
+        how many works were reset."""
+        out = self._call("POST", f"/request/{request_id}/retry", {})
+        return int(out.get("works_reset", 0))
+
+    def expire(self, request_id: int) -> None:
+        """Expire a request past its lifetime (terminal, non-retryable)."""
+        self._call("POST", f"/request/{request_id}/expire", {})
+
     def catalog(self, request_id: int) -> dict[str, Any]:
         return self._call("GET", f"/catalog/{request_id}")
 

@@ -1,0 +1,379 @@
+"""Lifecycle kernel: transactional transitions, the event outbox (crash
+drill: state change + outbox row commit atomically; events are never
+observed for a rolled-back transition and are delivered exactly once
+across 2 replicas after a mid-drain restart), and the cascade command
+surface (abort/suspend/resume/retry/expire)."""
+from __future__ import annotations
+
+import threading
+
+import pytest
+
+from repro.common.constants import (
+    ProcessingStatus,
+    RequestStatus,
+    TransformStatus,
+    WorkStatus,
+)
+from repro.common.exceptions import NotFoundError, WorkflowError
+from repro.core import Work, Workflow, register_task
+from repro.db.engine import Database
+from repro.db.stores import make_stores
+from repro.eventbus import Event, LocalEventBus
+from repro.lifecycle import LifecycleKernel
+
+
+@pytest.fixture()
+def db():
+    d = Database(":memory:")
+    yield d
+    d.close()
+
+
+@pytest.fixture()
+def stores(db):
+    return make_stores(db)
+
+
+def _kernel(db, stores, bus=None, *, durable=True, consumer="kernel-test"):
+    return LifecycleKernel(
+        db, stores, bus or LocalEventBus(), durable=durable, consumer_id=consumer
+    )
+
+
+def _ev(i: int) -> Event:
+    # distinct payloads, no merge keys: every delivery is countable
+    return Event(type="LifecycleDrill", payload={"i": i})
+
+
+# ---------------------------------------------------------------------------
+# transition engine
+# ---------------------------------------------------------------------------
+def test_transition_validates_against_current_db_status(db, stores):
+    k = _kernel(db, stores)
+    rid = stores["requests"].add("wf")
+    k.apply(lambda t: t.transition("request", rid, RequestStatus.TRANSFORMING))
+    assert stores["requests"].get(rid)["status"] == "Transforming"
+    with pytest.raises(WorkflowError):
+        k.apply(lambda t: t.transition("request", rid, RequestStatus.NEW))
+    # strict=False turns the illegal edge into a no-op
+    txn = k.apply(
+        lambda t: t.transition("request", rid, RequestStatus.NEW, strict=False)
+    )
+    assert txn.applied == []
+    assert stores["requests"].get(rid)["status"] == "Transforming"
+
+
+def test_transition_via_collapsed_two_hop(db, stores):
+    k = _kernel(db, stores)
+    rid = stores["requests"].add("wf")
+    tid = stores["transforms"].add(rid, "n")
+    pid = stores["processings"].add(tid, rid)
+    # New→Submitting→Submitted persisted as one write
+    k.apply(
+        lambda t: t.transition(
+            "processing", pid, ProcessingStatus.SUBMITTED,
+            via=ProcessingStatus.SUBMITTING,
+        )
+    )
+    assert stores["processings"].get(pid)["status"] == "Submitted"
+    # but New→Finished has no legal path even via Submitting
+    pid2 = stores["processings"].add(tid, rid)
+    with pytest.raises(WorkflowError):
+        k.apply(
+            lambda t: t.transition(
+                "processing", pid2, ProcessingStatus.FINISHED,
+                via=ProcessingStatus.SUBMITTING,
+            )
+        )
+
+
+def test_transition_unknown_entity_raises_not_found(db, stores):
+    k = _kernel(db, stores)
+    with pytest.raises(NotFoundError):
+        k.apply(
+            lambda t: t.transition("request", 424242, RequestStatus.TRANSFORMING)
+        )
+
+
+# ---------------------------------------------------------------------------
+# outbox atomicity + exactly-once drain
+# ---------------------------------------------------------------------------
+def test_rolled_back_transition_emits_nothing(db, stores):
+    bus = LocalEventBus()
+    k = _kernel(db, stores, bus)
+    rid = stores["requests"].add("wf")
+
+    def plan(txn):
+        txn.transition("request", rid, RequestStatus.TRANSFORMING)
+        txn.emit(_ev(1))
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        k.apply(plan)
+    assert stores["requests"].get(rid)["status"] == "New"  # rolled back
+    assert stores["outbox"].pending_count() == 0           # no orphan rows
+    assert bus.pending() == 0                              # nothing published
+
+
+def test_state_change_and_outbox_row_commit_atomically(db, stores):
+    bus = LocalEventBus()
+    k = _kernel(db, stores, bus)
+    rid = stores["requests"].add("wf")
+    # crash window simulation: commit but die before the drain step
+    k.apply(
+        lambda t: (
+            t.transition("request", rid, RequestStatus.TRANSFORMING),
+            t.emit(_ev(1)),
+        ),
+        drain=False,
+    )
+    assert stores["requests"].get(rid)["status"] == "Transforming"
+    assert stores["outbox"].pending_count() == 1
+    assert bus.pending() == 0  # committed, not yet published
+    # restart: a fresh kernel drains the committed rows exactly once
+    k2 = _kernel(db, stores, bus, consumer="kernel-restarted")
+    assert k2.drain() == 1
+    assert bus.consume("c", types=("LifecycleDrill",), limit=10) != []
+    assert stores["outbox"].pending_count() == 0
+    assert k2.drain() == 0
+
+
+def test_crash_between_commit_and_drain_two_replica_exactly_once(db, stores):
+    """The replicas=2 drill: an agent dies between commit and drain; after
+    restart TWO replicas race on the same outbox — every event must reach
+    the bus exactly once."""
+    bus = LocalEventBus()
+    writer = _kernel(db, stores, bus, consumer="writer")
+    rid = stores["requests"].add("wf")
+    n_events = 64
+    writer.apply(
+        lambda t: (
+            t.transition("request", rid, RequestStatus.TRANSFORMING),
+            t.emit(*[_ev(i) for i in range(n_events)]),
+        ),
+        drain=False,  # the crash
+    )
+    assert bus.pending() == 0
+    r1 = _kernel(db, stores, bus, consumer="replica-1")
+    r2 = _kernel(db, stores, bus, consumer="replica-2")
+    barrier = threading.Barrier(2)
+    drained = []
+    lock = threading.Lock()
+
+    def drain(k):
+        barrier.wait()
+        n = 0
+        # small batches force interleaving between the replicas
+        while True:
+            got = k.drain(limit=4)
+            if not got:
+                break
+            n += got
+        with lock:
+            drained.append(n)
+
+    threads = [threading.Thread(target=drain, args=(k,)) for k in (r1, r2)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(drained) == n_events
+    evs = bus.consume("c", types=("LifecycleDrill",), limit=1000)
+    seen = sorted(e.payload["i"] for e in evs)
+    assert seen == list(range(n_events)), "duplicate or lost event"
+    assert stores["outbox"].pending_count() == 0
+
+
+def test_mid_drain_crash_is_recovered_exactly_once(db, stores):
+    """Replica A claims outbox rows and dies before publishing; replica B's
+    recovery sweep requeues the stale claim and delivers exactly once."""
+    bus = LocalEventBus()
+
+    class CrashingBus(LocalEventBus):
+        def publish_many(self, events):
+            raise RuntimeError("crashed mid-drain")
+
+    writer = _kernel(db, stores, bus, consumer="writer")
+    writer.apply(lambda t: t.emit(*[_ev(i) for i in range(8)]), drain=False)
+    crasher = _kernel(db, stores, CrashingBus(), consumer="replica-a")
+    with pytest.raises(RuntimeError):
+        crasher.drain()
+    # rows are stuck Claimed by the dead replica; a plain drain skips them
+    survivor = _kernel(db, stores, bus, consumer="replica-b")
+    assert survivor.drain() == 0
+    assert survivor.recover(stale_s=0.0) == 8
+    evs = bus.consume("c", types=("LifecycleDrill",), limit=100)
+    assert sorted(e.payload["i"] for e in evs) == list(range(8))
+    assert survivor.recover(stale_s=0.0) == 0  # nothing left, no duplicates
+
+
+def test_non_durable_kernel_skips_outbox_but_keeps_commit_ordering(db, stores):
+    bus = LocalEventBus()
+    k = _kernel(db, stores, bus, durable=False)
+    rid = stores["requests"].add("wf")
+
+    def plan(txn):
+        txn.transition("request", rid, RequestStatus.TRANSFORMING)
+        txn.emit(_ev(1))
+        raise RuntimeError("boom")
+
+    with pytest.raises(RuntimeError):
+        k.apply(plan)
+    assert bus.pending() == 0  # rolled back → never published
+    k.apply(
+        lambda t: (
+            t.transition("request", rid, RequestStatus.TRANSFORMING),
+            t.emit(_ev(2)),
+        )
+    )
+    assert bus.pending() == 1
+    assert stores["outbox"].pending_count() == 0  # table unused when volatile
+
+
+# ---------------------------------------------------------------------------
+# cascade command surface
+# ---------------------------------------------------------------------------
+def _seed_tree(stores):
+    """A request with one running transform+processing and one unprepared
+    transform."""
+    wf = Workflow("tree")
+    wf.add_work(Work("a", task="noop"))
+    wf.add_work(Work("b", task="noop"))
+    rid = stores["requests"].add(
+        "tree", status=RequestStatus.TRANSFORMING, workflow=wf.to_dict()
+    )
+    t_run = stores["transforms"].add(rid, "a", status=TransformStatus.RUNNING)
+    t_new = stores["transforms"].add(rid, "b", status=TransformStatus.NEW)
+    pid = stores["processings"].add(
+        t_run, rid, status=ProcessingStatus.RUNNING,
+        metadata={"workload_id": "wl_x"},
+    )
+    return rid, t_run, t_new, pid
+
+
+def test_suspend_resume_roundtrip(db, stores):
+    k = _kernel(db, stores, durable=False)
+    rid, t_run, t_new, pid = _seed_tree(stores)
+    k.suspend_request(rid)
+    assert stores["requests"].get(rid)["status"] == "Suspended"
+    assert stores["transforms"].get(t_run)["status"] == "Suspended"
+    assert stores["transforms"].get(t_new)["status"] == "Suspended"
+    # suspending again is an idempotent no-op (old == new)…
+    k.suspend_request(rid)
+    assert stores["requests"].get(rid)["status"] == "Suspended"
+    # …but suspending a request that never started is illegal (no edge)
+    with pytest.raises(WorkflowError):
+        k.suspend_request(stores["requests"].add("still-new"))
+    k.resume_request(rid)
+    assert stores["requests"].get(rid)["status"] == "Transforming"
+    # running transform resumes RUNNING; unprepared one re-enters at READY
+    assert stores["transforms"].get(t_run)["status"] == "Running"
+    assert stores["transforms"].get(t_new)["status"] == "Ready"
+
+
+def test_abort_cascades_and_kills_workloads(db, stores):
+    killed = []
+
+    class FakeRuntime:
+        def kill(self, wl):
+            killed.append(wl)
+
+    k = LifecycleKernel(
+        db, stores, LocalEventBus(), runtime=FakeRuntime(), durable=False
+    )
+    rid, t_run, t_new, pid = _seed_tree(stores)
+    assert k.abort_request(rid) is True
+    assert stores["requests"].get(rid)["status"] == "Cancelled"
+    assert stores["transforms"].get(t_run)["status"] == "Cancelled"
+    assert stores["transforms"].get(t_new)["status"] == "Cancelled"
+    assert killed == ["wl_x"]
+    row = stores["requests"].get(rid)
+    works = (row["workflow"] or {}).get("works") or {}
+    for wd in works.values():
+        assert wd.get("metadata", {}).get("status") in ("Cancelled", None)
+    # idempotent: aborting a terminal request is a no-op
+    assert k.abort_request(rid) is False
+
+
+def test_expire_is_terminal_and_non_retryable(db, stores):
+    k = _kernel(db, stores, durable=False)
+    rid, *_ = _seed_tree(stores)
+    k.expire_request(rid)
+    assert stores["requests"].get(rid)["status"] == "Expired"
+    with pytest.raises(WorkflowError):
+        k.expire_request(rid)
+    with pytest.raises(WorkflowError):
+        k.retry_request(rid)
+
+
+def test_retry_resets_failed_works_and_supersedes_transforms(db, stores):
+    k = _kernel(db, stores, durable=False)
+    register_task("lifecycle_noop", lambda **kw: {})
+    wf = Workflow("r")
+    w = Work("a", task="lifecycle_noop")
+    wf.add_work(w)
+    w.status = WorkStatus.FAILED
+    w.retries = w.max_retries
+    rid = stores["requests"].add("r", status=RequestStatus.TRANSFORMING)
+    tid = stores["transforms"].add(rid, "a", status=TransformStatus.FAILED)
+    w.transform_id = tid
+    stores["requests"].update(
+        rid, status=RequestStatus.FAILED, workflow=wf.to_dict()
+    )
+    with pytest.raises(WorkflowError):
+        # retrying a non-failed request is illegal
+        k.retry_request(stores["requests"].add("other"))
+    assert k.retry_request(rid) == 1
+    row = stores["requests"].get(rid)
+    assert row["status"] == "Transforming"
+    wd = row["workflow"]["works"]["a"]["metadata"]
+    assert wd.get("status", "New") == "New"
+    assert wd.get("retries", 0) == 0
+    assert (
+        stores["transforms"].get(tid)["transform_metadata"].get("superseded")
+        is True
+    )
+
+
+def test_kernel_commands_unknown_request_raise_not_found(db, stores):
+    k = _kernel(db, stores, durable=False)
+    for cmd in ("suspend_request", "resume_request", "retry_request",
+                "expire_request", "abort_request"):
+        with pytest.raises(NotFoundError):
+            getattr(k, cmd)(999999)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: durable outbox + replicas=2 through the full agent stack
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_durable_outbox_replicas_2_end_to_end():
+    """With a persistent (DB) bus the kernel rides the durable outbox; two
+    replicas of every agent must still finish a workflow and deliver each
+    work_finished exactly once."""
+    from repro.orchestrator import Orchestrator
+
+    register_task("lifecycle_e2e", lambda **kw: {"ok": True})
+    orch = Orchestrator(poll_period_s=0.03, bus_kind="db", replicas=2)
+    assert orch.kernel.durable
+    with orch:
+        wf = Workflow("e2e")
+        for i in range(6):
+            wf.add_work(Work(f"w{i}", task="lifecycle_e2e"))
+        rid = orch.submit_workflow(wf)
+        assert orch.wait_request(rid, timeout=60) == "Finished"
+        # the kernel's apply wrote exactly ONE work_finished per transform:
+        # with two replicas of every agent racing, a duplicated rollup would
+        # show up as a second message row
+        rows = orch.db.query(
+            "SELECT transform_id, COUNT(*) AS n FROM messages "
+            "WHERE msg_type='work_finished' AND request_id=? "
+            "GROUP BY transform_id",
+            (rid,),
+        )
+        assert len(rows) == 6
+        assert all(int(r["n"]) == 1 for r in rows), "work_finished duplicated"
+        errors = {a.consumer_id: a.errors for a in orch.agents if a.errors}
+        assert not errors, f"agent errors: {errors}"
+    assert orch.kernel.outbox_pending() == 0

@@ -10,12 +10,14 @@ pytest.importorskip("hypothesis")  # optional dep: skip cleanly when absent
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.common.constants import ContentStatus, CollectionRelation
+from repro.common.exceptions import WorkflowError
 from repro.core.condition import Condition
 from repro.core.dag import DirectedGraph
 from repro.core.parameter import ParameterSet, Ref
 from repro.db.engine import Database
 from repro.db.stores import make_stores
 from repro.eventbus import Event, LocalEventBus
+from repro.lifecycle import RETRY_EDGES, TABLES, LifecycleKernel
 
 
 # ---------------------------------------------------------------------------
@@ -106,6 +108,103 @@ def test_release_engine_activates_every_node_exactly_once(dag, rnd):
             activated.add(i)
     assert available == set(range(n))
     db.close()
+
+
+# ---------------------------------------------------------------------------
+# lifecycle transition tables + kernel enforcement
+# ---------------------------------------------------------------------------
+def _terminal_states(table):
+    """States with no exits at all (the true sinks)."""
+    return {s for s, outs in table.items() if not outs}
+
+
+def test_terminal_states_admit_no_exits_except_documented_retry_edges():
+    """Anything that leaves a terminal-ish state must be a documented retry
+    edge — nothing else may resurrect finished work."""
+    for kind, (table, _enum) in TABLES.items():
+        retry = RETRY_EDGES[kind]
+        # every exit out of a retry-source state must be a documented edge
+        for state in {old for old, _ in retry}:
+            for nxt in table[state]:
+                assert (state, nxt) in retry, (
+                    f"{kind}: undocumented terminal exit {state} -> {nxt}"
+                )
+        # and every documented retry edge must actually exist in the table
+        for old, new in retry:
+            assert new in table[old], f"{kind}: phantom retry edge {old}->{new}"
+
+
+def test_every_state_reaches_a_terminal_state():
+    """No lifecycle livelock: from every state some terminal sink is
+    reachable by following legal transitions."""
+    for kind, (table, _enum) in TABLES.items():
+        sinks = _terminal_states(table)
+        assert sinks, f"{kind}: no terminal states at all"
+        for start in table:
+            seen = {start}
+            frontier = [start]
+            while frontier:
+                cur = frontier.pop()
+                if cur in sinks:
+                    break
+                for nxt in table[cur]:
+                    if nxt not in seen:
+                        seen.add(nxt)
+                        frontier.append(nxt)
+            assert seen & sinks, f"{kind}: {start} never reaches a terminal"
+
+
+def test_tables_are_closed_over_their_enums():
+    for kind, (table, enum_cls) in TABLES.items():
+        assert set(table) == set(enum_cls), f"{kind}: table misses states"
+        for outs in table.values():
+            assert all(isinstance(s, enum_cls) for s in outs)
+
+
+_ALL_EDGES = [
+    (kind, old, new)
+    for kind, (table, enum_cls) in TABLES.items()
+    for old in table
+    for new in enum_cls
+]
+
+
+def test_kernel_apply_rejects_exactly_what_the_tables_reject():
+    """``kernel.apply`` must accept a transition iff the table allows it
+    (or it is the idempotent old==new no-op), and must leave the row
+    untouched when it rejects.  EXHAUSTIVE over every (kind, old, new)
+    edge — no sampling, so a single wrongly-legalized edge fails CI
+    deterministically."""
+    db = Database(":memory:")
+    try:
+        stores = make_stores(db)
+        kernel = LifecycleKernel(db, stores, LocalEventBus(), durable=False)
+        rid_root = stores["requests"].add("prop-root")
+        tid_root = stores["transforms"].add(rid_root, "n")
+        for kind, old, new in _ALL_EDGES:
+            if kind == "request":
+                entity_id = stores["requests"].add("prop", status=old)
+            elif kind == "transform":
+                entity_id = stores["transforms"].add(rid_root, "n", status=old)
+            else:
+                entity_id = stores["processings"].add(
+                    tid_root, rid_root, status=old
+                )
+            table, _enum = TABLES[kind]
+            legal = (old == new) or (new in table[old])
+            if legal:
+                kernel.apply(lambda t: t.transition(kind, entity_id, new))
+                got = stores[f"{kind}s"].get(entity_id)["status"]
+                assert got == str(new), (kind, old, new)
+            else:
+                with pytest.raises(WorkflowError):
+                    kernel.apply(lambda t: t.transition(kind, entity_id, new))
+                got = stores[f"{kind}s"].get(entity_id)["status"]
+                assert got == str(old), (
+                    f"rejected {kind} transition {old}->{new} mutated the row"
+                )
+    finally:
+        db.close()
 
 
 # ---------------------------------------------------------------------------

@@ -102,6 +102,92 @@ def test_token_expiry_and_bad_signature():
         auth2.validate(good[:-4] + "0000")
 
 
+def _wait_status(client, rid, statuses, timeout=15.0):
+    import time
+
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        st = client.status(rid)["status"]
+        if st in statuses:
+            return st
+        time.sleep(0.02)
+    raise AssertionError(f"request {rid} never reached {statuses} (last {st})")
+
+
+def test_suspend_resume_flow(client, orch):
+    import time
+
+    from repro.core.work import register_task
+
+    register_task("rest_pausable", lambda **kw: time.sleep(0.3) or {})
+    wf = Workflow("pausable")
+    for i in range(3):
+        wf.add_work(Work(f"s{i}", task="rest_pausable", n_jobs=2))
+    rid = client.submit(wf)
+    _wait_status(client, rid, {"Transforming"})
+    client.suspend(rid)
+    assert client.status(rid)["status"] == "Suspended"
+    # suspended requests stay frozen: the Clerk must not roll them forward
+    time.sleep(0.3)
+    assert client.status(rid)["status"] == "Suspended"
+    client.resume(rid)
+    assert client.wait(rid, timeout=30) == "Finished"
+
+
+def test_retry_endpoint_grants_fresh_attempts(client, orch):
+    wf = Workflow("retryable")
+    wf.add_work(Work("f", task="fail_always", max_retries=0))
+    rid = client.submit(wf)
+    assert client.wait(rid, timeout=30) == "Failed"
+    n_before = len(client.logs(rid)["entries"])
+    assert client.retry(rid) == 1  # one work reset
+    # the request re-enters the pipeline with a fresh transform…
+    final = client.wait(rid, timeout=30)
+    assert final == "Failed"  # …and (still) fails, through a NEW attempt
+    assert len(client.logs(rid)["entries"]) > n_before
+
+
+def test_expire_endpoint_terminal(client, orch):
+    import time
+
+    from repro.core.work import register_task
+
+    register_task("rest_expirable", lambda **kw: time.sleep(5) or {})
+    wf = Workflow("expirable")
+    wf.add_work(Work("e", task="rest_expirable", n_jobs=2))
+    rid = client.submit(wf)
+    _wait_status(client, rid, {"Transforming"})
+    client.expire(rid)
+    assert client.status(rid)["status"] == "Expired"
+    # expired is terminal and non-retryable
+    with pytest.raises(ReproError, match="409"):
+        client.retry(rid)
+
+
+def test_lifecycle_endpoints_404_on_unknown_request(client):
+    for call in (client.suspend, client.resume, client.retry, client.expire):
+        with pytest.raises(ReproError, match="404"):
+            call(999999)
+
+
+def test_lifecycle_endpoints_409_on_illegal_transition(client, orch):
+    wf = Workflow("done")
+    wf.add_work(Work("a", task="noop"))
+    rid = client.submit(wf)
+    assert client.wait(rid, timeout=30) == "Finished"
+    # a finished request can be neither suspended, resumed, retried nor expired
+    for call in (client.suspend, client.resume, client.retry, client.expire):
+        with pytest.raises(ReproError, match="409"):
+            call(rid)
+
+
+def test_lifecycle_commands_require_auth(server, orch):
+    srv, _ = server
+    cli = RestClient(srv.url)
+    with pytest.raises(ReproError, match="401"):
+        cli.suspend(1)
+
+
 def test_monitor_health_endpoint(client, orch):
     import time
 
