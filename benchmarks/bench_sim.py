@@ -1,0 +1,53 @@
+"""Simulation-harness throughput: virtual-time jobs/sec per scenario.
+
+Tracks the cost of the deterministic fault-injection harness itself —
+the soak scenario pushes 2048 real jobs through every agent, the kernel,
+and the chaos interceptors in well under 10 s of wall clock, which is
+the budget that keeps SIM_SMOKE viable as a per-PR CI gate.
+"""
+from __future__ import annotations
+
+import logging
+import time
+from typing import Any
+
+from repro.sim import run_scenario
+
+#: scenario → wall-clock budget (seconds) enforced as a regression gate
+_BUDGETS = {
+    "bus_partition_during_cascade_abort": 10.0,
+    "straggler_site_relocation": 10.0,
+    "soak_2048_random_walk": 10.0,
+}
+
+
+def run() -> list[dict[str, Any]]:
+    logging.disable(logging.ERROR)  # injected faults log expected tracebacks
+    try:
+        rows: list[dict[str, Any]] = []
+        for name, budget in _BUDGETS.items():
+            t0 = time.time()
+            res = run_scenario(name, seed=0)
+            wall = time.time() - t0
+            jobs = int(res["runtime_stats"]["submitted_jobs"])
+            rows.append(
+                {
+                    "name": f"sim/{name}",
+                    "us_per_call": wall / max(1, jobs) * 1e6,  # per job
+                    "derived": {
+                        "wall_s": round(wall, 3),
+                        "jobs": jobs,
+                        "ticks": res["ticks"],
+                        "jobs_per_s": round(jobs / max(wall, 1e-9), 1),
+                        "within_budget": wall < budget,
+                        "digest": res["digest"][:16],
+                    },
+                }
+            )
+            if wall >= budget:
+                raise RuntimeError(
+                    f"{name} took {wall:.1f}s (budget {budget}s)"
+                )
+        return rows
+    finally:
+        logging.disable(logging.NOTSET)

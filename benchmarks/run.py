@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   al         — Fig. 13 (Active Learning)
   kernels    — data-plane step/op timings (regression tracking)
   roofline   — §Roofline terms from the dry-run cache
+  sim        — deterministic fault-scenario throughput (repro.sim)
 """
 from __future__ import annotations
 
@@ -33,6 +34,7 @@ def main() -> None:
         bench_hpo,
         bench_kernels,
         bench_scheduling,
+        bench_sim,
         roofline,
     )
 
@@ -46,6 +48,7 @@ def main() -> None:
         "al": bench_al,
         "kernels": bench_kernels,
         "roofline": roofline,
+        "sim": bench_sim,
     }
     selected = (
         {k: modules[k] for k in args.only.split(",")} if args.only else modules

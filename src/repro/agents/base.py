@@ -101,6 +101,23 @@ class BaseAgent:
             if not did_work:
                 self.bus.wait(timeout=self.poll_period_s / 2)
 
+    def tick(self) -> bool:
+        """One deterministic scheduling cycle — the simulation driver's
+        entry point (repro.sim).  Same error isolation as the thread loop
+        but no sleeping or bus waits; a SimulatedCrash (BaseException)
+        raised by an injected fault propagates to the driver, modelling
+        this replica dying mid-cycle with its claims left behind."""
+        try:
+            did = self.cycle()
+        except Exception:  # noqa: BLE001 - agents must survive anything
+            self.errors += 1
+            logger.error(
+                "%s tick error:\n%s", self.consumer_id, traceback.format_exc()
+            )
+            did = False
+        self.cycles += 1
+        return did
+
     def cycle(self) -> bool:
         """One scheduling cycle: events first, then the lazy poll."""
         did = False

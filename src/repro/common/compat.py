@@ -1,0 +1,46 @@
+"""Version shims for jax API drift.
+
+The reproduction targets the jax/pallas toolchain baked into the image;
+point releases rename symbols without deprecation windows.  Every such
+rename is absorbed HERE so kernel/checkpoint code stays clean:
+
+* ``pltpu.CompilerParams`` → ``pltpu.TPUCompilerParams`` (jax 0.4.3x),
+* ``jax.tree.flatten_with_path`` → ``jax.tree_util.tree_flatten_with_path``
+  (``jax.tree`` only grew the path helpers in 0.5).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def tpu_compiler_params(**kw: Any) -> Any:
+    """Build the Pallas-TPU compiler-params struct under whichever name
+    this jax exposes (``TPUCompilerParams`` on 0.4.3x, ``CompilerParams``
+    before/after the rename)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams"
+    )
+    return cls(**kw)
+
+
+def cost_analysis(compiled: Any) -> dict[str, Any]:
+    """``Compiled.cost_analysis()`` as ONE dict: some jax versions return a
+    per-device list of dicts, others the dict itself, and it may be None
+    for trivial programs."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else None
+    return dict(cost) if cost else {}
+
+
+def tree_flatten_with_path(tree: Any) -> tuple[list[tuple[Any, Any]], Any]:
+    """``(path, leaf)`` flattening across the jax.tree / jax.tree_util
+    split; returns the same ``(flat, treedef)`` pair on every version."""
+    fn = getattr(jax.tree, "flatten_with_path", None)
+    if fn is None:
+        fn = jax.tree_util.tree_flatten_with_path
+    return fn(tree)

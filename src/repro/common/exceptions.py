@@ -45,3 +45,13 @@ class RuntimeExecutionError(ReproError):
 
 class CheckpointError(ReproError):
     pass
+
+
+class SimulatedCrash(BaseException):
+    """Fault-injection signal (repro.sim): a process died at this point.
+
+    Deliberately a BaseException so the agents' broad ``except Exception``
+    error isolation cannot swallow it — a crash must unwind the whole
+    tick exactly like a real process death would, leaving claims and
+    outbox rows behind for the recovery machinery to pick up."""
+

@@ -14,12 +14,30 @@ from typing import Any, Callable, Iterable, Iterator, Sequence, TypeVar
 T = TypeVar("T")
 
 
+# -- time source ------------------------------------------------------------
+# Every timestamp in the system (store claims, next_poll_at, event
+# created_at, heartbeats) flows through utc_now_ts, so swapping the
+# provider is all it takes to run the whole orchestrator under a virtual
+# clock (repro.sim's deterministic simulation).  Production never touches
+# this: the default provider is time.time.
+_time_provider: Callable[[], float] = time.time
+
+
+def set_time_provider(fn: Callable[[], float] | None) -> Callable[[], float]:
+    """Install a replacement wall-clock source (None restores time.time).
+    Returns the previous provider so callers can nest/restore."""
+    global _time_provider
+    prev = _time_provider
+    _time_provider = time.time if fn is None else fn
+    return prev
+
+
 def utc_now() -> datetime:
-    return datetime.now(timezone.utc)
+    return datetime.fromtimestamp(_time_provider(), timezone.utc)
 
 
 def utc_now_ts() -> float:
-    return time.time()
+    return _time_provider()
 
 
 # id generation sits on the per-workload/per-work hot path: an os.urandom

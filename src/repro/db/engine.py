@@ -28,7 +28,7 @@ from __future__ import annotations
 import sqlite3
 import threading
 from contextlib import contextmanager
-from typing import Any, Iterator, Sequence
+from typing import Any, Callable, Iterator, Sequence
 
 from repro.common.exceptions import DatabaseError
 from repro.db.schema import MIGRATIONS, SCHEMA_VERSION
@@ -58,6 +58,12 @@ class Database:
         self._lock = threading.RLock()
         self._mem_conn: sqlite3.Connection | None = None
         self.supports_returning = SUPPORTS_RETURNING
+        #: fault-injection hook (repro.sim): called with "commit" just
+        #: before COMMIT (raising aborts + rolls back the transaction) and
+        #: "committed" right after (raising models a process crash in the
+        #: window where the commit is durable but post-commit side effects
+        #: never ran).  None in production — zero hot-path cost.
+        self.fault_hook: Callable[[str], None] | None = None
         #: bumped on every committed write transaction; lets pollers skip
         #: scans when nothing can possibly have changed (idle-poll gating)
         self.write_gen = 0
@@ -116,8 +122,12 @@ class Database:
             try:
                 conn.execute("BEGIN IMMEDIATE")
                 yield conn
+                if self.fault_hook is not None:
+                    self.fault_hook("commit")
                 conn.execute("COMMIT")
                 self._bump_gen()
+                if self.fault_hook is not None:
+                    self.fault_hook("committed")
             except BaseException:
                 try:
                     conn.execute("ROLLBACK")
@@ -143,8 +153,12 @@ class Database:
                     yield conn
                 finally:
                     self._local.batch_conn = None
+                if self.fault_hook is not None:
+                    self.fault_hook("commit")
                 conn.execute("COMMIT")
                 self._bump_gen()
+                if self.fault_hook is not None:
+                    self.fault_hook("committed")
             except BaseException:
                 try:
                     conn.execute("ROLLBACK")

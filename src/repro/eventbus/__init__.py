@@ -18,7 +18,7 @@ class NullEventBus(BaseEventBus):
     name = "null"
     persistent = False
 
-    def publish(self, event: Event) -> None:  # noqa: D102
+    def _publish_many(self, events: list[Event]) -> None:  # noqa: D102
         pass
 
     def consume(self, consumer, *, types=None, limit=32):  # noqa: D102

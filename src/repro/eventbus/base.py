@@ -10,9 +10,22 @@ from __future__ import annotations
 
 import threading
 from abc import ABC, abstractmethod
-from typing import Iterable, Sequence
+from typing import Iterable, Protocol, Sequence
 
 from repro.eventbus.events import Event
+
+
+class BusInterceptor(Protocol):
+    """Publish-side interception point (fault injection / tracing).
+
+    ``intercept`` sees every batch before the backend does and returns the
+    events to deliver NOW — it may drop, duplicate, reorder, or hold some
+    back (delivering them later straight through ``bus.deliver``, which
+    bypasses interception)."""
+
+    def intercept(
+        self, bus: "BaseEventBus", events: list[Event]
+    ) -> list[Event]: ...
 
 
 class BaseEventBus(ABC):
@@ -25,16 +38,33 @@ class BaseEventBus(ABC):
     def __init__(self) -> None:
         self._cv = threading.Condition()
         self._closed = False
+        #: when set, every publish routes through it first (repro.sim's
+        #: drop/duplicate/delay/reorder chaos + trace recording).  None in
+        #: production — the check is one attribute load per batch.
+        self.interceptor: BusInterceptor | None = None
 
     # -- producer side ----------------------------------------------------
-    @abstractmethod
     def publish(self, event: Event) -> None:
         """Publish one event (merging with pending duplicates if the
         backend supports it)."""
+        self.publish_many((event,))
 
     def publish_many(self, events: Iterable[Event]) -> None:
-        for ev in events:
-            self.publish(ev)
+        evs = list(events)
+        if self.interceptor is not None:
+            evs = self.interceptor.intercept(self, evs)
+        if evs:
+            self._publish_many(evs)
+
+    def deliver(self, events: Sequence[Event]) -> None:
+        """Hand events straight to the backend, bypassing interception —
+        how a delaying interceptor flushes its held events."""
+        if events:
+            self._publish_many(list(events))
+
+    @abstractmethod
+    def _publish_many(self, events: list[Event]) -> None:
+        """Backend delivery of an already-intercepted batch."""
 
     # -- consumer side -----------------------------------------------------
     @abstractmethod

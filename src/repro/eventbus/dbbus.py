@@ -27,24 +27,9 @@ class DBEventBus(BaseEventBus):
         self._store = EventStore(db)
         self.stats = {"published": 0, "merged": 0, "consumed": 0}
 
-    def publish(self, event: Event) -> None:
-        event_id = self._store.publish(
-            event.type,
-            event.payload,
-            priority=event.priority,
-            merge_key=event.merge_key,
-        )
-        self.stats["published"] += 1
-        if event_id is None:
-            self.stats["merged"] += 1
-        self._notify()
-
-    def publish_many(self, events) -> None:
-        evs = list(events)
-        if not evs:
-            return
+    def _publish_many(self, events: list[Event]) -> None:
         ids = self._store.publish_many(
-            [(e.type, e.payload, e.priority, e.merge_key) for e in evs]
+            [(e.type, e.payload, e.priority, e.merge_key) for e in events]
         )
         self.stats["published"] += len(ids)
         self.stats["merged"] += sum(1 for i in ids if i is None)

@@ -56,17 +56,9 @@ class LocalEventBus(BaseEventBus):
         self._push(event)
         self._count += 1
 
-    def publish(self, event: Event) -> None:
-        with self._lock:
-            self._publish_locked(event)
-        self._notify()
-
-    def publish_many(self, events) -> None:
-        evs = list(events)
-        if not evs:
-            return
+    def _publish_many(self, events: list[Event]) -> None:
         with self._lock:  # one lock round-trip and one wakeup for the batch
-            for event in evs:
+            for event in events:
                 self._publish_locked(event)
         self._notify()
 

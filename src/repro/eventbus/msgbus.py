@@ -180,14 +180,17 @@ class MsgEventBus(BaseEventBus):
             self._local.sock = sock
         return sock
 
-    def publish(self, event: Event) -> None:
-        sock = self._sock()
-        _send_frame(sock, {"op": "pub", "event": event.to_dict()})
-        reply = _recv_frame(sock)
-        if reply is None:  # broker went away: at-most-once ⇒ drop silently
-            self._local.sock = None
-            return
-        self.stats["published"] += 1
+    def _publish_many(self, events: list[Event]) -> None:
+        for event in events:
+            sock = self._sock()
+            _send_frame(sock, {"op": "pub", "event": event.to_dict()})
+            reply = _recv_frame(sock)
+            if reply is None:
+                # broker went away: at-most-once ⇒ drop THIS event only and
+                # reconnect for the rest of the batch
+                self._local.sock = None
+                continue
+            self.stats["published"] += 1
         self._notify()
 
     def consume(

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.compat import tpu_compiler_params
+
 
 def _wkv_kernel(
     r_ref,      # [1, L, K]
@@ -115,7 +117,7 @@ def wkv6_pallas(
         out_specs=pl.BlockSpec((1, chunk, vv), seq_map),
         out_shape=jax.ShapeDtypeStruct((b * h, s, vv), r.dtype),
         scratch_shapes=[pltpu.VMEM((kk, vv), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

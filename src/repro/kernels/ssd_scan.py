@@ -17,6 +17,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.common.compat import tpu_compiler_params
+
 
 def _ssd_kernel(
     x_ref,      # [1, L, P]
@@ -116,7 +118,7 @@ def ssd_pallas(
         out_specs=pl.BlockSpec((1, chunk, p), seq_map),
         out_shape=jax.ShapeDtypeStruct((b * h, s, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=tpu_compiler_params(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -114,17 +114,24 @@ class HloModule:
                 res_dims = _first_shape_dims(rhs.split(" ")[0])
                 cm = _CONTRACT.search(rhs)
                 k = 1
-                if cm is not None:
+                if cm is not None and cm.group(1):
                     argm = re.search(r"dot\(([^)]*)\)", rhs)
+                    lhs_dims = None
                     if argm:
-                        ops = [o.strip().lstrip("%") for o in argm.group(1).split(",")]
-                        lhs_t = self._lookup(comp, ops[0]) if ops else None
-                        lhs_dims = _first_shape_dims(lhs_t) if lhs_t else None
-                        if lhs_dims is not None and cm.group(1):
-                            for d in cm.group(1).split(","):
-                                di = int(d)
-                                if di < len(lhs_dims):
-                                    k *= lhs_dims[di]
+                        args = argm.group(1)
+                        # operands usually carry inline types — the first
+                        # shape in the arg list IS the lhs type (splitting
+                        # on "," would cut f32[64,64] in half)
+                        lhs_dims = _first_shape_dims(args)
+                        if lhs_dims is None:
+                            names = re.findall(r"%?([\w.\-]+)", args)
+                            lhs_t = self._lookup(comp, names[0]) if names else None
+                            lhs_dims = _first_shape_dims(lhs_t) if lhs_t else None
+                    if lhs_dims is not None:
+                        for d in cm.group(1).split(","):
+                            di = int(d)
+                            if di < len(lhs_dims):
+                                k *= lhs_dims[di]
                 if res_dims is not None:
                     n = 1
                     for d in res_dims:

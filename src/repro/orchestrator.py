@@ -30,7 +30,11 @@ from repro.common.constants import (
     RequestStatus,
     TERMINAL_REQUEST_STATES,
 )
-from repro.common.exceptions import NotFoundError, ValidationError
+from repro.common.exceptions import (
+    NotFoundError,
+    SimulatedCrash,
+    ValidationError,
+)
 from repro.core.fat import ResultFuture, set_active_session
 from repro.core.work import Work
 from repro.core.workflow import Workflow
@@ -156,6 +160,26 @@ class Orchestrator:
             _release_switch_interval()
             self._holds_switch_interval = False
         self._started = False
+
+    def tick(
+        self, *, on_crash: Callable[[str], None] | None = None
+    ) -> bool:
+        """One deterministic scheduling round: every agent runs one cycle
+        in registration order, on the calling thread.  The simulation /
+        test entry point — ``start()`` (threads) is never required for
+        progress.  A SimulatedCrash from an injected fault kills only the
+        raising agent's cycle when ``on_crash`` is given (called with the
+        consumer id; claims and outbox rows stay behind for recovery),
+        and propagates otherwise.  Returns True when any agent did work."""
+        did = False
+        for agent in self.agents:
+            try:
+                did = agent.tick() or did
+            except SimulatedCrash:
+                if on_crash is None:
+                    raise
+                on_crash(agent.consumer_id)
+        return did
 
     def __enter__(self) -> "Orchestrator":
         return self.start()

@@ -34,7 +34,7 @@ import random
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Any, Mapping
+from typing import Any, Callable, Mapping
 
 from repro.broker import DataAwareBroker
 from repro.common.exceptions import SchedulingError
@@ -180,6 +180,21 @@ class WorkloadRuntime:
         self.speculate_after_factor = speculate_after_factor
         self.job_runtime_s = job_runtime_s
         self.rng = random.Random(seed)
+        #: sleep used for payload-duration / straggler simulation.  The
+        #: deterministic simulator replaces it with the virtual clock's
+        #: sleep so stragglers cost virtual, not wall, time.
+        self.sleep_fn: Callable[[float], None] = time.sleep
+        #: fault-injection hook (repro.sim): called per job attempt with
+        #: (workload_id, job_index, attempt, site); returning "kill" fails
+        #: the attempt (worker killed mid-job), "straggle" stretches it by
+        #: straggler_factor.  None in production.
+        self.fault_hook: (
+            Callable[[str, int, int, str], str | None] | None
+        ) = None
+        #: message-loss hook (repro.sim): called with (kind, workload_id)
+        #: per status callback; returning False drops the message (lost
+        #: heartbeat — the Poller's lazy fallback must then converge).
+        self.message_hook: Callable[[str, str], bool] | None = None
         self.tasks: dict[str, _Task] = {}
         self.messages: "queue.Queue[dict[str, Any]]" = queue.Queue()
         self._lock = threading.Lock()
@@ -196,6 +211,8 @@ class WorkloadRuntime:
             "injected_stragglers": 0,
             "bytes_moved": 0,
         }
+        # workers=0 is the deterministic (simulation/test) mode: no threads
+        # at all — the caller drives execution with step()/monitor_tick().
         self._threads = [
             threading.Thread(
                 target=self._worker_loop, name=f"runtime-worker-{i}", daemon=True
@@ -204,10 +221,12 @@ class WorkloadRuntime:
         ]
         for t in self._threads:
             t.start()
-        self._monitor = threading.Thread(
-            target=self._monitor_loop, name="runtime-monitor", daemon=True
-        )
-        self._monitor.start()
+        self._monitor: threading.Thread | None = None
+        if workers > 0:
+            self._monitor = threading.Thread(
+                target=self._monitor_loop, name="runtime-monitor", daemon=True
+            )
+            self._monitor.start()
 
     # -- public API (what the Carrier uses) --------------------------------
     def submit(self, spec: TaskSpec, *, workload_id: str | None = None) -> str:
@@ -321,6 +340,10 @@ class WorkloadRuntime:
         return task
 
     def _emit(self, workload_id: str, kind: str, body: dict[str, Any]) -> None:
+        if self.message_hook is not None and not self.message_hook(
+            kind, workload_id
+        ):
+            return  # injected callback loss: polling is the only signal left
         self.messages.put(
             {"workload_id": workload_id, "kind": kind, "ts": utc_now_ts(), **body}
         )
@@ -373,55 +396,88 @@ class WorkloadRuntime:
             self._enqueue(task, job)
             self._wake.notify_all()
 
+    def _dispatch_once(self) -> bool:
+        """Pop + run ONE queued job synchronously.  Returns False when the
+        queue is empty or nothing can be placed right now (no-capacity
+        items are requeued).  The shared core of the threaded worker loop
+        and the deterministic ``step()`` driver."""
+        # pop takes an admission ticket for the job's user; every path
+        # below must pair it with exactly one broker.done(user).
+        item = self.broker.pop()
+        if item is None:
+            return False
+        task, job = item
+        user = task.spec.user
+        with task.lock:
+            if job.state != "Pending" or task.cancelled:
+                self.broker.done(user)
+                return True  # consumed a stale entry: progress was made
+        site = self._broker_site(task, job)
+        if site is None:
+            # no capacity: hand back the ticket and requeue
+            self.broker.done(user)
+            with self._lock:
+                self._enqueue(task, job)
+            return False
+        with task.lock:
+            if job.state != "Pending":
+                site.release()
+                self.broker.done(user)
+                return True
+            job.state = "Running"
+            job.site = site.name
+            job.attempts += 1
+            job.started_at = utc_now_ts()
+        self._run_job(task, job, site)
+        return True
+
     def _worker_loop(self) -> None:
         while True:
             with self._lock:
                 if self._stop:
                     return
-            # pop takes an admission ticket for the job's user; every path
-            # below must pair it with exactly one broker.done(user).
-            item = self.broker.pop()
-            if item is None:
+            if not self._dispatch_once():
                 with self._lock:
                     if self._stop:
                         return
-                    self._wake.wait(timeout=0.05)
-                continue
-            task, job = item
-            user = task.spec.user
-            with task.lock:
-                if job.state != "Pending" or task.cancelled:
-                    self.broker.done(user)
-                    continue
-            site = self._broker_site(task, job)
-            if site is None:
-                # no capacity: hand back the ticket, requeue, wait a beat
-                self.broker.done(user)
-                with self._lock:
-                    self._enqueue(task, job)
                     self._wake.wait(timeout=0.02)
-                continue
-            with task.lock:
-                if job.state != "Pending":
-                    site.release()
-                    self.broker.done(user)
-                    continue
-                job.state = "Running"
-                job.site = site.name
-                job.attempts += 1
-                job.started_at = utc_now_ts()
-            self._run_job(task, job, site)
+
+    # -- deterministic drivers (workers=0 / repro.sim) -----------------------
+    def step(self, max_jobs: int | None = None) -> int:
+        """Synchronously run queued jobs until the queue drains (or
+        ``max_jobs``).  Deterministic: single caller thread, jobs run in
+        fair-share pop order."""
+        n = 0
+        while max_jobs is None or n < max_jobs:
+            if not self._dispatch_once():
+                break
+            n += 1
+        return n
 
     def _run_job(self, task: _Task, job: JobInfo, site: Site) -> None:
         spec = task.spec
         t0 = utc_now_ts()
         try:
             # chaos injection ------------------------------------------------
-            if self.straggler_rate and self.rng.random() < self.straggler_rate:
+            action = (
+                self.fault_hook(
+                    task.workload_id, job.index, job.attempts, site.name
+                )
+                if self.fault_hook is not None
+                else None
+            )
+            if action == "straggle" or (
+                self.straggler_rate and self.rng.random() < self.straggler_rate
+            ):
                 self.stats["injected_stragglers"] += 1
-                time.sleep(self.job_runtime_s * self.straggler_factor)
+                self.sleep_fn(
+                    max(self.job_runtime_s, 0.01) * self.straggler_factor
+                )
             elif self.job_runtime_s:
-                time.sleep(self.job_runtime_s)
+                self.sleep_fn(self.job_runtime_s)
+            if action == "kill":
+                self.stats["injected_failures"] += 1
+                raise RuntimeError("injected worker kill")
             if self.failure_rate and self.rng.random() < self.failure_rate:
                 self.stats["injected_failures"] += 1
                 raise RuntimeError("injected failure")
@@ -527,56 +583,64 @@ class WorkloadRuntime:
             with self._lock:
                 if self._stop:
                     return
-                # terminal tasks can never need drain-failover or
-                # speculation again — skip them instead of rescanning
-                tasks = [t for t in self.tasks.values() if not t.terminal]
-            for task in tasks:
-                requeue: list[JobInfo] = []
-                with task.lock:
-                    for job in task.all_jobs():
-                        if job.state != "Running" or job.site is None:
-                            continue
-                        site = self.sites.get(job.site)
-                        if site is not None and site.drained:
-                            job.error = "site drained"
-                            self.broker.record_outcome(job.site, failed=True)
-                            if job.attempts <= task.spec.max_job_retries:
-                                job.state = "Pending"
-                                job.avoid_site = job.site
-                                job.site = None
-                                requeue.append(job)
-                                self.stats["retried_jobs"] += 1
-                            else:
-                                job.state = "Failed"
-                for job in requeue:
-                    self._requeue(task, job)
-            # straggler mitigation: speculative duplicates
-            median = self._median_duration()
-            if self.speculative and median:
-                cutoff = median * self.speculate_after_factor
-                now = utc_now_ts()
-                for task in tasks:
-                    clones: list[JobInfo] = []
-                    with task.lock:
-                        for job in task.all_jobs():
-                            if (
-                                job.state == "Running"
-                                and not job.speculated
-                                and job.started_at is not None
-                                and now - job.started_at > cutoff
-                            ):
-                                job.speculated = True
-                                self.broker.record_outcome(
-                                    job.site, straggler=True
-                                )
-                                clone = JobInfo(job.index, state="Pending")
-                                clone.speculated = True
-                                task.extra_jobs.append(clone)
-                                clones.append(clone)
-                                self.stats["speculated_jobs"] += 1
-                    for clone in clones:
-                        self._requeue(task, clone)
+            self.monitor_tick()
             with self._lock:
                 if self._stop:
                     return
                 self._wake.wait(timeout=0.05)
+
+    def monitor_tick(self) -> None:
+        """One monitor sweep: fail jobs on drained sites (requeued for
+        relocation) and speculatively duplicate stragglers.  Called in a
+        loop by the monitor thread; called directly by deterministic
+        drivers (workers=0)."""
+        with self._lock:
+            # terminal tasks can never need drain-failover or
+            # speculation again — skip them instead of rescanning
+            tasks = [t for t in self.tasks.values() if not t.terminal]
+        for task in tasks:
+            requeue: list[JobInfo] = []
+            with task.lock:
+                for job in task.all_jobs():
+                    if job.state != "Running" or job.site is None:
+                        continue
+                    site = self.sites.get(job.site)
+                    if site is not None and site.drained:
+                        job.error = "site drained"
+                        self.broker.record_outcome(job.site, failed=True)
+                        if job.attempts <= task.spec.max_job_retries:
+                            job.state = "Pending"
+                            job.avoid_site = job.site
+                            job.site = None
+                            requeue.append(job)
+                            self.stats["retried_jobs"] += 1
+                        else:
+                            job.state = "Failed"
+            for job in requeue:
+                self._requeue(task, job)
+        # straggler mitigation: speculative duplicates
+        median = self._median_duration()
+        if self.speculative and median:
+            cutoff = median * self.speculate_after_factor
+            now = utc_now_ts()
+            for task in tasks:
+                clones: list[JobInfo] = []
+                with task.lock:
+                    for job in task.all_jobs():
+                        if (
+                            job.state == "Running"
+                            and not job.speculated
+                            and job.started_at is not None
+                            and now - job.started_at > cutoff
+                        ):
+                            job.speculated = True
+                            self.broker.record_outcome(
+                                job.site, straggler=True
+                            )
+                            clone = JobInfo(job.index, state="Pending")
+                            clone.speculated = True
+                            task.extra_jobs.append(clone)
+                            clones.append(clone)
+                            self.stats["speculated_jobs"] += 1
+                for clone in clones:
+                    self._requeue(task, clone)

@@ -1,0 +1,19 @@
+"""repro.sim — deterministic simulation & fault injection.
+
+A FoundationDB-style harness that runs the REAL orchestrator (agents,
+lifecycle kernel, broker, buses, stores) single-threaded under a virtual
+clock with one seeded RNG deciding every fault at the three I/O
+boundaries (db/engine, eventbus, runtime/executor).  Same (scenario,
+seed) ⇒ byte-identical event trace — every failure is a replayable bug
+report, and every scale/perf PR can prove it kept crash-safety.
+"""
+from repro.sim.clock import VirtualClock  # noqa: F401
+from repro.sim.faults import BusChaos, FaultPlan, FaultSpec  # noqa: F401
+from repro.sim.harness import SimHarness  # noqa: F401
+from repro.sim.invariants import check_invariants  # noqa: F401
+from repro.sim.scenarios import (  # noqa: F401
+    SCENARIOS,
+    SMOKE_SCENARIOS,
+    run_scenario,
+)
+from repro.sim.trace import TraceRecorder  # noqa: F401

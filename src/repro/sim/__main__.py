@@ -1,0 +1,68 @@
+"""CLI: run fault scenarios and print their reproducibility digests.
+
+    python -m repro.sim --list
+    python -m repro.sim --scenario soak_2048_random_walk --seed 7
+    python -m repro.sim --smoke          # the two fastest (CI's SIM_SMOKE)
+    python -m repro.sim --all --seed 3
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import sys
+import time
+
+from repro.sim.scenarios import SCENARIOS, SMOKE_SCENARIOS, run_scenario
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.sim")
+    ap.add_argument("--scenario", action="append", default=[],
+                    help="scenario name (repeatable)")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the two fastest scenarios")
+    ap.add_argument("--all", action="store_true", help="run every scenario")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--verbose", action="store_true",
+                    help="show agent error logs (injected faults are noisy)")
+    args = ap.parse_args(argv)
+
+    if not args.verbose:
+        # injected faults produce *expected* agent-error tracebacks;
+        # surfacing them would bury the scenario verdicts
+        logging.disable(logging.ERROR)
+
+    if args.list:
+        for name in SCENARIOS:
+            print(name)
+        return 0
+    names = list(args.scenario)
+    if args.smoke:
+        names.extend(SMOKE_SCENARIOS)
+    if args.all:
+        names.extend(SCENARIOS)
+    if not names:
+        ap.error("nothing to run: pass --scenario/--smoke/--all (or --list)")
+
+    failed = 0
+    for name in dict.fromkeys(names):
+        t0 = time.time()
+        try:
+            res = run_scenario(name, args.seed)
+        except AssertionError as exc:
+            failed += 1
+            print(f"[FAIL] {name} seed={args.seed}: {exc}")
+            continue
+        dt = time.time() - t0
+        print(
+            f"[ ok ] {name} seed={args.seed} wall={dt:.2f}s "
+            f"ticks={res['ticks']} digest={res['digest'][:16]} "
+            f"injected={json.dumps(res['injected'], sort_keys=True)}"
+        )
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

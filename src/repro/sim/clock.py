@@ -1,0 +1,61 @@
+"""Virtual time for deterministic simulation.
+
+Every timestamp in the orchestrator (store claims, ``next_poll_at``,
+event ``created_at``, heartbeats, stale-claim cutoffs) flows through
+``repro.common.utils.utc_now_ts``, so installing a ``VirtualClock`` as
+the process time provider puts the WHOLE system on simulated time: a
+300-second stale-claim window costs one ``advance(300)`` instead of five
+minutes of wall clock, and two runs with the same seed see exactly the
+same timestamps.
+"""
+from __future__ import annotations
+
+from repro.common.utils import set_time_provider
+
+#: far enough in the past to be obviously synthetic in any leaked artifact
+DEFAULT_EPOCH = 1_000_000_000.0
+
+
+class VirtualClock:
+    """A manually advanced clock, installable as the process time source."""
+
+    def __init__(self, start: float = DEFAULT_EPOCH):
+        self._now = float(start)
+        self._installed = False
+        self._prev: object = None
+
+    # -- time ---------------------------------------------------------------
+    def now(self) -> float:
+        return self._now
+
+    def advance(self, seconds: float) -> float:
+        if seconds < 0:
+            raise ValueError(f"time cannot go backwards ({seconds})")
+        self._now += seconds
+        return self._now
+
+    def sleep(self, seconds: float) -> None:
+        """Drop-in for ``time.sleep`` under simulation: advances virtual
+        time instantly (a straggler's 8× slowdown costs nothing real)."""
+        self.advance(max(0.0, seconds))
+
+    # -- installation --------------------------------------------------------
+    def install(self) -> "VirtualClock":
+        if not self._installed:
+            # keep the previous provider so nested clocks (a harness built
+            # inside a virtual_clock fixture) restore the OUTER clock, not
+            # wall time
+            self._prev = set_time_provider(self.now)
+            self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if self._installed:
+            set_time_provider(self._prev)  # type: ignore[arg-type]
+            self._installed = False
+
+    def __enter__(self) -> "VirtualClock":
+        return self.install()
+
+    def __exit__(self, *exc: object) -> None:
+        self.uninstall()

@@ -1,0 +1,154 @@
+"""Seeded fault plans for the three I/O boundaries.
+
+One ``random.Random(seed)`` drives every injection decision, and the
+simulation is single-threaded, so the decision *sequence* — hence the
+whole run — is a pure function of (workload, seed).  The boundaries:
+
+* **db/engine** — ``db_abort`` raises just before COMMIT (the transaction
+  rolls back, the agent survives and retries via lazy poll);
+  ``db_crash_after_commit`` raises :class:`SimulatedCrash` right after
+  COMMIT — the durable-state-without-side-effects window the
+  transactional outbox exists for.
+* **eventbus** — drop / duplicate / delay / reorder at publish time
+  (:class:`BusChaos` implements the bus ``interceptor`` protocol).
+* **runtime/executor** — worker kill (job attempt dies mid-run),
+  straggler slowdown (virtual-time stretch), and status-message loss
+  (the "lost heartbeat" that forces the Poller's lazy fallback).
+
+``FaultPlan.enabled`` gates everything: harnesses arm chaos only for the
+scenario's fault window and disarm it to let the system quiesce.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+from repro.common.exceptions import DatabaseError, SimulatedCrash
+from repro.eventbus.base import BaseEventBus
+from repro.eventbus.events import Event
+from repro.sim.clock import VirtualClock
+from repro.sim.trace import TraceRecorder
+
+
+@dataclass
+class FaultSpec:
+    """Per-boundary injection probabilities (all default off)."""
+
+    # db/engine boundary
+    db_abort: float = 0.0
+    db_crash_after_commit: float = 0.0
+    # eventbus boundary
+    bus_drop: float = 0.0
+    bus_duplicate: float = 0.0
+    bus_delay: float = 0.0
+    bus_delay_s: float = 1.0
+    bus_reorder: float = 0.0
+    # runtime/executor boundary
+    worker_kill: float = 0.0
+    worker_straggle: float = 0.0
+    message_drop: float = 0.0
+
+
+@dataclass
+class FaultPlan:
+    """Seeded decider + injection ledger shared by all three boundaries."""
+
+    seed: int = 0
+    spec: FaultSpec = field(default_factory=FaultSpec)
+    trace: TraceRecorder | None = None
+    enabled: bool = False
+
+    def __post_init__(self) -> None:
+        self.rng = random.Random(self.seed)
+        self.injected: dict[str, int] = {}
+
+    # -- internals ------------------------------------------------------------
+    def _roll(self, p: float) -> bool:
+        # the rng is consumed even while disarmed ONLY via injection sites
+        # that never fire when disabled — keeping the decision sequence a
+        # function of the armed window alone
+        return self.enabled and p > 0.0 and self.rng.random() < p
+
+    def _note(self, kind: str, **fields: object) -> None:
+        self.injected[kind] = self.injected.get(kind, 0) + 1
+        if self.trace is not None:
+            self.trace.record("fault", fault=kind, **fields)
+
+    # -- db/engine boundary ---------------------------------------------------
+    def db_hook(self, phase: str) -> None:
+        """``Database.fault_hook``: called at "commit" / "committed"."""
+        if phase == "commit" and self._roll(self.spec.db_abort):
+            self._note("db_abort")
+            raise DatabaseError("injected tx abort")
+        if phase == "committed" and self._roll(self.spec.db_crash_after_commit):
+            self._note("db_crash_after_commit")
+            raise SimulatedCrash("injected crash after commit")
+
+    # -- runtime/executor boundary -------------------------------------------
+    def runtime_fault_hook(
+        self, workload_id: str, job_index: int, attempt: int, site: str
+    ) -> str | None:
+        if self._roll(self.spec.worker_kill):
+            self._note("worker_kill", job=job_index, attempt=attempt, site=site)
+            return "kill"
+        if self._roll(self.spec.worker_straggle):
+            self._note("worker_straggle", job=job_index, site=site)
+            return "straggle"
+        return None
+
+    def runtime_message_hook(self, kind: str, workload_id: str) -> bool:
+        if self._roll(self.spec.message_drop):
+            self._note("message_drop", msg=kind)
+            return False
+        return True
+
+
+class BusChaos:
+    """``BaseEventBus.interceptor``: drop/duplicate/delay/reorder + trace.
+
+    Delayed events are parked here with a virtual due time and re-injected
+    through ``bus.deliver`` (bypassing interception) when the harness
+    flushes past their deadline — a crude but deterministic model of a
+    partitioned/slow bus segment healing."""
+
+    def __init__(self, plan: FaultPlan, clock: VirtualClock):
+        self.plan = plan
+        self.clock = clock
+        self.held: list[tuple[float, Event]] = []
+
+    def intercept(self, bus: BaseEventBus, events: list[Event]) -> list[Event]:
+        plan, trace = self.plan, self.plan.trace
+        out: list[Event] = []
+        for ev in events:
+            if plan._roll(plan.spec.bus_drop):
+                plan._note("bus_drop", type=ev.type, merge_key=ev.merge_key)
+                continue
+            if plan._roll(plan.spec.bus_delay):
+                due = self.clock.now() + plan.spec.bus_delay_s
+                plan._note("bus_delay", type=ev.type, merge_key=ev.merge_key)
+                self.held.append((due, ev))
+                continue
+            out.append(ev)
+            if plan._roll(plan.spec.bus_duplicate):
+                plan._note("bus_duplicate", type=ev.type, merge_key=ev.merge_key)
+                out.append(ev)
+        if len(out) > 1 and plan._roll(plan.spec.bus_reorder):
+            plan._note("bus_reorder", n=len(out))
+            plan.rng.shuffle(out)
+        if trace is not None:
+            for ev in out:
+                trace.record_event("deliver", ev)
+        return out
+
+    def flush(self, bus: BaseEventBus, *, force: bool = False) -> int:
+        """Deliver held events whose delay elapsed (all of them when
+        ``force`` — the end-of-chaos partition heal)."""
+        now = self.clock.now()
+        due = [ev for ts, ev in self.held if force or ts <= now]
+        self.held = [(ts, ev) for ts, ev in self.held if not (force or ts <= now)]
+        if due:
+            if self.plan.trace is not None:
+                for ev in due:
+                    self.plan.trace.record_event("deliver", ev, delayed=True)
+            bus.deliver(due)
+        return len(due)

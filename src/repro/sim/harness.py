@@ -1,0 +1,215 @@
+"""The deterministic simulation harness (FoundationDB-style).
+
+Runs the *real* orchestrator — every agent, the lifecycle kernel, the
+broker, the event bus, the stores — single-threaded under a virtual
+clock, with one seeded RNG deciding every fault injection.  No threads
+are started anywhere: agents advance via ``BaseAgent.tick``, the
+workload runtime runs jobs synchronously (``workers=0`` +
+``step()``/``monitor_tick()``), and time moves only when the harness
+advances it.  Identical (scenario, seed) ⇒ identical execution ⇒
+byte-identical event trace, which is what lets a failing soak seed be
+replayed forever.
+
+One tick is one scheduling round:
+
+1. virtual clock advances ``tick_s``,
+2. every agent runs one cycle in registration order (a
+   :class:`SimulatedCrash` from an injected fault kills just that
+   replica's cycle — its claims and outbox rows stay behind for the
+   recovery machinery),
+3. the runtime synchronously drains its fair-share queue and runs one
+   monitor sweep (drain-failover + speculation),
+4. delayed bus events whose virtual deadline passed are delivered.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Mapping
+
+from repro.common.constants import TERMINAL_REQUEST_STATES
+from repro.common.exceptions import DatabaseError, SimulatedCrash
+from repro.db.engine import Database
+from repro.orchestrator import Orchestrator
+from repro.runtime.executor import WorkloadRuntime
+from repro.sim.clock import VirtualClock
+from repro.sim.faults import BusChaos, FaultPlan, FaultSpec
+from repro.sim.invariants import check_invariants
+from repro.sim.trace import TraceRecorder
+
+_TERMINAL = frozenset(str(s) for s in TERMINAL_REQUEST_STATES)
+
+
+class SimHarness:
+    def __init__(
+        self,
+        *,
+        seed: int = 0,
+        spec: FaultSpec | None = None,
+        bus_kind: str = "local",
+        replicas: int = 1,
+        sites: Mapping[str, int] | None = None,
+        poll_period_s: float = 0.05,
+        tick_s: float = 0.05,
+        job_runtime_s: float = 0.0,
+        batch_size: int = 64,
+        runtime_kwargs: dict[str, Any] | None = None,
+    ):
+        self.seed = seed
+        self.tick_s = tick_s
+        self.clock = VirtualClock().install()
+        try:
+            self.trace = TraceRecorder()
+            self.plan = FaultPlan(seed=seed, spec=spec or FaultSpec(),
+                                  trace=self.trace)
+            self.runtime = WorkloadRuntime(
+                sites=dict(sites or {"site0": 64}),
+                workers=0,
+                seed=seed,
+                job_runtime_s=job_runtime_s,
+                **(runtime_kwargs or {}),
+            )
+            self.runtime.sleep_fn = self.clock.sleep
+            self.runtime.fault_hook = self.plan.runtime_fault_hook
+            self.runtime.message_hook = self.plan.runtime_message_hook
+            self.orch = Orchestrator(
+                db=Database(":memory:"),
+                bus_kind=bus_kind,
+                runtime=self.runtime,
+                poll_period_s=poll_period_s,
+                replicas=replicas,
+                batch_size=batch_size,
+                switch_interval_s=None,
+            )
+            self.orch.db.fault_hook = self.plan.db_hook
+            self.bus_chaos = BusChaos(self.plan, self.clock)
+            self.orch.bus.interceptor = self.bus_chaos
+            self.ticks = 0
+            self.crashes: list[tuple[int, str]] = []
+        except BaseException:
+            self.clock.uninstall()
+            raise
+
+    # -- chaos window ---------------------------------------------------------
+    def arm(self) -> None:
+        self.plan.enabled = True
+
+    def disarm(self, *, heal_bus: bool = True) -> None:
+        """Close the fault window; by default the bus partition heals
+        (held/delayed events deliver immediately)."""
+        self.plan.enabled = False
+        if heal_bus:
+            self.bus_chaos.flush(self.orch.bus, force=True)
+
+    # -- stepping -------------------------------------------------------------
+    def _on_crash(self, consumer_id: str) -> None:
+        # a replica died mid-cycle: claims + outbox rows stay behind;
+        # stale-claim takeover and Coordinator.recover must repair it
+        self.crashes.append((self.ticks, consumer_id))
+        self.trace.record("crash", agent=consumer_id)
+
+    def tick(self) -> bool:
+        self.clock.advance(self.tick_s)
+        self.trace.tick = self.ticks
+        did = self.orch.tick(on_crash=self._on_crash)
+        did = bool(self.runtime.step()) or did
+        self.runtime.monitor_tick()
+        try:
+            self.bus_chaos.flush(self.orch.bus)
+        except SimulatedCrash:
+            # db-bus delivery can hit an injected crash-after-commit; the
+            # "replica" doing the flush dies, the rest of the tick stands
+            self._on_crash("bus-flush")
+        except DatabaseError:
+            # injected tx abort mid-delivery: the held events are lost,
+            # which a lossy bus is allowed to do — lazy polls converge
+            self.trace.record("fault", fault="bus_flush_abort")
+        self.ticks += 1
+        return did
+
+    def run_ticks(self, n: int) -> None:
+        for _ in range(n):
+            self.tick()
+
+    def run_until(
+        self, pred: Callable[[], bool], *, max_ticks: int = 4000
+    ) -> bool:
+        for _ in range(max_ticks):
+            if pred():
+                return True
+            self.tick()
+        return pred()
+
+    # -- convenience ----------------------------------------------------------
+    def request_statuses(self, request_ids: list[int]) -> dict[int, str]:
+        store = self.orch.stores["requests"]
+        return {
+            rid: store.get(rid, columns=("status",))["status"]
+            for rid in request_ids
+        }
+
+    def all_terminal(self, request_ids: list[int]) -> bool:
+        return all(
+            s in _TERMINAL for s in self.request_statuses(request_ids).values()
+        )
+
+    def run_to_terminal(
+        self, request_ids: list[int], *, max_ticks: int = 4000
+    ) -> dict[int, str]:
+        """Tick until every request lands terminal (assert on failure —
+        a stuck workflow IS the bug the simulator exists to catch)."""
+        ok = self.run_until(
+            lambda: self.all_terminal(request_ids), max_ticks=max_ticks
+        )
+        statuses = self.request_statuses(request_ids)
+        assert ok, f"requests stuck after {max_ticks} ticks: {statuses}"
+        return statuses
+
+    def quiesce(self, request_ids: list[int], *, max_ticks: int = 4000,
+                settle_ticks: int = 8) -> dict[int, str]:
+        """Disarm chaos, heal the bus, advance past every stale-claim /
+        recovery window, and drive all requests terminal + outbox empty."""
+        self.disarm()
+        # one big jump past claim staleness (300 s) and the Coordinator's
+        # stale_claim_s (30 s) so crashed replicas' claims are recoverable
+        self.clock.advance(400.0)
+        statuses = self.run_to_terminal(request_ids, max_ticks=max_ticks)
+        # let rollups/outbox drains settle
+        self.run_ticks(settle_ticks)
+        return statuses
+
+    def check_invariants(self, *, allow_suspended: bool = False) -> None:
+        problems = check_invariants(
+            self.orch, allow_suspended=allow_suspended
+        )
+        assert not problems, "invariant violations:\n  " + "\n  ".join(problems)
+
+    def snapshot_end_state(self) -> None:
+        """Record the terminal database state into the trace so two runs
+        must also agree on WHERE they ended, not just how they got there."""
+        db = self.orch.db
+        for table, pk in (
+            ("requests", "request_id"),
+            ("transforms", "transform_id"),
+            ("processings", "processing_id"),
+        ):
+            rows = db.query(
+                f"SELECT {pk} AS id, status FROM {table} ORDER BY {pk}"
+            )
+            self.trace.record(
+                "end_state",
+                table=table,
+                statuses={str(r["id"]): r["status"] for r in rows},
+            )
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        try:
+            self.plan.enabled = False
+            self.orch.stop()
+        finally:
+            self.clock.uninstall()
+
+    def __enter__(self) -> "SimHarness":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.close()

@@ -1,0 +1,145 @@
+"""End-state invariants every fault scenario must land on.
+
+Chaos is allowed to slow the orchestrator down, never to corrupt it.
+After the fault window closes and the system quiesces, these must hold
+regardless of what was injected:
+
+1. **no stuck rows** — every request/transform/processing reached a
+   terminal state (suspension is only legal while a scenario says so);
+2. **rollup consistency** — a terminal transform's status agrees with the
+   kernel's processing→transform rollup table for its latest processing,
+   and a Finished/SubFinished/Failed request agrees with the work-level
+   rollup of its own workflow blob;
+3. **no double-published effects** — at most one ``work_finished``
+   message row per transform (the externally observable exactly-once
+   guarantee of kernel.apply), and an empty outbox.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any
+
+from repro.common.constants import (
+    TERMINAL_PROCESSING_STATES,
+    TERMINAL_REQUEST_STATES,
+    TERMINAL_TRANSFORM_STATES,
+    RequestStatus,
+)
+from repro.lifecycle import (
+    request_status_for_work,
+    transform_status_for_processing,
+)
+
+
+def check_invariants(
+    orch: Any, *, allow_suspended: bool = False
+) -> list[str]:
+    """Returns the list of violations (empty == healthy end state)."""
+    problems: list[str] = []
+    db = orch.db
+    term_req = {str(s) for s in TERMINAL_REQUEST_STATES}
+    if allow_suspended:
+        term_req.add(str(RequestStatus.SUSPENDED))
+    term_tf = {str(s) for s in TERMINAL_TRANSFORM_STATES}
+    term_pr = {str(s) for s in TERMINAL_PROCESSING_STATES}
+
+    # 1 — no stuck non-terminal rows ---------------------------------------
+    for r in db.query("SELECT request_id, status FROM requests"):
+        if r["status"] not in term_req:
+            problems.append(
+                f"request {r['request_id']} stuck in {r['status']}"
+            )
+    suspended_reqs = {
+        int(r["request_id"])
+        for r in db.query(
+            "SELECT request_id FROM requests WHERE status=?",
+            (str(RequestStatus.SUSPENDED),),
+        )
+    }
+    superseded: set[int] = set()
+    for t in db.query(
+        "SELECT transform_id, request_id, status, transform_metadata "
+        "FROM transforms"
+    ):
+        meta = t["transform_metadata"]
+        if isinstance(meta, str):
+            try:
+                meta = json.loads(meta)
+            except ValueError:
+                meta = None
+        if meta and meta.get("superseded"):
+            superseded.add(int(t["transform_id"]))
+            continue  # replaced by a retry: any frozen status is fine
+        if int(t["request_id"]) in suspended_reqs:
+            continue  # parked with its request
+        if t["status"] not in term_tf:
+            problems.append(
+                f"transform {t['transform_id']} stuck in {t['status']}"
+            )
+    for p in db.query(
+        "SELECT processing_id, transform_id, status FROM processings"
+    ):
+        if int(p["transform_id"]) in superseded:
+            continue
+        if p["status"] not in term_pr:
+            problems.append(
+                f"processing {p['processing_id']} stuck in {p['status']}"
+            )
+
+    # 2 — rollups agree with the transition tables --------------------------
+    for t in db.query(
+        "SELECT transform_id, status FROM transforms WHERE status IN "
+        "('Finished','SubFinished','Failed')"
+    ):
+        tid = int(t["transform_id"])
+        if tid in superseded:
+            continue
+        prow = db.query_one(
+            "SELECT status FROM processings WHERE transform_id=? "
+            "ORDER BY processing_id DESC LIMIT 1",
+            (tid,),
+        )
+        if prow is None:
+            continue  # failed before a processing existed (legal)
+        want = transform_status_for_processing(prow["status"])
+        if want is not None and str(want) != t["status"]:
+            problems.append(
+                f"transform {tid} is {t['status']} but its latest "
+                f"processing ({prow['status']}) rolls up to {want}"
+            )
+    for r in db.query(
+        "SELECT request_id, status, workflow FROM requests WHERE status IN "
+        "('Finished','SubFinished','Failed')"
+    ):
+        from repro.core.workflow import Workflow
+
+        blob = r["workflow"]
+        if not blob:
+            continue
+        try:
+            wf = Workflow.from_dict(
+                blob if isinstance(blob, dict) else json.loads(blob)
+            )
+        except Exception:  # noqa: BLE001 - unparseable blob is its own bug
+            problems.append(f"request {r['request_id']} workflow blob corrupt")
+            continue
+        want = request_status_for_work(wf.overall_status())
+        if str(want) != r["status"]:
+            problems.append(
+                f"request {r['request_id']} is {r['status']} but its works "
+                f"roll up to {want}"
+            )
+
+    # 3 — exactly-once effects ---------------------------------------------
+    for row in db.query(
+        "SELECT transform_id, COUNT(*) AS n FROM messages "
+        "WHERE msg_type='work_finished' GROUP BY transform_id HAVING n > 1"
+    ):
+        problems.append(
+            f"transform {row['transform_id']} published work_finished "
+            f"{row['n']} times"
+        )
+    pending = orch.kernel.outbox_pending()
+    if pending:
+        problems.append(f"outbox still holds {pending} undrained rows")
+    return problems

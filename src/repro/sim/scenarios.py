@@ -1,0 +1,253 @@
+"""The scenario library: named crash-safety drills.
+
+Each scenario builds a :class:`SimHarness`, drives a real workload into a
+specific danger window, injects the faults that window is vulnerable to,
+then quiesces and asserts the end-state invariants (no stuck rows,
+rollups consistent, exactly-once effects) plus — via the returned trace
+digest — that the whole run is reproducible from its seed.
+
+Run one from the CLI::
+
+    python -m repro.sim --scenario replica_crash_mid_outbox_drain --seed 7
+
+All scenarios finish in seconds of wall clock: time only advances when
+the harness says so, so stale-claim windows, delivery retries, and
+straggler slowdowns cost nothing real.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+from repro.common.exceptions import WorkflowError
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+from repro.sim.faults import FaultSpec
+from repro.sim.harness import SimHarness
+
+
+def _chain_workflow(name: str, n_works: int, n_jobs: int) -> Workflow:
+    """A linear chain of noop works — lives across many ticks, so fault
+    windows land mid-flight instead of after the fact."""
+    wf = Workflow(name)
+    prev: str | None = None
+    for i in range(n_works):
+        w = Work(f"{name}_w{i}", payload={"kind": "noop"}, n_jobs=n_jobs)
+        wf.add_work(w)
+        if prev is not None:
+            wf.add_dependency(prev, w.name)
+        prev = w.name
+    return wf
+
+
+def _result(h: SimHarness, statuses: dict[int, str]) -> dict[str, Any]:
+    h.snapshot_end_state()
+    return {
+        "digest": h.trace.digest(),
+        "ticks": h.ticks,
+        "trace_lines": len(h.trace),
+        "injected": dict(h.plan.injected),
+        "crashes": len(h.crashes),
+        "statuses": {str(k): v for k, v in statuses.items()},
+        "runtime_stats": dict(h.runtime.stats),
+    }
+
+
+# ---------------------------------------------------------------------------
+# 1. replica crash mid-outbox-drain
+# ---------------------------------------------------------------------------
+def replica_crash_mid_outbox_drain(seed: int = 0) -> dict[str, Any]:
+    """Durable (DB-bus) outbox with 2 replicas of every agent; replicas
+    keep dying in the commit→drain window.  The transactional outbox must
+    deliver every committed event exactly once anyway: at the end no row
+    is stuck, the outbox is empty, and no work_finished duplicated."""
+    spec = FaultSpec(db_crash_after_commit=0.15)
+    with SimHarness(seed=seed, spec=spec, bus_kind="db", replicas=2) as h:
+        rids = [
+            h.orch.submit_workflow(_chain_workflow(f"crash{i}", 3, 4))
+            for i in range(4)
+        ]
+        h.arm()
+        h.run_ticks(60)  # crash storm across the whole request lifecycle
+        statuses = h.quiesce(rids)
+        assert h.crashes, "fault plan never fired — scenario misconfigured"
+        assert all(s == "Finished" for s in statuses.values()), statuses
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+# ---------------------------------------------------------------------------
+# 2. bus partition during a cascade abort
+# ---------------------------------------------------------------------------
+def bus_partition_during_cascade_abort(seed: int = 0) -> dict[str, Any]:
+    """Abort a mid-flight tree while the bus drops/delays/reorders most
+    traffic.  Events are allowed to be lossy by design — the lazy-poll
+    fallback must still converge every row to Cancelled, kill the
+    workloads, and keep rollups consistent."""
+    spec = FaultSpec(
+        bus_drop=0.5, bus_delay=0.3, bus_delay_s=5.0, bus_reorder=0.5
+    )
+    with SimHarness(seed=seed, spec=spec) as h:
+        rids = [
+            h.orch.submit_workflow(_chain_workflow(f"abort{i}", 4, 8))
+            for i in range(3)
+        ]
+        # let the tree get mid-flight (transforms submitted, jobs queued)
+        h.run_ticks(4)
+        h.arm()
+        for rid in rids:
+            h.orch.kernel.abort_request(rid)
+        h.run_ticks(40)
+        statuses = h.quiesce(rids)
+        assert all(s == "Cancelled" for s in statuses.values()), statuses
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+# ---------------------------------------------------------------------------
+# 3. suspend/resume storm under message duplication
+# ---------------------------------------------------------------------------
+def suspend_resume_storm_under_duplication(seed: int = 0) -> dict[str, Any]:
+    """Repeatedly park and resume in-flight requests while the bus
+    duplicates half of everything.  Duplicate events race replicas into
+    the same rows; the kernel's current-status validation must absorb
+    every duplicate, and each request must still finish exactly once."""
+    spec = FaultSpec(bus_duplicate=0.5)
+    with SimHarness(seed=seed, spec=spec) as h:
+        rids = [
+            h.orch.submit_workflow(_chain_workflow(f"storm{i}", 6, 4))
+            for i in range(4)
+        ]
+        h.run_ticks(3)
+        h.arm()
+        for _ in range(5):  # the storm
+            for rid in rids:
+                try:
+                    h.orch.kernel.suspend_request(rid)
+                except WorkflowError:
+                    pass  # already terminal / not yet suspendable: a race, not a bug
+            h.run_ticks(3)
+            for rid in rids:
+                try:
+                    h.orch.kernel.resume_request(rid)
+                except WorkflowError:
+                    pass
+            h.run_ticks(3)
+        statuses = h.quiesce(rids)
+        assert all(s == "Finished" for s in statuses.values()), statuses
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+# ---------------------------------------------------------------------------
+# 4. straggler site triggers broker relocation
+# ---------------------------------------------------------------------------
+def straggler_site_relocation(seed: int = 0) -> dict[str, Any]:
+    """One site stalls and kills every job attempt that lands on it.  The
+    retry path must relocate (avoid-hint + degraded health EWMA steer the
+    broker elsewhere) and every job must still finish — on a healthy
+    site."""
+    # flaky is the biggest pool, so the cost model prefers it — until its
+    # failure EWMA degrades and placement relocates to the healthy sites
+    with SimHarness(
+        seed=seed, sites={"good0": 16, "good1": 16, "flaky": 64},
+        job_runtime_s=0.01,
+    ) as h:
+        plan = h.plan
+
+        # targeted (not probability-windowed) fault: EVERY attempt landing
+        # on the flaky site dies, for the whole run — only relocation can
+        # finish the work
+        def site_faults(wl: str, job: int, attempt: int, site: str) -> str | None:
+            if site == "flaky":
+                plan._note("worker_kill", job=job, site=site)
+                return "kill"
+            return None
+
+        h.runtime.fault_hook = site_faults
+        wf = Workflow("straggler")
+        for i in range(4):
+            wf.add_work(
+                Work(f"s_w{i}", payload={"kind": "noop"}, n_jobs=16,
+                     max_retries=6)
+            )
+        rid = h.orch.submit_workflow(wf)
+        statuses = h.quiesce([rid])
+        assert statuses[rid] == "Finished", statuses
+        assert plan.injected.get("worker_kill", 0) > 0, "flaky site never hit"
+        assert h.runtime.stats["retried_jobs"] > 0, "no retry-relocation"
+        # every surviving job landed on a healthy site
+        for task in h.runtime.tasks.values():
+            for j in task.per_index():
+                if j.state == "Finished":
+                    assert j.site != "flaky", "finished job stayed on flaky site"
+        # the broker learned: flaky's failure EWMA is degraded
+        assert h.orch.broker.health.failure_rate("flaky") > 0.0
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+# ---------------------------------------------------------------------------
+# 5. 2048-job soak under a random walk of faults
+# ---------------------------------------------------------------------------
+def soak_2048_random_walk(seed: int = 0) -> dict[str, Any]:
+    """Every boundary misbehaves at once, at low probability, across a
+    2048-job load — the long-tail interleavings no targeted drill writes
+    down.  Same seed ⇒ byte-identical trace, so any failure here is a
+    permanently replayable bug report."""
+    spec = FaultSpec(
+        db_abort=0.02,
+        db_crash_after_commit=0.01,
+        bus_drop=0.05,
+        bus_duplicate=0.05,
+        bus_delay=0.05,
+        bus_delay_s=2.0,
+        bus_reorder=0.10,
+        worker_kill=0.02,
+        message_drop=0.05,
+    )
+    with SimHarness(
+        seed=seed, spec=spec, sites={"site0": 64, "site1": 64}, replicas=2,
+        batch_size=128,
+    ) as h:
+        rids = []
+        for i in range(8):  # 8 requests × 4 works × 64 jobs = 2048 jobs
+            wf = Workflow(f"soak{i}")
+            for k in range(4):
+                wf.add_work(
+                    Work(f"soak{i}_w{k}", payload={"kind": "noop"},
+                         n_jobs=64, max_retries=8)
+                )
+            rids.append(h.orch.submit_workflow(wf))
+        h.arm()
+        h.run_ticks(80)
+        statuses = h.quiesce(rids, max_ticks=8000)
+        total = h.runtime.stats["submitted_jobs"]
+        assert total >= 2048, f"expected ≥2048 jobs, ran {total}"
+        assert all(s == "Finished" for s in statuses.values()), statuses
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
+    "replica_crash_mid_outbox_drain": replica_crash_mid_outbox_drain,
+    "bus_partition_during_cascade_abort": bus_partition_during_cascade_abort,
+    "suspend_resume_storm_under_duplication": suspend_resume_storm_under_duplication,
+    "straggler_site_relocation": straggler_site_relocation,
+    "soak_2048_random_walk": soak_2048_random_walk,
+}
+
+#: the two cheapest scenarios — what CI's SIM_SMOKE step runs
+SMOKE_SCENARIOS = (
+    "bus_partition_during_cascade_abort",
+    "straggler_site_relocation",
+)
+
+
+def run_scenario(name: str, seed: int = 0) -> dict[str, Any]:
+    try:
+        fn = SCENARIOS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown scenario {name!r}; choose from {sorted(SCENARIOS)}"
+        ) from None
+    return fn(seed)

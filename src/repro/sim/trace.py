@@ -1,0 +1,57 @@
+"""Event-trace recording for determinism proofs.
+
+The recorder accumulates canonical JSON lines (sorted keys, no floats
+derived from wall time) for everything observable the simulation does:
+bus publishes and what the fault plan did to them, injected faults,
+replica crashes, and the final database state.  ``digest()`` hashes the
+byte stream — two runs are *the same run* iff their digests match, which
+is the reproducibility contract every scenario asserts.
+
+Nondeterministic identifiers (``Event.event_id`` — a process-global
+counter, workload uids) are deliberately excluded from recorded fields.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Any
+
+from repro.common.utils import json_dumps
+from repro.eventbus.events import Event
+
+
+class TraceRecorder:
+    def __init__(self) -> None:
+        self._lines: list[str] = []
+        #: current simulation tick — stamped onto every record by the
+        #: harness so traces line up across runs tick-for-tick
+        self.tick = 0
+
+    def record(self, kind: str, **fields: Any) -> None:
+        self._lines.append(
+            json_dumps({"kind": kind, "tick": self.tick, **fields})
+        )
+
+    def record_event(self, kind: str, ev: Event, **extra: Any) -> None:
+        """One bus event, identified by its deterministic coordinates
+        (type/payload/priority/merge_key — never event_id)."""
+        self.record(
+            kind,
+            type=ev.type,
+            payload=ev.payload,
+            priority=ev.priority,
+            merge_key=ev.merge_key,
+            **extra,
+        )
+
+    # -- output ---------------------------------------------------------------
+    def lines(self) -> list[str]:
+        return list(self._lines)
+
+    def text(self) -> str:
+        return "\n".join(self._lines) + ("\n" if self._lines else "")
+
+    def digest(self) -> str:
+        return hashlib.sha256(self.text().encode()).hexdigest()
+
+    def __len__(self) -> int:
+        return len(self._lines)

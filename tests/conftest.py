@@ -36,3 +36,28 @@ def orch():
     o.start()
     yield o
     o.stop()
+
+
+@pytest.fixture()
+def virtual_clock():
+    """An installed VirtualClock — the whole process runs on simulated
+    time for the duration of the test (restored on teardown)."""
+    from repro.sim import VirtualClock
+
+    clock = VirtualClock().install()
+    yield clock
+    clock.uninstall()
+
+
+@pytest.fixture()
+def fault_plan():
+    """Factory for armed, seeded fault plans: ``fault_plan(seed=3,
+    bus_drop=0.5)`` — probabilities are FaultSpec field names."""
+    from repro.sim import FaultPlan, FaultSpec
+
+    def make(seed: int = 0, **probs):
+        plan = FaultPlan(seed=seed, spec=FaultSpec(**probs))
+        plan.enabled = True
+        return plan
+
+    return make

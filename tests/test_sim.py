@@ -1,0 +1,225 @@
+"""Deterministic simulation harness (repro.sim): fault injection at the
+three I/O boundaries, the scenario library's end-state invariants, and
+the reproducibility contract (same seed ⇒ byte-identical event trace)."""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.common.exceptions import DatabaseError, SimulatedCrash
+from repro.common.utils import utc_now_ts
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+from repro.eventbus import Event, LocalEventBus
+from repro.sim import (
+    SCENARIOS,
+    SMOKE_SCENARIOS,
+    FaultSpec,
+    SimHarness,
+    run_scenario,
+)
+from repro.sim.faults import BusChaos, FaultPlan
+from repro.sim.trace import TraceRecorder
+
+
+# ---------------------------------------------------------------------------
+# virtual clock
+# ---------------------------------------------------------------------------
+def test_virtual_clock_drives_process_time(virtual_clock):
+    t0 = utc_now_ts()
+    virtual_clock.advance(123.5)
+    assert utc_now_ts() == pytest.approx(t0 + 123.5)
+    virtual_clock.sleep(10)  # instant: no wall time passes
+    assert utc_now_ts() == pytest.approx(t0 + 133.5)
+
+
+def test_virtual_clock_uninstall_restores_wall_time():
+    from repro.sim import VirtualClock
+
+    clock = VirtualClock(start=5.0).install()
+    assert utc_now_ts() == 5.0
+    clock.uninstall()
+    assert utc_now_ts() > 1_700_000_000.0  # wall clock again
+
+
+def test_virtual_clock_rejects_backwards_time(virtual_clock):
+    with pytest.raises(ValueError):
+        virtual_clock.advance(-1.0)
+
+
+# ---------------------------------------------------------------------------
+# fault plan: the three boundaries
+# ---------------------------------------------------------------------------
+def test_db_hook_abort_and_crash(fault_plan):
+    plan = fault_plan(seed=1, db_abort=1.0)
+    with pytest.raises(DatabaseError):
+        plan.db_hook("commit")
+    plan2 = fault_plan(seed=1, db_crash_after_commit=1.0)
+    with pytest.raises(SimulatedCrash):
+        plan2.db_hook("committed")
+    # disarmed plans never fire
+    plan.enabled = False
+    plan.db_hook("commit")
+    assert plan.injected == {"db_abort": 1}
+
+
+def test_db_abort_rolls_back_and_crash_after_commit_persists(fault_plan):
+    from repro.db.engine import Database
+
+    db = Database(":memory:")
+    db.execute("CREATE TABLE t(x INTEGER)")
+    plan = fault_plan(db_abort=1.0)
+    db.fault_hook = plan.db_hook
+    with pytest.raises(DatabaseError):
+        db.execute("INSERT INTO t VALUES (1)")
+    db.fault_hook = None
+    assert db.query("SELECT * FROM t") == []  # rolled back
+    crash = fault_plan(db_crash_after_commit=1.0)
+    db.fault_hook = crash.db_hook
+    with pytest.raises(SimulatedCrash):
+        db.execute("INSERT INTO t VALUES (2)")
+    db.fault_hook = None
+    # the commit is durable even though the caller saw a crash
+    assert [r["x"] for r in db.query("SELECT x FROM t")] == [2]
+
+
+def test_bus_chaos_drop_duplicate_delay(virtual_clock, fault_plan):
+    bus = LocalEventBus()
+    ev = lambda i: Event(type="T", payload={"i": i})  # noqa: E731
+    # drop everything
+    plan = fault_plan(bus_drop=1.0)
+    bus.interceptor = BusChaos(plan, virtual_clock)
+    bus.publish(ev(1))
+    assert bus.pending() == 0 and plan.injected["bus_drop"] == 1
+    # duplicate everything
+    plan = fault_plan(bus_duplicate=1.0)
+    bus.interceptor = BusChaos(plan, virtual_clock)
+    bus.publish(ev(2))
+    assert bus.pending() == 2
+    # delay: held until virtual time passes, then flushed
+    plan = fault_plan(bus_delay=1.0, bus_delay_s=5.0)
+    chaos = BusChaos(plan, virtual_clock)
+    bus.interceptor = chaos
+    bus.publish(ev(3))
+    assert bus.pending() == 2  # still only the duplicates from before
+    assert chaos.flush(bus) == 0  # not due yet
+    virtual_clock.advance(5.0)
+    assert chaos.flush(bus) == 1
+    assert bus.pending() == 3
+
+
+def test_runtime_fault_hook_kills_and_straggles(virtual_clock, fault_plan):
+    from repro.runtime.executor import TaskSpec, WorkloadRuntime
+
+    rt = WorkloadRuntime(sites={"s": 4}, workers=0, job_runtime_s=0.5)
+    rt.sleep_fn = virtual_clock.sleep
+    plan = fault_plan(worker_kill=1.0)
+    rt.fault_hook = plan.runtime_fault_hook
+    wl = rt.submit(TaskSpec(payload={"kind": "noop"}, n_jobs=2,
+                            max_job_retries=1))
+    rt.step()
+    st = rt.status(wl)
+    assert st["status"] == "Failed"  # every attempt killed
+    assert all(j["state"] == "Failed" for j in st["jobs"])
+    assert plan.injected["worker_kill"] == 4  # 2 jobs × (1 try + 1 retry)
+    rt.stop()
+
+
+def test_runtime_message_drop_loses_heartbeats(fault_plan):
+    from repro.runtime.executor import TaskSpec, WorkloadRuntime
+
+    rt = WorkloadRuntime(sites={"s": 4}, workers=0)
+    plan = fault_plan(message_drop=1.0)
+    rt.message_hook = plan.runtime_message_hook
+    rt.submit(TaskSpec(payload={"kind": "noop"}, n_jobs=3))
+    rt.step()
+    assert rt.messages.qsize() == 0  # every callback lost
+    assert plan.injected["message_drop"] > 0
+    rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# harness basics
+# ---------------------------------------------------------------------------
+def test_harness_runs_workflow_without_threads():
+    with SimHarness(seed=0) as h:
+        wf = Workflow("basic")
+        wf.add_work(Work("a", payload={"kind": "noop"}, n_jobs=4))
+        rid = h.orch.submit_workflow(wf)
+        statuses = h.run_to_terminal([rid], max_ticks=200)
+        assert statuses[rid] == "Finished"
+        h.check_invariants()
+
+
+def test_harness_restores_wall_clock_on_close():
+    h = SimHarness(seed=0)
+    assert utc_now_ts() < 2_000_000_000.0  # virtual epoch
+    h.close()
+    assert utc_now_ts() > 1_700_000_000.0
+
+
+# ---------------------------------------------------------------------------
+# scenario library: end-state invariants under injected faults
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(SCENARIOS))
+def test_scenario_passes_invariants(name):
+    res = run_scenario(name, seed=0)
+    assert res["digest"]
+    assert res["trace_lines"] > 0
+
+
+def test_smoke_scenarios_are_registered():
+    assert set(SMOKE_SCENARIOS) <= set(SCENARIOS)
+    assert len(SCENARIOS) >= 5
+
+
+# ---------------------------------------------------------------------------
+# determinism regression: same seed ⇒ byte-identical trace
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name", ["bus_partition_during_cascade_abort", "soak_2048_random_walk"]
+)
+def test_same_seed_reproduces_identical_trace(name):
+    a = run_scenario(name, seed=11)
+    b = run_scenario(name, seed=11)
+    assert a["digest"] == b["digest"], "same seed must replay byte-identically"
+    assert a["injected"] == b["injected"]
+    c = run_scenario(name, seed=12)
+    assert c["digest"] != a["digest"], "different seed should diverge"
+
+
+# ---------------------------------------------------------------------------
+# property test: kernel invariants hold under ANY random fault plan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(6))
+def test_invariants_hold_under_random_fault_plans(seed):
+    """Draw a random fault mix from the seed, run a small workload through
+    the full stack, quiesce, and require the kernel's invariants — the
+    property the whole subsystem exists to enforce."""
+    rng = random.Random(1000 + seed)
+    spec = FaultSpec(
+        db_abort=rng.uniform(0, 0.05),
+        db_crash_after_commit=rng.uniform(0, 0.03),
+        bus_drop=rng.uniform(0, 0.2),
+        bus_duplicate=rng.uniform(0, 0.2),
+        bus_delay=rng.uniform(0, 0.1),
+        bus_delay_s=rng.uniform(0.5, 3.0),
+        bus_reorder=rng.uniform(0, 0.3),
+        worker_kill=rng.uniform(0, 0.1),
+        message_drop=rng.uniform(0, 0.2),
+    )
+    bus_kind = rng.choice(["local", "db"])
+    with SimHarness(seed=seed, spec=spec, bus_kind=bus_kind,
+                    replicas=rng.choice([1, 2])) as h:
+        rids = []
+        for i in range(3):
+            wf = Workflow(f"prop{i}")
+            wf.add_work(Work(f"p{i}", payload={"kind": "noop"}, n_jobs=8,
+                             max_retries=6))
+            rids.append(h.orch.submit_workflow(wf))
+        h.arm()
+        h.run_ticks(30)
+        statuses = h.quiesce(rids)
+        assert all(s == "Finished" for s in statuses.values()), statuses
+        h.check_invariants()
