@@ -7,6 +7,7 @@ functions become distributed tasks via decorators, and the *control flow*
 """
 from __future__ import annotations
 
+from repro.api import LocalClient, gather
 from repro.core import work_function
 from repro.orchestrator import Orchestrator
 from repro.runtime.executor import WorkloadRuntime
@@ -66,7 +67,10 @@ def _pause_resume_demo(orch, request_id) -> None:
 def main() -> None:
     runtime = WorkloadRuntime(sites={"grid": 4, "hpc": 4}, workers=8)
     with Orchestrator(poll_period_s=0.05, runtime=runtime) as orch:
-        with orch.session() as sess:
+        # the unified client: swap LocalClient(orch) for HttpClient(url)
+        # and this whole pipeline runs over the /v2 REST API unchanged
+        client = LocalClient(orch)
+        with client.session() as sess:
             best = None
             # iterative refinement loop — plain Python as the Workflow
             for round_i in range(3):
@@ -75,7 +79,7 @@ def main() -> None:
                 if round_i == 0:
                     # control-plane detour: pause/resume a live simulation
                     _pause_resume_demo(orch, sess.requests[-1])
-                results = [s.result(timeout=60) for s in sims]
+                results = gather(*sims, timeout=60)  # futures composition
                 summary = summarize.submit(results).result(timeout=60)
                 print(f"round {round_i}: best resolution "
                       f"{summary['best_resolution']:.4f} "

@@ -1,10 +1,11 @@
 """Quickstart: the iDDS workflow engine in 60 seconds.
 
-Builds a conditional DAG workflow (template style), submits it to an
-in-process orchestrator (database + event bus + agents + workload
-runtime), runs a Function-as-a-Task submission — the paper's two workflow
-representation styles side by side — and finishes with the REST control
-plane: pausing and resuming a live request through the lifecycle kernel.
+Builds a conditional DAG workflow (template style), submits it through
+the unified client API (`repro.api`), runs a Function-as-a-Task
+submission — the paper's two workflow representation styles side by
+side — and finishes by swapping the SAME client surface from in-process
+(`LocalClient`) to remote (`HttpClient` over the versioned /v2 REST
+API): identical verbs, identical FaT sessions, different transport.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -12,9 +13,10 @@ from __future__ import annotations
 
 import time
 
+from repro.api import HttpClient, LocalClient
 from repro.core import Condition, Ref, Work, Workflow, register_task, work_function
 from repro.orchestrator import Orchestrator
-from repro.rest import RestApp, RestClient, RestServer
+from repro.rest import RestApp, RestServer
 
 
 def main() -> None:
@@ -35,10 +37,11 @@ def main() -> None:
                       Condition.compare(Ref("measure.outputs.metric"), "<=", 0.5))
 
     with Orchestrator(poll_period_s=0.03) as orch:
-        rid = orch.submit_workflow(wf)
-        status = orch.wait_request(rid, timeout=30)
+        client = LocalClient(orch)  # the unified client, in-process backend
+        rid = client.submit(wf, idempotency_key=wf.fingerprint())
+        status = client.wait(rid, timeout=30)
         print(f"workflow finished: {status}")
-        for t in orch.request_status(rid)["transforms"]:
+        for t in client.status(rid)["transforms"]:
             print(f"  {t['node_id']:10s} -> {t['status']}")
         snap = orch.workflow_snapshot(rid)
         print(f"  skipped branch: {sorted(snap.skipped)}")
@@ -51,19 +54,26 @@ def main() -> None:
                 a, b = b, a + b
             return a
 
-        with orch.session():
+        with client.session():
             future = fib.submit(20)
             print(f"fib(20) via distributed FaT = {future.result(timeout=30)}")
             batch = fib.map([5, 10, 15])
             print(f"fib map [5,10,15] = {batch.result(timeout=30)}")
 
-        # ---- control plane over REST (lifecycle kernel commands) --------
+        # ---- the SAME surface over REST (HttpClient, /v2 API) -----------
         register_task("slow_step", lambda **kw: time.sleep(0.3) or {})
         srv = RestServer(RestApp(orch)).start()
         try:
-            cli = RestClient(srv.url)
+            cli = HttpClient(srv.url, timeout_s=10.0)
             cli.register("ops", ["users"])
             cli.login("ops")
+
+            # FaT over the wire: the identical session script, remote
+            with cli.session():
+                print(f"fib(20) over REST        = "
+                      f"{fib.submit(20).result(timeout=30)}")
+
+            # lifecycle control plane (suspend/resume through /v2)
             wf2 = Workflow("pausable")
             for i in range(3):
                 wf2.add_work(Work(f"step{i}", task="slow_step", n_jobs=2))

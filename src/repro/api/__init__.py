@@ -1,0 +1,51 @@
+"""``repro.api`` — the unified, transport-agnostic client surface.
+
+One ``Client`` protocol, two backends:
+
+* ``LocalClient(orch)``     — in-process, wraps an ``Orchestrator``;
+* ``HttpClient(url)``       — remote, speaks the versioned ``/v2`` REST API.
+
+Both expose identical verbs (``submit``/``status``/``wait``/lifecycle
+control/``catalog``/``monitor``/``session``), so the same script — FaT
+sessions and futures included — runs unmodified in-process or over the
+wire.  ``connect()`` picks the backend from its argument.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.api.client import Client  # noqa: F401
+from repro.api.futures import (  # noqa: F401
+    TERMINAL_WORK_STATES,
+    WorkFuture,
+    as_completed,
+    gather,
+)
+from repro.api.http import HttpClient, HttpTransport  # noqa: F401
+from repro.api.local import LocalClient  # noqa: F401
+from repro.api.session import Session  # noqa: F401
+
+__all__ = [
+    "Client",
+    "HttpClient",
+    "HttpTransport",
+    "LocalClient",
+    "Session",
+    "TERMINAL_WORK_STATES",
+    "WorkFuture",
+    "as_completed",
+    "connect",
+    "gather",
+]
+
+
+def connect(target: Any, **kw: Any) -> Client:
+    """Build the right backend for ``target``: an URL string becomes an
+    ``HttpClient``, an ``Orchestrator`` becomes a ``LocalClient``."""
+    if isinstance(target, str):
+        return HttpClient(target, **kw)
+    if hasattr(target, "submit_workflow"):
+        return LocalClient(target, **kw)
+    raise TypeError(
+        f"connect() takes a server URL or an Orchestrator, not {type(target).__name__}"
+    )

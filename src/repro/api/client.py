@@ -1,0 +1,202 @@
+"""The unified client surface (one protocol, two transports).
+
+``Client`` defines the full user-facing verb set — submission, status,
+lifecycle control, catalog/monitor/log reads, the code cache, and FaT
+``session()`` — once, so ``LocalClient`` (in-process ``Orchestrator``)
+and ``HttpClient`` (versioned ``/v2`` REST) are interchangeable: any
+script written against one runs unmodified against the other.  This is
+the location-transparent submission interface the decentralised-
+orchestration literature asks for, applied to the paper's §3.3 service.
+
+Backends implement the small abstract core (``_submit_workflow`` plus the
+read/control primitives); everything composite — ``submit`` accepting a
+``Work`` or a ``Workflow``, ``wait`` polling through the swappable
+time/sleep providers, ``session`` wiring ``@work_function`` — lives here
+and is shared.
+"""
+from __future__ import annotations
+
+import abc
+import contextlib
+from typing import Any, Iterator, Sequence
+
+from repro.api.futures import WorkFuture
+from repro.api.session import Session
+from repro.common import utils
+from repro.common.constants import (
+    TERMINAL_REQUEST_STATES as _TERMINAL_ENUM,
+)
+from repro.core.fat import set_active_session
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+
+#: request states after which ``wait`` returns — derived from the ONE
+#: authority in repro.common.constants, never a hand-copied literal
+TERMINAL_REQUEST_STATES = tuple(str(s) for s in _TERMINAL_ENUM)
+
+
+class Client(abc.ABC):
+    """Transport-agnostic client protocol.  See module docstring."""
+
+    # -- submission ----------------------------------------------------------
+    def submit(
+        self,
+        item: Workflow | Work,
+        *,
+        priority: int = 0,
+        user: str | None = None,
+        scope: str = "default",
+        idempotency_key: str | None = None,
+    ) -> int:
+        """Submit a ``Workflow`` — or a single ``Work``, auto-wrapped the
+        way FaT sessions do — and return the request id.  ``priority`` and
+        ``user`` feed the broker's fair-share queues; ``idempotency_key``
+        makes retried submissions of the SAME definition collapse onto one
+        request (reusing a key for a different definition is rejected)."""
+        if isinstance(item, Work):
+            wf = Workflow(f"single_{item.name}")
+            wf.add_work(item)
+        elif isinstance(item, Workflow):
+            wf = item
+        else:
+            raise TypeError(
+                f"submit() takes a Workflow or a Work, not {type(item).__name__}"
+            )
+        return self._submit_workflow(
+            wf,
+            priority=priority,
+            user=user,
+            scope=scope,
+            idempotency_key=idempotency_key,
+        )
+
+    @abc.abstractmethod
+    def _submit_workflow(
+        self,
+        wf: Workflow,
+        *,
+        priority: int,
+        user: str | None,
+        scope: str,
+        idempotency_key: str | None,
+    ) -> int:
+        ...
+
+    # -- reads ---------------------------------------------------------------
+    @abc.abstractmethod
+    def status(self, request_id: int) -> dict[str, Any]:
+        ...
+
+    @abc.abstractmethod
+    def list_requests(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 50,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        """Paginated request listing: {"requests": [...], "total": n,
+        "limit": l, "offset": o}."""
+
+    @abc.abstractmethod
+    def work_status(
+        self, request_id: int, work_name: str
+    ) -> tuple[str, Any]:
+        """(status, results) for one Work — what futures poll."""
+
+    def works_status(
+        self, request_id: int, work_names: Sequence[str]
+    ) -> dict[str, tuple[str, Any]]:
+        """Batched ``work_status`` (backends override with one round
+        trip where the transport makes that cheaper)."""
+        return {n: self.work_status(request_id, n) for n in work_names}
+
+    @abc.abstractmethod
+    def catalog(self, request_id: int) -> dict[str, Any]:
+        ...
+
+    @abc.abstractmethod
+    def logs(self, request_id: int) -> dict[str, Any]:
+        ...
+
+    @abc.abstractmethod
+    def monitor(self) -> dict[str, Any]:
+        ...
+
+    @abc.abstractmethod
+    def ping(self) -> bool:
+        ...
+
+    # -- lifecycle control plane ---------------------------------------------
+    @abc.abstractmethod
+    def abort(self, request_id: int) -> None:
+        ...
+
+    @abc.abstractmethod
+    def suspend(self, request_id: int) -> None:
+        ...
+
+    @abc.abstractmethod
+    def resume(self, request_id: int) -> None:
+        ...
+
+    @abc.abstractmethod
+    def retry(self, request_id: int) -> int:
+        ...
+
+    @abc.abstractmethod
+    def expire(self, request_id: int) -> None:
+        ...
+
+    # -- code cache -----------------------------------------------------------
+    @abc.abstractmethod
+    def cache_put(self, data: bytes) -> str:
+        ...
+
+    @abc.abstractmethod
+    def cache_get(self, digest: str) -> bytes:
+        ...
+
+    # -- waiting ---------------------------------------------------------------
+    def _poll_status(self, request_id: int) -> str:
+        """One cheap status probe for ``wait`` — backends override with a
+        status-only read so polling never decodes whole workflow blobs."""
+        return self.status(request_id)["status"]
+
+    def wait(
+        self,
+        request_id: int,
+        *,
+        timeout: float = 60.0,
+        interval: float = 0.05,
+    ) -> str:
+        """Block until the request is terminal; returns the final status.
+        Polling runs through the swappable time/sleep providers."""
+        deadline = utils.utc_now_ts() + timeout
+        while True:
+            st = self._poll_status(request_id)
+            if st in TERMINAL_REQUEST_STATES:
+                return st
+            if utils.utc_now_ts() > deadline:
+                raise TimeoutError(f"request {request_id} still {st}")
+            utils.sleep(interval)
+
+    # -- Function-as-a-Task ------------------------------------------------------
+    def future(self, request_id: int, work_name: str) -> WorkFuture:
+        """Re-attach a future to an already-submitted work."""
+        return WorkFuture(self, request_id, work_name)
+
+    @contextlib.contextmanager
+    def session(self, **submit_kw: Any) -> Iterator[Session]:
+        """Open a FaT session: inside the block, ``@work_function``
+        ``.submit()``/``.map()`` route through this client."""
+        s = Session(self, **submit_kw)
+        set_active_session(s)
+        try:
+            yield s
+        finally:
+            set_active_session(None)
+
+    # -- lifecycle of the client itself -------------------------------------------
+    def close(self) -> None:
+        """Release transport resources (no-op for in-process clients)."""

@@ -1,0 +1,159 @@
+"""Future composition layer shared by every client backend.
+
+``WorkFuture`` is the asynchronous handle a FaT session hands back for a
+submitted ``Work``: it polls ``Client.work_status`` (in-process reads for
+``LocalClient``, ``GET /v2/request/<id>/work/<name>`` for ``HttpClient``)
+and decodes the pickled return payload exactly like the paper's §3.1.3
+step (4).  ``as_completed``/``gather`` compose many futures; their polling
+is batched per (client, request) through ``Client.works_status`` so a
+map-style fan-out costs one round trip per poll, not one per future.
+
+All waiting flows through the swappable ``repro.common.utils`` time/sleep
+providers, so the deterministic simulator can drive client code without
+consuming wall clock.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any, Iterable, Iterator
+
+from repro.common import utils
+from repro.core.fat import TERMINAL_WORK_STATES as _TERMINAL
+from repro.core.fat import decode_work_results
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api.client import Client
+
+#: work/transform statuses after which the result can no longer change
+#: (one authority, shared with ResultFuture in repro.core.fat)
+TERMINAL_WORK_STATES = frozenset(_TERMINAL)
+
+
+class WorkFuture:
+    """Handle on one Work's eventual result, polled through a ``Client``.
+
+    Mirrors the ``concurrent.futures.Future`` reading API (``done`` /
+    ``result`` / ``exception``) without the writer side — state lives in
+    the orchestrator, the future only observes it.  Terminal polls are
+    cached so a resolved future never touches the transport again."""
+
+    def __init__(self, client: "Client", request_id: int, work_name: str):
+        self.client = client
+        self.request_id = int(request_id)
+        self.work_name = work_name
+        self._terminal: tuple[str, Any] | None = None
+
+    # -- polling ------------------------------------------------------------
+    def poll(self) -> tuple[str, Any]:
+        """One status probe: (status, raw results), cached once terminal."""
+        if self._terminal is None:
+            status, results = self.client.work_status(
+                self.request_id, self.work_name
+            )
+            if status in TERMINAL_WORK_STATES:
+                self._terminal = (status, results)
+            return status, results
+        return self._terminal
+
+    def _observe(self, status: str, results: Any) -> None:
+        """Batched pollers (``as_completed``) push observations here."""
+        if self._terminal is None and status in TERMINAL_WORK_STATES:
+            self._terminal = (status, results)
+
+    # -- reading ------------------------------------------------------------
+    def status(self) -> str:
+        return self.poll()[0]
+
+    def done(self) -> bool:
+        return self.poll()[0] in TERMINAL_WORK_STATES
+
+    def result(self, timeout: float = 60.0, interval: float = 0.02) -> Any:
+        deadline = utils.utc_now_ts() + timeout
+        while True:
+            status, results = self.poll()
+            if status in TERMINAL_WORK_STATES:
+                return decode_work_results(self.work_name, status, results)
+            if utils.utc_now_ts() > deadline:
+                raise TimeoutError(f"work {self.work_name} still {status}")
+            utils.sleep(interval)
+
+    def exception(
+        self, timeout: float = 60.0, interval: float = 0.02
+    ) -> BaseException | None:
+        """The failure the work terminated with, or None on success."""
+        try:
+            self.result(timeout=timeout, interval=interval)
+            return None
+        except TimeoutError:
+            raise
+        except Exception as exc:  # noqa: BLE001 - the caller inspects it
+            return exc
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"WorkFuture({self.work_name!r}, request={self.request_id}, "
+            f"done={self._terminal is not None})"
+        )
+
+
+def _poll_round(futures: list[WorkFuture]) -> dict[int, str]:
+    """Poll every pending future once, batching per (client, request):
+    one ``works_status`` call covers all futures sharing a request.
+    Returns {id(future): status} so callers reuse THIS round's answers
+    instead of re-polling the transport per future."""
+    groups: dict[tuple[int, int], list[WorkFuture]] = {}
+    for f in futures:
+        groups.setdefault((id(f.client), f.request_id), []).append(f)
+    out: dict[int, str] = {}
+    for group in groups.values():
+        if len(group) == 1:
+            out[id(group[0])] = group[0].poll()[0]
+            continue
+        statuses = group[0].client.works_status(
+            group[0].request_id, [f.work_name for f in group]
+        )
+        for f in group:
+            status, results = statuses.get(f.work_name, ("Unknown", None))
+            f._observe(status, results)
+            out[id(f)] = status
+    return out
+
+
+def as_completed(
+    futures: Iterable[WorkFuture],
+    *,
+    timeout: float = 60.0,
+    interval: float = 0.02,
+) -> Iterator[WorkFuture]:
+    """Yield futures as they reach a terminal state (earliest finisher
+    first), like ``concurrent.futures.as_completed``."""
+    pending = list(futures)
+    deadline = utils.utc_now_ts() + timeout
+    while pending:
+        statuses = _poll_round(pending)
+        still: list[WorkFuture] = []
+        for f in pending:
+            if statuses.get(id(f)) in TERMINAL_WORK_STATES:
+                yield f
+            else:
+                still.append(f)
+        pending = still
+        if not pending:
+            return
+        if utils.utc_now_ts() > deadline:
+            names = [f.work_name for f in pending]
+            raise TimeoutError(f"{len(pending)} futures still pending: {names}")
+        utils.sleep(interval)
+
+
+def gather(
+    *futures: WorkFuture, timeout: float = 60.0, interval: float = 0.02
+) -> list[Any]:
+    """Wait for every future and return their results in argument order."""
+    remaining = list(futures)
+    deadline = utils.utc_now_ts() + timeout
+    for _ in as_completed(remaining, timeout=timeout, interval=interval):
+        pass
+    return [
+        f.result(timeout=max(0.0, deadline - utils.utc_now_ts()) + interval)
+        for f in futures
+    ]

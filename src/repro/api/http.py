@@ -1,0 +1,334 @@
+"""HTTP backend: the unified client verbs over the versioned ``/v2`` REST API.
+
+Two layers:
+
+* ``HttpTransport`` — the wire plumbing: JSON bodies, bearer tokens, a
+  *configurable* timeout, and bounded retry-with-backoff for idempotent
+  GETs (one transient ``URLError`` no longer fails a read).  v2 error
+  envelopes (``{"error": {"code", "message"}}``) are decoded back into
+  the typed exception hierarchy, so remote failures raise exactly what
+  the in-process backend raises (``NotFoundError``, ``WorkflowError``,
+  …) with the HTTP status preserved in the message.
+* ``HttpClient`` — the ``Client`` protocol over that transport.  FaT
+  sessions work remotely because ``_submit_workflow`` ships every
+  function archive referenced by the workflow to the server's ``/v2/
+  cache`` (content-addressed, so re-uploads are idempotent) before
+  submission, and futures poll ``GET /v2/request/<id>/work/<name>`` —
+  batched over ``/v2/request/<id>/works`` for map-mode fan-outs.
+"""
+from __future__ import annotations
+
+import base64
+import json
+import urllib.error
+import urllib.request
+from typing import Any, Mapping, Sequence
+from urllib.parse import quote
+
+from repro.api.client import Client
+from repro.common import utils
+from repro.common.exceptions import (
+    AuthenticationError,
+    AuthorizationError,
+    NotFoundError,
+    ReproError,
+    ValidationError,
+    WorkflowError,
+)
+from repro.core.fat import GLOBAL_CODE_CACHE
+from repro.core.workflow import Workflow
+
+#: machine-readable envelope code → client-side exception class
+ERROR_CODE_TO_EXC: dict[str, type[ReproError]] = {
+    "unauthenticated": AuthenticationError,
+    "permission_denied": AuthorizationError,
+    "not_found": NotFoundError,
+    "conflict": WorkflowError,
+    "invalid_argument": ValidationError,
+}
+
+#: fallback for v1 responses that carry only a string error
+_STATUS_TO_EXC: dict[int, type[ReproError]] = {
+    401: AuthenticationError,
+    403: AuthorizationError,
+    404: NotFoundError,
+    409: WorkflowError,
+}
+
+#: transient transport failures worth retrying on idempotent calls
+_RETRYABLE = (urllib.error.URLError, ConnectionError, TimeoutError)
+
+
+class HttpTransport:
+    """Thin urllib wrapper: one ``request()`` entry point for both API
+    versions, with typed error decoding and idempotent-GET retries."""
+
+    def __init__(
+        self,
+        url: str,
+        *,
+        token: str | None = None,
+        timeout_s: float = 30.0,
+        retries: int = 2,
+        backoff_s: float = 0.05,
+    ):
+        self.url = url.rstrip("/")
+        self.token = token
+        self.timeout_s = float(timeout_s)
+        self.retries = int(retries)
+        self.backoff_s = float(backoff_s)
+
+    def request(
+        self,
+        method: str,
+        path: str,
+        body: Mapping[str, Any] | None = None,
+        *,
+        headers: Mapping[str, str] | None = None,
+        idempotent: bool | None = None,
+    ) -> dict[str, Any]:
+        """Issue one call; GETs (or ``idempotent=True`` calls, e.g. keyed
+        submissions) are retried with exponential backoff on transport
+        errors, other verbs fail fast on the first transient error."""
+        if idempotent is None:
+            idempotent = method == "GET"
+        attempts = self.retries if idempotent else 0
+        delay = self.backoff_s
+        for attempt in range(attempts + 1):
+            try:
+                # NB: HTTP status errors surface as typed ReproErrors from
+                # _once (the server answered) and are never retried; only
+                # transport-level failures reach the except arm.
+                return self._once(method, path, body, headers)
+            except _RETRYABLE as exc:
+                if attempt == attempts:
+                    raise ReproError(
+                        f"transport failure on {method} {path} after "
+                        f"{attempt + 1} attempt(s): {exc}"
+                    ) from exc
+                utils.sleep(delay)
+                delay *= 2
+        raise AssertionError("unreachable")
+
+    def _once(
+        self,
+        method: str,
+        path: str,
+        body: Mapping[str, Any] | None,
+        headers: Mapping[str, str] | None,
+    ) -> dict[str, Any]:
+        data = json.dumps(body).encode() if body is not None else None
+        req = urllib.request.Request(self.url + path, data=data, method=method)
+        req.add_header("Content-Type", "application/json")
+        if self.token:
+            req.add_header("Authorization", f"Bearer {self.token}")
+        for k, v in (headers or {}).items():
+            req.add_header(k, v)
+        try:
+            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
+                return json.loads(resp.read())
+        except urllib.error.HTTPError as exc:
+            raise self._decode_error(method, path, exc) from exc
+
+    @staticmethod
+    def _decode_error(
+        method: str, path: str, exc: urllib.error.HTTPError
+    ) -> ReproError:
+        try:
+            payload = json.loads(exc.read())
+        except Exception:  # noqa: BLE001 - non-JSON error body
+            payload = {"error": str(exc)}
+        err = payload.get("error")
+        if isinstance(err, Mapping):  # v2 envelope
+            exc_cls = ERROR_CODE_TO_EXC.get(str(err.get("code")), ReproError)
+            message = err.get("message")
+        else:  # v1 string error
+            exc_cls = _STATUS_TO_EXC.get(exc.code, ReproError)
+            message = err
+        return exc_cls(f"HTTP {exc.code} on {method} {path}: {message}")
+
+
+class HttpClient(Client):
+    """``Client`` over the ``/v2`` REST API (see module docstring)."""
+
+    def __init__(
+        self,
+        url: str,
+        *,
+        token: str | None = None,
+        timeout_s: float = 30.0,
+        retries: int = 2,
+        backoff_s: float = 0.05,
+        transport: HttpTransport | None = None,
+    ):
+        self.transport = transport or HttpTransport(
+            url,
+            token=token,
+            timeout_s=timeout_s,
+            retries=retries,
+            backoff_s=backoff_s,
+        )
+
+    # -- auth ------------------------------------------------------------------
+    @property
+    def token(self) -> str | None:
+        return self.transport.token
+
+    def register(self, user: str, groups: list[str] | None = None) -> None:
+        self.transport.request(
+            "POST", "/v2/auth/register", {"user": user, "groups": groups}
+        )
+
+    def login(self, user: str) -> str:
+        token = self.transport.request(
+            "POST", "/v2/auth/token", {"user": user}
+        )["token"]
+        self.transport.token = token
+        return token
+
+    # -- submission ----------------------------------------------------------
+    def _submit_workflow(
+        self,
+        wf: Workflow,
+        *,
+        priority: int,
+        user: str | None,
+        scope: str,
+        idempotency_key: str | None,
+    ) -> int:
+        self._ship_archives(wf)
+        body: dict[str, Any] = {
+            "workflow": wf.to_dict(),
+            "priority": priority,
+            "scope": scope,
+        }
+        if user is not None:
+            body["user"] = user
+        if idempotency_key is not None:
+            body["idempotency_key"] = idempotency_key
+        out = self.transport.request(
+            "POST",
+            "/v2/request",
+            body,
+            # a keyed submission is safe to retry: replays collapse
+            idempotent=idempotency_key is not None,
+        )
+        return int(out["request_id"])
+
+    def _ship_archives(self, wf: Workflow) -> None:
+        """Upload every function archive the workflow references so the
+        server can reconstruct the callables (paper §3.1.3 step 2).
+        A referenced archive missing from the local cache (evicted, or a
+        workflow deserialized in a fresh process) fails HERE, at submit
+        time, instead of surfacing as a cryptic remote execution error."""
+        shipped: set[str] = set()
+        for work in wf.works.values():
+            payload = getattr(work, "payload", None) or {}
+            digest = payload.get("archive")
+            if payload.get("kind") != "function" or not digest:
+                continue
+            if digest in shipped:
+                continue
+            if digest not in GLOBAL_CODE_CACHE:
+                raise ValidationError(
+                    f"work {work.name!r} references function archive "
+                    f"{digest!r} which is not in the local code cache; "
+                    "re-create the work from its @work_function (or "
+                    "cache_put the archive) before submitting remotely"
+                )
+            self.cache_put(GLOBAL_CODE_CACHE.get(digest))
+            shipped.add(digest)
+
+    # -- reads ---------------------------------------------------------------
+    def status(self, request_id: int) -> dict[str, Any]:
+        return self.transport.request("GET", f"/v2/request/{int(request_id)}")
+
+    def _poll_status(self, request_id: int) -> str:
+        # ?fields=status keeps the server on a status-only column read
+        # while waiting — no workflow-blob decode, no transform scan
+        out = self.transport.request(
+            "GET", f"/v2/request/{int(request_id)}?fields=status"
+        )
+        return out["status"]
+
+    def list_requests(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 50,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        qs = f"limit={int(limit)}&offset={int(offset)}"
+        if status is not None:
+            qs += f"&status={status}"
+        return self.transport.request("GET", f"/v2/request?{qs}")
+
+    def work_status(self, request_id: int, work_name: str) -> tuple[str, Any]:
+        out = self.transport.request(
+            "GET",
+            f"/v2/request/{int(request_id)}/work/{quote(work_name, safe='')}",
+        )
+        return out["status"], out.get("results")
+
+    def works_status(
+        self, request_id: int, work_names: Sequence[str]
+    ) -> dict[str, tuple[str, Any]]:
+        # the batch endpoint is comma-delimited, so a (rare) name that
+        # itself contains a comma falls back to individual fetches
+        batchable = [n for n in work_names if "," not in n]
+        out: dict[str, tuple[str, Any]] = {
+            n: self.work_status(request_id, n)
+            for n in work_names
+            if "," in n
+        }
+        if batchable:
+            names = ",".join(quote(n, safe="") for n in batchable)
+            reply = self.transport.request(
+                "GET", f"/v2/request/{int(request_id)}/works?names={names}"
+            )
+            for name, w in reply["works"].items():
+                out[name] = (w["status"], w.get("results"))
+        return out
+
+    def catalog(self, request_id: int) -> dict[str, Any]:
+        return self.transport.request("GET", f"/v2/catalog/{int(request_id)}")
+
+    def logs(self, request_id: int) -> dict[str, Any]:
+        return self.transport.request("GET", f"/v2/log/{int(request_id)}")
+
+    def monitor(self) -> dict[str, Any]:
+        return self.transport.request("GET", "/v2/monitor")
+
+    def ping(self) -> bool:
+        return self.transport.request("GET", "/v2/ping").get("status") == "OK"
+
+    # -- lifecycle control plane ---------------------------------------------
+    def _command(self, request_id: int, command: str) -> dict[str, Any]:
+        return self.transport.request(
+            "POST", f"/v2/request/{int(request_id)}/{command}", {}
+        )
+
+    def abort(self, request_id: int) -> None:
+        self._command(request_id, "abort")
+
+    def suspend(self, request_id: int) -> None:
+        self._command(request_id, "suspend")
+
+    def resume(self, request_id: int) -> None:
+        self._command(request_id, "resume")
+
+    def retry(self, request_id: int) -> int:
+        return int(self._command(request_id, "retry").get("works_reset", 0))
+
+    def expire(self, request_id: int) -> None:
+        self._command(request_id, "expire")
+
+    # -- code cache -----------------------------------------------------------
+    def cache_put(self, data: bytes) -> str:
+        return self.transport.request(
+            "POST", "/v2/cache", {"data": base64.b64encode(data).decode()}
+        )["digest"]
+
+    def cache_get(self, digest: str) -> bytes:
+        out = self.transport.request("GET", f"/v2/cache/{digest}")
+        return base64.b64decode(out["data"])

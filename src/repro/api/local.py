@@ -1,0 +1,101 @@
+"""In-process backend: the unified client verbs over an ``Orchestrator``.
+
+Zero serialization, zero sockets — every verb is a direct store read or a
+kernel command on the wrapped engine.  ``Orchestrator.session()`` is a
+back-compat shim over ``LocalClient(orch).session()``.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any
+
+from repro.api.client import Client
+from repro.common.exceptions import ValidationError
+from repro.core.fat import GLOBAL_CODE_CACHE
+from repro.core.workflow import Workflow
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.orchestrator import Orchestrator
+
+
+class LocalClient(Client):
+    def __init__(self, orch: "Orchestrator"):
+        self.orch = orch
+
+    # -- submission ----------------------------------------------------------
+    def _submit_workflow(
+        self,
+        wf: Workflow,
+        *,
+        priority: int,
+        user: str | None,
+        scope: str,
+        idempotency_key: str | None,
+    ) -> int:
+        if not self.orch._started:
+            raise ValidationError("orchestrator not started")
+        return self.orch.submit_workflow(
+            wf,
+            requester=user or "anonymous",
+            scope=scope,
+            priority=priority,
+            idempotency_key=idempotency_key,
+        )
+
+    # -- reads ---------------------------------------------------------------
+    def status(self, request_id: int) -> dict[str, Any]:
+        return self.orch.request_status(int(request_id))
+
+    def list_requests(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 50,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        return self.orch.list_requests(status=status, limit=limit, offset=offset)
+
+    def _poll_status(self, request_id: int) -> str:
+        # status-only column read: never decode the workflow blob or scan
+        # transforms while polling
+        row = self.orch.stores["requests"].get(
+            int(request_id), columns=("status",)
+        )
+        return row["status"]
+
+    def work_status(self, request_id: int, work_name: str) -> tuple[str, Any]:
+        return self.orch.work_status(int(request_id), work_name)
+
+    def catalog(self, request_id: int) -> dict[str, Any]:
+        return self.orch.catalog(int(request_id))
+
+    def logs(self, request_id: int) -> dict[str, Any]:
+        return self.orch.request_log(int(request_id))
+
+    def monitor(self) -> dict[str, Any]:
+        return self.orch.monitor_summary()
+
+    def ping(self) -> bool:
+        return True
+
+    # -- lifecycle control plane ---------------------------------------------
+    def abort(self, request_id: int) -> None:
+        self.orch.abort_request(int(request_id))
+
+    def suspend(self, request_id: int) -> None:
+        self.orch.suspend_request(int(request_id))
+
+    def resume(self, request_id: int) -> None:
+        self.orch.resume_request(int(request_id))
+
+    def retry(self, request_id: int) -> int:
+        return int(self.orch.retry_request(int(request_id)) or 0)
+
+    def expire(self, request_id: int) -> None:
+        self.orch.expire_request(int(request_id))
+
+    # -- code cache -----------------------------------------------------------
+    def cache_put(self, data: bytes) -> str:
+        return GLOBAL_CODE_CACHE.put(data)
+
+    def cache_get(self, digest: str) -> bytes:
+        return GLOBAL_CODE_CACHE.get(digest)

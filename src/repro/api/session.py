@@ -1,0 +1,43 @@
+"""Backend-agnostic Function-as-a-Task session.
+
+A ``Session`` is what ``@work_function`` submissions route through: it
+turns a decorated function's ``Work`` into a request on *whatever client
+it was opened on* — in-process (``LocalClient``) or over the wire
+(``HttpClient``) — and hands back a ``WorkFuture``.  The same script
+
+    with client.session():
+        fut = fn.submit(3)
+        fut.result()
+
+is therefore location-transparent: swapping the client swaps the
+transport, nothing else.
+"""
+from __future__ import annotations
+
+from typing import TYPE_CHECKING, Any
+
+from repro.api.futures import WorkFuture
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.api.client import Client
+
+
+class Session:
+    """Active FaT session bound to one client backend."""
+
+    def __init__(self, client: "Client", **submit_kw: Any):
+        self.client = client
+        self.submit_kw = submit_kw
+        self.requests: list[int] = []
+
+    def submit_work(self, work: Work) -> WorkFuture:
+        request_id = self.client.submit(work, **self.submit_kw)
+        self.requests.append(request_id)
+        return WorkFuture(self.client, request_id, work.name)
+
+    def submit_workflow(self, wf: Workflow) -> int:
+        request_id = self.client.submit(wf, **self.submit_kw)
+        self.requests.append(request_id)
+        return request_id

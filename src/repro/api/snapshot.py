@@ -1,0 +1,105 @@
+"""API-surface snapshot check.
+
+Dumps the public client surface — ``repro.api`` exports, the ``Client``
+protocol's public methods, and the REST route table (method, pattern,
+required role, both versions) — as canonical JSON, and compares it against
+the checked-in ``api_surface.json``.  CI runs ``--check`` so an accidental
+breaking change (a dropped verb, a renamed route, a v1 alias removed)
+fails the build; an intentional change is recorded by re-running
+``--write`` and committing the diff for review.
+
+    PYTHONPATH=src python -m repro.api.snapshot --check
+    PYTHONPATH=src python -m repro.api.snapshot --write
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+from typing import Any
+
+#: repo root when running from a source checkout (src/repro/api/ → root)
+_DEFAULT_PATH = Path(__file__).resolve().parents[3] / "api_surface.json"
+
+
+def current_surface() -> dict[str, Any]:
+    import repro.api as api
+    from repro.api.client import Client
+    from repro.rest.app import RestApp
+
+    client_methods = sorted(
+        name
+        for name in dir(Client)
+        if not name.startswith("_") and callable(getattr(Client, name))
+    )
+    # RestApp only dereferences its orchestrator inside handlers, so the
+    # route table can be built without spinning an engine up
+    routes = RestApp(None).route_table()
+    return {
+        "api_symbols": sorted(api.__all__),
+        "client_methods": client_methods,
+        "routes": routes,
+    }
+
+
+def render(surface: dict[str, Any]) -> str:
+    return json.dumps(surface, indent=2, sort_keys=True) + "\n"
+
+
+def check(path: Path = _DEFAULT_PATH) -> list[str]:
+    """Differences between the recorded and current surface ([] = clean)."""
+    if not path.exists():
+        return [f"snapshot file {path} missing; run --write"]
+    recorded = json.loads(path.read_text())
+    current = current_surface()
+    problems: list[str] = []
+    for key in sorted(set(recorded) | set(current)):
+        rec, cur = recorded.get(key), current.get(key)
+        if rec == cur:
+            continue
+        if isinstance(rec, list) and isinstance(cur, list):
+            def _k(x: Any) -> str:
+                return json.dumps(x, sort_keys=True)
+
+            rec_set, cur_set = {_k(x) for x in rec}, {_k(x) for x in cur}
+            for gone in sorted(rec_set - cur_set):
+                problems.append(f"{key}: removed {gone}")
+            for new in sorted(cur_set - rec_set):
+                problems.append(f"{key}: added {new}")
+        else:
+            problems.append(f"{key}: changed")
+    return problems
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    mode = ap.add_mutually_exclusive_group(required=True)
+    mode.add_argument(
+        "--check", action="store_true", help="diff against the snapshot"
+    )
+    mode.add_argument(
+        "--write", action="store_true", help="(re)record the snapshot"
+    )
+    ap.add_argument("--path", type=Path, default=_DEFAULT_PATH)
+    args = ap.parse_args(argv)
+    if args.write:
+        args.path.write_text(render(current_surface()))
+        print(f"wrote {args.path}")
+        return 0
+    problems = check(args.path)
+    if problems:
+        print("API surface drifted from api_surface.json:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        print(
+            "intentional? rerun with --write and commit the diff",
+            file=sys.stderr,
+        )
+        return 1
+    print("API surface matches snapshot")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

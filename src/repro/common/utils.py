@@ -40,6 +40,29 @@ def utc_now_ts() -> float:
     return _time_provider()
 
 
+# -- sleep source -----------------------------------------------------------
+# Client-side waiting (Future.result, Client.wait, retry backoff) flows
+# through ``sleep`` so a simulation can virtualize polling loops the same
+# way it virtualizes timestamps: ``VirtualClock.install()`` swaps both
+# providers, turning every poll interval into an instant clock advance.
+_sleep_provider: Callable[[float], None] = time.sleep
+
+
+def set_sleep_provider(
+    fn: Callable[[float], None] | None,
+) -> Callable[[float], None]:
+    """Install a replacement for ``time.sleep`` (None restores it).
+    Returns the previous provider so callers can nest/restore."""
+    global _sleep_provider
+    prev = _sleep_provider
+    _sleep_provider = time.sleep if fn is None else fn
+    return prev
+
+
+def sleep(seconds: float) -> None:
+    _sleep_provider(seconds)
+
+
 # id generation sits on the per-workload/per-work hot path: an os.urandom
 # syscall per id (uuid4) is measurable there, so seed a PRNG once instead.
 _uid_rng = random.Random(int.from_bytes(os.urandom(16), "big"))
@@ -102,7 +125,7 @@ def retry_call(
         except retry_on:
             if attempt == retries:
                 raise
-            time.sleep(delay)
+            _sleep_provider(delay)
             delay *= 2
     raise AssertionError("unreachable")
 

@@ -26,33 +26,81 @@ import inspect
 import pickle
 import textwrap
 import threading
-import time
+from collections import OrderedDict
 from typing import Any, Callable, Mapping, Sequence
 
+from repro.common import utils
 from repro.common.exceptions import ValidationError, WorkflowError
 from repro.core.work import CollectionSpec, Work
 
 # ---------------------------------------------------------------------------
 # Code cache — the "centrally managed HTTP cache" for source archives.
 # ---------------------------------------------------------------------------
-class CodeCache:
-    """Content-addressed in-memory/disk archive store."""
 
-    def __init__(self) -> None:
-        self._store: dict[str, bytes] = {}
+#: default byte cap for the process-global cache; archives are tiny (a few
+#: KiB of source each) so 64 MiB holds ~10k distinct functions before the
+#: LRU tail starts dropping.
+DEFAULT_CACHE_MAX_BYTES = 64 * 1024 * 1024
+
+
+class CodeCache:
+    """Content-addressed in-memory archive store with an LRU byte cap.
+
+    Sustained FaaT traffic uploads a new archive per distinct function
+    source, so an unbounded dict is a slow leak in a long-lived server;
+    ``max_bytes`` bounds the cache and evicts least-recently-used entries
+    (both ``put`` and ``get`` refresh recency).  Eviction is safe: archives
+    are content-addressed, so a re-``put`` restores the same digest."""
+
+    def __init__(self, max_bytes: int = DEFAULT_CACHE_MAX_BYTES) -> None:
+        self.max_bytes = int(max_bytes)
+        self._store: OrderedDict[str, bytes] = OrderedDict()
+        self._bytes = 0
         self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
 
     def put(self, data: bytes) -> str:
         digest = hashlib.sha256(data).hexdigest()[:24]
         with self._lock:
-            self._store[digest] = data
+            if digest in self._store:
+                self._store.move_to_end(digest)
+            else:
+                self._store[digest] = data
+                self._bytes += len(data)
+                self._evict_locked()
         return digest
 
     def get(self, digest: str) -> bytes:
         with self._lock:
-            if digest not in self._store:
+            data = self._store.get(digest)
+            if data is None:
+                self.misses += 1
                 raise ValidationError(f"code archive {digest!r} not in cache")
-            return self._store[digest]
+            self.hits += 1
+            self._store.move_to_end(digest)
+            return data
+
+    def _evict_locked(self) -> None:
+        # a single oversized archive still gets stored (its put already
+        # happened); eviction only peels the LRU tail down to the cap
+        while self._bytes > self.max_bytes and len(self._store) > 1:
+            _, dropped = self._store.popitem(last=False)
+            self._bytes -= len(dropped)
+            self.evictions += 1
+
+    def stats(self) -> dict[str, int]:
+        """Monitoring counters — surfaced by ``/v2/monitor``."""
+        with self._lock:
+            return {
+                "entries": len(self._store),
+                "bytes": self._bytes,
+                "max_bytes": self.max_bytes,
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }
 
     def __contains__(self, digest: str) -> bool:
         with self._lock:
@@ -157,10 +205,38 @@ def execute_function_payload(
 # ---------------------------------------------------------------------------
 # Futures
 # ---------------------------------------------------------------------------
+#: statuses after which a work's result can no longer change
+TERMINAL_WORK_STATES = ("Finished", "SubFinished", "Failed", "Cancelled", "Expired")
+
+
+def decode_work_results(work_name: str, status: str, results: Any) -> Any:
+    """Turn a terminal (status, results) pair into the function's return
+    value (single or ordered map-mode list), raising on failure — the one
+    decoding path shared by ``ResultFuture`` and the ``repro.api`` futures."""
+    if status in ("Failed", "Cancelled", "Expired"):
+        raise WorkflowError(
+            f"work {work_name} terminated with {status}: "
+            f"{(results or {}).get('error')}"
+        )
+    payload = (results or {}).get("return")
+    if payload is not None:
+        return decode_result(payload)
+    # map-mode: ordered per-job returns
+    jobs = (results or {}).get("job_returns")
+    if jobs is not None:
+        return [decode_result(b) for b in jobs]
+    return None
+
+
 class ResultFuture:
-    """Asynchronous result handle.  ``poll_fn(work_name)`` must return a
-    (status:str, results:dict|None) pair — the client layer wires this to
-    the engine/REST so results are retrieved exactly as §3.1.3 step (4)."""
+    """Asynchronous result handle over a bare poll function.
+
+    Kept for embedders that wire their own ``poll_fn(work_name) ->
+    (status, results)``; FaT sessions now hand out the richer
+    ``repro.api.WorkFuture`` (same reading API plus composition via
+    ``as_completed``/``gather``).  Waiting flows through the swappable
+    ``repro.common.utils`` time/sleep providers, so a simulation can
+    drive polling deterministically."""
 
     def __init__(self, work_name: str, poll_fn: Callable[[str], tuple[str, Any]]):
         self.work_name = work_name
@@ -168,29 +244,17 @@ class ResultFuture:
 
     def done(self) -> bool:
         status, _ = self._poll_fn(self.work_name)
-        return status in ("Finished", "SubFinished", "Failed", "Cancelled")
+        return status in TERMINAL_WORK_STATES
 
     def result(self, timeout: float = 60.0, interval: float = 0.02) -> Any:
-        deadline = time.monotonic() + timeout
+        deadline = utils.utc_now_ts() + timeout
         while True:
             status, results = self._poll_fn(self.work_name)
-            if status in ("Finished", "SubFinished"):
-                payload = (results or {}).get("return")
-                if payload is not None:
-                    return decode_result(payload)
-                # map-mode: ordered per-job returns
-                jobs = (results or {}).get("job_returns")
-                if jobs is not None:
-                    return [decode_result(b) for b in jobs]
-                return None
-            if status in ("Failed", "Cancelled"):
-                raise WorkflowError(
-                    f"work {self.work_name} terminated with {status}: "
-                    f"{(results or {}).get('error')}"
-                )
-            if time.monotonic() > deadline:
+            if status in TERMINAL_WORK_STATES:
+                return decode_work_results(self.work_name, status, results)
+            if utils.utc_now_ts() > deadline:
                 raise TimeoutError(f"work {self.work_name} still {status}")
-            time.sleep(interval)
+            utils.sleep(interval)
 
 
 # ---------------------------------------------------------------------------
@@ -276,11 +340,13 @@ class WorkFunction:
         )
 
     # -- distributed paths (need an active session) ------------------------
-    def submit(self, *args: Any, **kwargs: Any) -> ResultFuture:
+    def submit(self, *args: Any, **kwargs: Any) -> Any:
+        """Submit through the active session; returns its future type
+        (``repro.api.WorkFuture`` for client sessions)."""
         session = get_active_session()
         return session.submit_work(self.make_work(*args, **kwargs))
 
-    def map(self, items: Sequence[Any], **kwargs: Any) -> ResultFuture:
+    def map(self, items: Sequence[Any], **kwargs: Any) -> Any:
         session = get_active_session()
         return session.submit_work(self.make_map_work(items, **kwargs))
 

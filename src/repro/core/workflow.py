@@ -300,6 +300,28 @@ class Workflow:
             return WorkStatus.SUBFINISHED
         return WorkStatus.FAILED
 
+    def fingerprint(self) -> str:
+        """Stable content digest of the workflow *definition* (name, works,
+        edges, loops — not runtime state like statuses or internal ids).
+        A natural idempotency key: resubmitting the same definition with
+        ``client.submit(wf, idempotency_key=wf.fingerprint())`` collapses
+        onto one request."""
+        import hashlib
+
+        from repro.common.utils import json_dumps
+
+        d = self.to_dict()
+        definition = {
+            "name": d["name"],
+            "parameters": d["parameters"],
+            # only each work's template — metadata carries runtime state
+            # and per-instance uids
+            "works": {n: w["template"] for n, w in (d["works"] or {}).items()},
+            "edges": d["edges"],
+            "loops": d["loops"],
+        }
+        return hashlib.sha256(json_dumps(definition).encode()).hexdigest()[:32]
+
     # -- serialization -----------------------------------------------------------
     def to_dict(self) -> dict[str, Any]:
         return {

@@ -141,19 +141,36 @@ class RequestStore(_BaseStore):
         return out
 
     def list(
-        self, *, status: RequestStatus | None = None, limit: int = 100
+        self,
+        *,
+        status: RequestStatus | None = None,
+        limit: int = 100,
+        offset: int = 0,
     ) -> list[dict[str, Any]]:
         if status is None:
             rows = self.db.query(
-                "SELECT * FROM requests ORDER BY request_id DESC LIMIT ?", (limit,)
+                "SELECT * FROM requests ORDER BY request_id DESC "
+                "LIMIT ? OFFSET ?",
+                (limit, offset),
             )
         else:
             rows = self.db.query(
                 "SELECT * FROM requests WHERE status=? "
-                "ORDER BY request_id DESC LIMIT ?",
-                (str(status), limit),
+                "ORDER BY request_id DESC LIMIT ? OFFSET ?",
+                (str(status), limit, offset),
             )
         return [_row_to_dict(r) for r in rows]
+
+    def count(self, *, status: RequestStatus | None = None) -> int:
+        """Total rows behind ``list`` — the pagination denominator."""
+        if status is None:
+            row = self.db.query_one("SELECT COUNT(*) AS n FROM requests")
+        else:
+            row = self.db.query_one(
+                "SELECT COUNT(*) AS n FROM requests WHERE status=?",
+                (str(status),),
+            )
+        return int(row["n"]) if row else 0
 
     def update(self, request_id: int, **fields: Any) -> None:
         _update_row(self.db, "requests", "request_id", request_id, fields)

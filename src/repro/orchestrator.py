@@ -12,7 +12,7 @@ from __future__ import annotations
 import contextlib
 import sys
 import threading
-import time
+from collections import OrderedDict
 from typing import Any, Callable, Iterator
 
 from repro.agents import (
@@ -35,7 +35,9 @@ from repro.common.exceptions import (
     SimulatedCrash,
     ValidationError,
 )
-from repro.core.fat import ResultFuture, set_active_session
+from repro.common.utils import sleep as provider_sleep
+from repro.common.utils import utc_now_ts
+from repro.core.fat import GLOBAL_CODE_CACHE
 from repro.core.work import Work
 from repro.core.workflow import Workflow
 from repro.db.engine import Database
@@ -129,6 +131,15 @@ class Orchestrator:
             for r in range(replicas)
         ]
         self._started = False
+        # idempotent submission: key → request_id for this server process,
+        # so a client retrying a keyed submit after a transport failure
+        # collapses onto the original request instead of double-submitting.
+        # LRU-bounded (replays arrive shortly after the original; a key
+        # evicted hours later simply creates a fresh request) so sustained
+        # keyed traffic cannot leak memory.
+        self._idempotency: "OrderedDict[str, tuple[int, str]]" = OrderedDict()
+        self._idempotency_max = 4096
+        self._idempotency_lock = threading.Lock()
         # agent threads are short-burst IO/lock-bound; the interpreter's
         # default 5 ms switch interval turns every lock handoff into a
         # scheduling quantum.  A tighter interval cuts hot-path latency.
@@ -195,16 +206,45 @@ class Orchestrator:
         requester: str = "anonymous",
         scope: str = "default",
         priority: int = 0,
+        idempotency_key: str | None = None,
     ) -> int:
         workflow.validate()
-        request_id = self.stores["requests"].add(
-            workflow.name,
-            scope=scope,
-            requester=requester,
-            status=RequestStatus.NEW,
-            priority=priority,
-            workflow=workflow.to_dict(),
-        )
+
+        def _add() -> int:
+            return self.stores["requests"].add(
+                workflow.name,
+                scope=scope,
+                requester=requester,
+                status=RequestStatus.NEW,
+                priority=priority,
+                workflow=workflow.to_dict(),
+                metadata=(
+                    {"idempotency_key": idempotency_key}
+                    if idempotency_key is not None
+                    else None
+                ),
+            )
+
+        if idempotency_key is None:
+            request_id = _add()
+        else:
+            fp = workflow.fingerprint()
+            with self._idempotency_lock:
+                hit = self._idempotency.get(idempotency_key)
+                if hit is not None:
+                    rid, orig_fp = hit
+                    if orig_fp != fp:
+                        raise ValidationError(
+                            f"idempotency key {idempotency_key!r} was "
+                            "already used for a different workflow "
+                            "definition; keys must be unique per submission"
+                        )
+                    self._idempotency.move_to_end(idempotency_key)
+                    return rid  # replayed submission: no new row, no event
+                request_id = _add()
+                self._idempotency[idempotency_key] = (request_id, fp)
+                while len(self._idempotency) > self._idempotency_max:
+                    self._idempotency.popitem(last=False)
         self.kernel.emit(new_request_event(request_id))
         return request_id
 
@@ -249,6 +289,34 @@ class Orchestrator:
             ],
         }
 
+    def list_requests(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 50,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        """Paginated request listing — ONE projection shared by both
+        client backends (LocalClient directly, HttpClient via
+        ``GET /v2/request``), so the payload shapes cannot drift."""
+        store = self.stores["requests"]
+        rows = store.list(status=status, limit=limit, offset=offset)
+        return {
+            "requests": [
+                {
+                    "request_id": r["request_id"],
+                    "name": r["name"],
+                    "status": r["status"],
+                    "requester": r["requester"],
+                    "priority": r["priority"],
+                }
+                for r in rows
+            ],
+            "total": store.count(status=status),
+            "limit": int(limit),
+            "offset": int(offset),
+        }
+
     def work_status(self, request_id: int, node_id: str) -> tuple[str, Any]:
         """(status, results) for one Work — what FaT futures poll."""
         trow = self.stores["transforms"].by_node(request_id, node_id)
@@ -278,22 +346,65 @@ class Orchestrator:
         timeout: float = 60.0,
         interval: float = 0.02,
     ) -> str:
-        deadline = time.monotonic() + timeout
+        deadline = utc_now_ts() + timeout
         terminal = [str(s) for s in TERMINAL_REQUEST_STATES]
         while True:
             # status-only read: never decode the workflow blob while polling
             row = self.stores["requests"].get(request_id, columns=("status",))
             if row["status"] in terminal:
                 return row["status"]
-            if time.monotonic() > deadline:
+            if utc_now_ts() > deadline:
                 raise TimeoutError(
                     f"request {request_id} still {row['status']} after {timeout}s"
                 )
-            time.sleep(interval)
+            provider_sleep(interval)
 
     def workflow_snapshot(self, request_id: int) -> Workflow:
         row = self.stores["requests"].get(request_id)
         return Workflow.from_dict(row["workflow"])
+
+    def catalog(self, request_id: int) -> dict[str, Any]:
+        """Collection catalog for one request (shared by both client
+        backends and the REST ``/catalog`` endpoints)."""
+        # existence check first so unknown ids 404 instead of answering []
+        self.stores["requests"].get(request_id, columns=("request_id",))
+        out: dict[str, Any] = {"request_id": request_id, "collections": []}
+        for trow in self.stores["transforms"].by_request(request_id):
+            for coll in self.stores["collections"].by_transform(
+                int(trow["transform_id"])
+            ):
+                out["collections"].append(
+                    {
+                        "coll_id": coll["coll_id"],
+                        "name": coll["name"],
+                        "relation": coll["relation_type"],
+                        "status": coll["status"],
+                        "total_files": coll["total_files"],
+                        "processed_files": coll["processed_files"],
+                        "failed_files": coll["failed_files"],
+                    }
+                )
+        return out
+
+    def request_log(self, request_id: int) -> dict[str, Any]:
+        """Per-transform audit entries for one request."""
+        # existence check first so unknown ids 404 instead of answering []
+        self.stores["requests"].get(request_id, columns=("request_id",))
+        rows = self.stores["transforms"].by_request(request_id)
+        return {
+            "request_id": request_id,
+            "entries": [
+                {
+                    "transform_id": t["transform_id"],
+                    "node_id": t["node_id"],
+                    "status": t["status"],
+                    "errors": t.get("errors"),
+                    "created_at": t["created_at"],
+                    "updated_at": t["updated_at"],
+                }
+                for t in rows
+            ],
+        }
 
     # -- monitoring -----------------------------------------------------------
     def monitor_summary(self) -> dict[str, Any]:
@@ -315,6 +426,8 @@ class Orchestrator:
             "bus": coord.bus_report(),
             "runtime": dict(self.runtime.stats),
             "broker": self.broker.summary(),
+            # FaT archive cache occupancy/evictions (LRU byte-capped)
+            "code_cache": GLOBAL_CODE_CACHE.stats(),
             "agents": {
                 a.consumer_id: {"cycles": a.cycles, "errors": a.errors}
                 for a in self.agents
@@ -324,33 +437,28 @@ class Orchestrator:
     # -- Function-as-a-Task session ------------------------------------------
     @contextlib.contextmanager
     def session(self, **submit_kw: Any) -> Iterator["Session"]:
-        s = Session(self, **submit_kw)
-        set_active_session(s)
-        try:
+        """Back-compat shim: an in-process FaT session is now a
+        ``repro.api.LocalClient`` session (same verbs, same futures, and
+        the identical script also runs over ``repro.api.HttpClient``).
+        Legacy kwargs are translated: ``requester=`` → the unified
+        surface's ``user=``."""
+        from repro.api.local import LocalClient  # local import: api sits above
+
+        if "requester" in submit_kw:
+            submit_kw["user"] = submit_kw.pop("requester")
+        with LocalClient(self).session(**submit_kw) as s:
             yield s
-        finally:
-            set_active_session(None)  # type: ignore[arg-type]
 
 
-class Session:
-    """Active FaT session: ``@work_function`` submissions route here."""
+def _session_alias() -> type:
+    from repro.api.session import Session as ApiSession
 
-    def __init__(self, orch: Orchestrator, **submit_kw: Any):
-        self.orch = orch
-        self.submit_kw = submit_kw
-        self.requests: list[int] = []
+    return ApiSession
 
-    def submit_work(self, work: Work) -> ResultFuture:
-        if not self.orch._started:
-            raise ValidationError("orchestrator not started")
-        request_id = self.orch.submit_work(work, **self.submit_kw)
-        self.requests.append(request_id)
-        return ResultFuture(
-            work.name,
-            lambda name, rid=request_id: self.orch.work_status(rid, name),
-        )
 
-    def submit_workflow(self, wf: Workflow) -> int:
-        request_id = self.orch.submit_workflow(wf, **self.submit_kw)
-        self.requests.append(request_id)
-        return request_id
+def __getattr__(name: str) -> Any:
+    # lazy alias keeps ``from repro.orchestrator import Session`` working
+    # without importing repro.api at module load (layering: api > engine)
+    if name == "Session":
+        return _session_alias()
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

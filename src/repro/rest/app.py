@@ -9,6 +9,18 @@ The paper deploys Flask behind Apache/WSGI; offline we use the stdlib
 * *before-request filters* enforcing authentication/authorization per
   route (the Flask ``before_request`` hook, §3.3.2);
 * JSON request/response bodies throughout.
+
+Two API versions share the table:
+
+* ``/v2/…`` — the current resource API consumed by
+  ``repro.api.HttpClient``: machine-readable error envelopes
+  (``{"error": {"code", "message", "type"}}``), pagination on list
+  endpoints, per-work status+result retrieval
+  (``GET /v2/request/<id>/work/<name>``, batched via ``…/works``), and
+  idempotency keys on submission;
+* ``/``-prefixed v1 routes — deprecated aliases kept for existing
+  clients; they answer exactly as before plus a ``Deprecation`` response
+  header pointing at the v2 successor.
 """
 from __future__ import annotations
 
@@ -17,8 +29,8 @@ import json
 import re
 import threading
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
-from typing import Any, Callable
-from urllib.parse import parse_qs, urlparse
+from typing import Any, Callable, Mapping
+from urllib.parse import parse_qs, unquote, urlparse
 
 from repro.common.exceptions import (
     AuthenticationError,
@@ -35,11 +47,25 @@ from repro.rest.auth import AuthService
 
 Route = tuple[str, re.Pattern[str], str | None, Callable[..., Any]]
 
+#: exception class → (HTTP status, machine-readable v2 error code); first
+#: match wins, so subclasses must precede ReproError
+ERROR_MAP: tuple[tuple[type[Exception], int, str], ...] = (
+    (AuthenticationError, 401, "unauthenticated"),
+    (AuthorizationError, 403, "permission_denied"),
+    (NotFoundError, 404, "not_found"),
+    # illegal lifecycle transition → conflict with current state
+    (WorkflowError, 409, "conflict"),
+    (ValidationError, 400, "invalid_argument"),
+    (ReproError, 400, "bad_request"),
+)
+
+_V1_DEPRECATION = 'version="v1"; successor="/v2"'
+
 
 class RestApp:
     """Routing + handlers, independent of the HTTP plumbing (testable)."""
 
-    def __init__(self, orch: Orchestrator, auth: AuthService | None = None):
+    def __init__(self, orch: Orchestrator | None, auth: AuthService | None = None):
         self.orch = orch
         self.auth = auth or AuthService()
         self.routes: list[Route] = []
@@ -55,37 +81,59 @@ class RestApp:
 
     def _register_routes(self) -> None:
         r = self.route
-        # ping ------------------------------------------------------------
-        r("GET", r"/ping", None)(lambda **kw: {"status": "OK"})
-        # authentication ----------------------------------------------------
-        r("POST", r"/auth/register", None)(self._auth_register)
-        r("POST", r"/auth/token", None)(self._auth_token)
-        # request -----------------------------------------------------------
-        r("POST", r"/request", "submit")(self._request_submit)
-        r("GET", r"/request/(?P<request_id>\d+)", "read")(self._request_get)
-        r("POST", r"/request/(?P<request_id>\d+)/abort", "submit")(
-            self._request_abort
+        _id = r"(?P<request_id>\d+)"
+        for v in ("", "/v2"):  # "" = deprecated v1 aliases, same handlers
+            # ping ------------------------------------------------------------
+            r("GET", rf"{v}/ping", None)(lambda **kw: {"status": "OK"})
+            # authentication ----------------------------------------------------
+            r("POST", rf"{v}/auth/register", None)(self._auth_register)
+            r("POST", rf"{v}/auth/token", None)(self._auth_token)
+            # request -----------------------------------------------------------
+            r("POST", rf"{v}/request", "submit")(self._request_submit)
+            r("GET", rf"{v}/request/{_id}", "read")(self._request_get)
+            r("POST", rf"{v}/request/{_id}/abort", "submit")(self._request_abort)
+            # lifecycle control plane: synchronous kernel commands (404 on
+            # unknown request, 409 on an illegal transition)
+            r(
+                "POST",
+                rf"{v}/request/{_id}"
+                r"/(?P<command>suspend|resume|retry|expire)",
+                "submit",
+            )(self._request_command)
+            # cache ---------------------------------------------------------------
+            r("POST", rf"{v}/cache", "submit")(self._cache_put)
+            r("GET", rf"{v}/cache/(?P<digest>[0-9a-f]+)", "read")(self._cache_get)
+            # catalog ---------------------------------------------------------------
+            r("GET", rf"{v}/catalog/{_id}", "read")(self._catalog)
+            # monitor -----------------------------------------------------------------
+            r("GET", rf"{v}/monitor", "read")(
+                lambda claims, **kw: self.orch.monitor_summary()
+            )
+            r("GET", rf"{v}/monitor/health", "read")(self._monitor_health)
+            # message -------------------------------------------------------------------
+            r("POST", rf"{v}/message/{_id}", "submit")(self._message)
+            # log -------------------------------------------------------------------------
+            r("GET", rf"{v}/log/{_id}", "read")(self._log)
+        # v2-only resources ---------------------------------------------------
+        # paginated request listing
+        r("GET", r"/v2/request", "read")(self._request_list)
+        # per-work status+result (what remote FaT futures poll)
+        r("GET", rf"/v2/request/{_id}/work/(?P<work_name>[^/?]+)", "read")(
+            self._work_get
         )
-        # lifecycle control plane: synchronous kernel commands (404 on
-        # unknown request, 409 on an illegal transition)
-        r(
-            "POST",
-            r"/request/(?P<request_id>\d+)"
-            r"/(?P<command>suspend|resume|retry|expire)",
-            "submit",
-        )(self._request_command)
-        # cache ---------------------------------------------------------------
-        r("POST", r"/cache", "submit")(self._cache_put)
-        r("GET", r"/cache/(?P<digest>[0-9a-f]+)", "read")(self._cache_get)
-        # catalog ---------------------------------------------------------------
-        r("GET", r"/catalog/(?P<request_id>\d+)", "read")(self._catalog)
-        # monitor -----------------------------------------------------------------
-        r("GET", r"/monitor", "read")(lambda claims, **kw: self.orch.monitor_summary())
-        r("GET", r"/monitor/health", "read")(self._monitor_health)
-        # message -------------------------------------------------------------------
-        r("POST", r"/message/(?P<request_id>\d+)", "submit")(self._message)
-        # log -------------------------------------------------------------------------
-        r("GET", r"/log/(?P<request_id>\d+)", "read")(self._log)
+        # batched variant: ?names=a,b,c — one round trip per poll sweep
+        r("GET", rf"/v2/request/{_id}/works", "read")(self._works_get)
+
+    def route_table(self) -> list[dict[str, Any]]:
+        """Stable description of the registered surface (method, pattern,
+        required role) — input to the API-surface snapshot check."""
+        return sorted(
+            (
+                {"method": m, "pattern": pat.pattern, "role": role}
+                for m, pat, role, _fn in self.routes
+            ),
+            key=lambda d: (d["pattern"], d["method"]),
+        )
 
     # -- dispatch (with the before-request auth filter) -----------------------
     def dispatch(
@@ -94,7 +142,15 @@ class RestApp:
         path: str,
         body: dict[str, Any] | None,
         headers: dict[str, str],
-    ) -> tuple[int, dict[str, Any]]:
+        query: dict[str, list[str]] | None = None,
+    ) -> tuple[int, dict[str, Any], dict[str, str]]:
+        """Route one call; returns (status, payload, response headers).
+        v2 paths get the error envelope, v1 paths keep the legacy string
+        error and gain a ``Deprecation`` header."""
+        v2 = path.startswith("/v2/") or path == "/v2"
+        resp_headers: dict[str, str] = {}
+        if not v2:
+            resp_headers["Deprecation"] = _V1_DEPRECATION
         for m, pattern, role, fn in self.routes:
             if m != method:
                 continue
@@ -106,22 +162,52 @@ class RestApp:
                 if role is not None:  # before_request filter
                     token = self._bearer(headers)
                     claims = self.auth.authorize(token, role)
-                out = fn(claims=claims, body=body or {}, **match.groupdict())
-                return 200, out
-            except AuthenticationError as exc:
-                return 401, {"error": str(exc)}
-            except AuthorizationError as exc:
-                return 403, {"error": str(exc)}
-            except NotFoundError as exc:
-                return 404, {"error": str(exc)}
-            except WorkflowError as exc:
-                # illegal lifecycle transition → conflict with current state
-                return 409, {"error": str(exc)}
-            except ReproError as exc:
-                return 400, {"error": str(exc)}
-            except Exception as exc:  # noqa: BLE001
-                return 500, {"error": f"{type(exc).__name__}: {exc}"}
-        return 404, {"error": f"no route for {method} {path}"}
+                # decode path params AFTER matching, so an encoded "/" in
+                # e.g. a work name cannot alter the route structure
+                params = {
+                    k: unquote(v) for k, v in match.groupdict().items()
+                }
+                out = fn(
+                    claims=claims,
+                    body=body or {},
+                    headers=headers,
+                    query=query or {},
+                    v2=v2,
+                    **params,
+                )
+                return 200, out, resp_headers
+            except Exception as exc:  # noqa: BLE001 - mapped to HTTP below
+                status, payload = self._error_payload(exc, v2=v2)
+                return status, payload, resp_headers
+        return (
+            404,
+            self._error_payload(
+                NotFoundError(f"no route for {method} {path}"), v2=v2
+            )[1],
+            resp_headers,
+        )
+
+    @staticmethod
+    def _error_payload(
+        exc: Exception, *, v2: bool
+    ) -> tuple[int, dict[str, Any]]:
+        status, code = 500, "internal"
+        for exc_cls, st, c in ERROR_MAP:
+            if isinstance(exc, exc_cls):
+                status, code = st, c
+                break
+        message = (
+            str(exc) if status != 500 else f"{type(exc).__name__}: {exc}"
+        )
+        if v2:
+            return status, {
+                "error": {
+                    "code": code,
+                    "message": message,
+                    "type": type(exc).__name__,
+                }
+            }
+        return status, {"error": message}
 
     @staticmethod
     def _bearer(headers: dict[str, str]) -> str:
@@ -139,7 +225,12 @@ class RestApp:
         return {"token": self.auth.issue_token(body["user"])}
 
     def _request_submit(
-        self, claims: dict[str, Any], body: dict[str, Any], **kw: Any
+        self,
+        claims: dict[str, Any],
+        body: dict[str, Any],
+        headers: Mapping[str, str],
+        v2: bool,
+        **kw: Any,
     ) -> dict[str, Any]:
         wf = Workflow.from_dict(body["workflow"])
         # ``user`` (delegated submission) and ``priority`` feed the broker's
@@ -161,15 +252,46 @@ class RestApp:
             priority = int(body.get("priority", 0))
         except (TypeError, ValueError) as exc:
             raise ValidationError(f"priority must be an integer: {exc}") from exc
+        # idempotency: body field wins, else the conventional header
+        idem = body.get("idempotency_key") or headers.get("idempotency-key")
         request_id = self.orch.submit_workflow(
             wf,
             requester=requester,
+            scope=str(body.get("scope", "default")),
             priority=priority,
+            idempotency_key=idem,
         )
         return {"request_id": request_id}
 
-    def _request_get(self, request_id: str, **kw: Any) -> dict[str, Any]:
-        return self.orch.request_status(int(request_id))
+    def _request_get(
+        self, request_id: str, query: dict[str, list[str]], **kw: Any
+    ) -> dict[str, Any]:
+        rid = int(request_id)
+        fields = [f for raw in query.get("fields", []) for f in raw.split(",")]
+        if fields == ["status"]:
+            # cheap polling path: status column only, no blob decode
+            row = self.orch.stores["requests"].get(rid, columns=("status",))
+            return {"request_id": rid, "status": row["status"]}
+        return self.orch.request_status(rid)
+
+    def _request_list(
+        self, query: dict[str, list[str]], **kw: Any
+    ) -> dict[str, Any]:
+        def _qint(name: str, default: int, lo: int, hi: int) -> int:
+            raw = (query.get(name) or [str(default)])[0]
+            try:
+                return max(lo, min(hi, int(raw)))
+            except ValueError as exc:
+                raise ValidationError(
+                    f"query param {name!r} must be an integer: {raw!r}"
+                ) from exc
+
+        limit = _qint("limit", 50, 1, 1000)
+        offset = _qint("offset", 0, 0, 10**9)
+        status = (query.get("status") or [None])[0]
+        return self.orch.list_requests(
+            status=status, limit=limit, offset=offset
+        )
 
     def _request_abort(self, request_id: str, **kw: Any) -> dict[str, Any]:
         self.orch.abort_request(int(request_id))
@@ -185,6 +307,33 @@ class RestApp:
             reply["works_reset"] = int(out or 0)
         return reply
 
+    def _work_get(
+        self, request_id: str, work_name: str, **kw: Any
+    ) -> dict[str, Any]:
+        rid = int(request_id)
+        status, results = self.orch.work_status(rid, work_name)
+        return {
+            "request_id": rid,
+            "work": work_name,
+            "status": status,
+            "results": results,
+        }
+
+    def _works_get(
+        self, request_id: str, query: dict[str, list[str]], **kw: Any
+    ) -> dict[str, Any]:
+        rid = int(request_id)
+        names: list[str] = []
+        for raw in query.get("names", []):
+            names.extend(n for n in raw.split(",") if n)
+        if not names:
+            raise ValidationError("query param 'names' is required (a,b,c)")
+        works: dict[str, Any] = {}
+        for name in names:
+            status, results = self.orch.work_status(rid, name)
+            works[name] = {"status": status, "results": results}
+        return {"request_id": rid, "works": works}
+
     def _cache_put(self, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
         data = base64.b64decode(body["data"])
         digest = GLOBAL_CODE_CACHE.put(data)
@@ -195,24 +344,7 @@ class RestApp:
         return {"data": base64.b64encode(data).decode()}
 
     def _catalog(self, request_id: str, **kw: Any) -> dict[str, Any]:
-        rid = int(request_id)
-        out: dict[str, Any] = {"request_id": rid, "collections": []}
-        for trow in self.orch.stores["transforms"].by_request(rid):
-            for coll in self.orch.stores["collections"].by_transform(
-                int(trow["transform_id"])
-            ):
-                out["collections"].append(
-                    {
-                        "coll_id": coll["coll_id"],
-                        "name": coll["name"],
-                        "relation": coll["relation_type"],
-                        "status": coll["status"],
-                        "total_files": coll["total_files"],
-                        "processed_files": coll["processed_files"],
-                        "failed_files": coll["failed_files"],
-                    }
-                )
-        return out
+        return self.orch.catalog(int(request_id))
 
     def _monitor_health(self, **kw: Any) -> dict[str, Any]:
         return {"agents": self.orch.stores["health"].live_agents()}
@@ -225,22 +357,7 @@ class RestApp:
         raise NotFoundError(f"unknown command {command!r}")
 
     def _log(self, request_id: str, **kw: Any) -> dict[str, Any]:
-        rid = int(request_id)
-        rows = self.orch.stores["transforms"].by_request(rid)
-        return {
-            "request_id": rid,
-            "entries": [
-                {
-                    "transform_id": t["transform_id"],
-                    "node_id": t["node_id"],
-                    "status": t["status"],
-                    "errors": t.get("errors"),
-                    "created_at": t["created_at"],
-                    "updated_at": t["updated_at"],
-                }
-                for t in rows
-            ],
-        }
+        return self.orch.request_log(int(request_id))
 
 
 class _Handler(BaseHTTPRequestHandler):
@@ -254,17 +371,23 @@ class _Handler(BaseHTTPRequestHandler):
             try:
                 body = json.loads(self.rfile.read(length))
             except json.JSONDecodeError:
-                self._reply(400, {"error": "invalid JSON body"})
+                self._reply(400, {"error": "invalid JSON body"}, {})
                 return
         headers = {k.lower(): v for k, v in self.headers.items()}
-        status, payload = self.app.dispatch(method, parsed.path, body, headers)
-        self._reply(status, payload)
+        status, payload, resp_headers = self.app.dispatch(
+            method, parsed.path, body, headers, parse_qs(parsed.query)
+        )
+        self._reply(status, payload, resp_headers)
 
-    def _reply(self, status: int, payload: dict[str, Any]) -> None:
+    def _reply(
+        self, status: int, payload: dict[str, Any], headers: dict[str, str]
+    ) -> None:
         data = json.dumps(payload).encode()
         self.send_response(status)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(data)))
+        for k, v in headers.items():
+            self.send_header(k, v)
         self.end_headers()
         self.wfile.write(data)
 
@@ -293,10 +416,10 @@ class RestServer:
     def url(self) -> str:
         return f"http://{self.address[0]}:{self.address[1]}"
 
-    def start(self) -> "RestServer":
-        self._thread.start()
-        return self
-
     def stop(self) -> None:
         self.httpd.shutdown()
         self.httpd.server_close()
+
+    def start(self) -> "RestServer":
+        self._thread.start()
+        return self

@@ -17,10 +17,10 @@ import hmac
 import json
 import secrets
 import threading
-import time
 from typing import Any
 
 from repro.common.exceptions import AuthenticationError, AuthorizationError
+from repro.common.utils import utc_now_ts
 
 # role → groups that hold it
 DEFAULT_ROLE_MAP = {
@@ -60,8 +60,8 @@ class AuthService:
         claims = {
             "sub": user,
             "groups": groups,
-            "iat": time.time(),
-            "exp": time.time() + self.token_ttl_s,
+            "iat": utc_now_ts(),
+            "exp": utc_now_ts() + self.token_ttl_s,
         }
         body = base64.urlsafe_b64encode(json.dumps(claims).encode()).rstrip(b"=")
         sig = hmac.new(self._secret, body, hashlib.sha256).hexdigest()
@@ -69,7 +69,7 @@ class AuthService:
 
     # -- validation + authorization ---------------------------------------------
     def validate(self, token: str) -> dict[str, Any]:
-        now = time.time()
+        now = utc_now_ts()
         with self._lock:
             hit = self._cache.get(token)
             if hit and hit[0] > now:

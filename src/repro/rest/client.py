@@ -1,45 +1,60 @@
-"""Python client for the REST service (the user-side integration surface)."""
+"""Python client for the REST service — DEPRECATED v1 surface.
+
+``RestClient`` predates the unified client API and is kept as a thin
+back-compat shim: it still speaks the ``/``-prefixed v1 alias routes and
+returns the same shapes as always, but its plumbing is now the shared
+``repro.api.HttpTransport`` — so it inherits the configurable timeout and
+bounded retry-with-backoff on idempotent GETs for free.  New code should
+use ``repro.api.HttpClient`` (the ``/v2`` resource API, typed errors,
+FaT sessions over REST).
+"""
 from __future__ import annotations
 
-import json
-import time
-import urllib.error
-import urllib.request
 from typing import Any
 
-from repro.common.exceptions import ReproError
+from repro.api.http import HttpTransport
+from repro.common import utils
+from repro.common.constants import TERMINAL_REQUEST_STATES
 from repro.core.workflow import Workflow
 
-_TERMINAL = {"Finished", "SubFinished", "Failed", "Cancelled", "Expired"}
+_TERMINAL = {str(s) for s in TERMINAL_REQUEST_STATES}
 
 
 class RestClient:
-    def __init__(self, url: str, *, token: str | None = None):
-        self.url = url.rstrip("/")
-        self.token = token
+    def __init__(
+        self,
+        url: str,
+        *,
+        token: str | None = None,
+        timeout_s: float = 30.0,
+        retries: int = 2,
+        backoff_s: float = 0.05,
+    ):
+        self.transport = HttpTransport(
+            url,
+            token=token,
+            timeout_s=timeout_s,
+            retries=retries,
+            backoff_s=backoff_s,
+        )
+
+    @property
+    def url(self) -> str:
+        return self.transport.url
+
+    @property
+    def token(self) -> str | None:
+        return self.transport.token
+
+    @token.setter
+    def token(self, value: str | None) -> None:
+        self.transport.token = value
 
     # -- plumbing -----------------------------------------------------------
     def _call(
         self, method: str, path: str, body: dict[str, Any] | None = None
     ) -> dict[str, Any]:
-        data = json.dumps(body).encode() if body is not None else None
-        req = urllib.request.Request(
-            self.url + path, data=data, method=method
-        )
-        req.add_header("Content-Type", "application/json")
-        if self.token:
-            req.add_header("Authorization", f"Bearer {self.token}")
-        try:
-            with urllib.request.urlopen(req, timeout=30) as resp:
-                return json.loads(resp.read())
-        except urllib.error.HTTPError as exc:
-            try:
-                payload = json.loads(exc.read())
-            except Exception:  # noqa: BLE001
-                payload = {"error": str(exc)}
-            raise ReproError(
-                f"HTTP {exc.code} on {method} {path}: {payload.get('error')}"
-            ) from exc
+        return self.transport.request(method, path, body)
 
     # -- auth ------------------------------------------------------------------
     def register(self, user: str, groups: list[str] | None = None) -> None:
@@ -72,7 +87,8 @@ class RestClient:
         self._call("POST", f"/request/{request_id}/abort", {})
 
     # -- lifecycle control plane (HTTP 404 unknown request / 409 illegal
-    # transition, both raised as ReproError with the status in the message)
+    # transition, both raised as typed ReproErrors with the status in the
+    # message)
     def suspend(self, request_id: int) -> None:
         """Pause a running request; already-submitted jobs drain, rollup
         stops until ``resume``."""
@@ -114,11 +130,11 @@ class RestClient:
         return base64.b64decode(self._call("GET", f"/cache/{digest}")["data"])
 
     def wait(self, request_id: int, *, timeout: float = 60.0, interval: float = 0.1) -> str:
-        deadline = time.monotonic() + timeout
+        deadline = utils.utc_now_ts() + timeout
         while True:
             st = self.status(request_id)["status"]
             if st in _TERMINAL:
                 return st
-            if time.monotonic() > deadline:
+            if utils.utc_now_ts() > deadline:
                 raise TimeoutError(f"request {request_id} still {st}")
-            time.sleep(interval)
+            utils.sleep(interval)

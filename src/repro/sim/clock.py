@@ -10,7 +10,7 @@ same timestamps.
 """
 from __future__ import annotations
 
-from repro.common.utils import set_time_provider
+from repro.common.utils import set_sleep_provider, set_time_provider
 
 #: far enough in the past to be obviously synthetic in any leaked artifact
 DEFAULT_EPOCH = 1_000_000_000.0
@@ -23,6 +23,7 @@ class VirtualClock:
         self._now = float(start)
         self._installed = False
         self._prev: object = None
+        self._prev_sleep: object = None
 
     # -- time ---------------------------------------------------------------
     def now(self) -> float:
@@ -42,16 +43,21 @@ class VirtualClock:
     # -- installation --------------------------------------------------------
     def install(self) -> "VirtualClock":
         if not self._installed:
-            # keep the previous provider so nested clocks (a harness built
+            # keep the previous providers so nested clocks (a harness built
             # inside a virtual_clock fixture) restore the OUTER clock, not
-            # wall time
+            # wall time.  Sleep is swapped alongside time so client polling
+            # loops (Future.result, Client.wait) advance the clock instead
+            # of blocking — a 60 s poll timeout costs 3000 instant advances,
+            # never 60 s of wall clock.
             self._prev = set_time_provider(self.now)
+            self._prev_sleep = set_sleep_provider(self.sleep)
             self._installed = True
         return self
 
     def uninstall(self) -> None:
         if self._installed:
             set_time_provider(self._prev)  # type: ignore[arg-type]
+            set_sleep_provider(self._prev_sleep)  # type: ignore[arg-type]
             self._installed = False
 
     def __enter__(self) -> "VirtualClock":

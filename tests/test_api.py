@@ -1,0 +1,523 @@
+"""Unified client API: backend parity (LocalClient vs HttpClient), the
+/v2 resource API, futures composition, idempotent submission, the
+LRU-capped code cache, transport retry, and the API-surface snapshot."""
+from __future__ import annotations
+
+import time
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.api import (
+    HttpClient,
+    HttpTransport,
+    LocalClient,
+    WorkFuture,
+    as_completed,
+    connect,
+    gather,
+)
+from repro.common.exceptions import (
+    NotFoundError,
+    ReproError,
+    ValidationError,
+    WorkflowError,
+)
+from repro.core import Work, Workflow, work_function
+from repro.core.fat import CodeCache
+from repro.core.work import register_task
+from repro.rest import RestApp, RestServer
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _api_tasks():
+    register_task("api_slow", lambda **kw: time.sleep(0.3) or {})
+    yield
+
+
+@pytest.fixture(params=["local", "http"])
+def api_client(request, orch):
+    """The SAME scenarios run against both backends: in-process and REST."""
+    if request.param == "local":
+        yield LocalClient(orch)
+    else:
+        app = RestApp(orch)
+        srv = RestServer(app).start()
+        cli = HttpClient(srv.url, timeout_s=10.0)
+        cli.register("alice", ["users"])
+        cli.login("alice")
+        yield cli
+        srv.stop()
+
+
+def _simple_wf(name="apiflow", task="noop", n=1, **work_kw):
+    wf = Workflow(name)
+    for i in range(n):
+        wf.add_work(Work(f"w{i}", task=task, **work_kw))
+    return wf
+
+
+# ---------------------------------------------------------------------------
+# backend parity: submission / reads / waiting
+# ---------------------------------------------------------------------------
+def test_ping(api_client):
+    assert api_client.ping()
+
+
+def test_submit_status_wait_catalog_logs(api_client):
+    from repro.core import CollectionSpec
+
+    wf = Workflow("flow")
+    wf.add_work(
+        Work("a", task="emit", inputs=[CollectionSpec("in.ds", n_files=3)])
+    )
+    rid = api_client.submit(wf)
+    assert api_client.wait(rid, timeout=30) == "Finished"
+    st = api_client.status(rid)
+    assert st["status"] == "Finished"
+    assert any(t["node_id"] == "a" for t in st["transforms"])
+    cat = api_client.catalog(rid)
+    assert any(
+        c["relation"] == "Input" and c["total_files"] == 3
+        for c in cat["collections"]
+    )
+    logs = api_client.logs(rid)
+    assert logs["entries"][0]["status"] == "Finished"
+
+
+def test_submit_single_work_auto_wraps(api_client):
+    rid = api_client.submit(Work("solo", task="noop"))
+    assert api_client.wait(rid, timeout=30) == "Finished"
+    status, _ = api_client.work_status(rid, "solo")
+    assert status == "Finished"
+
+
+def test_submit_rejects_other_types(api_client):
+    with pytest.raises(TypeError, match="Workflow or a Work"):
+        api_client.submit({"not": "a workflow"})
+
+
+def test_typed_not_found_parity(api_client):
+    with pytest.raises(NotFoundError):
+        api_client.status(999999)
+    with pytest.raises(NotFoundError):
+        api_client.logs(999999)
+    with pytest.raises(NotFoundError):
+        api_client.catalog(999999)
+    with pytest.raises(NotFoundError):
+        api_client.suspend(999999)
+
+
+def test_work_names_with_special_chars_poll_fine(api_client):
+    """Work names travel percent-encoded in /v2 paths and query strings."""
+    name = "odd name + 100%/done"
+    rid = api_client.submit(Work(name, task="noop"))
+    assert api_client.wait(rid, timeout=30) == "Finished"
+    assert api_client.work_status(rid, name)[0] == "Finished"
+    assert api_client.works_status(rid, [name])[name][0] == "Finished"
+
+
+def test_typed_conflict_parity(api_client):
+    rid = api_client.submit(_simple_wf("done"))
+    assert api_client.wait(rid, timeout=30) == "Finished"
+    for call in (api_client.suspend, api_client.resume, api_client.retry,
+                 api_client.expire):
+        with pytest.raises(WorkflowError):
+            call(rid)
+
+
+def test_list_requests_pagination(api_client):
+    rids = [api_client.submit(_simple_wf(f"page{i}")) for i in range(3)]
+    for rid in rids:
+        api_client.wait(rid, timeout=30)
+    page = api_client.list_requests(limit=2, offset=0)
+    assert len(page["requests"]) == 2 and page["total"] >= 3
+    assert page["limit"] == 2 and page["offset"] == 0
+    nxt = api_client.list_requests(limit=2, offset=2)
+    ids = {r["request_id"] for r in page["requests"]}
+    assert ids.isdisjoint(r["request_id"] for r in nxt["requests"])
+    only = api_client.list_requests(status="Finished", limit=1000)
+    assert all(r["status"] == "Finished" for r in only["requests"])
+
+
+def test_idempotent_submission(api_client):
+    wf = _simple_wf("idem")
+    r1 = api_client.submit(wf, idempotency_key="key-1")
+    r2 = api_client.submit(wf, idempotency_key="key-1")
+    r3 = api_client.submit(wf, idempotency_key="key-2")
+    assert r1 == r2 and r3 != r1
+    # reusing a key for a DIFFERENT definition is rejected, not collapsed
+    with pytest.raises(ValidationError, match="different workflow"):
+        api_client.submit(_simple_wf("other"), idempotency_key="key-1")
+
+
+def test_workflow_fingerprint_stable_across_instances(api_client):
+    a, b = _simple_wf("fp"), _simple_wf("fp")
+    assert a.internal_id != b.internal_id
+    assert a.fingerprint() == b.fingerprint()
+    r1 = api_client.submit(a, idempotency_key=a.fingerprint())
+    r2 = api_client.submit(b, idempotency_key=b.fingerprint())
+    assert r1 == r2
+
+
+def test_monitor_surfaces_code_cache(api_client):
+    mon = api_client.monitor()
+    cc = mon["code_cache"]
+    assert {"entries", "bytes", "max_bytes", "hits", "misses",
+            "evictions"} <= set(cc)
+
+
+def test_cache_roundtrip(api_client):
+    digest = api_client.cache_put(b"payload-bytes")
+    assert api_client.cache_get(digest) == b"payload-bytes"
+
+
+# ---------------------------------------------------------------------------
+# backend parity: the acceptance-criterion FaT script, unmodified
+# ---------------------------------------------------------------------------
+def _faat_script(client):
+    """The same FaT script must pass against LocalClient AND HttpClient."""
+
+    @work_function
+    def triple(x):
+        return 3 * x
+
+    with client.session():
+        fut = triple.submit(7)
+        assert fut.result(timeout=30) == 21
+        batch = triple.map([1, 2, 3])
+        assert batch.result(timeout=30) == [3, 6, 9]
+
+
+def test_faat_session_parity(api_client):
+    _faat_script(api_client)
+
+
+def test_faat_future_reattach_and_work_endpoints(api_client):
+    @work_function
+    def square(x):
+        return x * x
+
+    with api_client.session() as sess:
+        fut = square.submit(6)
+        assert fut.result(timeout=30) == 36
+    rid = sess.requests[-1]
+    # re-attach a fresh future to the finished work (GET /v2/.../work/<name>)
+    again = api_client.future(rid, fut.work_name)
+    assert again.result(timeout=5) == 36
+    assert again.done() and again.status() == "Finished"
+    # batched endpoint answers for the same names (GET /v2/.../works)
+    batch = api_client.works_status(rid, [fut.work_name])
+    assert batch[fut.work_name][0] == "Finished"
+
+
+def test_futures_composition(api_client):
+    @work_function
+    def inc(x):
+        return x + 1
+
+    with api_client.session():
+        futs = [inc.submit(i) for i in range(3)]
+        done_order = [f.work_name for f in as_completed(futs, timeout=30)]
+        assert sorted(done_order) == sorted(f.work_name for f in futs)
+        assert gather(*futs, timeout=30) == [1, 2, 3]
+
+
+def test_future_exception(api_client):
+    rid = api_client.submit(
+        _simple_wf("boom", task="fail_always", max_retries=0)
+    )
+    fut = api_client.future(rid, "w0")
+    exc = fut.exception(timeout=30)
+    assert isinstance(exc, WorkflowError)
+    with pytest.raises(WorkflowError):
+        fut.result(timeout=5)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: lifecycle control plane
+# ---------------------------------------------------------------------------
+def _wait_status(client, rid, statuses, timeout=15.0):
+    deadline = time.monotonic() + timeout
+    st = None
+    while time.monotonic() < deadline:
+        st = client.status(rid)["status"]
+        if st in statuses:
+            return st
+        time.sleep(0.02)
+    raise AssertionError(f"request {rid} never reached {statuses} (last {st})")
+
+
+def test_suspend_resume_parity(api_client):
+    rid = api_client.submit(_simple_wf("pausable", task="api_slow", n=3, n_jobs=2))
+    _wait_status(api_client, rid, {"Transforming"})
+    api_client.suspend(rid)
+    assert api_client.status(rid)["status"] == "Suspended"
+    api_client.resume(rid)
+    assert api_client.wait(rid, timeout=30) == "Finished"
+
+
+def test_retry_abort_expire_parity(api_client):
+    # retry grants a fresh budget (and still fails through a new attempt)
+    rid = api_client.submit(_simple_wf("retryable", task="fail_always",
+                                       max_retries=0))
+    assert api_client.wait(rid, timeout=30) == "Failed"
+    assert api_client.retry(rid) == 1
+    assert api_client.wait(rid, timeout=30) == "Failed"
+    # abort cancels an in-flight request
+    rid2 = api_client.submit(_simple_wf("abortable", task="api_slow", n_jobs=2))
+    _wait_status(api_client, rid2, {"Transforming"})
+    api_client.abort(rid2)
+    assert api_client.wait(rid2, timeout=30) == "Cancelled"
+    # expire is terminal and non-retryable
+    rid3 = api_client.submit(_simple_wf("expirable", task="api_slow", n_jobs=2))
+    _wait_status(api_client, rid3, {"Transforming"})
+    api_client.expire(rid3)
+    assert api_client.status(rid3)["status"] == "Expired"
+    with pytest.raises(WorkflowError):
+        api_client.retry(rid3)
+
+
+# ---------------------------------------------------------------------------
+# connect() / v1 aliases / v2 envelope / deprecation headers
+# ---------------------------------------------------------------------------
+def test_orch_session_shim_translates_legacy_kwargs(orch):
+    """`orch.session(requester=...)` predates the unified client; the
+    shim maps it onto the new surface's `user=`."""
+
+    @work_function
+    def ident(x):
+        return x
+
+    with orch.session(requester="legacy-alice") as sess:
+        assert ident.submit(5).result(timeout=30) == 5
+    row = orch.stores["requests"].get(sess.requests[-1])
+    assert row["requester"] == "legacy-alice"
+
+
+def test_connect_picks_backend(orch):
+    assert isinstance(connect(orch), LocalClient)
+    assert isinstance(connect("http://127.0.0.1:1"), HttpClient)
+    with pytest.raises(TypeError):
+        connect(42)
+
+
+@pytest.fixture()
+def http_server(orch):
+    app = RestApp(orch)
+    srv = RestServer(app).start()
+    yield srv, app
+    srv.stop()
+
+
+def test_v1_aliases_answer_with_deprecation_header(http_server):
+    srv, _ = http_server
+    with urllib.request.urlopen(f"{srv.url}/ping", timeout=5) as resp:
+        assert resp.headers.get("Deprecation", "").startswith('version="v1"')
+    with urllib.request.urlopen(f"{srv.url}/v2/ping", timeout=5) as resp:
+        assert resp.headers.get("Deprecation") is None
+
+
+def test_v1_and_v2_route_pairs_both_dispatch(http_server, orch):
+    """Every v1 route has a v2 twin in the table (aliasing is total)."""
+    _, app = http_server
+    patterns = {r["pattern"] for r in app.route_table()}
+    v1 = {p for p in patterns if not p.startswith("^/v2")}
+    for p in v1:
+        assert f"^/v2{p[1:]}" in patterns, f"no v2 twin for {p}"
+
+
+def test_v2_error_envelope_machine_readable(http_server):
+    srv, app = http_server
+    app.auth.register("eve", ["users"])
+    token = app.auth.issue_token("eve")
+    req = urllib.request.Request(
+        f"{srv.url}/v2/request/999999",
+        headers={"Authorization": f"Bearer {token}"},
+    )
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=5)
+    import json
+
+    assert ei.value.code == 404
+    err = json.loads(ei.value.read())["error"]
+    assert err["code"] == "not_found" and err["type"] == "NotFoundError"
+    assert "999999" in err["message"]
+
+
+def test_v1_error_stays_plain_string(http_server):
+    srv, app = http_server
+    app.auth.register("eve2", ["users"])
+    token = app.auth.issue_token("eve2")
+    req = urllib.request.Request(
+        f"{srv.url}/request/999999",
+        headers={"Authorization": f"Bearer {token}"},
+    )
+    with pytest.raises(urllib.error.HTTPError) as ei:
+        urllib.request.urlopen(req, timeout=5)
+    import json
+
+    assert isinstance(json.loads(ei.value.read())["error"], str)
+
+
+def test_restclient_shim_still_speaks_v1(http_server):
+    """The deprecated RestClient runs through the new transport but keeps
+    its legacy surface — and still exercises the v1 alias routes."""
+    from repro.rest import RestClient
+
+    srv, _ = http_server
+    cli = RestClient(srv.url, timeout_s=10.0)
+    cli.register("bob", ["users"])
+    cli.login("bob")
+    wf = _simple_wf("legacy")
+    rid = cli.submit(wf)
+    assert cli.wait(rid, timeout=30) == "Finished"
+    with pytest.raises(ReproError, match="404"):
+        cli.status(999999)
+
+
+def test_http_submit_fails_fast_on_missing_archive(http_server):
+    """A FaT workflow whose archive is absent locally fails at SUBMIT
+    time, not as a cryptic remote execution error."""
+    srv, _ = http_server
+    cli = HttpClient(srv.url)
+    cli.register("carol", ["users"])
+    cli.login("carol")
+    wf = Workflow("ghost")
+    wf.add_work(
+        Work(
+            "g",
+            payload={
+                "kind": "function",
+                "name": "ghost",
+                "archive": "0" * 24,  # not in the local code cache
+                "func_name": "ghost",
+                "args": "",
+            },
+            work_type="function",
+        )
+    )
+    with pytest.raises(ValidationError, match="not in the local code cache"):
+        cli.submit(wf)
+
+
+def test_http_auth_required_typed(http_server):
+    from repro.common.exceptions import AuthenticationError
+
+    srv, _ = http_server
+    cli = HttpClient(srv.url)
+    with pytest.raises(AuthenticationError):
+        cli.submit(_simple_wf("noauth"))
+
+
+# ---------------------------------------------------------------------------
+# transport: configurable timeout, bounded retry-with-backoff
+# ---------------------------------------------------------------------------
+def test_transport_retries_idempotent_get(monkeypatch):
+    t = HttpTransport("http://example.invalid", retries=2, backoff_s=0.001)
+    calls: list[str] = []
+
+    def flaky(method, path, body, headers):
+        calls.append(method)
+        if len(calls) < 3:
+            raise urllib.error.URLError("transient")
+        return {"ok": True}
+
+    monkeypatch.setattr(t, "_once", flaky)
+    assert t.request("GET", "/ping") == {"ok": True}
+    assert len(calls) == 3
+
+
+def test_transport_no_retry_on_mutation(monkeypatch):
+    t = HttpTransport("http://example.invalid", retries=3, backoff_s=0.001)
+    calls: list[str] = []
+
+    def always_down(method, path, body, headers):
+        calls.append(method)
+        raise urllib.error.URLError("down")
+
+    monkeypatch.setattr(t, "_once", always_down)
+    with pytest.raises(ReproError, match="transport failure"):
+        t.request("POST", "/request", {})
+    assert len(calls) == 1  # non-idempotent: fail fast
+    calls.clear()
+    with pytest.raises(ReproError, match="transport failure"):
+        t.request("POST", "/request", {}, idempotent=True)  # keyed submit
+    assert len(calls) == 4  # 1 + 3 retries
+
+
+def test_transport_timeout_configurable():
+    t = HttpTransport("http://example.invalid", timeout_s=3.5)
+    assert t.timeout_s == 3.5
+    cli = HttpClient("http://example.invalid", timeout_s=1.25, retries=7)
+    assert cli.transport.timeout_s == 1.25 and cli.transport.retries == 7
+
+
+# ---------------------------------------------------------------------------
+# client-side waiting is virtualizable (sim can drive polling)
+# ---------------------------------------------------------------------------
+def test_future_polling_respects_virtual_clock(virtual_clock):
+    class _Stub:
+        def work_status(self, rid, name):
+            return ("Running", None)
+
+    fut = WorkFuture(_Stub(), 1, "w")
+    start = time.perf_counter()
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=300.0, interval=0.5)
+    # 300 virtual seconds of polling must cost ~zero wall clock
+    assert time.perf_counter() - start < 2.0
+    assert virtual_clock.now() > 1_000_000_300.0 - 1.0
+
+
+def test_resultfuture_polling_respects_virtual_clock(virtual_clock):
+    from repro.core.fat import ResultFuture
+
+    fut = ResultFuture("w", lambda name: ("Running", None))
+    start = time.perf_counter()
+    with pytest.raises(TimeoutError):
+        fut.result(timeout=600.0, interval=1.0)
+    assert time.perf_counter() - start < 2.0
+
+
+# ---------------------------------------------------------------------------
+# code cache: LRU byte cap
+# ---------------------------------------------------------------------------
+def test_code_cache_lru_eviction_and_stats():
+    c = CodeCache(max_bytes=100)
+    d1, d2, d3 = c.put(b"a" * 40), c.put(b"b" * 40), c.put(b"c" * 40)
+    assert d1 not in c and d2 in c and d3 in c  # oldest evicted
+    assert c.stats()["evictions"] == 1 and c.stats()["bytes"] == 80
+    with pytest.raises(ValidationError):
+        c.get(d1)
+    assert c.stats()["misses"] == 1
+    assert c.get(d2) == b"b" * 40
+    assert c.stats()["hits"] == 1
+    # the get refreshed d2's recency, so the next eviction takes d3
+    c.put(b"d" * 40)
+    assert d3 not in c and d2 in c
+
+
+def test_code_cache_duplicate_put_not_double_counted():
+    c = CodeCache(max_bytes=1000)
+    d1 = c.put(b"x" * 100)
+    assert c.put(b"x" * 100) == d1
+    assert c.stats()["bytes"] == 100 and c.stats()["entries"] == 1
+
+
+def test_code_cache_oversized_entry_survives_alone():
+    c = CodeCache(max_bytes=10)
+    d = c.put(b"z" * 50)  # bigger than the cap: kept until displaced
+    assert d in c and c.stats()["evictions"] == 0
+    c.put(b"y" * 50)
+    assert d not in c  # displaced by the newer entry
+
+
+# ---------------------------------------------------------------------------
+# API-surface snapshot (the CI breaking-change gate, also run in tier-1)
+# ---------------------------------------------------------------------------
+def test_api_surface_snapshot_clean():
+    from repro.api import snapshot
+
+    assert snapshot.check() == []

@@ -337,9 +337,9 @@ def test_rest_delegated_submission_requires_admin(orch):
             "POST", "/request", body, {"authorization": f"Bearer {token}"}
         )
 
-    status, out = submit_as("mallory")  # plain user may not spoof alice
+    status, out, _headers = submit_as("mallory")  # plain user may not spoof alice
     assert status == 403 and "admin" in out["error"]
-    status, out = submit_as("op")  # admins may delegate
+    status, out, _headers = submit_as("op")  # admins may delegate
     assert status == 200
     row = orch.stores["requests"].get(out["request_id"])
     assert row["requester"] == "alice"
