@@ -1,0 +1,215 @@
+"""Serving-engine throughput: continuous-batching offline inference.
+
+Three scenarios over the smoke smollm config (tokens/s, samples/s, slot
+occupancy, utilization):
+
+  prefill_heavy — long prompts, short generations (prompt-processing bound)
+  decode_heavy  — short prompts, long generations (decode-loop bound)
+  orchestrated  — the decode-heavy batch dispatched through the full
+                  orchestrator path (LocalClient → broker → serve payload),
+                  pricing the scheduling plane on top of the engine and
+                  asserting weight-locality (zero replica bytes moved)
+
+Each engine scenario runs once untimed (compiles) and once timed.
+Utilization is achieved *model* FLOPs — 2·N_active per processed token,
+the MODEL_FLOPS convention from ``repro.launch.analytic`` — over a
+ceiling measured on the same backend as the best-of-N jitted f32 matmul,
+since the roofline dry-run cache (``results/dryrun``) is not checked in.
+Padded/pad-wasted work is reported separately (``pad_efficiency``), not
+credited as useful.
+
+``BENCH_SMOKE=1`` shrinks batch and generation lengths; the per-scenario
+wall-clock budgets below are enforced as a regression gate in both modes
+(RuntimeError on breach), which is what the CI serving step relies on.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Any
+
+SMOKE = bool(os.environ.get("BENCH_SMOKE"))
+ARCH = "smollm-360m"
+
+#: scenario → (smoke sizes, full sizes); budgets are wall-clock seconds
+_SCENARIOS: dict[str, dict[str, dict[str, Any]]] = {
+    "prefill_heavy": {
+        "smoke": dict(n_prompts=6, prompt_len=24, max_new=2,
+                      n_slots=4, prefill_batch=2, budget_s=90.0),
+        "full": dict(n_prompts=16, prompt_len=48, max_new=4,
+                     n_slots=8, prefill_batch=4, budget_s=300.0),
+    },
+    "decode_heavy": {
+        "smoke": dict(n_prompts=6, prompt_len=4, max_new=20,
+                      n_slots=4, prefill_batch=2, budget_s=90.0),
+        "full": dict(n_prompts=16, prompt_len=4, max_new=56,
+                     n_slots=8, prefill_batch=4, budget_s=300.0),
+    },
+    "orchestrated": {
+        "smoke": dict(n_prompts=6, prompt_len=4, max_new=12,
+                      n_shards=2, budget_s=120.0),
+        "full": dict(n_prompts=12, prompt_len=4, max_new=24,
+                     n_shards=2, budget_s=300.0),
+    },
+}
+
+
+def _prompts(n: int, length: int) -> list[list[int]]:
+    return [[(13 * i + 7 * j) % 96 + 1 for j in range(length)] for i in range(n)]
+
+
+def _peak_gflops() -> float:
+    """Measured matmul ceiling on this backend: best-of-5 jitted 512³ f32."""
+    import jax
+    import jax.numpy as jnp
+
+    n = 512
+    f = jax.jit(lambda a, b: a @ b)
+    a = jnp.full((n, n), 0.5, jnp.float32)
+    b = jnp.full((n, n), 0.25, jnp.float32)
+    f(a, b).block_until_ready()
+    best = float("inf")
+    for _ in range(5):
+        t0 = time.perf_counter()
+        f(a, b).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return 2.0 * n**3 / best / 1e9
+
+
+def _flops_per_token(cfg: Any) -> float:
+    from repro.launch.analytic import exact_param_counts
+
+    return 2.0 * exact_param_counts(cfg)["active"]
+
+
+def _gate(name: str, wall: float, budget: float) -> None:
+    if wall >= budget:
+        raise RuntimeError(f"{name} took {wall:.1f}s (budget {budget}s)")
+
+
+def _engine_row(scenario: str, peak_gflops: float) -> dict[str, Any]:
+    from repro.serve.workload import HUB
+
+    p = _SCENARIOS[scenario]["smoke" if SMOKE else "full"]
+    eng = HUB.engine(
+        ARCH, n_slots=p["n_slots"], prefill_batch=p["prefill_batch"], max_seq=64
+    )
+    prompts = _prompts(p["n_prompts"], p["prompt_len"])
+    eng.generate(prompts, max_new_tokens=p["max_new"])  # compile pass
+    before = dict(eng.stats)
+    t0 = time.perf_counter()
+    results = eng.generate(prompts, max_new_tokens=p["max_new"])
+    wall = time.perf_counter() - t0
+    d = {k: eng.stats[k] - before[k] for k in before}
+    assert len(results) == p["n_prompts"]
+
+    gen = int(d["generated_tokens"])
+    # tokens actually forwarded through the model: every non-pad prompt
+    # position (prefill) plus one per active slot per decode step
+    useful_tokens = int(d["prefill_tokens"]) + int(d["decode_active_steps"])
+    padded_tokens = int(d["padded_prefill_tokens"]) + int(d["decode_slot_steps"])
+    achieved_gflops = _flops_per_token(eng.cfg) * useful_tokens / wall / 1e9
+    _gate(f"serving/{scenario}", wall, p["budget_s"])
+    return {
+        "name": f"serving/{scenario}",
+        "us_per_call": wall / max(1, gen) * 1e6,  # per generated token
+        "derived": {
+            "wall_s": round(wall, 3),
+            "requests": p["n_prompts"],
+            "gen_tokens": gen,
+            "tokens_per_s": round(gen / wall, 1),
+            "samples_per_s": round(p["n_prompts"] / wall, 2),
+            "prefill_tokens": int(d["prefill_tokens"]),
+            "slot_occupancy": round(
+                d["decode_active_steps"] / max(1, d["decode_slot_steps"]), 3
+            ),
+            "pad_efficiency": round(useful_tokens / max(1, padded_tokens), 3),
+            "refills": int(d["refills"]),
+            "achieved_gflops": round(achieved_gflops, 2),
+            "peak_gflops": round(peak_gflops, 2),
+            "utilization": round(achieved_gflops / peak_gflops, 4),
+            "within_budget": wall < p["budget_s"],
+            "smoke": SMOKE,
+        },
+    }
+
+
+def _orchestrated_row(peak_gflops: float) -> dict[str, Any]:
+    from repro.api import LocalClient
+    from repro.orchestrator import Orchestrator
+    from repro.runtime.executor import WorkloadRuntime
+    from repro.serve.workload import (
+        HUB,
+        collect_serve_results,
+        publish_weights,
+        serve_work,
+    )
+
+    p = _SCENARIOS["orchestrated"]["smoke" if SMOKE else "full"]
+    prompts = _prompts(p["n_prompts"], p["prompt_len"])
+    # compile pass on the exact engine key the serve payload resolves to,
+    # so the timed section prices dispatch + execution, not XLA
+    eng = HUB.engine(ARCH)
+    eng.generate(prompts, max_new_tokens=p["max_new"])
+
+    runtime = WorkloadRuntime(sites={"wa": 64, "wb": 64}, workers=2)
+    orch = Orchestrator(runtime=runtime, poll_period_s=0.03)
+    orch.start()
+    try:
+        client = LocalClient(orch)
+        publish_weights(runtime.broker.catalog, ARCH, ["wa"])
+        work = serve_work(
+            ARCH, prompts, n_shards=p["n_shards"], max_new_tokens=p["max_new"]
+        )
+        t0 = time.perf_counter()
+        rid = client.submit(work)
+        status = client.wait(rid, timeout=p["budget_s"])
+        wall = time.perf_counter() - t0
+        if status != "Finished":
+            raise RuntimeError(f"serving/orchestrated ended {status}")
+        _, results = client.work_status(rid, work.name)
+        tokens = collect_serve_results(results, len(prompts))
+        task = [t for t in runtime.tasks.values() if t.spec.name == work.name][0]
+        sites = sorted({j.site for j in task.per_index()})
+        bytes_moved = int(runtime.stats["bytes_moved"])
+    finally:
+        orch.stop()
+
+    gen = sum(len(t) for t in tokens)
+    prefill_tokens = sum(len(pr) for pr in prompts)
+    achieved_gflops = (
+        _flops_per_token(eng.cfg) * (prefill_tokens + gen) / wall / 1e9
+    )
+    if bytes_moved:
+        raise RuntimeError(
+            f"serving/orchestrated moved {bytes_moved} replica bytes; "
+            "broker should pin serve shards to the weight-resident site"
+        )
+    _gate("serving/orchestrated", wall, p["budget_s"])
+    return {
+        "name": "serving/orchestrated",
+        "us_per_call": wall / max(1, gen) * 1e6,
+        "derived": {
+            "wall_s": round(wall, 3),
+            "requests": p["n_prompts"],
+            "shards": p["n_shards"],
+            "gen_tokens": gen,
+            "tokens_per_s": round(gen / wall, 1),
+            "samples_per_s": round(p["n_prompts"] / wall, 2),
+            "sites": sites,
+            "bytes_moved": bytes_moved,
+            "achieved_gflops": round(achieved_gflops, 2),
+            "utilization": round(achieved_gflops / peak_gflops, 4),
+            "within_budget": wall < p["budget_s"],
+            "smoke": SMOKE,
+        },
+    }
+
+
+def run() -> list[dict[str, Any]]:
+    peak = _peak_gflops()
+    return [
+        _engine_row("prefill_heavy", peak),
+        _engine_row("decode_heavy", peak),
+        _orchestrated_row(peak),
+    ]

@@ -11,6 +11,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   kernels    — data-plane step/op timings (regression tracking)
   roofline   — §Roofline terms from the dry-run cache
   sim        — deterministic fault-scenario throughput (repro.sim)
+  serving    — continuous-batching offline inference (repro.serve)
 """
 from __future__ import annotations
 
@@ -34,6 +35,7 @@ def main() -> None:
         bench_hpo,
         bench_kernels,
         bench_scheduling,
+        bench_serving,
         bench_sim,
         roofline,
     )
@@ -49,6 +51,7 @@ def main() -> None:
         "kernels": bench_kernels,
         "roofline": roofline,
         "sim": bench_sim,
+        "serving": bench_serving,
     }
     selected = (
         {k: modules[k] for k in args.only.split(",")} if args.only else modules

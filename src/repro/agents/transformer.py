@@ -97,6 +97,14 @@ class Transformer(BaseAgent):
             input_ids, job_contents = self._register_collections(
                 request_id, transform_id, tmpl, data_aware
             )
+            if not job_contents and resources.get("content_affinity"):
+                # no input collections, but the work declared a shared
+                # data dependency (e.g. a serve shard's weight archive):
+                # bind every job to it so the broker ranks sites by its
+                # replica locality
+                job_contents = [resources["content_affinity"]] * int(
+                    tmpl.get("n_jobs", 1)
+                )
             processing_id = self.stores["processings"].add(
                 transform_id,
                 request_id,

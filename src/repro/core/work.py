@@ -128,6 +128,14 @@ class Work:
                 raise ValidationError(
                     f"{self.name}: unregistered task {self.payload.get('name')!r}"
                 )
+        elif kind == "serve":
+            if not self.payload.get("arch"):
+                raise ValidationError(f"{self.name}: serve payload needs an arch")
+            prompts = self.payload.get("prompts")
+            if not isinstance(prompts, list) or not prompts:
+                raise ValidationError(
+                    f"{self.name}: serve payload needs a non-empty prompts list"
+                )
         elif kind not in ("function", "noop"):
             raise ValidationError(f"{self.name}: unknown payload kind {kind!r}")
 

@@ -1,6 +1,10 @@
-"""Serving launcher: prefill a batch of prompts, then decode tokens.
+"""Serving launcher: continuous-batching offline inference from the CLI.
 
-``python -m repro.launch.serve --arch qwen3-4b --smoke --tokens 32``
+Drives :class:`repro.serve.OfflineEngine` — the same engine the
+orchestrator's ``serve`` payload uses — over randomly drawn prompts of
+mixed length, and prints throughput plus engine counters.
+
+``python -m repro.launch.serve --arch smollm-360m --smoke --tokens 32``
 """
 from __future__ import annotations
 
@@ -8,65 +12,67 @@ import argparse
 import json
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
 from repro.configs import get_config, smoke_config
-from repro.models.lm import init_params_and_specs, zero_caches
-from repro.serve.step import make_decode_step
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--context", type=int, default=64)
-    ap.add_argument("--tokens", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=8, help="number of prompts")
+    ap.add_argument("--context", type=int, default=16, help="max prompt length")
+    ap.add_argument("--tokens", type=int, default=32, help="max new tokens each")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--prefill-batch", type=int, default=2)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--eos", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    import jax
+
+    from repro.models.lm import init_params_and_specs
+    from repro.serve import OfflineEngine
 
     cfg = smoke_config(args.arch) if args.smoke else get_config(args.arch)
     params, _ = init_params_and_specs(jax.random.PRNGKey(0), cfg)
-    max_seq = args.context + args.tokens
-    caches = zero_caches(cfg, args.batch, max_seq)
-    decode = jax.jit(make_decode_step(cfg, sample=True), donate_argnums=(2,))
-
-    # "prefill" by decoding the prompt tokens one by one (keeps the driver
-    # free of the prefill step's cache-threading; fine for a demo server)
-    prompt = jax.random.randint(
-        jax.random.PRNGKey(1), (args.batch, args.context), 0, cfg.vocab_size
+    engine = OfflineEngine(
+        cfg,
+        params,
+        n_slots=args.slots,
+        prefill_batch=args.prefill_batch,
+        max_seq=args.context + args.tokens,
+        temperature=args.temperature,
+        top_k=args.top_k,
+        eos_id=args.eos,
+        seed=args.seed,
     )
-    t0 = time.time()
-    tok = prompt[:, :1]
-    for pos in range(args.context):
-        tok_in = (
-            {"token": prompt[:, pos : pos + 1]}
-            if cfg.frontend != "audio_stub"
-            else {"frame_embeds": jnp.zeros((args.batch, 1, cfg.d_model), jnp.dtype(cfg.dtype))}
-        )
-        tok, caches = decode(params, tok_in, caches, jnp.int32(pos))
-    t_prefill = time.time() - t0
+    # mixed-length prompts exercise the batcher's pow2 length buckets
+    rng = np.random.default_rng(args.seed)
+    prompts = [
+        rng.integers(1, cfg.vocab_size, size=int(n)).tolist()
+        for n in rng.integers(1, args.context + 1, size=args.requests)
+    ]
 
-    out_tokens = []
-    t0 = time.time()
-    for i in range(args.tokens):
-        tok_in = (
-            {"token": tok}
-            if cfg.frontend != "audio_stub"
-            else {"frame_embeds": jnp.zeros((args.batch, 1, cfg.d_model), jnp.dtype(cfg.dtype))}
-        )
-        tok, caches = decode(params, tok_in, caches, jnp.int32(args.context + i))
-        out_tokens.append(tok)
-    t_decode = time.time() - t0
-    gen = jnp.concatenate(out_tokens, axis=1)
+    t0 = time.perf_counter()
+    results = engine.generate(prompts, max_new_tokens=args.tokens)
+    wall = time.perf_counter() - t0
+    gen = sum(len(r.tokens) for r in results)
     print(
         json.dumps(
             {
                 "arch": cfg.name,
-                "batch": args.batch,
-                "generated": gen[:, :8].tolist(),
-                "prefill_s": round(t_prefill, 3),
-                "decode_tokens_per_s": round(args.tokens * args.batch / t_decode, 1),
+                "requests": args.requests,
+                "generated": [r.tokens[:8] for r in results[:4]],
+                "finish_reasons": sorted({r.finish_reason for r in results}),
+                "wall_s": round(wall, 3),
+                "tokens_per_s": round(gen / wall, 1),
+                "samples_per_s": round(args.requests / wall, 2),
+                "slot_occupancy": round(engine.occupancy(), 3),
+                "stats": {k: round(v, 4) for k, v in engine.stats.items()},
             },
             indent=1,
         )

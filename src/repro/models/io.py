@@ -1,14 +1,25 @@
-"""Input specs: ShapeDtypeStruct stand-ins for every model input — the
-dry-run contract (weak-type-correct, shardable, no device allocation)."""
+"""Model I/O: input specs + weight-archive accounting.
+
+Input specs are ShapeDtypeStruct stand-ins for every model input — the
+dry-run contract (weak-type-correct, shardable, no device allocation).
+
+Weight archives are how serving placement sees model size: loading a
+model registers its parameter bytes as a replica in the broker's
+ReplicaCatalog (``register_weight_archive``), so the cost model charges
+real bytes-to-move when a decode shard is brokered to a site that does
+not hold the weights."""
 from __future__ import annotations
 
-from typing import Any
+from typing import TYPE_CHECKING, Any, Iterable
 
 import jax
 import jax.numpy as jnp
 
 from repro.models.config import ArchConfig, ShapeConfig
 from repro.models.lm import cache_specs
+
+if TYPE_CHECKING:  # pragma: no cover - typing only
+    from repro.broker.catalog import ReplicaCatalog
 
 
 def batch_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
@@ -44,6 +55,41 @@ def decode_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict[str, Any]:
         "caches": cache_specs(cfg, b, s),
         "position": jax.ShapeDtypeStruct((), jnp.int32),
     }
+
+
+# ---------------------------------------------------------------------------
+# weight archives (serving placement)
+# ---------------------------------------------------------------------------
+def params_nbytes(params: Any) -> int:
+    """Total bytes of a parameter tree — the weight-archive size the
+    ReplicaCatalog accounts against placement candidates."""
+    return int(
+        sum(x.size * jnp.dtype(x.dtype).itemsize for x in jax.tree.leaves(params))
+    )
+
+
+def weights_key(arch: str, *, smoke: bool = False) -> str:
+    """Catalog content key naming a model's weight archive."""
+    return f"weights:{arch}:smoke" if smoke else f"weights:{arch}"
+
+
+def register_weight_archive(
+    catalog: "ReplicaCatalog",
+    arch: str,
+    params: Any,
+    sites: Iterable[str],
+    *,
+    smoke: bool = False,
+    nbytes: int | None = None,
+) -> int:
+    """Register the weight archive as a replica at each site; returns the
+    archive size in bytes.  Idempotent per (archive, site) — the catalog
+    pins a content's size at first registration."""
+    n = int(nbytes) if nbytes is not None else params_nbytes(params)
+    key = weights_key(arch, smoke=smoke)
+    for site in sites:
+        catalog.register(key, site, n)
+    return n
 
 
 def concrete_batch(cfg: ArchConfig, shape: ShapeConfig, seed: int = 0) -> dict[str, Any]:

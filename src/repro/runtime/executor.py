@@ -62,9 +62,11 @@ class TaskSpec:
     # multi-tenant brokering: fair-share identity + within-user priority
     user: str = "anonymous"
     priority: int = 0
-    # content ids backing each job (fine-grained data binding), parallel to
-    # job indices; optional.
-    job_contents: list[int] | None = None
+    # contents backing each job, parallel to job indices; optional.  Keys
+    # are whatever the catalog uses: integer content ids (fine-grained
+    # data binding) or strings (e.g. a model's weight-archive key, so
+    # decode shards rank sites by weight locality).
+    job_contents: list[Any] | None = None
 
 
 @dataclass
@@ -558,6 +560,14 @@ class WorkloadRuntime:
                 job_index=job_index,
                 n_jobs=spec.n_jobs,
                 payload=payload,
+            )
+        if kind == "serve":
+            # lazy import: serving pulls in jax; the scheduling plane and
+            # every non-serving workload must not pay for it
+            from repro.serve.workload import execute_serve_payload
+
+            return execute_serve_payload(
+                payload, job_index=job_index, n_jobs=spec.n_jobs
             )
         raise SchedulingError(f"unknown payload kind {kind!r}")
 

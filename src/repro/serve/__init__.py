@@ -1,2 +1,25 @@
-"""Serving substrate."""
+"""Serving substrate: steps, sampling, the continuous-batching engine,
+and the orchestrator workload glue."""
 from repro.serve.step import make_decode_step, make_prefill_step  # noqa: F401
+from repro.serve.sampling import request_key, sample_tokens  # noqa: F401
+
+
+def __getattr__(name: str):
+    # engine/workload pull in jax + the orchestrator stack; load lazily so
+    # `import repro.serve` stays cheap for step-only users
+    if name in ("OfflineEngine", "SlotBatcher", "GenRequest", "GenResult"):
+        from repro.serve import engine
+
+        return getattr(engine, name)
+    if name in (
+        "EngineHub",
+        "HUB",
+        "serve_work",
+        "publish_weights",
+        "execute_serve_payload",
+        "collect_serve_results",
+    ):
+        from repro.serve import workload
+
+        return getattr(workload, name)
+    raise AttributeError(name)

@@ -1,0 +1,46 @@
+"""Seeded token sampling for the serving engine.
+
+Keys are derived per (request, cache position) — ``request_key`` — so a
+sequence's tokens are a pure function of (weights, prompt, seed): the same
+request sampled alone, batched with strangers, or replayed after a killed
+shard relocates produces byte-identical output.  That is the property the
+orchestrator's retry path (idempotent payloads) and the sim's determinism
+checks lean on.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def request_key(
+    base_key: jax.Array, request_id: jnp.ndarray, position: jnp.ndarray
+) -> jax.Array:
+    """Placement-independent PRNG key for the token at ``position`` of
+    request ``request_id``."""
+    return jax.random.fold_in(jax.random.fold_in(base_key, request_id), position)
+
+
+def sample_tokens(
+    logits: jnp.ndarray,
+    *,
+    rng: jax.Array | None = None,
+    temperature: float = 0.0,
+    top_k: int = 0,
+) -> jnp.ndarray:
+    """logits [..., V] → int32 token ids [...].
+
+    Greedy (argmax) when ``rng`` is None or ``temperature <= 0`` — both are
+    static Python values, so the jitted graph contains only the chosen
+    branch.  Otherwise temperature-scaled categorical sampling, optionally
+    restricted to the ``top_k`` highest logits.
+    """
+    if rng is None or temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits.astype(jnp.float32)
+    if top_k and top_k > 0:
+        kth = jax.lax.top_k(logits, top_k)[0][..., -1:]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(rng, logits / temperature, axis=-1).astype(
+        jnp.int32
+    )

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 from repro.models.config import ArchConfig
 from repro.models.lm import forward_decode, forward_prefill
 from repro.parallel.context import ParallelContext, activate
+from repro.serve.sampling import sample_tokens
 
 
 def make_prefill_step(
@@ -26,18 +27,43 @@ def make_prefill_step(
 
 
 def make_decode_step(
-    cfg: ArchConfig, *, mesh: Any = None, rules: Any = None, sample: bool = False
+    cfg: ArchConfig,
+    *,
+    mesh: Any = None,
+    rules: Any = None,
+    sample: bool = False,
+    temperature: float = 0.0,
+    top_k: int = 0,
 ) -> Callable[..., tuple[jnp.ndarray, Any]]:
-    """decode_step(params, batch, caches, position) → (token_or_logits,
-    new_caches).  Caches are donated by the jit wrapper in launch/serve."""
+    """decode_step(params, batch, caches, position, rng=None) →
+    (token_or_logits, new_caches).  Caches are donated by the jit wrapper
+    (launch/serve, OfflineEngine).
+
+    With ``sample=True`` the step emits token ids: greedy argmax by
+    default, or seeded temperature/top-k sampling when ``temperature > 0``
+    and a PRNG key is threaded through the trailing ``rng`` argument.
+    ``temperature``/``top_k`` are static (baked into the jitted graph);
+    the key is a runtime input, so one compiled step serves every seed.
+    """
     ctx = ParallelContext(mesh, rules) if mesh is not None else None
 
-    def decode_step(params: Any, batch: dict[str, Any], caches: Any, position: jnp.ndarray):
+    def decode_step(
+        params: Any,
+        batch: dict[str, Any],
+        caches: Any,
+        position: jnp.ndarray,
+        rng: Any = None,
+    ):
         cm = activate(ctx) if ctx is not None else contextlib.nullcontext()
         with cm:
             logits, new_caches = forward_decode(params, batch, caches, position, cfg)
             if sample:
-                next_tok = jnp.argmax(logits[:, -1, : cfg.vocab_size], axis=-1)
+                next_tok = sample_tokens(
+                    logits[:, -1, : cfg.vocab_size],
+                    rng=rng,
+                    temperature=temperature,
+                    top_k=top_k,
+                )
                 return next_tok[:, None], new_caches
             return logits, new_caches
 

@@ -1,0 +1,221 @@
+"""Serving as a first-class orchestrator workload.
+
+A ``{"kind": "serve"}`` payload names a model and a list of prompts; the
+Work's ``n_jobs`` shards the prompts round-robin across decode shards
+(job ``i`` of ``n`` serves prompts ``i, i+n, i+2n, …``).  Each shard is
+an idempotent pure function of (arch, prompts, seed): per-request
+sampling keys are derived from *global* prompt indices, so a shard that
+is killed mid-batch and relocated to another site regenerates exactly
+the same tokens — the property the runtime's retry/speculation machinery
+requires of every payload.
+
+Placement is data-aware: ``serve_work`` stamps the Work's resources with
+a ``content_affinity`` naming the model's weight archive
+(``models.io.weights_key``).  The Transformer agent expands that into
+per-job contents, the Submitter threads them onto the TaskSpec, and the
+PriorityBroker then ranks sites by bytes-to-move against the
+ReplicaCatalog — decode shards land where the weights already live, and
+``runtime.stats["bytes_moved"]`` stays 0 (tested).
+
+The :class:`EngineHub` is the process-wide model/engine cache with one
+engine — and therefore one request queue — per (model, serving shape).
+Runtime workers are threads; the engine's internal lock serializes device
+use per model while distinct models serve concurrently.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any, Iterable, Sequence
+
+from repro.common.exceptions import ValidationError
+from repro.core.work import Work
+
+
+class EngineHub:
+    """Process-wide cache: (arch, seed) → params, engine key → engine."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._models: dict[tuple, tuple[Any, Any, int]] = {}
+        self._engines: dict[tuple, Any] = {}
+
+    def load_model(
+        self, arch: str, *, smoke: bool = True, seed: int = 0
+    ) -> tuple[Any, Any, int]:
+        """(cfg, params, nbytes) — cached; jax imported lazily so the
+        scheduling plane never pays for it."""
+        key = (arch, bool(smoke), int(seed))
+        with self._lock:
+            got = self._models.get(key)
+            if got is None:
+                import jax
+
+                from repro.configs import get_config, smoke_config
+                from repro.models.io import params_nbytes
+                from repro.models.lm import init_params_and_specs
+
+                cfg = smoke_config(arch) if smoke else get_config(arch)
+                params, _ = init_params_and_specs(jax.random.PRNGKey(seed), cfg)
+                got = (cfg, params, params_nbytes(params))
+                self._models[key] = got
+        return got
+
+    def engine(
+        self,
+        arch: str,
+        *,
+        smoke: bool = True,
+        seed: int = 0,
+        n_slots: int = 4,
+        prefill_batch: int = 2,
+        max_seq: int = 64,
+        temperature: float = 0.0,
+        top_k: int = 0,
+        eos_id: int | None = None,
+    ) -> Any:
+        key = (
+            arch, bool(smoke), int(seed), int(n_slots), int(prefill_batch),
+            int(max_seq), float(temperature), int(top_k), eos_id,
+        )
+        with self._lock:
+            eng = self._engines.get(key)
+        if eng is not None:
+            return eng
+        cfg, params, _ = self.load_model(arch, smoke=smoke, seed=seed)
+        from repro.serve.engine import OfflineEngine
+
+        eng = OfflineEngine(
+            cfg, params, n_slots=n_slots, prefill_batch=prefill_batch,
+            max_seq=max_seq, temperature=temperature, top_k=top_k,
+            eos_id=eos_id, seed=seed,
+        )
+        with self._lock:
+            return self._engines.setdefault(key, eng)
+
+
+#: the hub runtime workers dispatch through (one per process, like the
+#: task registry in core.work)
+HUB = EngineHub()
+
+
+def publish_weights(
+    catalog: Any,
+    arch: str,
+    sites: Iterable[str],
+    *,
+    smoke: bool = True,
+    seed: int = 0,
+) -> int:
+    """Load a model and register its weight archive at ``sites``; returns
+    the archive bytes.  Call before submitting serve work so brokering
+    sees where the weights live."""
+    from repro.models.io import register_weight_archive
+
+    _, params, nbytes = HUB.load_model(arch, smoke=smoke, seed=seed)
+    return register_weight_archive(
+        catalog, arch, params, sites, smoke=smoke, nbytes=nbytes
+    )
+
+
+def serve_work(
+    arch: str,
+    prompts: Sequence[Sequence[int]],
+    *,
+    n_shards: int = 1,
+    max_new_tokens: int = 8,
+    name: str | None = None,
+    smoke: bool = True,
+    seed: int = 0,
+    temperature: float = 0.0,
+    top_k: int = 0,
+    eos_id: int | None = None,
+    n_slots: int = 4,
+    prefill_batch: int = 2,
+    max_seq: int = 64,
+    max_retries: int = 3,
+    site: str | None = None,
+    priority: int = 0,
+) -> Work:
+    """Build the Work that serves ``prompts`` on ``arch`` as ``n_shards``
+    decode shards, with weight-archive placement affinity."""
+    from repro.models.io import weights_key
+
+    payload = {
+        "kind": "serve",
+        "arch": arch,
+        "prompts": [[int(t) for t in p] for p in prompts],
+        "max_new_tokens": int(max_new_tokens),
+        "smoke": bool(smoke),
+        "seed": int(seed),
+        "temperature": float(temperature),
+        "top_k": int(top_k),
+        "eos_id": eos_id,
+        "n_slots": int(n_slots),
+        "prefill_batch": int(prefill_batch),
+        "max_seq": int(max_seq),
+    }
+    return Work(
+        name or f"serve_{arch.replace('.', 'p')}",
+        payload=payload,
+        n_jobs=int(n_shards),
+        max_retries=max_retries,
+        site=site,
+        priority=priority,
+        resources={"content_affinity": weights_key(arch, smoke=smoke)},
+        work_type="serve",
+    )
+
+
+def execute_serve_payload(
+    payload: dict[str, Any], *, job_index: int, n_jobs: int
+) -> dict[str, Any]:
+    """Run one decode shard (what ``runtime/executor`` dispatches)."""
+    prompts = payload["prompts"]
+    indices = list(range(job_index, len(prompts), max(1, n_jobs)))
+    if not indices:
+        return {"prompt_indices": [], "tokens": [], "finish_reasons": [],
+                "generated": 0}
+    engine = HUB.engine(
+        payload["arch"],
+        smoke=bool(payload.get("smoke", True)),
+        seed=int(payload.get("seed", 0)),
+        n_slots=int(payload.get("n_slots", 4)),
+        prefill_batch=int(payload.get("prefill_batch", 2)),
+        max_seq=int(payload.get("max_seq", 64)),
+        temperature=float(payload.get("temperature", 0.0)),
+        top_k=int(payload.get("top_k", 0)),
+        eos_id=payload.get("eos_id"),
+    )
+    results = engine.generate(
+        [prompts[i] for i in indices],
+        max_new_tokens=int(payload.get("max_new_tokens", 8)),
+        rids=indices,  # global ids: sampling invariant under resharding
+    )
+    return {
+        "prompt_indices": indices,
+        "tokens": [r.tokens for r in results],
+        "finish_reasons": [r.finish_reason for r in results],
+        "generated": sum(len(r.tokens) for r in results),
+    }
+
+
+def collect_serve_results(results: Any, n_prompts: int) -> list[list[int]]:
+    """Merge shard results (one dict, or the Finisher's folded
+    ``{"job_results": [...]}``) back into prompt order.  Raises if any
+    prompt is missing or served twice — the no-loss/no-duplication
+    contract the sim scenario asserts through faults."""
+    if results is None:
+        raise ValidationError("no serve results")
+    shards = results.get("job_results") if "job_results" in results else [results]
+    tokens: dict[int, list[int]] = {}
+    for shard in shards:
+        if not shard:
+            continue
+        for idx, toks in zip(shard["prompt_indices"], shard["tokens"]):
+            if idx in tokens:
+                raise ValidationError(f"prompt {idx} served twice")
+            tokens[idx] = list(toks)
+    missing = sorted(set(range(n_prompts)) - set(tokens))
+    if missing:
+        raise ValidationError(f"prompts never served: {missing}")
+    return [tokens[i] for i in range(n_prompts)]

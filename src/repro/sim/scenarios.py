@@ -187,7 +187,79 @@ def straggler_site_relocation(seed: int = 0) -> dict[str, Any]:
 
 
 # ---------------------------------------------------------------------------
-# 5. 2048-job soak under a random walk of faults
+# 5. serve decode shard straggles / dies mid-batch
+# ---------------------------------------------------------------------------
+def serve_decode_straggler(seed: int = 0) -> dict[str, Any]:
+    """A REAL serving workload — tiny-model continuous-batching decode
+    shards (``repro.serve``) — under targeted faults: every first attempt
+    on the preferred weight-resident site is killed (even shards) or
+    straggled (odd shards) mid-batch.  Killed shards must relocate to the
+    other weight site via the retry avoid-hint; every engine queue must
+    drain; and the merged results must hold every prompt exactly once
+    with its full token count, byte-identical to a fault-free in-process
+    run — per-request sampling is keyed by global prompt index, so
+    neither batching nor relocation can change a sequence's tokens."""
+    from repro.serve.workload import (
+        HUB,
+        collect_serve_results,
+        publish_weights,
+        serve_work,
+    )
+
+    arch = "smollm-360m"
+    with SimHarness(
+        seed=seed, sites={"serve0": 64, "serve1": 64}, job_runtime_s=0.01
+    ) as h:
+        publish_weights(h.runtime.broker.catalog, arch, ["serve0", "serve1"])
+        plan = h.plan
+        first_site: dict[int, str] = {}
+
+        def shard_faults(wl: str, job: int, attempt: int, site: str) -> str | None:
+            if attempt == 1:
+                first_site[job] = site
+                if job % 2 == 0:
+                    plan._note("worker_kill", job=job, site=site)
+                    return "kill"
+                plan._note("worker_straggle", job=job, site=site)
+                return "straggle"
+            return None
+
+        h.runtime.fault_hook = shard_faults
+        prompts = [
+            [(7 * i + j) % 96 + 1 for j in range(1 + i % 3)] for i in range(6)
+        ]
+        w = serve_work(arch, prompts, n_shards=6, max_new_tokens=3, max_retries=6)
+        wf = Workflow("serve_straggler")
+        wf.add_work(w)
+        rid = h.orch.submit_workflow(wf)
+        statuses = h.quiesce([rid])
+        assert statuses[rid] == "Finished", statuses
+        assert plan.injected.get("worker_kill", 0) > 0, "no shard was killed"
+        assert plan.injected.get("worker_straggle", 0) > 0, "no shard straggled"
+        assert h.runtime.stats["retried_jobs"] > 0, "kills never relocated"
+        task = next(
+            t for t in h.runtime.tasks.values() if t.spec.name == w.name
+        )
+        jobs = task.per_index()
+        assert all(j.state == "Finished" for j in jobs), [j.state for j in jobs]
+        for j in jobs:
+            if j.attempts > 1:  # killed → the retry must have relocated
+                assert j.site != first_site[j.index], (j.index, j.site)
+        # weights are resident at both sites, so even relocation is free
+        assert h.runtime.stats["bytes_moved"] == 0
+        # no sequence lost or duplicated, and relocation changed nothing:
+        # the merged shard outputs equal a fault-free in-process run
+        merged = {"job_results": [j.result for j in jobs]}
+        tokens = collect_serve_results(merged, len(prompts))
+        assert all(len(t) == 3 for t in tokens), tokens
+        direct = HUB.engine(arch).generate(prompts, max_new_tokens=3)
+        assert [r.tokens for r in direct] == tokens, "relocation changed tokens"
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+# ---------------------------------------------------------------------------
+# 6. 2048-job soak under a random walk of faults
 # ---------------------------------------------------------------------------
 def soak_2048_random_walk(seed: int = 0) -> dict[str, Any]:
     """Every boundary misbehaves at once, at low probability, across a
@@ -233,6 +305,7 @@ SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "bus_partition_during_cascade_abort": bus_partition_during_cascade_abort,
     "suspend_resume_storm_under_duplication": suspend_resume_storm_under_duplication,
     "straggler_site_relocation": straggler_site_relocation,
+    "serve_decode_straggler": serve_decode_straggler,
     "soak_2048_random_walk": soak_2048_random_walk,
 }
 
