@@ -119,6 +119,143 @@ def _simulate(
     return {"bytes_moved": bytes_moved, "makespan_s": now, "jobs": n_jobs}
 
 
+def _faulty_goodput(
+    policy: str, *, n_jobs: int = 256, arrival_rate: float = 64.0, seed: int = 2
+) -> dict[str, Any]:
+    """Goodput under a faulty site, event-driven in virtual time.
+
+    One oversized site ("bad", 96 slots — most-free placement loves it)
+    hangs every attempt for ``HANG_S`` before killing it; good sites fail
+    5% of attempts transiently.  ``naive`` is the seed executor's policy:
+    most-free placement, avoid only the LAST site, immediate retry, no
+    deadline — every job routes through the trap, and a transient failure
+    on a good site ping-pongs the retry straight back to it.
+    ``resilient`` drives the real primitives: ``job_deadline_s`` kills
+    hung attempts early (classified TIMEOUT), a ``BreakerBoard`` takes the
+    site out of rotation after 5 classified kills, the attempted-site set
+    prevents ping-pong, and per-class ``RetryPolicy`` backoff paces the
+    requeues.  The acceptance floor is >= 2x goodput (jobs/s).
+    """
+    from repro.resilience import (
+        SITE_SUSPECT,
+        TIMEOUT,
+        TRANSIENT_INFRA,
+        BreakerBoard,
+        BreakerConfig,
+        DEFAULT_POLICIES,
+    )
+    from repro.sim import VirtualClock
+
+    HANG_S = 8.0  # a bad-site attempt hangs this long before dying
+    DEADLINE_S = 1.5  # resilient per-attempt budget (naive has none)
+    TRANSIENT_P = 0.05
+    sites = {f"good{i}": 16 for i in range(4)}
+    sites["bad"] = 96
+
+    rng = random.Random(seed)
+    clock = VirtualClock().install()  # BreakerBoard windows follow sim time
+    try:
+        breakers = BreakerBoard(
+            BreakerConfig(failure_threshold=5, window_s=30.0, open_s=10.0,
+                          probe_limit=2, probe_successes=2)
+        )
+        free = dict(sites)
+        attempted: dict[int, set[str]] = {j: set() for j in range(n_jobs)}
+        last_site: dict[int, str] = {}
+        attempts: dict[int, int] = {j: 0 for j in range(n_jobs)}
+        ready: deque[int] = deque()
+        events: list[tuple[float, int, str, int, str | None, str | None]] = []
+        seq = 0
+        t = 0.0
+        for j in range(n_jobs):
+            t += rng.expovariate(arrival_rate)
+            heapq.heappush(events, (t, seq, "arrive", j, None, None))
+            seq += 1
+        now, finished = 0.0, 0
+
+        def place(job: int) -> bool:
+            nonlocal seq
+            if policy == "resilient":
+                allowed = [
+                    s for s in free
+                    if free[s] > 0 and s not in attempted[job]
+                    and breakers.allow(s)
+                ]
+                if not allowed:  # fallback-to-cheapest, never starve
+                    allowed = [s for s in free if free[s] > 0]
+            else:
+                allowed = [
+                    s for s in free
+                    if free[s] > 0 and s != last_site.get(job)
+                ]
+                if not allowed:
+                    allowed = [s for s in free if free[s] > 0]
+            if not allowed:
+                return False
+            site = max(allowed, key=lambda s: (free[s], s))
+            free[site] -= 1
+            last_site[job] = site
+            attempted[job].add(site)
+            attempts[job] += 1
+            if policy == "resilient":
+                breakers.note_placement(site)
+            if site == "bad":
+                if policy == "resilient":  # deadline kill, classified TIMEOUT
+                    heapq.heappush(
+                        events, (now + DEADLINE_S, seq, "fail", job, site, TIMEOUT)
+                    )
+                else:  # naive waits out the whole hang
+                    heapq.heappush(
+                        events, (now + HANG_S, seq, "fail", job, site, SITE_SUSPECT)
+                    )
+            elif rng.random() < TRANSIENT_P:
+                heapq.heappush(
+                    events,
+                    (now + BASE_RUNTIME_S, seq, "fail", job, site, TRANSIENT_INFRA),
+                )
+            else:
+                heapq.heappush(
+                    events, (now + BASE_RUNTIME_S, seq, "finish", job, site, None)
+                )
+            seq += 1
+            return True
+
+        while events:
+            tm, _, kind, job, site, err = heapq.heappop(events)
+            if tm > now:
+                clock.advance(tm - now)
+                now = tm
+            if kind == "arrive" or kind == "retry":
+                ready.append(job)
+            elif kind == "finish":
+                free[site] += 1
+                finished += 1
+                if policy == "resilient":
+                    breakers.record(site, failed=False)
+            else:  # fail
+                free[site] += 1
+                if policy == "resilient":
+                    breakers.record(site, failed=True, error_class=err)
+                    delay = DEFAULT_POLICIES[err].delay(
+                        attempts[job], key=(seed, job, err)
+                    )
+                    if delay > 0:
+                        heapq.heappush(
+                            events, (now + delay, seq, "retry", job, None, None)
+                        )
+                        seq += 1
+                    else:
+                        ready.append(job)
+                else:  # naive: immediate requeue
+                    ready.append(job)
+            while ready and place(ready[0]):
+                ready.popleft()
+        assert finished == n_jobs, f"lost jobs: {finished}/{n_jobs}"
+        return {"makespan_s": now, "jobs": n_jobs, "jobs_per_s": n_jobs / now}
+    finally:
+        clock.uninstall()
+
+
 def run() -> list[dict[str, Any]]:
     rows: list[dict[str, Any]] = [_placement_throughput()]
 
@@ -148,6 +285,26 @@ def run() -> list[dict[str, Any]]:
                 "bytes_saved_frac": round(saved, 3),
                 "makespan_ratio": round(d["makespan_s"] / g["makespan_s"], 3),
                 "meets_30pct_floor": saved >= 0.30,
+            },
+        }
+    )
+
+    t0 = time.perf_counter()
+    naive = _faulty_goodput("naive")
+    resilient = _faulty_goodput("resilient")
+    dt = time.perf_counter() - t0
+    ratio = resilient["jobs_per_s"] / naive["jobs_per_s"]
+    rows.append(
+        {
+            "name": "broker/faulty_goodput_256",
+            "us_per_call": dt / (2 * naive["jobs"]) * 1e6,
+            "derived": {
+                "naive_jobs_per_s": round(naive["jobs_per_s"], 1),
+                "resilient_jobs_per_s": round(resilient["jobs_per_s"], 1),
+                "naive_makespan_s": round(naive["makespan_s"], 2),
+                "resilient_makespan_s": round(resilient["makespan_s"], 2),
+                "goodput_ratio": round(ratio, 2),
+                "meets_2x_floor": ratio >= 2.0,
             },
         }
     )

@@ -166,6 +166,11 @@ class Submitter(BaseAgent):
             user=req.get("requester") or "anonymous",
             priority=priority,
             job_contents=meta.get("job_contents") or None,
+            job_deadline_s=(
+                float(tmpl["job_deadline_s"])
+                if tmpl.get("job_deadline_s")
+                else None
+            ),
         )
         # register output content ids in job order so the Receiver can
         # mark them available as individual jobs finish (one id-only join
@@ -244,6 +249,14 @@ class Poller(BaseAgent):
     #: the in-memory runtime restarted) and fails so the work can retry
     orphan_timeout_s = 300.0
 
+    def __init__(self, *a: Any, orphan_timeout_s: float | None = None, **kw: Any):
+        super().__init__(*a, **kw)
+        if orphan_timeout_s is not None:
+            self.orphan_timeout_s = float(orphan_timeout_s)
+        #: orphan-failed processings this replica has declared (surfaced
+        #: through Orchestrator.monitor_summary)
+        self.orphaned = 0
+
     def handle_events(self, events: Sequence[Event]) -> None:
         pids = [
             int(ev.payload["processing_id"])
@@ -314,6 +327,7 @@ class Poller(BaseAgent):
             # can resubmit the work.
             ref = float(row.get("submitted_at") or row.get("updated_at") or 0.0)
             if ref and utc_now_ts() - ref > self.orphan_timeout_s:
+                self.orphaned += 1
                 return (
                     [
                         lambda txn: txn.transition(
@@ -349,8 +363,27 @@ class Poller(BaseAgent):
             new_status = _RUNTIME_TO_PROCESSING[runtime_status]
             finished, failed = self._map_outputs(meta, st)
             transform_id = int(row["transform_id"])
+            quarantined_jobs = [
+                j for j in st["jobs"] if j.get("quarantined")
+            ]
 
             def finalize(txn: LifecycleTx) -> None:
+                # persist OPEN dead letters for poisoned jobs BEFORE the
+                # failure propagates: the Clerk's auto-retry decision must
+                # always see the quarantine, whichever of the lazy-poll or
+                # message paths notices the terminal workload first (the
+                # store dedups per workload/job, so both may run)
+                for j in quarantined_jobs:
+                    self.stores["dead_letters"].add(
+                        request_id=int(row["request_id"]),
+                        transform_id=transform_id,
+                        processing_id=processing_id,
+                        workload_id=workload_id,
+                        job_index=int(j["index"]),
+                        error=j.get("error"),
+                        error_class=j.get("error_class"),
+                        attempts=j.get("attempt_log") or [],
+                    )
                 # ONE closure so the contents flip and the events are gated
                 # on the processing transition actually applying — a
                 # concurrent cancel cascade must not leave a cancelled
@@ -480,6 +513,7 @@ class Receiver(BaseAgent):
         job_finished: dict[int, list[dict[str, Any]]] = {}
         terminal_pids: list[int] = []
         failed_pids: list[int] = []
+        quarantined: list[tuple[int, dict[str, Any]]] = []
         for msg in msgs:
             kind = msg.get("kind")
             workload_id = msg.get("workload_id", "")
@@ -496,6 +530,14 @@ class Receiver(BaseAgent):
                 self._out_ids.pop(pid, None)
             elif kind == "job_failed":
                 failed_pids.append(pid)
+            elif kind == "job_quarantined":
+                # poison payload confirmed on >= 2 distinct sites: persist
+                # the dead letter (with its per-site attempt history), and
+                # poll the processing like any failed job
+                failed_pids.append(pid)
+                quarantined.append((pid, msg))
+        if quarantined:
+            self._persist_dead_letters(quarantined)
         # one grouped metadata fetch for every uncached processing;
         # "output_content_ids absent" means the Submitter hasn't persisted
         # yet (leave uncached → messages requeue), while an empty list is
@@ -576,6 +618,32 @@ class Receiver(BaseAgent):
 
             self.kernel.apply(sweep)
         return bool(events)
+
+    def _persist_dead_letters(
+        self, quarantined: list[tuple[int, dict[str, Any]]]
+    ) -> None:
+        """Write quarantine rows (idempotent per workload/job in the store).
+        Failures here must not poison the sweep — the Poller's terminal
+        fallback still fails the processing either way."""
+        for pid, msg in quarantined:
+            try:
+                row = self.stores["processings"].get(pid)
+                self.stores["dead_letters"].add(
+                    request_id=int(row["request_id"]),
+                    transform_id=int(row["transform_id"]),
+                    processing_id=pid,
+                    workload_id=msg.get("workload_id"),
+                    job_index=int(msg.get("job_index", -1)),
+                    error=msg.get("error"),
+                    error_class=msg.get("error_class"),
+                    attempts=msg.get("attempts") or [],
+                )
+            except Exception:  # noqa: BLE001 - diagnosis loss, not data loss
+                logger.exception(
+                    "%s: failed to persist dead letter for processing %d",
+                    self.consumer_id,
+                    pid,
+                )
 
 
 class Trigger(BaseAgent):

@@ -274,8 +274,15 @@ class Clerk(BaseAgent):
 
     def _retry_failed(self, request_id: int, wf: Workflow) -> None:
         transforms = self.stores["transforms"]
+        quarantined = self.stores["dead_letters"].quarantined_transforms(
+            request_id
+        )
         for work in wf.works.values():
             if work.status != WorkStatus.FAILED:
+                continue
+            if work.transform_id in quarantined:
+                # poison payload in the dead-letter queue: retrying the same
+                # work cannot succeed — it waits for requeue/discard instead
                 continue
             if work.retries >= work.max_retries:
                 continue

@@ -148,6 +148,28 @@ class Client(abc.ABC):
     def expire(self, request_id: int) -> None:
         ...
 
+    # -- dead-letter queue ----------------------------------------------------
+    @abc.abstractmethod
+    def dead_letters(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 100,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        """Quarantined poison payloads: {"dead_letters": [...], "total": n,
+        "limit": l, "offset": o}.  Rows carry the per-site attempt history
+        that confirmed the DETERMINISTIC_PAYLOAD classification."""
+
+    @abc.abstractmethod
+    def deadletter_requeue(self, dead_letter_id: int) -> dict[str, Any]:
+        """Release a quarantined letter after fixing the payload; the failed
+        work gets a fresh retry budget through the lifecycle kernel."""
+
+    @abc.abstractmethod
+    def deadletter_discard(self, dead_letter_id: int) -> dict[str, Any]:
+        """Close a quarantined letter without resubmitting anything."""
+
     # -- code cache -----------------------------------------------------------
     @abc.abstractmethod
     def cache_put(self, data: bytes) -> str:

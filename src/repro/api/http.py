@@ -59,9 +59,29 @@ _STATUS_TO_EXC: dict[int, type[ReproError]] = {
 _RETRYABLE = (urllib.error.URLError, ConnectionError, TimeoutError)
 
 
+class _RetryableStatus(Exception):
+    """Internal: a 429/503 answer worth retrying (carries the decoded
+    typed error to raise once the retry budget runs out)."""
+
+    def __init__(
+        self, code: int, retry_after_s: float | None, error: ReproError
+    ):
+        super().__init__(str(error))
+        self.code = code
+        self.retry_after_s = retry_after_s
+        self.error = error
+
+
 class HttpTransport:
     """Thin urllib wrapper: one ``request()`` entry point for both API
-    versions, with typed error decoding and idempotent-GET retries."""
+    versions, with typed error decoding and idempotent-GET retries.
+
+    Backpressure-aware: 429/503 answers honour the server's ``Retry-After``
+    header (capped at ``retry_after_cap_s`` per attempt), and the whole
+    retry loop is bounded by a ``retry_window_s`` wall-clock deadline
+    measured through the swappable time provider — so the sim's virtual
+    clock can drive (and fast-forward) transport backoff deterministically.
+    """
 
     def __init__(
         self,
@@ -71,12 +91,16 @@ class HttpTransport:
         timeout_s: float = 30.0,
         retries: int = 2,
         backoff_s: float = 0.05,
+        retry_window_s: float = 30.0,
+        retry_after_cap_s: float = 5.0,
     ):
         self.url = url.rstrip("/")
         self.token = token
         self.timeout_s = float(timeout_s)
         self.retries = int(retries)
         self.backoff_s = float(backoff_s)
+        self.retry_window_s = float(retry_window_s)
+        self.retry_after_cap_s = float(retry_after_cap_s)
 
     def request(
         self,
@@ -89,26 +113,44 @@ class HttpTransport:
     ) -> dict[str, Any]:
         """Issue one call; GETs (or ``idempotent=True`` calls, e.g. keyed
         submissions) are retried with exponential backoff on transport
-        errors, other verbs fail fast on the first transient error."""
+        errors, other verbs fail fast on the first transient error.
+        429 answers are retried for any verb (the server rejected the call
+        before processing it), 503 only when idempotent; both honour
+        ``Retry-After``.  No retry sleeps past the ``retry_window_s``
+        deadline — the typed error surfaces instead."""
         if idempotent is None:
             idempotent = method == "GET"
         attempts = self.retries if idempotent else 0
         delay = self.backoff_s
-        for attempt in range(attempts + 1):
+        deadline = utils.utc_now_ts() + self.retry_window_s
+        attempt = 0
+        while True:
             try:
                 # NB: HTTP status errors surface as typed ReproErrors from
-                # _once (the server answered) and are never retried; only
-                # transport-level failures reach the except arm.
+                # _once (the server answered) and are never retried — except
+                # the explicit backpressure statuses below; only transport-
+                # level failures reach the _RETRYABLE arm.
                 return self._once(method, path, body, headers)
+            except _RetryableStatus as exc:
+                budget = self.retries if exc.code == 429 else attempts
+                wait = (
+                    delay
+                    if exc.retry_after_s is None
+                    else min(exc.retry_after_s, self.retry_after_cap_s)
+                )
+                if attempt >= budget or utils.utc_now_ts() + wait > deadline:
+                    raise exc.error from exc
+                utils.sleep(wait)
+                delay *= 2
             except _RETRYABLE as exc:
-                if attempt == attempts:
+                if attempt >= attempts or utils.utc_now_ts() + delay > deadline:
                     raise ReproError(
                         f"transport failure on {method} {path} after "
                         f"{attempt + 1} attempt(s): {exc}"
                     ) from exc
                 utils.sleep(delay)
                 delay *= 2
-        raise AssertionError("unreachable")
+            attempt += 1
 
     def _once(
         self,
@@ -128,7 +170,15 @@ class HttpTransport:
             with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
                 return json.loads(resp.read())
         except urllib.error.HTTPError as exc:
-            raise self._decode_error(method, path, exc) from exc
+            decoded = self._decode_error(method, path, exc)
+            if exc.code in (429, 503):
+                ra = exc.headers.get("Retry-After") if exc.headers else None
+                try:
+                    retry_after = float(ra) if ra is not None else None
+                except (TypeError, ValueError):
+                    retry_after = None
+                raise _RetryableStatus(exc.code, retry_after, decoded) from exc
+            raise decoded from exc
 
     @staticmethod
     def _decode_error(
@@ -322,6 +372,29 @@ class HttpClient(Client):
 
     def expire(self, request_id: int) -> None:
         self._command(request_id, "expire")
+
+    # -- dead-letter queue ----------------------------------------------------
+    def dead_letters(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 100,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        qs = f"limit={int(limit)}&offset={int(offset)}"
+        if status is not None:
+            qs += f"&status={status}"
+        return self.transport.request("GET", f"/v2/deadletter?{qs}")
+
+    def deadletter_requeue(self, dead_letter_id: int) -> dict[str, Any]:
+        return self.transport.request(
+            "POST", f"/v2/deadletter/{int(dead_letter_id)}/requeue", {}
+        )
+
+    def deadletter_discard(self, dead_letter_id: int) -> dict[str, Any]:
+        return self.transport.request(
+            "POST", f"/v2/deadletter/{int(dead_letter_id)}/discard", {}
+        )
 
     # -- code cache -----------------------------------------------------------
     def cache_put(self, data: bytes) -> str:

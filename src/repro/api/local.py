@@ -93,6 +93,22 @@ class LocalClient(Client):
     def expire(self, request_id: int) -> None:
         self.orch.expire_request(int(request_id))
 
+    # -- dead-letter queue ----------------------------------------------------
+    def dead_letters(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 100,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        return self.orch.dead_letters(status=status, limit=limit, offset=offset)
+
+    def deadletter_requeue(self, dead_letter_id: int) -> dict[str, Any]:
+        return self.orch.requeue_dead_letter(int(dead_letter_id))
+
+    def deadletter_discard(self, dead_letter_id: int) -> dict[str, Any]:
+        return self.orch.discard_dead_letter(int(dead_letter_id))
+
     # -- code cache -----------------------------------------------------------
     def cache_put(self, data: bytes) -> str:
         return GLOBAL_CODE_CACHE.put(data)

@@ -16,9 +16,11 @@ from typing import Any, Iterable
 from repro.broker.catalog import DEFAULT_BYTES, ContentKey, ReplicaCatalog
 from repro.broker.cost import CostModel, SiteHealth
 from repro.broker.policy import PriorityBroker, Throttler
+from repro.resilience import DETERMINISTIC_PAYLOAD, BreakerBoard
 
 __all__ = [
     "DEFAULT_BYTES",
+    "BreakerBoard",
     "ContentKey",
     "CostModel",
     "DataAwareBroker",
@@ -39,7 +41,8 @@ class DataAwareBroker:
     * ``rank_sites(free_by_site, content=, avoid=)`` — placement order;
     * ``account_placement(content, site)`` — charge (and remember) the
       transfer a placement implies; returns bytes moved;
-    * ``record_outcome(site, ...)`` — feed the health EWMAs.
+    * ``record_outcome(site, ...)`` — feed the health EWMAs and the
+      per-site circuit breakers.
     """
 
     def __init__(
@@ -49,11 +52,13 @@ class DataAwareBroker:
         health: SiteHealth | None = None,
         cost_model: CostModel | None = None,
         throttler: Throttler | None = None,
+        breakers: BreakerBoard | None = None,
     ):
         self.catalog = catalog or (cost_model.catalog if cost_model else ReplicaCatalog())
         self.health = health or (cost_model.health if cost_model else SiteHealth())
         self.cost_model = cost_model or CostModel(self.catalog, self.health)
         self.queue = PriorityBroker(throttler=throttler)
+        self.breakers = breakers if breakers is not None else BreakerBoard()
         self.bytes_moved = 0
         self._bytes_lock = threading.Lock()
 
@@ -76,7 +81,7 @@ class DataAwareBroker:
         free_by_site: Iterable[tuple[str, int]],
         *,
         content: ContentKey | None = None,
-        avoid: str | None = None,
+        avoid: str | set[str] | frozenset[str] | None = None,
     ) -> list[str]:
         return self.cost_model.rank(free_by_site, content=content, avoid=avoid)
 
@@ -91,15 +96,28 @@ class DataAwareBroker:
 
     # -- adaptive feedback ---------------------------------------------------
     def record_outcome(
-        self, site: str | None, *, failed: bool = False, straggler: bool = False
+        self,
+        site: str | None,
+        *,
+        failed: bool = False,
+        straggler: bool = False,
+        error_class: str | None = None,
     ) -> None:
-        if site:
-            self.health.record(site, failed=failed, straggler=straggler)
+        if not site:
+            return
+        # a deterministically broken payload indicts itself, not the site:
+        # neither the health EWMAs nor the breakers should punish (or be
+        # decayed by) outcomes the infrastructure had no part in.
+        if failed and error_class == DETERMINISTIC_PAYLOAD:
+            return
+        self.health.record(site, failed=failed, straggler=straggler)
+        self.breakers.record(site, failed=failed, error_class=error_class)
 
     def summary(self) -> dict[str, Any]:
         return {
             "catalog": self.catalog.summary(),
             "health": self.health.summary(),
+            "breakers": self.breakers.summary(),
             "queued": len(self.queue),
             "bytes_moved": self.bytes_moved,
             "throttle_rejections": (

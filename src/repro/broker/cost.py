@@ -97,15 +97,21 @@ class CostModel:
         free_slots: int,
         *,
         content: ContentKey | None = None,
-        avoid: str | None = None,
+        avoid: str | Iterable[str] | None = None,
     ) -> float:
+        """``avoid`` is a site name or a collection of them (the full
+        attempted-site set of a relocating retry).  Penalised sites sort
+        last rather than being excluded, so they remain the fallback once
+        every fresh candidate is exhausted."""
         s = self.w_queue / (max(0, free_slots) + 1)
         if content is not None:
             s += self.w_bytes * (self.catalog.bytes_to_move(content, site) / _GIB)
         s += self.w_fail * self.health.failure_rate(site)
         s += self.w_straggler * self.health.straggler_rate(site)
-        if avoid is not None and site == avoid:
-            s += self.avoid_penalty
+        if avoid:
+            avoided = (avoid,) if isinstance(avoid, str) else avoid
+            if site in avoided:
+                s += self.avoid_penalty
         return s
 
     def rank(
@@ -113,7 +119,7 @@ class CostModel:
         free_by_site: Iterable[tuple[str, int]],
         *,
         content: ContentKey | None = None,
-        avoid: str | None = None,
+        avoid: str | Iterable[str] | None = None,
     ) -> list[str]:
         """Candidate sites best-first (deterministic: score, then name)."""
         scored = [

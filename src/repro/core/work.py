@@ -89,6 +89,7 @@ class Work:
         site: str | None = None,
         resources: Mapping[str, Any] | None = None,
         work_type: str = "generic",
+        job_deadline_s: float | None = None,
     ):
         # ---- Template (static) ----
         self.name = name or f"work_{new_uid()}"
@@ -110,6 +111,9 @@ class Work:
         self.site = site
         self.resources = dict(resources or {})
         self.work_type = work_type
+        # per-job attempt wall-clock budget; the runtime monitor kills
+        # over-deadline attempts (classified TIMEOUT).  None = unlimited.
+        self.job_deadline_s = job_deadline_s
         # ---- Metadata (dynamic) ----
         self.status = WorkStatus.NEW
         self.results: dict[str, Any] = {}
@@ -153,6 +157,7 @@ class Work:
             "site": self.site,
             "resources": self.resources,
             "work_type": self.work_type,
+            "job_deadline_s": self.job_deadline_s,
         }
 
     def metadata_dict(self) -> dict[str, Any]:
@@ -183,6 +188,7 @@ class Work:
             site=t.get("site"),
             resources=t.get("resources"),
             work_type=t.get("work_type", "generic"),
+            job_deadline_s=t.get("job_deadline_s"),
         )
         m = d.get("metadata") or {}
         w.status = WorkStatus(m.get("status", "New"))

@@ -15,7 +15,7 @@ and the Data Carousel file-level staging (§4.1).
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 5
+SCHEMA_VERSION = 6
 
 _V1 = [
     """
@@ -208,6 +208,32 @@ _V5 = [
     "CREATE INDEX idx_outbox_status ON outbox(status, outbox_id)",
 ]
 
+_V6 = [
+    # Dead-letter queue: payloads whose failures were classified
+    # DETERMINISTIC_PAYLOAD on >= 2 distinct sites are quarantined here with
+    # their per-site attempt history instead of burning the retry budget.
+    # Operators inspect rows via GET /v2/deadletter and either requeue
+    # (after fixing the payload — grants a fresh budget through the
+    # lifecycle kernel) or discard them.
+    """
+    CREATE TABLE dead_letters (
+        dead_letter_id  INTEGER PRIMARY KEY AUTOINCREMENT,
+        request_id      INTEGER,
+        transform_id    INTEGER,
+        processing_id   INTEGER,
+        workload_id     TEXT,
+        job_index       INTEGER NOT NULL DEFAULT 0,
+        status          TEXT NOT NULL DEFAULT 'Quarantined',
+        error           TEXT,
+        error_class     TEXT,
+        attempts        TEXT,                 -- per-site attempt history (JSON)
+        created_at      REAL NOT NULL,
+        updated_at      REAL NOT NULL
+    )
+    """,
+    "CREATE INDEX idx_dead_letters_status ON dead_letters(status)",
+]
+
 # Ordered (version, statements) pairs — forward migrations only, applied in
 # sequence by Database.migrate().
 MIGRATIONS: list[tuple[int, list[str]]] = [
@@ -216,4 +242,5 @@ MIGRATIONS: list[tuple[int, list[str]]] = [
     (3, _V3),
     (4, _V4),
     (5, _V5),
+    (6, _V6),
 ]

@@ -57,6 +57,7 @@ def _row_to_dict(row: Any) -> dict[str, Any]:
         "payload",
         "content",
         "errors",
+        "attempts",
     ):
         if key in d and isinstance(d[key], str):
             try:
@@ -1179,6 +1180,112 @@ class OutboxStore(_BaseStore):
 
 
 # ---------------------------------------------------------------------------
+# Dead letters (quarantined poison payloads, schema v6)
+# ---------------------------------------------------------------------------
+class DeadLetterStore(_BaseStore):
+    """Quarantine for payloads that failed DETERMINISTIC_PAYLOAD on >= 2
+    distinct sites.  Rows carry the full per-site attempt history so the
+    operator can diagnose before deciding to requeue (after a fix) or
+    discard.  Lifecycle: Quarantined -> Requeued | Discarded."""
+
+    def add(
+        self,
+        *,
+        request_id: int | None = None,
+        transform_id: int | None = None,
+        processing_id: int | None = None,
+        workload_id: str | None = None,
+        job_index: int = 0,
+        error: str | None = None,
+        error_class: str | None = None,
+        attempts: Any = None,
+    ) -> int:
+        # idempotent on redelivered quarantine messages: one open row per
+        # (workload, job) — a second add returns the existing letter.
+        existing = self.db.query_one(
+            "SELECT dead_letter_id FROM dead_letters "
+            "WHERE workload_id=? AND job_index=? AND status='Quarantined'",
+            (workload_id, job_index),
+        )
+        if existing is not None:
+            return int(existing["dead_letter_id"])
+        now = utc_now_ts()
+        return self.db.insert(
+            "INSERT INTO dead_letters(request_id,transform_id,processing_id,"
+            "workload_id,job_index,status,error,error_class,attempts,"
+            "created_at,updated_at) VALUES (?,?,?,?,?,'Quarantined',?,?,?,?,?)",
+            (
+                request_id,
+                transform_id,
+                processing_id,
+                workload_id,
+                job_index,
+                error,
+                error_class,
+                json_dumps(attempts) if attempts is not None else None,
+                now,
+                now,
+            ),
+        )
+
+    def get(self, dead_letter_id: int) -> dict[str, Any]:
+        row = self.db.query_one(
+            "SELECT * FROM dead_letters WHERE dead_letter_id=?", (dead_letter_id,)
+        )
+        if row is None:
+            raise NotFoundError(f"dead letter {dead_letter_id} not found")
+        return _row_to_dict(row)
+
+    def list(
+        self, *, status: str | None = None, limit: int = 100, offset: int = 0
+    ) -> list[dict[str, Any]]:
+        if status is not None:
+            rows = self.db.query(
+                "SELECT * FROM dead_letters WHERE status=? "
+                "ORDER BY dead_letter_id LIMIT ? OFFSET ?",
+                (status, limit, offset),
+            )
+        else:
+            rows = self.db.query(
+                "SELECT * FROM dead_letters ORDER BY dead_letter_id "
+                "LIMIT ? OFFSET ?",
+                (limit, offset),
+            )
+        return [_row_to_dict(r) for r in rows]
+
+    def set_status(self, dead_letter_id: int, status: str) -> None:
+        _update_row(
+            self.db,
+            "dead_letters",
+            "dead_letter_id",
+            dead_letter_id,
+            {"status": status},
+        )
+
+    def quarantined_transforms(self, request_id: int) -> set[int]:
+        """Transforms with an OPEN letter — the Clerk must not auto-retry
+        these (the poison work waits for the operator, not a fresh run)."""
+        rows = self.db.query(
+            "SELECT DISTINCT transform_id FROM dead_letters "
+            "WHERE request_id=? AND status='Quarantined'",
+            (int(request_id),),
+        )
+        return {
+            int(r["transform_id"]) for r in rows
+            if r["transform_id"] is not None
+        }
+
+    def count(self, *, status: str | None = None) -> int:
+        if status is not None:
+            row = self.db.query_one(
+                "SELECT COUNT(*) AS n FROM dead_letters WHERE status=?", (status,)
+            )
+        else:
+            row = self.db.query_one("SELECT COUNT(*) AS n FROM dead_letters")
+        return int(row["n"]) if row else 0
+
+
+# ---------------------------------------------------------------------------
 # Health (agent heartbeats)
 # ---------------------------------------------------------------------------
 class HealthStore(_BaseStore):
@@ -1419,5 +1526,6 @@ def make_stores(db: Database) -> dict[str, Any]:
         "messages": MessageStore(db),
         "events": EventStore(db),
         "outbox": OutboxStore(db),
+        "dead_letters": DeadLetterStore(db),
         "health": HealthStore(db),
     }

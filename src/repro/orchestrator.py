@@ -34,6 +34,7 @@ from repro.common.exceptions import (
     NotFoundError,
     SimulatedCrash,
     ValidationError,
+    WorkflowError,
 )
 from repro.common.utils import sleep as provider_sleep
 from repro.common.utils import utc_now_ts
@@ -99,6 +100,7 @@ class Orchestrator:
         batch_size: int = 64,
         bus_kwargs: dict[str, Any] | None = None,
         switch_interval_s: float | None = 0.001,
+        orphan_timeout_s: float | None = None,
     ):
         self.db = db or Database(":memory:")
         self.stores = make_stores(self.db)
@@ -126,6 +128,12 @@ class Orchestrator:
                 poll_period_s=poll_period_s,
                 batch_size=batch_size,
                 replica=r,
+                # per-agent knobs ride only to the agents that define them
+                **(
+                    {"orphan_timeout_s": orphan_timeout_s}
+                    if agent_cls is Poller and orphan_timeout_s is not None
+                    else {}
+                ),
             )
             for agent_cls in _AGENT_TYPES
             for r in range(replicas)
@@ -386,6 +394,65 @@ class Orchestrator:
                 )
         return out
 
+    # -- dead-letter queue (quarantined poison payloads) ----------------------
+    def dead_letters(
+        self,
+        *,
+        status: str | None = None,
+        limit: int = 100,
+        offset: int = 0,
+    ) -> dict[str, Any]:
+        """Paginated dead-letter listing — ONE projection shared by both
+        client backends (LocalClient directly, HttpClient via
+        ``GET /v2/deadletter``)."""
+        store = self.stores["dead_letters"]
+        return {
+            "dead_letters": store.list(status=status, limit=limit, offset=offset),
+            "total": store.count(status=status),
+            "limit": int(limit),
+            "offset": int(offset),
+        }
+
+    def requeue_dead_letter(self, dead_letter_id: int) -> dict[str, Any]:
+        """Operator fixed the payload: release the letter and grant the
+        failed work a fresh retry budget through the lifecycle kernel."""
+        store = self.stores["dead_letters"]
+        row = store.get(int(dead_letter_id))  # NotFoundError -> 404
+        if row["status"] != "Quarantined":
+            raise WorkflowError(
+                f"dead letter {dead_letter_id} is {row['status']}, "
+                "not Quarantined"
+            )
+        store.set_status(int(dead_letter_id), "Requeued")
+        works_reset = 0
+        rid = row.get("request_id")
+        if rid is not None:
+            try:
+                works_reset = int(self.kernel.retry_request(int(rid)) or 0)
+            except WorkflowError:
+                # a sibling letter's requeue already reset this request (it
+                # is no longer FAILED/SUBFINISHED) — the letter itself is
+                # still released
+                works_reset = 0
+        return {
+            "dead_letter_id": int(dead_letter_id),
+            "request_id": rid,
+            "works_reset": works_reset,
+        }
+
+    def discard_dead_letter(self, dead_letter_id: int) -> dict[str, Any]:
+        """Operator gave up on the payload: close the letter without
+        touching the request."""
+        store = self.stores["dead_letters"]
+        row = store.get(int(dead_letter_id))  # NotFoundError -> 404
+        if row["status"] != "Quarantined":
+            raise WorkflowError(
+                f"dead letter {dead_letter_id} is {row['status']}, "
+                "not Quarantined"
+            )
+        store.set_status(int(dead_letter_id), "Discarded")
+        return {"dead_letter_id": int(dead_letter_id), "status": "Discarded"}
+
     def request_log(self, request_id: int) -> dict[str, Any]:
         """Per-transform audit entries for one request."""
         # existence check first so unknown ids 404 instead of answering []
@@ -426,6 +493,12 @@ class Orchestrator:
             "bus": coord.bus_report(),
             "runtime": dict(self.runtime.stats),
             "broker": self.broker.summary(),
+            "dead_letters": self.stores["dead_letters"].count(
+                status="Quarantined"
+            ),
+            "orphaned_processings": sum(
+                a.orphaned for a in self.agents if isinstance(a, Poller)
+            ),
             # FaT archive cache occupancy/evictions (LRU byte-capped)
             "code_cache": GLOBAL_CODE_CACHE.stats(),
             "agents": {

@@ -1,0 +1,289 @@
+"""Failure-domain resiliency primitives (ROADMAP item toward arXiv:2506.19578).
+
+The executor's original failure handling treated every exception identically:
+immediate re-queue, avoid only the last site, and a deterministically broken
+payload hot-loops through its entire retry budget in milliseconds.  This
+module provides the vocabulary and mechanisms for *classified* failure
+handling:
+
+* an error taxonomy (:data:`TRANSIENT_INFRA` / :data:`SITE_SUSPECT` /
+  :data:`DETERMINISTIC_PAYLOAD` / :data:`TIMEOUT`) plus
+  :func:`classify_error`;
+* :class:`RetryPolicy` — exponential backoff with *seeded* jitter so the
+  sim's virtual clock replays schedules deterministically;
+* :class:`BreakerBoard` — per-site circuit breakers
+  (closed -> open -> half-open -> closed) driven by classified site
+  failures, consulted by the broker before offering a site.
+
+Everything here depends only on ``repro.common`` so it can be imported from
+runtime, broker, and transport layers without cycles.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.common.utils import stable_hash, utc_now_ts
+
+# ---------------------------------------------------------------------------
+# Error taxonomy
+# ---------------------------------------------------------------------------
+TRANSIENT_INFRA = "transient_infra"
+SITE_SUSPECT = "site_suspect"
+DETERMINISTIC_PAYLOAD = "deterministic_payload"
+TIMEOUT = "timeout"
+
+ERROR_CLASSES = (TRANSIENT_INFRA, SITE_SUSPECT, DETERMINISTIC_PAYLOAD, TIMEOUT)
+
+#: classes whose failures indict the *site* (feed circuit breakers).
+TRIP_CLASSES = frozenset({SITE_SUSPECT, TIMEOUT})
+
+
+class JobDeadlineExceeded(RuntimeError):
+    """Raised/assigned when a job attempt overruns ``TaskSpec.job_deadline_s``."""
+
+
+# Error messages the chaos layer / drain path emit for site-level faults.
+_SITE_MARKERS = ("worker kill", "site drained", "node lost", "slot preempted")
+
+# Exception types that indicate the payload itself is broken: retrying the
+# same inputs on healthy infrastructure cannot succeed.
+_DETERMINISTIC_TYPES: tuple[type[BaseException], ...] = (
+    ValueError,
+    TypeError,
+    KeyError,
+    IndexError,
+    AttributeError,
+    ZeroDivisionError,
+    ArithmeticError,
+    AssertionError,
+    NotImplementedError,
+)
+
+
+def classify_error(exc: BaseException) -> str:
+    """Map an exception from a job attempt onto the error taxonomy."""
+    if isinstance(exc, (JobDeadlineExceeded, TimeoutError)):
+        return TIMEOUT
+    msg = str(exc).lower()
+    if isinstance(exc, RuntimeError) and any(m in msg for m in _SITE_MARKERS):
+        return SITE_SUSPECT
+    # Local import: repro.common.exceptions pulls nothing back from here,
+    # but keep the module importable even in stripped-down tooling contexts.
+    try:
+        from repro.common.exceptions import SchedulingError, ValidationError
+
+        if isinstance(exc, (ValidationError, SchedulingError)):
+            return DETERMINISTIC_PAYLOAD
+    except Exception:  # pragma: no cover - defensive
+        pass
+    if isinstance(exc, _DETERMINISTIC_TYPES):
+        return DETERMINISTIC_PAYLOAD
+    if isinstance(exc, (ConnectionError, OSError)):
+        return TRANSIENT_INFRA
+    return TRANSIENT_INFRA
+
+
+# ---------------------------------------------------------------------------
+# Retry backoff
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Exponential backoff with deterministic (seeded) jitter.
+
+    ``delay(attempt)`` for attempt numbers 1, 2, 3, ... yields
+    ``base_s * factor ** (attempt - 1)`` capped at ``max_s``, then scaled by
+    a jitter factor in ``[1 - jitter_frac, 1 + jitter_frac]`` derived from
+    ``stable_hash(key + (attempt,))`` — same key, same schedule, always.
+    """
+
+    base_s: float = 0.25
+    factor: float = 2.0
+    max_s: float = 30.0
+    jitter_frac: float = 0.25
+
+    def delay(self, attempt: int, *, key: tuple[Any, ...] = ()) -> float:
+        if self.base_s <= 0:
+            return 0.0
+        d = min(self.max_s, self.base_s * self.factor ** max(0, attempt - 1))
+        if self.jitter_frac > 0:
+            u = (stable_hash((*key, attempt)) % 10_000) / 10_000.0
+            d *= 1.0 + self.jitter_frac * (2.0 * u - 1.0)
+        return d
+
+
+#: Per-class defaults.  SITE_SUSPECT and DETERMINISTIC_PAYLOAD retry
+#: immediately (the fix is *relocation*, not waiting); TRANSIENT_INFRA and
+#: TIMEOUT back off to avoid hammering a struggling resource.
+DEFAULT_POLICIES: dict[str, RetryPolicy] = {
+    TRANSIENT_INFRA: RetryPolicy(base_s=0.1, factor=2.0, max_s=30.0, jitter_frac=0.25),
+    SITE_SUSPECT: RetryPolicy(base_s=0.0),
+    DETERMINISTIC_PAYLOAD: RetryPolicy(base_s=0.0),
+    TIMEOUT: RetryPolicy(base_s=0.5, factor=2.0, max_s=30.0, jitter_frac=0.25),
+}
+
+
+@dataclass
+class ResilienceConfig:
+    """Knobs for the executor's classified-failure handling."""
+
+    enabled: bool = True
+    #: distinct sites a DETERMINISTIC_PAYLOAD failure must reproduce on
+    #: before the job is quarantined to the dead-letter store.
+    quarantine_distinct_sites: int = 2
+    policies: dict[str, RetryPolicy] = field(
+        default_factory=lambda: dict(DEFAULT_POLICIES)
+    )
+
+    def policy(self, error_class: str | None) -> RetryPolicy:
+        return self.policies.get(
+            error_class or TRANSIENT_INFRA, DEFAULT_POLICIES[TRANSIENT_INFRA]
+        )
+
+
+# ---------------------------------------------------------------------------
+# Site circuit breakers
+# ---------------------------------------------------------------------------
+@dataclass
+class BreakerConfig:
+    enabled: bool = True
+    #: classified site failures within ``window_s`` that open the breaker.
+    failure_threshold: int = 5
+    window_s: float = 30.0
+    #: how long an open breaker rejects placements before probing.
+    open_s: float = 10.0
+    #: max concurrent probe placements while half-open.
+    probe_limit: int = 2
+    #: consecutive probe successes required to re-close.
+    probe_successes: int = 2
+
+
+class _Breaker:
+    __slots__ = (
+        "state",
+        "failures",
+        "opened_at",
+        "probe_inflight",
+        "probe_ok",
+        "opened_total",
+        "reopened_total",
+    )
+
+    def __init__(self) -> None:
+        self.state = "closed"
+        self.failures: list[float] = []  # timestamps of classified failures
+        self.opened_at = 0.0
+        self.probe_inflight = 0
+        self.probe_ok = 0
+        self.opened_total = 0
+        self.reopened_total = 0
+
+
+class BreakerBoard:
+    """Per-site circuit breakers.
+
+    Only failures classified as site-indicting (:data:`TRIP_CLASSES`) count
+    toward opening; payload bugs and generic transients never take a site
+    out of rotation.  Transitions::
+
+        closed --K classified failures in window--> open
+        open --open_s elapsed--> half_open (bounded probe placements)
+        half_open --probe_successes in a row--> closed
+        half_open --classified probe failure--> open (again)
+    """
+
+    def __init__(self, config: BreakerConfig | None = None):
+        self.config = config or BreakerConfig()
+        self._lock = threading.Lock()
+        self._sites: dict[str, _Breaker] = {}
+
+    def _get(self, site: str) -> _Breaker:
+        br = self._sites.get(site)
+        if br is None:
+            br = self._sites[site] = _Breaker()
+        return br
+
+    # -- placement gate ------------------------------------------------------
+    def allow(self, site: str) -> bool:
+        """May the broker offer ``site`` right now?"""
+        if not self.config.enabled:
+            return True
+        with self._lock:
+            br = self._sites.get(site)
+            if br is None or br.state == "closed":
+                return True
+            now = utc_now_ts()
+            if br.state == "open":
+                if now - br.opened_at >= self.config.open_s:
+                    br.state = "half_open"
+                    br.probe_inflight = 0
+                    br.probe_ok = 0
+                else:
+                    return False
+            # half-open: admit a bounded number of probes.
+            return br.probe_inflight < self.config.probe_limit
+
+    def note_placement(self, site: str) -> None:
+        """Record that a job was actually placed on ``site`` (probe tracking)."""
+        if not self.config.enabled:
+            return
+        with self._lock:
+            br = self._sites.get(site)
+            if br is not None and br.state == "half_open":
+                br.probe_inflight += 1
+
+    # -- outcome feedback ----------------------------------------------------
+    def record(
+        self, site: str, *, failed: bool = False, error_class: str | None = None
+    ) -> None:
+        if not self.config.enabled:
+            return
+        trippy = failed and error_class in TRIP_CLASSES
+        with self._lock:
+            br = self._get(site)
+            now = utc_now_ts()
+            if br.state == "closed":
+                if trippy:
+                    br.failures.append(now)
+                    cutoff = now - self.config.window_s
+                    br.failures = [t for t in br.failures if t >= cutoff]
+                    if len(br.failures) >= self.config.failure_threshold:
+                        br.state = "open"
+                        br.opened_at = now
+                        br.opened_total += 1
+                        br.failures = []
+            elif br.state == "half_open":
+                br.probe_inflight = max(0, br.probe_inflight - 1)
+                if trippy:
+                    br.state = "open"
+                    br.opened_at = now
+                    br.reopened_total += 1
+                    br.probe_ok = 0
+                elif not failed:
+                    br.probe_ok += 1
+                    if br.probe_ok >= self.config.probe_successes:
+                        br.state = "closed"
+                        br.failures = []
+                        br.probe_ok = 0
+                        br.probe_inflight = 0
+            # state == "open": outcomes from in-flight attempts are ignored;
+            # the time-based transition in allow() governs recovery.
+
+    # -- introspection -------------------------------------------------------
+    def state(self, site: str) -> str:
+        with self._lock:
+            br = self._sites.get(site)
+            return br.state if br is not None else "closed"
+
+    def summary(self) -> dict[str, dict[str, Any]]:
+        with self._lock:
+            return {
+                name: {
+                    "state": br.state,
+                    "window_failures": len(br.failures),
+                    "opened_total": br.opened_total,
+                    "reopened_total": br.reopened_total,
+                }
+                for name, br in sorted(self._sites.items())
+            }

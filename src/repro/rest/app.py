@@ -123,6 +123,14 @@ class RestApp:
         )
         # batched variant: ?names=a,b,c — one round trip per poll sweep
         r("GET", rf"/v2/request/{_id}/works", "read")(self._works_get)
+        # dead-letter queue (quarantined poison payloads)
+        r("GET", r"/v2/deadletter", "read")(self._deadletter_list)
+        r(
+            "POST",
+            r"/v2/deadletter/(?P<dead_letter_id>\d+)"
+            r"/(?P<command>requeue|discard)",
+            "submit",
+        )(self._deadletter_command)
 
     def route_table(self) -> list[dict[str, Any]]:
         """Stable description of the registered surface (method, pattern,
@@ -306,6 +314,31 @@ class RestApp:
         if command == "retry":
             reply["works_reset"] = int(out or 0)
         return reply
+
+    def _deadletter_list(
+        self, query: dict[str, list[str]], **kw: Any
+    ) -> dict[str, Any]:
+        def _qint(name: str, default: int, lo: int, hi: int) -> int:
+            raw = (query.get(name) or [str(default)])[0]
+            try:
+                return max(lo, min(hi, int(raw)))
+            except ValueError as exc:
+                raise ValidationError(
+                    f"query param {name!r} must be an integer: {raw!r}"
+                ) from exc
+
+        limit = _qint("limit", 100, 1, 1000)
+        offset = _qint("offset", 0, 0, 10**9)
+        status = (query.get("status") or [None])[0]
+        return self.orch.dead_letters(status=status, limit=limit, offset=offset)
+
+    def _deadletter_command(
+        self, dead_letter_id: str, command: str, **kw: Any
+    ) -> dict[str, Any]:
+        # 404 on unknown letters, 409 when the letter is not Quarantined
+        if command == "requeue":
+            return self.orch.requeue_dead_letter(int(dead_letter_id))
+        return self.orch.discard_dead_letter(int(dead_letter_id))
 
     def _work_get(
         self, request_id: str, work_name: str, **kw: Any

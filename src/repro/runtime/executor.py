@@ -29,6 +29,7 @@ references.
 """
 from __future__ import annotations
 
+import heapq
 import queue
 import random
 import threading
@@ -41,6 +42,15 @@ from repro.common.exceptions import SchedulingError
 from repro.common.utils import new_uid, utc_now_ts
 from repro.core.fat import encode_result, execute_function_payload
 from repro.core.work import get_task
+from repro.resilience import (
+    DETERMINISTIC_PAYLOAD,
+    SITE_SUSPECT,
+    TIMEOUT,
+    TRANSIENT_INFRA,
+    JobDeadlineExceeded,
+    ResilienceConfig,
+    classify_error,
+)
 
 JobState = str  # Held | Pending | Running | Finished | Failed | Cancelled
 
@@ -67,6 +77,10 @@ class TaskSpec:
     # data binding) or strings (e.g. a model's weight-archive key, so
     # decode shards rank sites by weight locality).
     job_contents: list[Any] | None = None
+    # wall-clock (virtual-clock in the sim) budget per job attempt; the
+    # monitor kills over-deadline attempts (classified TIMEOUT) instead of
+    # letting a hung payload hold a site slot forever.  None = unlimited.
+    job_deadline_s: float | None = None
 
 
 @dataclass
@@ -79,8 +93,16 @@ class JobInfo:
     finished_at: float | None = None
     result: Any = None
     error: str | None = None
+    error_class: str | None = None  # repro.resilience taxonomy
     speculated: bool = False
-    avoid_site: str | None = None  # retry relocation hint
+    avoid_site: str | None = None  # retry relocation hint (last failed site)
+    # full relocation memory: every site this job has failed on, so
+    # re-brokering cannot ping-pong between two bad sites.
+    attempted_sites: set[str] = field(default_factory=set)
+    # per-site attempt history: {attempt, site, error, error_class} — the
+    # diagnosis record shipped with a dead-letter quarantine.
+    attempt_log: list[dict[str, Any]] = field(default_factory=list)
+    quarantined: bool = False
 
 
 class Site:
@@ -169,6 +191,7 @@ class WorkloadRuntime:
         seed: int = 0,
         workers: int = 8,
         broker: DataAwareBroker | None = None,
+        resilience: ResilienceConfig | None = None,
     ):
         self.sites: dict[str, Site] = {}
         for name, slots in (sites or {"site0": 64}).items():
@@ -181,7 +204,9 @@ class WorkloadRuntime:
         self.speculative = speculative
         self.speculate_after_factor = speculate_after_factor
         self.job_runtime_s = job_runtime_s
+        self.seed = seed
         self.rng = random.Random(seed)
+        self.resilience = resilience if resilience is not None else ResilienceConfig()
         #: sleep used for payload-duration / straggler simulation.  The
         #: deterministic simulator replaces it with the virtual clock's
         #: sleep so stragglers cost virtual, not wall, time.
@@ -211,8 +236,15 @@ class WorkloadRuntime:
             "speculated_jobs": 0,
             "injected_failures": 0,
             "injected_stragglers": 0,
+            "quarantined_jobs": 0,
+            "deadline_kills": 0,
             "bytes_moved": 0,
         }
+        # delayed-retry queue: (due_ts, seq, task, job) min-heap.  Entries
+        # become visible to dispatch once utc_now_ts() passes due_ts, so the
+        # sim's virtual clock fast-forwards backoff deterministically.
+        self._delayed: list[tuple[float, int, _Task, JobInfo]] = []
+        self._delay_seq = 0
         # workers=0 is the deterministic (simulation/test) mode: no threads
         # at all — the caller drives execution with step()/monitor_tick().
         self._threads = [
@@ -283,6 +315,9 @@ class WorkloadRuntime:
                     "site": j.site,
                     "attempts": j.attempts,
                     "error": j.error,
+                    "error_class": j.error_class,
+                    "quarantined": j.quarantined,
+                    "attempt_log": list(j.attempt_log),
                 }
                 for j in task.per_index()
             ]
@@ -358,7 +393,12 @@ class WorkloadRuntime:
     def _broker_site(self, task: _Task, job: JobInfo) -> Site | None:
         """Data-aware brokering: explicit pin first, then sites in cost-model
         order (free slots, bytes-to-move vs the replica catalog, health
-        EWMAs, retry-avoid penalty).  Charges the implied transfer."""
+        EWMAs, retry-avoid penalty).  Charges the implied transfer.
+
+        Relocation memory: *all* previously attempted sites carry the avoid
+        penalty (they sort last, so they remain a fallback once no fresh
+        candidate has capacity).  Sites with an open circuit breaker are not
+        offered at all."""
         spec = task.spec
         content = self._job_content(spec, job)
         if spec.site:
@@ -371,12 +411,17 @@ class WorkloadRuntime:
         ranked = self.broker.rank_sites(
             [(s.name, s.free()) for s in candidates],
             content=content,
-            avoid=job.avoid_site,
+            avoid=job.attempted_sites or job.avoid_site,
         )
         by_name = {s.name: s for s in candidates}
+        breakers = getattr(self.broker, "breakers", None)
         for name in ranked:
+            if breakers is not None and not breakers.allow(name):
+                continue
             site = by_name[name]
             if site.try_acquire():
+                if breakers is not None:
+                    breakers.note_placement(name)
                 self._charge_move(content, site.name)
                 return site
         return None
@@ -398,11 +443,37 @@ class WorkloadRuntime:
             self._enqueue(task, job)
             self._wake.notify_all()
 
+    def _requeue_after(self, task: _Task, job: JobInfo, delay_s: float) -> None:
+        """Requeue with classified backoff.  Zero delay goes straight to the
+        fair-share queue; positive delays park on the virtual-clock heap."""
+        if delay_s <= 0:
+            self._requeue(task, job)
+            return
+        with self._lock:
+            self._delay_seq += 1
+            heapq.heappush(
+                self._delayed, (utc_now_ts() + delay_s, self._delay_seq, task, job)
+            )
+            self._wake.notify_all()
+
+    def _drain_delayed(self) -> None:
+        """Move due delayed-retry entries into the dispatch queue."""
+        now = utc_now_ts()
+        with self._lock:
+            moved = False
+            while self._delayed and self._delayed[0][0] <= now:
+                _, _, task, job = heapq.heappop(self._delayed)
+                self._enqueue(task, job)
+                moved = True
+            if moved:
+                self._wake.notify_all()
+
     def _dispatch_once(self) -> bool:
         """Pop + run ONE queued job synchronously.  Returns False when the
         queue is empty or nothing can be placed right now (no-capacity
         items are requeued).  The shared core of the threaded worker loop
         and the deterministic ``step()`` driver."""
+        self._drain_delayed()
         # pop takes an admission ticket for the job's user; every path
         # below must pair it with exactly one broker.done(user).
         item = self.broker.pop()
@@ -483,6 +554,13 @@ class WorkloadRuntime:
             if self.failure_rate and self.rng.random() < self.failure_rate:
                 self.stats["injected_failures"] += 1
                 raise RuntimeError("injected failure")
+            # per-job deadline: a straggling/hung attempt that already burned
+            # its budget in the sleeps above dies here instead of returning a
+            # result (the monitor sweep catches ones stuck mid-payload).
+            if spec.job_deadline_s and utc_now_ts() - t0 > spec.job_deadline_s:
+                raise JobDeadlineExceeded(
+                    f"job attempt exceeded deadline {spec.job_deadline_s}s"
+                )
             # actual payload --------------------------------------------------
             result = self._execute_payload(spec, job.index)
             with task.lock:
@@ -508,35 +586,8 @@ class WorkloadRuntime:
                 "job_finished",
                 {"job_index": job.index, "site": site.name},
             )
-        except Exception as exc:  # noqa: BLE001 - payload errors become retries
-            retry = False
-            lost_race = True
-            with task.lock:
-                if job.state == "Running":
-                    lost_race = False
-                    job.error = f"{type(exc).__name__}: {exc}"
-                    if job.attempts <= spec.max_job_retries and not task.cancelled:
-                        job.state = "Pending"
-                        job.avoid_site = job.site
-                        job.site = None
-                        retry = True
-                    else:
-                        job.state = "Failed"
-                        job.finished_at = utc_now_ts()
-            if lost_race:
-                pass  # a cancelled speculative copy; not a failure
-            elif retry:
-                self.broker.record_outcome(site.name, failed=True)
-                self.stats["retried_jobs"] += 1
-                self._requeue(task, job)
-            else:
-                self.broker.record_outcome(site.name, failed=True)
-                self.stats["failed_jobs"] += 1
-                self._emit(
-                    task.workload_id,
-                    "job_failed",
-                    {"job_index": job.index, "error": str(exc)},
-                )
+        except Exception as exc:  # noqa: BLE001 - classified by resilience layer
+            self._on_job_failure(task, job, site, exc)
         finally:
             site.release()
             self.broker.done(task.spec.user)  # give back the admission ticket
@@ -544,6 +595,104 @@ class WorkloadRuntime:
                 self._emit(
                     task.workload_id, "task_terminal", {"status": task.status()}
                 )
+
+    def _on_job_failure(
+        self, task: _Task, job: JobInfo, site: Site, exc: Exception
+    ) -> None:
+        """Classified failure handling (replaces one-size-fits-all retry).
+
+        TRANSIENT_INFRA / TIMEOUT back off exponentially before requeueing;
+        SITE_SUSPECT relocates immediately (full attempted-site memory);
+        DETERMINISTIC_PAYLOAD confirmed on ≥2 distinct sites is quarantined
+        to the dead-letter store instead of consuming the retry budget."""
+        spec = task.spec
+        cfg = self.resilience
+        err_class = classify_error(exc) if cfg.enabled else TRANSIENT_INFRA
+        retry = False
+        quarantine = False
+        lost_race = True
+        with task.lock:
+            if job.state == "Running":
+                lost_race = False
+                job.error = f"{type(exc).__name__}: {exc}"
+                job.error_class = err_class
+                if job.site:
+                    job.attempted_sites.add(job.site)
+                job.attempt_log.append(
+                    {
+                        "attempt": job.attempts,
+                        "site": job.site,
+                        "error": job.error,
+                        "error_class": err_class,
+                    }
+                )
+                if cfg.enabled and err_class == DETERMINISTIC_PAYLOAD:
+                    confirm = {
+                        e["site"]
+                        for e in job.attempt_log
+                        if e["error_class"] == DETERMINISTIC_PAYLOAD and e["site"]
+                    }
+                    needed = min(
+                        cfg.quarantine_distinct_sites, max(1, len(self.sites))
+                    )
+                    quarantine = len(confirm) >= needed
+                if (
+                    not quarantine
+                    and job.attempts <= spec.max_job_retries
+                    and not task.cancelled
+                ):
+                    job.state = "Pending"
+                    job.avoid_site = job.site
+                    job.site = None
+                    retry = True
+                else:
+                    job.state = "Failed"
+                    job.finished_at = utc_now_ts()
+                    job.quarantined = quarantine
+        if lost_race:
+            return  # a cancelled speculative copy; not a failure
+        self.broker.record_outcome(
+            site.name,
+            failed=True,
+            straggler=cfg.enabled and err_class == TIMEOUT,
+            error_class=err_class if cfg.enabled else None,
+        )
+        if isinstance(exc, JobDeadlineExceeded):
+            self.stats["deadline_kills"] += 1
+        if retry:
+            self.stats["retried_jobs"] += 1
+            delay = self._retry_delay(task, job, err_class) if cfg.enabled else 0.0
+            self._requeue_after(task, job, delay)
+        elif quarantine:
+            self.stats["failed_jobs"] += 1
+            self.stats["quarantined_jobs"] += 1
+            self._emit(
+                task.workload_id,
+                "job_quarantined",
+                {
+                    "job_index": job.index,
+                    "error": str(exc),
+                    "error_class": err_class,
+                    "attempts": list(job.attempt_log),
+                },
+            )
+        else:
+            self.stats["failed_jobs"] += 1
+            self._emit(
+                task.workload_id,
+                "job_failed",
+                {"job_index": job.index, "error": str(exc)},
+            )
+
+    def _retry_delay(self, task: _Task, job: JobInfo, err_class: str) -> float:
+        """Backoff for the *next* attempt.  Jitter is keyed on stable
+        identifiers (seed, task name, user, job index, class) — never the
+        workload uid, which is not seed-derived — so same-seed sim runs
+        replay the exact schedule."""
+        return self.resilience.policy(err_class).delay(
+            job.attempts,
+            key=(self.seed, task.spec.name, task.spec.user, job.index, err_class),
+        )
 
     def _execute_payload(self, spec: TaskSpec, job_index: int) -> Any:
         payload = spec.payload
@@ -600,34 +749,75 @@ class WorkloadRuntime:
                 self._wake.wait(timeout=0.05)
 
     def monitor_tick(self) -> None:
-        """One monitor sweep: fail jobs on drained sites (requeued for
-        relocation) and speculatively duplicate stragglers.  Called in a
-        loop by the monitor thread; called directly by deterministic
-        drivers (workers=0)."""
+        """One monitor sweep: release due delayed retries, fail jobs on
+        drained sites (requeued for relocation), kill over-deadline attempts
+        (classified TIMEOUT), and speculatively duplicate stragglers.
+        Called in a loop by the monitor thread; called directly by
+        deterministic drivers (workers=0)."""
+        self._drain_delayed()
         with self._lock:
             # terminal tasks can never need drain-failover or
             # speculation again — skip them instead of rescanning
             tasks = [t for t in self.tasks.values() if not t.terminal]
+        now = utc_now_ts()
         for task in tasks:
-            requeue: list[JobInfo] = []
+            deadline = task.spec.job_deadline_s
+            requeue: list[tuple[JobInfo, float]] = []
             with task.lock:
                 for job in task.all_jobs():
                     if job.state != "Running" or job.site is None:
                         continue
                     site = self.sites.get(job.site)
-                    if site is not None and site.drained:
+                    drained = site is not None and site.drained
+                    overdue = (
+                        bool(deadline)
+                        and job.started_at is not None
+                        and now - job.started_at > deadline
+                    )
+                    if not drained and not overdue:
+                        continue
+                    if drained:
+                        err_class = SITE_SUSPECT
                         job.error = "site drained"
-                        self.broker.record_outcome(job.site, failed=True)
-                        if job.attempts <= task.spec.max_job_retries:
-                            job.state = "Pending"
-                            job.avoid_site = job.site
-                            job.site = None
-                            requeue.append(job)
-                            self.stats["retried_jobs"] += 1
-                        else:
-                            job.state = "Failed"
-            for job in requeue:
-                self._requeue(task, job)
+                    else:
+                        err_class = TIMEOUT
+                        job.error = (
+                            f"JobDeadlineExceeded: job attempt exceeded "
+                            f"deadline {deadline}s"
+                        )
+                        self.stats["deadline_kills"] += 1
+                    job.error_class = err_class
+                    job.attempted_sites.add(job.site)
+                    job.attempt_log.append(
+                        {
+                            "attempt": job.attempts,
+                            "site": job.site,
+                            "error": job.error,
+                            "error_class": err_class,
+                        }
+                    )
+                    self.broker.record_outcome(
+                        job.site,
+                        failed=True,
+                        straggler=err_class == TIMEOUT,
+                        error_class=err_class if self.resilience.enabled else None,
+                    )
+                    if job.attempts <= task.spec.max_job_retries:
+                        job.state = "Pending"
+                        job.avoid_site = job.site
+                        job.site = None
+                        delay = (
+                            self._retry_delay(task, job, err_class)
+                            if self.resilience.enabled
+                            else 0.0
+                        )
+                        requeue.append((job, delay))
+                        self.stats["retried_jobs"] += 1
+                    else:
+                        job.state = "Failed"
+                        job.finished_at = now
+            for job, delay in requeue:
+                self._requeue_after(task, job, delay)
         # straggler mitigation: speculative duplicates
         median = self._median_duration()
         if self.speculative and median:

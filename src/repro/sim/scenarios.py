@@ -18,9 +18,11 @@ from __future__ import annotations
 
 from typing import Any, Callable
 
+from repro.broker import BreakerBoard, CostModel, DataAwareBroker
 from repro.common.exceptions import WorkflowError
-from repro.core.work import Work
+from repro.core.work import Work, register_task
 from repro.core.workflow import Workflow
+from repro.resilience import BreakerConfig
 from repro.sim.faults import FaultSpec
 from repro.sim.harness import SimHarness
 
@@ -300,6 +302,148 @@ def soak_2048_random_walk(seed: int = 0) -> dict[str, Any]:
         return _result(h, statuses)
 
 
+# ---------------------------------------------------------------------------
+# 7. poison payload quarantined to the dead-letter queue, then requeued
+# ---------------------------------------------------------------------------
+def poison_payload_quarantine(seed: int = 0) -> dict[str, Any]:
+    """Two jobs carry a deterministic payload bug (ValueError on specific
+    indices).  The resilience layer must confirm the failure on two
+    DISTINCT sites — exactly two attempts, no budget burned on hopeless
+    retries — then quarantine both jobs to the dead-letter store while the
+    good jobs finish (request → SubFinished).  After the operator "fixes"
+    the payload, ``requeue`` grants a fresh budget through the lifecycle
+    kernel and the request completes."""
+    poison = {1, 5}
+
+    def poison_task(**kw: Any) -> dict[str, Any]:
+        if kw["job_index"] in poison:
+            raise ValueError(f"poison payload at job {kw['job_index']}")
+        return {"ok": kw["job_index"]}
+
+    register_task("maybe_poison", poison_task)
+    with SimHarness(seed=seed, sites={"siteA": 16, "siteB": 16}) as h:
+        wf = Workflow("poison")
+        wf.add_work(Work("poison_w0", task="maybe_poison", n_jobs=8,
+                         max_retries=6))
+        rid = h.orch.submit_workflow(wf)
+        statuses = h.quiesce([rid])
+        # good jobs finished; the request is partial, not dead
+        assert statuses[rid] == "SubFinished", statuses
+        page = h.orch.dead_letters(status="Quarantined")
+        letters = page["dead_letters"]
+        assert {l["job_index"] for l in letters} == poison, letters
+        for letter in letters:
+            assert letter["error_class"] == "deterministic_payload", letter
+            attempts = letter["attempts"]
+            # confirmed on exactly 2 distinct sites — zero retries beyond that
+            assert len(attempts) == 2, attempts
+            assert len({a["site"] for a in attempts}) == 2, attempts
+        assert h.runtime.stats["quarantined_jobs"] == len(poison)
+        assert h.runtime.stats["retried_jobs"] == len(poison)  # 1 relocation each
+
+        # operator fixes the payload, then releases both letters; the first
+        # requeue resets the failed work, the sibling letter just re-opens
+        register_task("maybe_poison", lambda **kw: {"ok": kw["job_index"]})
+        out = [h.orch.requeue_dead_letter(int(l["dead_letter_id"]))
+               for l in letters]
+        assert sum(o["works_reset"] for o in out) == 1, out
+        statuses = h.quiesce([rid])
+        assert statuses[rid] == "Finished", statuses
+        assert h.orch.stores["dead_letters"].count(status="Quarantined") == 0
+        h.check_invariants()
+        return _result(h, statuses)
+
+
+# ---------------------------------------------------------------------------
+# 8. flapping site trips its circuit breaker, probes re-admit it
+# ---------------------------------------------------------------------------
+def flapping_site_breaker(seed: int = 0) -> dict[str, Any]:
+    """The biggest site kills a burst of attempts.  With the health weight
+    deliberately too small to steer placement away (the EWMA alone cannot
+    protect against a flap), the breaker must open after 3 classified
+    failures, drain traffic to the healthy sites, kill the tail of the
+    burst via bounded half-open probes, then re-close — after which jobs
+    finish on the flapped site again.  Goodput stays within budget of a
+    fault-free twin run."""
+    kill_burst = 5
+
+    def run(burst: int) -> tuple[dict[str, Any], "SimHarness", dict[int, str]]:
+        # fresh brokering state per run; w_fail too low for EWMA relocation,
+        # so only the breaker can protect the run from the flap
+        broker = DataAwareBroker(
+            cost_model=CostModel(w_fail=0.1, w_straggler=0.1),
+            breakers=BreakerBoard(BreakerConfig(
+                failure_threshold=3, window_s=60.0, open_s=0.5,
+                probe_limit=2, probe_successes=2,
+            )),
+        )
+        h = SimHarness(
+            seed=seed, sites={"flappy": 32, "good0": 16, "good1": 16},
+            job_runtime_s=0.01, runtime_kwargs={"broker": broker},
+        )
+        with h:
+            plan = h.plan
+            kills = [0]
+
+            def flap(wl: str, job: int, attempt: int, site: str) -> str | None:
+                if site == "flappy" and kills[0] < burst:
+                    kills[0] += 1
+                    plan._note("worker_kill", job=job, site=site)
+                    return "kill"
+                return None
+
+            h.runtime.fault_hook = flap
+            rid = h.orch.submit_workflow(_chain_workflow("flap", 4, 16))
+            statuses = h.quiesce([rid])
+            assert statuses[rid] == "Finished", statuses
+            if burst:
+                board = h.orch.broker.breakers
+                assert board.summary()["flappy"]["opened_total"] >= 1
+            # recovery phase: each quiesce gap elapses open_s, so the next
+            # placements half-open-probe flappy; the probes absorb any tail
+            # of the burst (each failed probe re-opens), then succeed →
+            # breaker re-closes → flappy takes real traffic again
+            rids = [rid]
+            for r in range(4):
+                rids.append(
+                    h.orch.submit_workflow(_chain_workflow(f"rehab{r}", 2, 16))
+                )
+                statuses = h.quiesce(rids)
+                flappy = h.orch.broker.breakers.summary().get("flappy") or {}
+                if kills[0] >= burst and flappy.get("state") == "closed":
+                    break
+            assert all(s == "Finished" for s in statuses.values()), statuses
+            if burst:
+                assert kills[0] == burst, f"burst not exhausted: {kills[0]}"
+            h.check_invariants()
+            return _result(h, statuses), h, statuses
+
+    res0, h0, _ = run(0)  # fault-free twin: goodput baseline
+    res, h, statuses = run(kill_burst)
+
+    board = h.orch.broker.breakers.summary()["flappy"]
+    assert board["state"] == "closed", board
+    assert board["opened_total"] >= 1, board
+    assert board["reopened_total"] >= 1, board  # a probe died mid-burst
+    # post-reclose traffic really landed (and finished) on the flapped site
+    rehab_finishes_on_flappy = sum(
+        1
+        for task in h.runtime.tasks.values()
+        if task.spec.name.startswith("rehab")
+        for j in task.per_index()
+        if j.state == "Finished" and j.site == "flappy"
+    )
+    assert rehab_finishes_on_flappy > 0, "flappy never re-admitted"
+    # no lost or duplicated jobs: every submitted job finished exactly once
+    assert h.runtime.stats["failed_jobs"] == 0
+    assert (
+        h.runtime.stats["finished_jobs"] == h.runtime.stats["submitted_jobs"]
+    ), h.runtime.stats
+    # goodput budget: the flap costs bounded extra ticks vs the twin
+    assert res["ticks"] <= 3 * res0["ticks"] + 80, (res["ticks"], res0["ticks"])
+    return res
+
+
 SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "replica_crash_mid_outbox_drain": replica_crash_mid_outbox_drain,
     "bus_partition_during_cascade_abort": bus_partition_during_cascade_abort,
@@ -307,12 +451,16 @@ SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "straggler_site_relocation": straggler_site_relocation,
     "serve_decode_straggler": serve_decode_straggler,
     "soak_2048_random_walk": soak_2048_random_walk,
+    "poison_payload_quarantine": poison_payload_quarantine,
+    "flapping_site_breaker": flapping_site_breaker,
 }
 
-#: the two cheapest scenarios — what CI's SIM_SMOKE step runs
+#: the cheap scenarios — what CI's SIM_SMOKE step runs
 SMOKE_SCENARIOS = (
     "bus_partition_during_cascade_abort",
     "straggler_site_relocation",
+    "poison_payload_quarantine",
+    "flapping_site_breaker",
 )
 
 

@@ -1,0 +1,363 @@
+"""Failure-domain resiliency layer: the error-taxonomy classifier, backoff
+schedules (virtual clock), circuit-breaker transitions, job deadlines, the
+dead-letter roundtrip on both client backends, transport backpressure
+(Retry-After), and determinism of the two resilience sim scenarios."""
+from __future__ import annotations
+
+import time
+
+import pytest
+
+from repro.api import HttpClient, HttpTransport, LocalClient
+from repro.api.http import _RetryableStatus
+from repro.common.exceptions import (
+    ReproError,
+    SchedulingError,
+    ValidationError,
+    WorkflowError,
+)
+from repro.core import Work, Workflow
+from repro.core.work import register_task
+from repro.orchestrator import Orchestrator
+from repro.resilience import (
+    DETERMINISTIC_PAYLOAD,
+    SITE_SUSPECT,
+    TIMEOUT,
+    TRANSIENT_INFRA,
+    BreakerBoard,
+    BreakerConfig,
+    JobDeadlineExceeded,
+    RetryPolicy,
+    classify_error,
+)
+from repro.runtime.executor import TaskSpec, WorkloadRuntime
+
+
+# ---------------------------------------------------------------------------
+# error taxonomy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    ("exc", "expected"),
+    [
+        (TimeoutError("slow"), TIMEOUT),
+        (JobDeadlineExceeded("over budget"), TIMEOUT),
+        (RuntimeError("injected worker kill"), SITE_SUSPECT),
+        (RuntimeError("site drained mid-run"), SITE_SUSPECT),
+        (RuntimeError("node lost"), SITE_SUSPECT),
+        (RuntimeError("boom"), TRANSIENT_INFRA),
+        (ConnectionError("refused"), TRANSIENT_INFRA),
+        (OSError("disk hiccup"), TRANSIENT_INFRA),
+        (ValueError("bad payload"), DETERMINISTIC_PAYLOAD),
+        (KeyError("missing"), DETERMINISTIC_PAYLOAD),
+        (ZeroDivisionError(), DETERMINISTIC_PAYLOAD),
+        (AssertionError("invariant"), DETERMINISTIC_PAYLOAD),
+        (ValidationError("bad spec"), DETERMINISTIC_PAYLOAD),
+        (SchedulingError("impossible placement"), DETERMINISTIC_PAYLOAD),
+    ],
+)
+def test_classify_error(exc, expected):
+    assert classify_error(exc) == expected
+
+
+# ---------------------------------------------------------------------------
+# retry backoff
+# ---------------------------------------------------------------------------
+def test_backoff_schedule_exponential_and_capped():
+    p = RetryPolicy(base_s=1.0, factor=2.0, max_s=8.0, jitter_frac=0.0)
+    assert [p.delay(a) for a in (1, 2, 3, 4, 5)] == [1.0, 2.0, 4.0, 8.0, 8.0]
+
+
+def test_backoff_jitter_is_deterministic_and_bounded():
+    p = RetryPolicy(base_s=1.0, factor=2.0, max_s=30.0, jitter_frac=0.25)
+    key = (7, "wf", "alice", 3, TRANSIENT_INFRA)
+    d = p.delay(2, key=key)
+    assert d == p.delay(2, key=key)  # same key, same schedule, always
+    assert 2.0 * 0.75 <= d <= 2.0 * 1.25
+    # different keys de-synchronize (no thundering herd)
+    others = {p.delay(2, key=(seed, "wf", "alice", 3, TRANSIENT_INFRA))
+              for seed in range(8)}
+    assert len(others) > 1
+
+
+def test_backoff_zero_base_means_immediate():
+    assert RetryPolicy(base_s=0.0).delay(5) == 0.0
+
+
+def test_retry_waits_out_backoff_on_virtual_clock(virtual_clock):
+    """A TRANSIENT_INFRA failure is parked on the delayed-retry queue: the
+    retry is NOT dispatchable until virtual time passes the backoff."""
+    rt = WorkloadRuntime(sites={"a": 4}, workers=0)
+    rt.sleep_fn = virtual_clock.sleep
+    seen = []
+
+    def flaky(**kw):
+        seen.append(kw["job_index"])
+        if len(seen) == 1:
+            raise ConnectionError("transient blip")
+        return {}
+
+    register_task("res_flaky", flaky)
+    wl = rt.submit(
+        TaskSpec(payload={"kind": "registered", "name": "res_flaky"},
+                 n_jobs=1, max_job_retries=3)
+    )
+    assert rt.step() == 1  # first attempt fails, retry parked with backoff
+    assert rt.step() == 0  # not due yet: nothing dispatchable
+    virtual_clock.advance(1.0)  # > max jittered first delay (0.1 * 1.25)
+    assert rt.step() == 1
+    assert rt.status(wl)["status"] == "Finished"
+    assert rt.stats["retried_jobs"] == 1
+    rt.stop()
+
+
+def test_job_deadline_kills_classify_timeout(virtual_clock):
+    """Attempts that overrun TaskSpec.job_deadline_s die classified TIMEOUT
+    and burn the retry budget with backoff instead of looping forever."""
+    rt = WorkloadRuntime(sites={"a": 2, "b": 2}, workers=0, job_runtime_s=5.0)
+    rt.sleep_fn = virtual_clock.sleep
+    wl = rt.submit(
+        TaskSpec(payload={"kind": "noop"}, n_jobs=2, max_job_retries=1,
+                 job_deadline_s=1.0)
+    )
+    for _ in range(50):
+        rt.step()
+        rt.monitor_tick()
+        if rt.status(wl)["status"] == "Failed":
+            break
+        virtual_clock.advance(1.0)
+    st = rt.status(wl)
+    assert st["status"] == "Failed"
+    assert all(j["error_class"] == TIMEOUT for j in st["jobs"])
+    assert rt.stats["deadline_kills"] >= 2
+    rt.stop()
+
+
+# ---------------------------------------------------------------------------
+# circuit breakers
+# ---------------------------------------------------------------------------
+def _board(**over):
+    cfg = dict(failure_threshold=3, window_s=60.0, open_s=10.0,
+               probe_limit=1, probe_successes=2)
+    cfg.update(over)
+    return BreakerBoard(BreakerConfig(**cfg))
+
+
+def test_breaker_full_cycle_with_probe_failure(virtual_clock):
+    board = _board()
+    # closed: failures below threshold keep the site in rotation
+    board.record("s", failed=True, error_class=SITE_SUSPECT)
+    board.record("s", failed=True, error_class=TIMEOUT)
+    assert board.allow("s") and board.state("s") == "closed"
+    # threshold-th classified failure opens
+    board.record("s", failed=True, error_class=SITE_SUSPECT)
+    assert board.state("s") == "open"
+    assert not board.allow("s")
+    # open_s elapsed -> half-open, bounded probes
+    virtual_clock.advance(10.5)
+    assert board.allow("s")
+    board.note_placement("s")
+    assert not board.allow("s")  # probe_limit=1 exhausted
+    # failed probe re-opens
+    board.record("s", failed=True, error_class=SITE_SUSPECT)
+    assert board.state("s") == "open"
+    assert board.summary()["s"]["reopened_total"] == 1
+    # next window: two probe successes re-close
+    virtual_clock.advance(10.5)
+    for _ in range(2):
+        assert board.allow("s")
+        board.note_placement("s")
+        board.record("s", failed=False)
+    assert board.state("s") == "closed"
+    assert board.allow("s")
+    assert board.summary()["s"]["opened_total"] == 1
+
+
+def test_breaker_ignores_non_site_classes():
+    board = _board(failure_threshold=2)
+    for err in (TRANSIENT_INFRA, DETERMINISTIC_PAYLOAD, None):
+        for _ in range(5):
+            board.record("s", failed=True, error_class=err)
+    assert board.state("s") == "closed"  # only TRIP_CLASSES indict the site
+
+
+def test_breaker_window_prunes_stale_failures(virtual_clock):
+    board = _board(failure_threshold=3, window_s=5.0)
+    board.record("s", failed=True, error_class=SITE_SUSPECT)
+    board.record("s", failed=True, error_class=SITE_SUSPECT)
+    virtual_clock.advance(6.0)  # both fall out of the window
+    board.record("s", failed=True, error_class=SITE_SUSPECT)
+    assert board.state("s") == "closed"
+
+
+# ---------------------------------------------------------------------------
+# dead-letter queue roundtrip (both client backends)
+# ---------------------------------------------------------------------------
+@pytest.fixture(params=["local", "http"])
+def dl_client(request):
+    """Quarantine needs ≥2 sites to confirm a deterministic failure."""
+    from repro.rest import RestApp, RestServer
+
+    orch = Orchestrator(
+        runtime=WorkloadRuntime(sites={"a": 8, "b": 8}),
+        poll_period_s=0.03,
+    )
+    orch.start()
+    if request.param == "local":
+        yield LocalClient(orch)
+    else:
+        srv = RestServer(RestApp(orch)).start()
+        cli = HttpClient(srv.url, timeout_s=10.0)
+        cli.register("dlops", ["users"])
+        cli.login("dlops")
+        yield cli
+        srv.stop()
+    orch.stop()
+
+
+def _poison_letters(client, task_name, n_poison=1):
+    register_task(
+        task_name,
+        lambda **kw: (_ for _ in ()).throw(ValueError("poison payload")),
+    )
+    wf = Workflow(f"wf_{task_name}")
+    wf.add_work(Work(f"{task_name}_w", task=task_name, n_jobs=n_poison,
+                     max_retries=6))
+    rid = client.submit(wf)
+    assert client.wait(rid, timeout=30) == "Failed"
+    deadline = time.time() + 10
+    while time.time() < deadline:  # Receiver persists letters on its sweep
+        page = client.dead_letters(status="Quarantined")
+        if page["total"] >= n_poison:
+            return rid, page["dead_letters"]
+        time.sleep(0.05)
+    raise AssertionError(f"dead letters never appeared: {client.monitor()}")
+
+
+def test_deadletter_requeue_roundtrip(dl_client):
+    rid, letters = _poison_letters(dl_client, "dl_poison")
+    letter = letters[0]
+    assert letter["error_class"] == DETERMINISTIC_PAYLOAD
+    assert letter["request_id"] == rid
+    # confirmed on two distinct sites, then quarantined — no further burn
+    assert len({a["site"] for a in letter["attempts"]}) == 2
+    assert len(letter["attempts"]) == 2
+    # operator fixes the payload, then releases the letter
+    register_task("dl_poison", lambda **kw: {"fixed": True})
+    out = dl_client.deadletter_requeue(letter["dead_letter_id"])
+    assert out["works_reset"] == 1
+    assert dl_client.wait(rid, timeout=30) == "Finished"
+    assert dl_client.dead_letters(status="Quarantined")["total"] == 0
+    row = next(
+        l for l in dl_client.dead_letters()["dead_letters"]
+        if l["dead_letter_id"] == letter["dead_letter_id"]
+    )
+    assert row["status"] == "Requeued"
+
+
+def test_deadletter_discard_closes_letter(dl_client):
+    _, letters = _poison_letters(dl_client, "dl_poison2")
+    lid = letters[0]["dead_letter_id"]
+    out = dl_client.deadletter_discard(lid)
+    assert out["status"] == "Discarded"
+    assert dl_client.dead_letters(status="Quarantined")["total"] == 0
+    # a closed letter cannot be requeued
+    with pytest.raises((WorkflowError, ReproError)):
+        dl_client.deadletter_requeue(lid)
+
+
+def test_monitor_summary_reports_resilience_state(dl_client):
+    s = dl_client.monitor()
+    assert s["dead_letters"] == 0
+    assert s["orphaned_processings"] == 0
+    assert isinstance(s["broker"]["breakers"], dict)
+
+
+def test_orchestrator_orphan_timeout_knob():
+    from repro.agents.carrier import Poller
+
+    orch = Orchestrator(orphan_timeout_s=123.0)
+    pollers = [a for a in orch.agents if isinstance(a, Poller)]
+    assert pollers and all(p.orphan_timeout_s == 123.0 for p in pollers)
+    assert all(p.orphaned == 0 for p in pollers)
+
+
+# ---------------------------------------------------------------------------
+# transport backpressure: Retry-After + retry wall-clock window
+# ---------------------------------------------------------------------------
+def _throttling_transport(answers, **kw):
+    """A transport whose _once pops scripted outcomes (exception or dict)."""
+    tr = HttpTransport("http://resilience.test", **kw)
+    script = list(answers)
+
+    def fake_once(method, path, body, headers):
+        out = script.pop(0)
+        if isinstance(out, Exception):
+            raise out
+        return out
+
+    tr._once = fake_once
+    return tr
+
+
+def test_transport_honors_retry_after(virtual_clock):
+    throttle = _RetryableStatus(429, 0.25, ReproError("throttled"))
+    tr = _throttling_transport(
+        [throttle, throttle, {"ok": True}],
+        retries=3, backoff_s=10.0, retry_window_s=60.0,
+    )
+    t0 = virtual_clock.now()
+    assert tr.request("GET", "/x") == {"ok": True}
+    # slept the server's Retry-After (2 × 0.25s), not the 10s backoff
+    assert virtual_clock.now() - t0 == pytest.approx(0.5)
+
+
+def test_transport_caps_retry_after(virtual_clock):
+    tr = _throttling_transport(
+        [_RetryableStatus(503, 600.0, ReproError("maintenance")), {"ok": 1}],
+        retries=2, backoff_s=0.05, retry_window_s=60.0, retry_after_cap_s=2.0,
+    )
+    t0 = virtual_clock.now()
+    assert tr.request("GET", "/x") == {"ok": 1}
+    assert virtual_clock.now() - t0 == pytest.approx(2.0)  # capped, not 600
+
+
+def test_transport_retries_429_even_when_not_idempotent(virtual_clock):
+    tr = _throttling_transport(
+        [_RetryableStatus(429, 0.1, ReproError("throttled")), {"ok": 1}],
+        retries=2, backoff_s=0.05, retry_window_s=60.0,
+    )
+    assert tr.request("POST", "/x", {"a": 1}) == {"ok": 1}
+    # ... but 503 on a non-idempotent verb fails fast (may have side effects)
+    tr2 = _throttling_transport(
+        [_RetryableStatus(503, 0.1, ReproError("unavailable"))],
+        retries=2, backoff_s=0.05, retry_window_s=60.0,
+    )
+    with pytest.raises(ReproError, match="unavailable"):
+        tr2.request("POST", "/x", {"a": 1})
+
+
+def test_transport_retry_window_deadline(virtual_clock):
+    """No retry sleeps past retry_window_s — the typed error surfaces."""
+    throttle = _RetryableStatus(429, 1.5, ReproError("throttled"))
+    tr = _throttling_transport(
+        [throttle] * 10, retries=10, backoff_s=1.0, retry_window_s=2.0,
+    )
+    t0 = virtual_clock.now()
+    with pytest.raises(ReproError, match="throttled"):
+        tr.request("GET", "/x")
+    assert virtual_clock.now() - t0 <= 2.0
+
+
+# ---------------------------------------------------------------------------
+# sim scenarios: digest-stable resilience drills
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize(
+    "name", ["poison_payload_quarantine", "flapping_site_breaker"]
+)
+def test_resilience_scenarios_are_deterministic(name):
+    from repro.sim.scenarios import run_scenario
+
+    first = run_scenario(name, seed=3)
+    second = run_scenario(name, seed=3)
+    assert first["digest"] == second["digest"]
+    assert first["ticks"] == second["ticks"]
