@@ -58,6 +58,85 @@ def _overhead_scenario(n_works: int, n_jobs: int, *, repeats: int = 2) -> dict[s
     }
 
 
+def _scaleout_run(
+    n_requests: int, n_works: int, n_jobs: int, *, replicas: int, n_shards: int
+) -> float:
+    """One fresh-orchestrator run of ``n_requests`` independent requests
+    (round-robin across shards when sharded) totalling
+    ``n_requests × n_works × n_jobs`` noop jobs; returns wall seconds
+    from first submit to last request terminal."""
+    orch = Orchestrator(
+        poll_period_s=0.02, replicas=replicas, n_shards=n_shards
+    )
+    with orch:
+        register_task("bench_noop4", lambda **kw: {})
+        wfs = []
+        for r in range(n_requests):
+            wf = Workflow(f"scale{r}")
+            for i in range(n_works):
+                wf.add_work(Work(f"w{i}", task="bench_noop4", n_jobs=n_jobs))
+            wfs.append(wf)
+        t0 = time.perf_counter()
+        rids = [orch.submit_workflow(wf) for wf in wfs]
+        for rid in rids:
+            orch.wait_request(rid, timeout=600)
+        return time.perf_counter() - t0
+
+
+def _scaleout_scenario(
+    n_requests: int,
+    n_works: int,
+    n_jobs: int,
+    *,
+    repeats: int = 2,
+    budget_s: float | None = None,
+) -> list[dict[str, Any]]:
+    """Sharded scale-out A/B on the SAME job shape: ``replicas=4,
+    n_shards=4`` (each replica sweeps one disjoint shard) vs the
+    single-replica/single-shard baseline.  ``budget_s`` (smoke/CI) gates
+    the sharded run's wall clock so a routing regression that stalls a
+    shard fails the build instead of just looking slow."""
+    total = n_requests * n_works * n_jobs
+    rows: list[dict[str, Any]] = []
+    rates: dict[str, float] = {}
+    for label, replicas, n_shards in (
+        ("single_replica", 1, 1),
+        ("replicas4_shards4", 4, 4),
+    ):
+        dt = min(
+            _scaleout_run(
+                n_requests, n_works, n_jobs,
+                replicas=replicas, n_shards=n_shards,
+            )
+            for _ in range(repeats)
+        )
+        rates[label] = total / dt
+        derived: dict[str, Any] = {
+            "jobs_per_s": int(total / dt),
+            "wall_s": round(dt, 2),
+            "replicas": replicas,
+            "n_shards": n_shards,
+            "n_requests": n_requests,
+        }
+        if label != "single_replica":
+            derived["vs_single_replica"] = round(
+                rates[label] / rates["single_replica"], 2
+            )
+            if budget_s is not None:
+                assert dt <= budget_s, (
+                    f"sharded overhead_{total} took {dt:.1f}s "
+                    f"(budget {budget_s}s)"
+                )
+        rows.append(
+            {
+                "name": f"scheduling/overhead_{total}_jobs/{label}",
+                "us_per_call": dt * 1e6 / total,
+                "derived": derived,
+            }
+        )
+    return rows
+
+
 def _lifecycle_scenario(
     n_works: int, n_jobs: int, *, cycles: int = 100
 ) -> dict[str, Any]:
@@ -141,9 +220,16 @@ def run() -> list[dict[str, Any]]:
     if _SMOKE:
         rows.append(_overhead_scenario(16, 4, repeats=1))
         rows.append(_lifecycle_scenario(8, 2, cycles=10))
+        # 4-replica/4-shard smoke (4096 jobs over 64 requests) under a
+        # wall-clock budget: a shard-routing stall fails CI, not just
+        # a slow-looking number
+        rows.extend(_scaleout_scenario(64, 4, 16, repeats=1, budget_s=60.0))
     else:
         rows.append(_overhead_scenario(64, 4, repeats=3))   # overhead_256_jobs
         rows.append(_overhead_scenario(128, 16))            # overhead_2048_jobs
         # suspend/resume storm over 256 in-flight jobs (lifecycle kernel)
         rows.append(_lifecycle_scenario(64, 4, cycles=100))
+        # sharded scale-out: 65536 jobs over 64 requests, replicas=4 each
+        # sweeping one disjoint shard vs the single-replica baseline
+        rows.extend(_scaleout_scenario(64, 16, 64, repeats=2))
     return rows

@@ -53,15 +53,23 @@ class BaseAgent:
     ):
         self.orch = orch
         self.bus: BaseEventBus = orch.bus
-        self.stores = orch.stores
+        # sharded db: this replica's store views sweep only its own shards
+        # (foreign shards only as takeover when its own come up empty), so
+        # N replicas drain N disjoint shard sets with zero claim contention
+        self.stores = orch.stores_for_replica(replica)
         self.db = orch.db
+        self.shards = orch.shards_for_replica(replica)
         #: the lifecycle kernel: the only path to status mutations and
         #: event publication (transactional outbox)
-        self.kernel = orch.kernel
+        self.kernel = orch.kernel_for_replica(replica)
         self.poll_period_s = poll_period_s
         self.batch_size = batch_size
         self.replica = replica
         self.consumer_id = f"{self.name}-{replica}"
+        #: sim kill switch — a disabled replica's cycles are no-ops, so the
+        #: shard_replica_crash scenario can model a dead replica while the
+        #: survivors take over its shards
+        self.enabled = True
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
         self._last_poll = 0.0
@@ -120,10 +128,21 @@ class BaseAgent:
 
     def cycle(self) -> bool:
         """One scheduling cycle: events first, then the lazy poll."""
+        if not self.enabled:
+            return False
         did = False
         if self.event_types:
+            kw = (
+                {"shards": self.shards}
+                if self.shards is not None
+                and getattr(self.bus, "shard_aware", False)
+                else {}
+            )
             events = self.bus.consume(
-                self.consumer_id, types=self.event_types, limit=self.batch_size
+                self.consumer_id,
+                types=self.event_types,
+                limit=self.batch_size,
+                **kw,
             )
             if events:
                 did = True
@@ -144,7 +163,7 @@ class BaseAgent:
             # write transaction has committed since, a rescan cannot find
             # work — skip it (bounded: a real poll still runs every 4
             # periods to catch time-based wakeups like next_poll_at).
-            gen = self.db.write_gen
+            gen = self._write_gen()
             if (
                 self.db_gated_poll
                 and not self._last_poll_did
@@ -195,6 +214,24 @@ class BaseAgent:
         return False
 
     # -- helpers --------------------------------------------------------------
+    def _write_gen(self) -> int:
+        """Write generation the idle-poll gate compares against: only this
+        replica's own shards — a write landing on a foreign shard cannot
+        create work for this replica's sweeps (the every-4-periods real
+        poll still covers time-based wakeups and throttled takeover)."""
+        db = self.db
+        if getattr(db, "is_sharded", False) and self.shards is not None:
+            return sum(db.shards[s].write_gen for s in self.shards)
+        return db.write_gen
+
+    def _shard_of(self, entity_id: int) -> int | None:
+        """Home shard of an entity id for pinning ``kernel.apply``
+        transactions — None when the database is unsharded (no pin)."""
+        db = self.db
+        if getattr(db, "is_sharded", False):
+            return db.shard_of(int(entity_id))
+        return None
+
     def _guarded(self, fn, *args: object, **kw: object):
         """Run one item of a claimed batch; a failure is logged and counted
         but does not abort the rest of the batch."""

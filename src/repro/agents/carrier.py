@@ -207,7 +207,8 @@ class Submitter(BaseAgent):
                 strict=False,
             )
 
-        if not self.kernel.apply(plan).applied:
+        home = self._shard_of(processing_id)
+        if not self.kernel.apply(plan, shard=home).applied:
             return  # lost the race to a cancel: nothing was submitted
         try:
             self.orch.runtime.submit(spec, workload_id=workload_id)
@@ -217,7 +218,8 @@ class Submitter(BaseAgent):
                 lambda txn: txn.transition(
                     "processing", processing_id, ProcessingStatus.FAILED,
                     strict=False,
-                )
+                ),
+                shard=home,
             )
             raise
         if data_aware:
@@ -283,16 +285,25 @@ class Poller(BaseAgent):
         if not rows:
             return False
         try:
-            plans = [p for row in rows if (p := self._guarded(self._plan_row, row))]
-            if plans:
+            # group the batch's plans by home shard so each apply is ONE
+            # pinned single-shard transaction (a processing's whole family
+            # lives on its request's shard); unsharded this is one group
+            groups: dict[int | None, list[Any]] = {}
+            for row in rows:
+                p = self._guarded(self._plan_row, row)
+                if p:
+                    groups.setdefault(
+                        self._shard_of(row["processing_id"]), []
+                    ).append(p)
+            for shard, plans in groups.items():
 
-                def sweep(txn: LifecycleTx) -> None:
+                def sweep(txn: LifecycleTx, plans: list[Any] = plans) -> None:
                     for writes, evs in plans:
                         for write in writes:
                             write(txn)
                         txn.emit(*evs)
 
-                self._guarded(self.kernel.apply, sweep)
+                self._guarded(self.kernel.apply, sweep, shard=shard)
         finally:
             self.stores["processings"].unlock_many(
                 [int(r["processing_id"]) for r in rows]
@@ -582,8 +593,14 @@ class Receiver(BaseAgent):
                 ji = int(msg.get("job_index", -1))
                 if 0 <= ji < len(out_ids):
                     finished.append((out_ids[ji], msg.get("site")))
-        events: list[Event] = []
-        avail: list[int] = []
+        # one (avail, events) group per home shard so each sweep commit is
+        # a single-shard transaction; unsharded everything lands in ONE
+        # group keyed None — identical to the unsharded sweep
+        groups: dict[int | None, tuple[list[int], list[Event]]] = {}
+
+        def _group(shard: int | None) -> tuple[list[int], list[Event]]:
+            return groups.setdefault(shard, ([], []))
+
         if finished:
             catalog = self.orch.runtime.broker.catalog
             for cid, site in finished:
@@ -591,10 +608,15 @@ class Receiver(BaseAgent):
                     # the output materialized where the job ran — register
                     # the replica so downstream placement is data-aware
                     catalog.register(cid, site)
-            avail = [cid for cid, _ in finished]
-            events.append(data_available_event(0, avail))
+            per_shard: dict[int | None, list[int]] = {}
+            for cid, _ in finished:
+                per_shard.setdefault(self._shard_of(cid), []).append(cid)
+            for shard, ids in per_shard.items():
+                g = _group(shard)
+                g[0].extend(ids)
+                g[1].append(data_available_event(0, ids))
         for pid in dict.fromkeys(terminal_pids):
-            events.append(
+            _group(self._shard_of(pid))[1].append(
                 Event(
                     type=str(EventType.UPDATE_PROCESSING),
                     payload={"processing_id": pid},
@@ -603,21 +625,29 @@ class Receiver(BaseAgent):
                 )
             )
         for pid in dict.fromkeys(failed_pids):
-            events.append(poll_processing_event(pid, priority=15))
+            _group(self._shard_of(pid))[1].append(
+                poll_processing_event(pid, priority=15)
+            )
         # the grouped metadata fetch above may have re-cached a pid whose
         # task_terminal arrived in this same sweep — re-evict so the maps
         # stay bounded
         for pid in terminal_pids:
             self._out_ids.pop(pid, None)
-        if avail or events:
+        did = False
+        for shard, (avail, events) in groups.items():
             # the contents flip and its data_available event commit together
-            def sweep(txn: LifecycleTx) -> None:
+            def sweep(
+                txn: LifecycleTx,
+                avail: list[int] = avail,
+                events: list[Event] = events,
+            ) -> None:
                 if avail:
                     txn.set_contents(avail, ContentStatus.AVAILABLE)
                 txn.emit(*events)
 
-            self.kernel.apply(sweep)
-        return bool(events)
+            self.kernel.apply(sweep, shard=shard)
+            did = did or bool(events)
+        return did
 
     def _persist_dead_letters(
         self, quarantined: list[tuple[int, dict[str, Any]]]
@@ -674,23 +704,57 @@ class Trigger(BaseAgent):
         if content_ids:
             self.release(list(dict.fromkeys(content_ids)))
 
+    _RELEASE_SWEEP_SQL = (
+        "SELECT DISTINCT d.dep_content_id AS cid FROM content_deps d "
+        "JOIN contents c ON c.content_id=d.dep_content_id "
+        "JOIN contents w ON w.content_id=d.content_id "
+        "WHERE c.status IN ('Available','Finished') AND w.status='New' "
+        "LIMIT 512"
+    )
+    _full_sweep_next = 0.0
+
     def lazy_poll(self) -> bool:
         # fallback: activate any NEW contents whose deps are all available
-        # but whose release event was lost — set-based sweep
-        db = self.stores["contents"].db
-        rows = db.query(
-            "SELECT DISTINCT d.dep_content_id AS cid FROM content_deps d "
-            "JOIN contents c ON c.content_id=d.dep_content_id "
-            "JOIN contents w ON w.content_id=d.content_id "
-            "WHERE c.status IN ('Available','Finished') AND w.status='New' "
-            "LIMIT 512"
-        )
+        # but whose release event was lost — set-based sweep over this
+        # replica's own shards (dependency edges never cross requests, so
+        # a stuck content is visible from its home shard alone); a full
+        # fan-out runs ~1/s for shards whose owner died
+        db = self.db
+        if getattr(db, "is_sharded", False):
+            scan = (
+                list(self.shards)
+                if self.shards is not None
+                else list(range(db.n_shards))
+            )
+            now = utc_now_ts()
+            if len(scan) < db.n_shards and now >= self._full_sweep_next:
+                self._full_sweep_next = now + 1.0
+                scan = list(range(db.n_shards))
+            rows = []
+            for s in scan:
+                rows.extend(db.shards[s].query(self._RELEASE_SWEEP_SQL))
+        else:
+            rows = db.query(self._RELEASE_SWEEP_SQL)
         ids = [int(r["cid"]) for r in rows]
         if ids:
             self.release(ids)
         return bool(ids)
 
     def release(self, available_ids: list[int]) -> None:
+        # dependency edges never cross requests, so grouping released ids
+        # by home shard keeps each release cascade one single-shard tx
+        if getattr(self.db, "is_sharded", False):
+            grouped: dict[int | None, list[int]] = {}
+            for cid in available_ids:
+                grouped.setdefault(self.db.shard_of(int(cid)), []).append(cid)
+        else:
+            grouped = {None: available_ids}
+        for shard, ids in grouped.items():
+            self._release_group(ids, shard)
+
+    def _release_group(
+        self, available_ids: list[int], shard: int | None
+    ) -> None:
         contents = self.stores["contents"]
         by_transform: dict[int, list[int]] = {}
 
@@ -712,7 +776,7 @@ class Trigger(BaseAgent):
             events.append(data_available_event(0, activated))
             txn.emit(*events)
 
-        self.kernel.apply(plan)
+        self.kernel.apply(plan, shard=shard)
         if not by_transform:
             return
         # runtime job release is a post-commit side effect: consumers of the
@@ -768,9 +832,11 @@ class Finisher(BaseAgent):
         }
         coll_map = self.stores["collections"].by_transforms(list(term_set))
         transforms = self.stores["transforms"]
-        plans: list[tuple[list[Any], list[Event]]] = []
-        defer_short: list[int] = []
-        defer_long: list[int] = []
+        # per home shard: (plans, defer_short, defer_long) — each shard's
+        # group applies in ONE pinned single-shard transaction (unsharded:
+        # one group, identical to the unsharded sweep)
+        groups: dict[int | None, tuple[list[Any], list[int], list[int]]] = {}
+        any_plans = False
         try:
             for row in rows:
                 tid = int(row["transform_id"])
@@ -782,15 +848,24 @@ class Finisher(BaseAgent):
                     # _plan_row doesn't re-query per row
                     colls=coll_map.get(tid, [] if tid in term_set else None),
                 )
+                if plan is None:
+                    continue
+                g = groups.setdefault(self._shard_of(tid), ([], [], []))
                 if plan == "defer_short":
-                    defer_short.append(tid)
+                    g[1].append(tid)
                 elif plan == "defer_long":
-                    defer_long.append(tid)
-                elif plan is not None:
-                    plans.append(plan)
-            if plans or defer_short or defer_long:
+                    g[2].append(tid)
+                else:
+                    g[0].append(plan)
+                    any_plans = True
+            for shard, (plans, defer_short, defer_long) in groups.items():
 
-                def sweep(txn: LifecycleTx) -> None:
+                def sweep(
+                    txn: LifecycleTx,
+                    plans: list[Any] = plans,
+                    defer_short: list[int] = defer_short,
+                    defer_long: list[int] = defer_long,
+                ) -> None:
                     for writes, evs in plans:
                         for write in writes:
                             write(txn)
@@ -806,10 +881,10 @@ class Finisher(BaseAgent):
                             next_poll_at=self.defer(self.poll_period_s * 4),
                         )
 
-                self._guarded(self.kernel.apply, sweep)
+                self._guarded(self.kernel.apply, sweep, shard=shard)
         finally:
             transforms.unlock_many([int(r["transform_id"]) for r in rows])
-        return bool(plans)
+        return any_plans
 
     def _plan_row(
         self,

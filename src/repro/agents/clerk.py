@@ -196,7 +196,9 @@ class Clerk(BaseAgent):
                     events.append(update_request_event(request_id))
                 txn.emit(*events)
 
-            self.kernel.apply(plan)
+            # one pinned transaction on the request's home shard: the
+            # transforms it creates land there too (id-range placement)
+            self.kernel.apply(plan, shard=self._shard_of(request_id))
         except BaseException:
             # the (possibly cached) Workflow object was mutated but the
             # transaction rolled back — drop it so the next cycle rebuilds

@@ -41,8 +41,9 @@ class Coordinator(BaseAgent):
         # lifecycle-outbox recovery: rows committed by a replica that died
         # between commit and drain (or whose drain claim went stale) are
         # requeued and published here — the crash-safety half of the
-        # transactional outbox
-        n = self.kernel.recover(stale_s=self.stale_claim_s)
+        # transactional outbox.  Recovery runs on the orchestrator's
+        # full-view kernel so a dead replica's shards are drained too.
+        n = self.orch.kernel.recover(stale_s=self.stale_claim_s)
         if n:
             self.recovered += n
             did = True

@@ -117,7 +117,9 @@ class Transformer(BaseAgent):
             )
             txn.emit(submit_processing_event(processing_id))
 
-        self.kernel.apply(plan)
+        # pinned to the request family's home shard: collections, contents,
+        # and the processing all land on the transform's shard
+        self.kernel.apply(plan, shard=self._shard_of(transform_id))
 
     def _register_collections(
         self,

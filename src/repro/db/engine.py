@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import sqlite3
 import threading
+from collections import OrderedDict
 from contextlib import contextmanager
 from typing import Any, Callable, Iterator, Sequence
 
@@ -36,9 +37,141 @@ from repro.db.schema import MIGRATIONS, SCHEMA_VERSION
 #: UPDATE/DELETE … RETURNING requires SQLite >= 3.35.0.
 SUPPORTS_RETURNING = sqlite3.sqlite_version_info >= (3, 35, 0)
 
-#: per-connection prepared-statement cache (sqlite3 default is 128; agent
-#: workloads cycle through a few hundred distinct statements).
-_STMT_CACHE_SIZE = 512
+#: per-connection prepared-statement cache bound (LRU).  sqlite3's native
+#: cache is sized to the same bound so the Python-side tracker mirrors what
+#: the C layer actually keeps.
+_STMT_CACHE_SIZE = 256
+
+
+class StatementCache:
+    """Bounded LRU tracker for the prepared-statement working set.
+
+    sqlite3 owns the real prepared statements; this mirror bounds the
+    working set (its capacity is also passed to ``cached_statements``) and
+    counts hits/misses/evictions so ``monitor_summary()["db"]`` can report
+    whether the agent workload fits the cache.
+    """
+
+    __slots__ = ("capacity", "hits", "misses", "evictions", "_lru", "_lock")
+
+    def __init__(self, capacity: int = _STMT_CACHE_SIZE):
+        self.capacity = int(capacity)
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self._lru: OrderedDict[str, None] = OrderedDict()
+        self._lock = threading.Lock()
+
+    def note(self, sql: str) -> None:
+        with self._lock:
+            if sql in self._lru:
+                self._lru.move_to_end(sql)
+                self.hits += 1
+                return
+            self._lru[sql] = None
+            self.misses += 1
+            if len(self._lru) > self.capacity:
+                self._lru.popitem(last=False)
+                self.evictions += 1
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "capacity": self.capacity,
+                "size": len(self._lru),
+                "hits": self.hits,
+                "misses": self.misses,
+                "evictions": self.evictions,
+            }
+
+
+# -- driver interface -------------------------------------------------------
+class SqliteDriver:
+    """Default driver: embedded sqlite.
+
+    A driver owns everything backend-specific so a server-grade engine can
+    drop in behind the unchanged ``batch()``/claim API: the connection
+    factory, RETURNING support, the row-lock idiom appended to claim
+    SELECTs (empty for sqlite, ``FOR UPDATE SKIP LOCKED`` for a server
+    backend), the BEGIN flavour, and the statement-cache bound.
+    """
+
+    name = "sqlite"
+    #: sqlite claims rows via the ``locking`` column + short IMMEDIATE
+    #: transactions; there is no row-lock clause to append.
+    claim_lock_suffix = ""
+    begin_sql = "BEGIN IMMEDIATE"
+
+    def __init__(self, *, stmt_cache_size: int = _STMT_CACHE_SIZE):
+        self.stmt_cache_size = int(stmt_cache_size)
+
+    @property
+    def supports_returning(self) -> bool:
+        return SUPPORTS_RETURNING
+
+    def connect(self, path: str, *, memory: bool, fast: bool) -> sqlite3.Connection:
+        conn = sqlite3.connect(
+            path,
+            timeout=30.0,
+            check_same_thread=False,
+            isolation_level=None,  # autocommit; we BEGIN explicitly
+            cached_statements=self.stmt_cache_size,
+        )
+        conn.row_factory = sqlite3.Row
+        conn.execute("PRAGMA foreign_keys=ON")
+        if not memory:
+            conn.execute("PRAGMA journal_mode=WAL")
+            if fast:
+                conn.execute("PRAGMA synchronous=NORMAL")
+        return conn
+
+
+class PostgresDriver:
+    """Server-grade driver stub (paper §3.2.1: Oracle/PostgreSQL/MySQL).
+
+    The container ships no psycopg, so this documents + gates the contract
+    rather than implementing it: connections come from a DSN pool,
+    RETURNING is always available, and claims append ``FOR UPDATE SKIP
+    LOCKED`` instead of the ``locking``-column spin.  Instantiating it
+    without the client library raises a clean DatabaseError.
+    """
+
+    name = "postgres"
+    claim_lock_suffix = " FOR UPDATE SKIP LOCKED"
+    begin_sql = "BEGIN"
+    supports_returning = True
+
+    def __init__(self, dsn: str = "", *, stmt_cache_size: int = _STMT_CACHE_SIZE):
+        self.dsn = dsn
+        self.stmt_cache_size = int(stmt_cache_size)
+        try:  # pragma: no cover - psycopg absent in the test container
+            import psycopg  # noqa: F401
+        except ImportError as exc:
+            raise DatabaseError(
+                "postgres driver requires the 'psycopg' client library; "
+                "install it or use the default sqlite driver"
+            ) from exc
+
+    def connect(self, path: str, *, memory: bool, fast: bool):  # pragma: no cover
+        raise DatabaseError("postgres driver stub has no connection factory")
+
+
+DRIVERS: dict[str, type] = {"sqlite": SqliteDriver, "postgres": PostgresDriver}
+
+
+def resolve_driver(driver: Any = None) -> Any:
+    """Accept a driver instance, a registered name, or None (sqlite)."""
+    if driver is None:
+        return SqliteDriver()
+    if isinstance(driver, str):
+        try:
+            cls = DRIVERS[driver]
+        except KeyError:
+            raise DatabaseError(
+                f"unknown db driver {driver!r}; known: {sorted(DRIVERS)}"
+            ) from None
+        return cls()
+    return driver
 
 
 class Database:
@@ -50,14 +183,23 @@ class Database:
     tests and the LocalEventBus deployments).
     """
 
-    def __init__(self, path: str = ":memory:", *, fast: bool = True):
+    #: single-engine database; repro.db.shard.ShardedDatabase overrides
+    is_sharded = False
+    n_shards = 1
+
+    def __init__(self, path: str = ":memory:", *, fast: bool = True, driver: Any = None):
         self._path = path
         self._memory = path == ":memory:"
         self._fast = fast
         self._local = threading.local()
         self._lock = threading.RLock()
         self._mem_conn: sqlite3.Connection | None = None
-        self.supports_returning = SUPPORTS_RETURNING
+        self.driver = resolve_driver(driver)
+        self.supports_returning = bool(self.driver.supports_returning)
+        #: row-lock clause appended to claim SELECTs (driver idiom; empty
+        #: for sqlite, FOR UPDATE SKIP LOCKED for a server backend)
+        self.claim_lock_suffix = self.driver.claim_lock_suffix
+        self._stmt_cache = StatementCache(self.driver.stmt_cache_size)
         #: fault-injection hook (repro.sim): called with "commit" just
         #: before COMMIT (raising aborts + rolls back the transaction) and
         #: "committed" right after (raising models a process crash in the
@@ -76,20 +218,7 @@ class Database:
 
     # -- connections -----------------------------------------------------
     def _new_conn(self) -> sqlite3.Connection:
-        conn = sqlite3.connect(
-            self._path,
-            timeout=30.0,
-            check_same_thread=False,
-            isolation_level=None,  # autocommit; we BEGIN explicitly
-            cached_statements=_STMT_CACHE_SIZE,
-        )
-        conn.row_factory = sqlite3.Row
-        conn.execute("PRAGMA foreign_keys=ON")
-        if not self._memory:
-            conn.execute("PRAGMA journal_mode=WAL")
-            if self._fast:
-                conn.execute("PRAGMA synchronous=NORMAL")
-        return conn
+        return self.driver.connect(self._path, memory=self._memory, fast=self._fast)
 
     def _conn(self) -> sqlite3.Connection:
         if self._memory:
@@ -136,11 +265,14 @@ class Database:
                 raise
 
     @contextmanager
-    def batch(self) -> Iterator[sqlite3.Connection]:
+    def batch(self, *, shard: int | None = None) -> Iterator[sqlite3.Connection]:
         """Coalesce every store write issued by this thread into ONE
         transaction (the agent hot-path optimisation: N rows per cycle cost
         one fsync/lock round-trip instead of N).  Reentrant — nested
-        ``batch()``/``tx()`` calls join the outer transaction."""
+        ``batch()``/``tx()`` calls join the outer transaction.
+
+        ``shard`` is accepted (and ignored) so callers can pin transactions
+        uniformly whether the backing database is sharded or not."""
         if self._batch_conn() is not None:
             yield self._batch_conn()
             return
@@ -185,6 +317,7 @@ class Database:
 
     # -- query helpers ---------------------------------------------------
     def query(self, sql: str, params: Sequence[Any] = ()) -> list[sqlite3.Row]:
+        self._stmt_cache.note(sql)
         if self._memory:
             with self._lock:
                 return list(self._conn().execute(sql, params).fetchall())
@@ -198,6 +331,7 @@ class Database:
     def execute(self, sql: str, params: Sequence[Any] = ()) -> int:
         """Single write statement; joins the active batch when one is open,
         otherwise runs in its own transaction.  Returns rowcount."""
+        self._stmt_cache.note(sql)
         with self.tx() as conn:
             cur = conn.execute(sql, params)
             return cur.rowcount
@@ -205,18 +339,27 @@ class Database:
     def executemany(self, sql: str, rows: Sequence[Sequence[Any]]) -> int:
         if not rows:
             return 0
+        self._stmt_cache.note(sql)
         with self.tx() as conn:
             cur = conn.executemany(sql, rows)
             return cur.rowcount
 
     def insert(self, sql: str, params: Sequence[Any] = ()) -> int:
         """Insert and return lastrowid."""
+        self._stmt_cache.note(sql)
         with self.tx() as conn:
             cur = conn.execute(sql, params)
             rid = cur.lastrowid
             if rid is None:  # pragma: no cover - sqlite always sets it
                 raise DatabaseError("insert produced no rowid")
             return rid
+
+    def stmt_cache_stats(self) -> dict[str, int]:
+        return self._stmt_cache.stats()
+
+    def shard_of(self, entity_id: int) -> int:
+        """Home shard of an entity id (always 0 for a single engine)."""
+        return 0
 
     # -- schema ----------------------------------------------------------
     def schema_version(self) -> int:

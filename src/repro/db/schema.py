@@ -15,7 +15,7 @@ and the Data Carousel file-level staging (§4.1).
 """
 from __future__ import annotations
 
-SCHEMA_VERSION = 6
+SCHEMA_VERSION = 7
 
 _V1 = [
     """
@@ -234,6 +234,21 @@ _V6 = [
     "CREATE INDEX idx_dead_letters_status ON dead_letters(status)",
 ]
 
+_V7 = [
+    # Durable submission dedup: idempotency keys live in the home shard's
+    # database (key → crc32(key) % n_shards), so replayed submissions hit
+    # the same row whichever replica serves them and dedup survives
+    # replica restarts — the previous process-local LRU map did neither.
+    """
+    CREATE TABLE idempotency (
+        key             TEXT PRIMARY KEY,
+        fingerprint     TEXT NOT NULL,
+        request_id      INTEGER NOT NULL,
+        created_at      REAL NOT NULL
+    ) WITHOUT ROWID
+    """,
+]
+
 # Ordered (version, statements) pairs — forward migrations only, applied in
 # sequence by Database.migrate().
 MIGRATIONS: list[tuple[int, list[str]]] = [
@@ -243,4 +258,5 @@ MIGRATIONS: list[tuple[int, list[str]]] = [
     (4, _V4),
     (5, _V5),
     (6, _V6),
+    (7, _V7),
 ]

@@ -87,6 +87,7 @@ class RequestStore(_BaseStore):
         priority: int = 0,
         workflow: Any = None,
         metadata: Any = None,
+        shard: int | None = None,  # placement hint; single engine ignores it
     ) -> int:
         now = utc_now_ts()
         return self.db.insert(
@@ -233,6 +234,29 @@ class RequestStore(_BaseStore):
             self.db, "requests", "request_id", request_ids, statuses
         )
 
+    def status_of(self, request_id: int) -> str:
+        return _status_of(self.db, "requests", "request_id", request_id)
+
+    # -- durable submission dedup (schema v7) ---------------------------------
+    def idempotency_get(self, key: str) -> dict[str, Any] | None:
+        row = self.db.query_one(
+            "SELECT fingerprint, request_id FROM idempotency WHERE key=?",
+            (key,),
+        )
+        if row is None:
+            return None
+        return {
+            "fingerprint": str(row["fingerprint"]),
+            "request_id": int(row["request_id"]),
+        }
+
+    def idempotency_put(self, key: str, fingerprint: str, request_id: int) -> None:
+        self.db.execute(
+            "INSERT INTO idempotency(key,fingerprint,request_id,created_at)"
+            " VALUES (?,?,?,?)",
+            (key, fingerprint, request_id, utc_now_ts()),
+        )
+
 
 # ---------------------------------------------------------------------------
 # Transforms
@@ -370,6 +394,9 @@ class TransformStore(_BaseStore):
         return _update_many(
             self.db, "transforms", "transform_id", transform_ids, fields
         )
+
+    def status_of(self, transform_id: int) -> str:
+        return _status_of(self.db, "transforms", "transform_id", transform_id)
 
 
 # ---------------------------------------------------------------------------
@@ -856,6 +883,9 @@ class ProcessingStore(_BaseStore):
             self.db, "processings", "processing_id", processing_ids, statuses
         )
 
+    def status_of(self, processing_id: int) -> str:
+        return _status_of(self.db, "processings", "processing_id", processing_id)
+
     def ids_for_workloads(self, workload_ids: Sequence[str]) -> dict[str, int]:
         """Batch workload_id → processing_id resolution (one query)."""
         out: dict[str, int] = {}
@@ -1080,6 +1110,17 @@ class EventStore(_BaseStore):
             f"DELETE FROM events WHERE event_id IN ({marks})", list(event_ids)
         )
 
+    def requeue(self, event_ids: Sequence[int]) -> int:
+        """Put claimed events back (consumer took a batch it cannot use)."""
+        if not event_ids:
+            return 0
+        marks = ",".join("?" for _ in event_ids)
+        return self.db.execute(
+            "UPDATE events SET status='New', claimed_by=NULL "
+            f"WHERE event_id IN ({marks})",
+            list(event_ids),
+        )
+
     def requeue_stale(self, *, stale_s: float = 60.0) -> int:
         """Lost-consumer recovery: claimed events idle past ``stale_s`` go
         back to New (lazy-poll fallback semantics, §3.4.3)."""
@@ -1105,7 +1146,9 @@ class OutboxStore(_BaseStore):
     the idempotent-claim primitive that lets N replicas drain one outbox
     without double-publishing."""
 
-    def add_many(self, events: Sequence[Any]) -> int:
+    def add_many(self, events: Sequence[Any], *, shard: int | None = None) -> int:
+        # ``shard`` is a placement hint for the sharded wrapper; a single
+        # engine has exactly one outbox and ignores it.
         if not events:
             return 0
         now = utc_now_ts()
@@ -1348,6 +1391,17 @@ def _update_row(
     db.execute(f"UPDATE {table} SET {', '.join(sets)} WHERE {key}=?", params)
 
 
+def _status_of(db: Database, table: str, key: str, key_val: int) -> str:
+    """Cheap status-only PK read (no blob decode) — the lifecycle kernel's
+    in-transaction CURRENT-status check."""
+    row = db.query_one(
+        f"SELECT status FROM {table} WHERE {key}=?", (int(key_val),)
+    )
+    if row is None:
+        raise NotFoundError(f"{table} row {key_val} not found")
+    return str(row["status"])
+
+
 def _claim_row(
     db: Database, table: str, key: str, key_val: int, stale_s: float
 ) -> bool:
@@ -1387,8 +1441,12 @@ def _claim_ready(
         "AND (locking=0 OR updated_at<?)"
     )
     sel_params = [str(s) for s in statuses] + [now, now - stale_s]
+    # a server-grade driver appends its row-lock idiom (e.g. FOR UPDATE
+    # SKIP LOCKED) to the claiming SELECT; sqlite's suffix is empty
+    lock_sfx = getattr(db, "claim_lock_suffix", "")
     sel = (
-        f"SELECT {key} FROM {table} WHERE {where} ORDER BY {order} LIMIT ?"
+        f"SELECT {key} FROM {table} WHERE {where} "
+        f"ORDER BY {order} LIMIT ?{lock_sfx}"
     )
     # read-only pre-check: idle polls (the overwhelmingly common case for a
     # fleet of agents) must not pay for a write transaction
@@ -1516,7 +1574,11 @@ def _update_many(
     return n
 
 
-def make_stores(db: Database) -> dict[str, Any]:
+def make_stores(db: Database, *, sweep_shards: Sequence[int] | None = None) -> dict[str, Any]:
+    if getattr(db, "is_sharded", False):
+        from repro.db.shard import make_sharded_stores
+
+        return make_sharded_stores(db, sweep_shards=sweep_shards)
     return {
         "requests": RequestStore(db),
         "transforms": TransformStore(db),

@@ -24,7 +24,16 @@ class DBEventBus(BaseEventBus):
 
     def __init__(self, db: Database):
         super().__init__()
-        self._store = EventStore(db)
+        if getattr(db, "is_sharded", False):
+            # events route to their payload's home shard; consumers may
+            # restrict claims to the shards their replica owns
+            from repro.db.shard import ShardedEventStore
+
+            self._store = ShardedEventStore(db)
+            self.shard_aware = True
+        else:
+            self._store = EventStore(db)
+            self.shard_aware = False
         self.stats = {"published": 0, "merged": 0, "consumed": 0}
 
     def _publish_many(self, events: list[Event]) -> None:
@@ -41,8 +50,12 @@ class DBEventBus(BaseEventBus):
         *,
         types: Sequence[str] | None = None,
         limit: int = 32,
+        shards: Sequence[int] | None = None,
     ) -> list[Event]:
-        rows = self._store.claim_batch(consumer, limit=limit)
+        if shards is not None and self.shard_aware:
+            rows = self._store.claim_batch(consumer, limit=limit, shards=shards)
+        else:
+            rows = self._store.claim_batch(consumer, limit=limit)
         events: list[Event] = []
         put_back: list[int] = []
         for row in rows:
@@ -60,11 +73,8 @@ class DBEventBus(BaseEventBus):
                 events.append(ev)
         if put_back:
             # immediately requeue events this consumer doesn't handle
-            self._store.db.execute(
-                "UPDATE events SET status='New', claimed_by=NULL "
-                f"WHERE event_id IN ({','.join('?' for _ in put_back)})",
-                put_back,
-            )
+            # (routed by event id on a sharded store)
+            self._store.requeue(put_back)
         self.stats["consumed"] += len(events)
         return events
 

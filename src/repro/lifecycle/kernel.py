@@ -85,13 +85,10 @@ class LifecycleTx:
 
     # -- status transitions ------------------------------------------------
     def current_status(self, kind: str, entity_id: int) -> str:
-        table, pk = _KIND_TABLE[kind]
-        row = self.kernel.db.query_one(
-            f"SELECT status FROM {table} WHERE {pk}=?", (entity_id,)
-        )
-        if row is None:
-            raise NotFoundError(f"{kind} {entity_id} not found")
-        return str(row["status"])
+        table, _pk = _KIND_TABLE[kind]
+        # routed through the store so a sharded deployment reads the home
+        # shard's connection (the one this pinned transaction writes)
+        return self.stores[table].status_of(entity_id)
 
     def transition(
         self,
@@ -189,20 +186,31 @@ class LifecycleKernel:
         #: lossy in-process bus buys nothing and costs hot-path writes)
         self.durable = bus.persistent if durable is None else durable
 
+    def _home(self, entity_id: int) -> int | None:
+        """Home shard of an entity (None on a single-engine database — the
+        plain ``batch()`` path stays byte-identical)."""
+        if getattr(self.db, "is_sharded", False):
+            return self.db.shard_of(int(entity_id))
+        return None
+
     # -- the one write path ------------------------------------------------
-    def apply(self, *plans: Plan, drain: bool = True) -> LifecycleTx:
+    def apply(
+        self, *plans: Plan, drain: bool = True, shard: int | None = None
+    ) -> LifecycleTx:
         """Run ``plans`` inside ONE write transaction; after commit, execute
         the recorded side effects (runtime kills, event publication).  On
         any exception the whole transaction rolls back and no side effect
         runs.  ``drain=False`` commits outbox rows without publishing them
         (crash-window simulation in tests; the Coordinator's recovery drain
-        picks them up)."""
+        picks them up).  ``shard`` pins the transaction (and the outbox
+        rows it writes) to one engine of a sharded database — the
+        single-request hot path; un-pinned applies span every shard."""
         txn = LifecycleTx(self)
-        with self.db.batch():
+        with self.db.batch(shard=shard):
             for plan in plans:
                 plan(txn)
             if self.durable and txn.events:
-                self.stores["outbox"].add_many(txn.events)
+                self.stores["outbox"].add_many(txn.events, shard=shard)
         # -- post-commit side effects only below this line --
         for workload_id in txn.kills:
             if self.runtime is None:
@@ -227,6 +235,24 @@ class LifecycleKernel:
         if not events:
             return
         if self.durable:
+            if getattr(self.db, "is_sharded", False):
+                # group by recipient shard so each group commits in one
+                # pinned transaction instead of spanning every engine
+                from repro.db.shard import payload_shard
+
+                groups: dict[int, list[Event]] = {}
+                for e in events:
+                    s = payload_shard(
+                        e.payload,
+                        self.db.n_shards,
+                        fallback_key=e.merge_key or e.type,
+                    )
+                    groups.setdefault(s, []).append(e)
+                for s, part in groups.items():
+                    self.apply(
+                        lambda txn, _p=tuple(part): txn.emit(*_p), shard=s
+                    )
+                return
             self.apply(lambda txn: txn.emit(*events))
         elif len(events) == 1:
             self.bus.publish(events[0])
@@ -234,7 +260,9 @@ class LifecycleKernel:
             self.bus.publish_many(events)
 
     # -- outbox drain ------------------------------------------------------
-    def drain(self, *, limit: int = 256) -> int:
+    def drain(
+        self, *, limit: int = 256, shards: Sequence[int] | None = None
+    ) -> int:
         """Publish committed-but-unpublished outbox rows.  Rows are claimed
         idempotently first, so concurrent replicas never double-publish a
         live row; publish + delete then run in ONE transaction, so with a
@@ -246,33 +274,47 @@ class LifecycleKernel:
         if not self.durable:
             return 0
         outbox = self.stores["outbox"]
+        sharded = getattr(self.db, "is_sharded", False)
+        claim_kw: dict[str, Any] = {} if shards is None else {"shards": shards}
         total = 0
         while True:
-            rows = outbox.claim_new(self.consumer_id, limit=limit)
+            rows = outbox.claim_new(self.consumer_id, limit=limit, **claim_kw)
             if not rows:
                 return total
-            events = [
-                Event(
-                    type=r["event_type"],
-                    payload=r.get("payload") or {},
-                    priority=int(r["priority"]),
-                    merge_key=r.get("merge_key"),
-                )
-                for r in rows
-            ]
-            with self.db.batch():
-                self.bus.publish_many(events)
-                outbox.delete([int(r["outbox_id"]) for r in rows])
+            # publish + delete per home shard in ONE pinned transaction
+            # each; outbox rows and the events they become share routing,
+            # so a DBEventBus publish lands on the same engine
+            groups: dict[int | None, list[dict[str, Any]]] = {}
+            for r in rows:
+                s = self.db.shard_of(int(r["outbox_id"])) if sharded else None
+                groups.setdefault(s, []).append(r)
+            for s, part in groups.items():
+                events = [
+                    Event(
+                        type=r["event_type"],
+                        payload=r.get("payload") or {},
+                        priority=int(r["priority"]),
+                        merge_key=r.get("merge_key"),
+                    )
+                    for r in part
+                ]
+                with self.db.batch(shard=s):
+                    self.bus.publish_many(events)
+                    outbox.delete([int(r["outbox_id"]) for r in part])
             total += len(rows)
             if len(rows) < limit:
                 return total
 
     def recover(self, *, stale_s: float = 30.0) -> int:
         """Crash recovery: requeue outbox rows a dead replica claimed but
-        never published, then drain everything pending."""
+        never published, then drain everything pending — sweeping EVERY
+        shard, not just this kernel's own (a dead replica's shard has no
+        other drain)."""
         if not self.durable:
             return 0
         self.stores["outbox"].requeue_stale(stale_s=stale_s)
+        if getattr(self.db, "is_sharded", False):
+            return self.drain(shards=tuple(range(self.db.n_shards)))
         return self.drain()
 
     def outbox_pending(self) -> int:
@@ -366,7 +408,7 @@ class LifecycleKernel:
                 fields["workflow"] = self._blob(wf)
             txn.transition("request", request_id, final, **fields)
 
-        self.apply(plan)
+        self.apply(plan, shard=self._home(request_id))
 
     def abort_request(self, request_id: int) -> bool:
         """Cancel a request and its whole tree.  No-op (False) when the
@@ -401,7 +443,7 @@ class LifecycleKernel:
                         transform_metadata=meta,
                     )
 
-            self.apply(plan)
+            self.apply(plan, shard=self._home(request_id))
 
     def resume_request(self, request_id: int) -> None:
         """Resume a suspended request: parked transforms return to their
@@ -444,7 +486,7 @@ class LifecycleKernel:
                     )
                 )
 
-            self.apply(plan)
+            self.apply(plan, shard=self._home(request_id))
 
     def retry_request(self, request_id: int) -> int:
         """Give a Failed/SubFinished request a fresh retry budget: failed
@@ -497,7 +539,7 @@ class LifecycleKernel:
                     )
                 )
 
-            self.apply(plan)
+            self.apply(plan, shard=self._home(request_id))
             return reset
 
     def expire_request(self, request_id: int) -> None:

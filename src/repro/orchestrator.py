@@ -12,7 +12,6 @@ from __future__ import annotations
 import contextlib
 import sys
 import threading
-from collections import OrderedDict
 from typing import Any, Callable, Iterator
 
 from repro.agents import (
@@ -101,9 +100,25 @@ class Orchestrator:
         bus_kwargs: dict[str, Any] | None = None,
         switch_interval_s: float | None = 0.001,
         orphan_timeout_s: float | None = None,
+        n_shards: int = 1,
     ):
-        self.db = db or Database(":memory:")
+        if db is None:
+            if n_shards > 1:
+                from repro.db.shard import ShardedDatabase
+
+                db = ShardedDatabase(n_shards)
+            else:
+                db = Database(":memory:")
+        self.db = db
+        self.n_shards = int(getattr(self.db, "n_shards", 1))
+        self.replicas = int(replicas)
         self.stores = make_stores(self.db)
+        # per-replica shard views (sharded dbs only): each replica's agents
+        # sweep a disjoint shard subset, so claim cycles never contend
+        self._replica_stores: dict[int, dict[str, Any]] = {}
+        self._replica_kernels: dict[int, LifecycleKernel] = {}
+        # RLock: kernel_for_replica builds its store view under the lock
+        self._replica_lock = threading.RLock()
         kw = dict(bus_kwargs or {})
         if bus_kind == "db":
             kw.setdefault("db", self.db)
@@ -139,15 +154,6 @@ class Orchestrator:
             for r in range(replicas)
         ]
         self._started = False
-        # idempotent submission: key → request_id for this server process,
-        # so a client retrying a keyed submit after a transport failure
-        # collapses onto the original request instead of double-submitting.
-        # LRU-bounded (replays arrive shortly after the original; a key
-        # evicted hours later simply creates a fresh request) so sustained
-        # keyed traffic cannot leak memory.
-        self._idempotency: "OrderedDict[str, tuple[int, str]]" = OrderedDict()
-        self._idempotency_max = 4096
-        self._idempotency_lock = threading.Lock()
         # agent threads are short-burst IO/lock-bound; the interpreter's
         # default 5 ms switch interval turns every lock handoff into a
         # scheduling quantum.  A tighter interval cuts hot-path latency.
@@ -206,6 +212,44 @@ class Orchestrator:
     def __exit__(self, *exc: Any) -> None:
         self.stop()
 
+    # -- shard-aware replica views -------------------------------------------
+    def shards_for_replica(self, replica: int) -> tuple[int, ...] | None:
+        """Shards replica ``replica`` owns for sweeps, or None when the
+        backing database is unsharded (sweep everything)."""
+        if not getattr(self.db, "is_sharded", False):
+            return None
+        from repro.db.shard import replica_shards
+
+        return replica_shards(replica, self.replicas, self.n_shards)
+
+    def stores_for_replica(self, replica: int) -> dict[str, Any]:
+        """Store views whose ``claim_ready``-style sweeps cover only the
+        replica's own shards (identical to ``self.stores`` unsharded)."""
+        if not getattr(self.db, "is_sharded", False):
+            return self.stores
+        with self._replica_lock:
+            if replica not in self._replica_stores:
+                self._replica_stores[replica] = make_stores(
+                    self.db, sweep_shards=self.shards_for_replica(replica)
+                )
+            return self._replica_stores[replica]
+
+    def kernel_for_replica(self, replica: int) -> LifecycleKernel:
+        """A kernel bound to the replica's store views (identical to
+        ``self.kernel`` unsharded), so outbox drains stay per-shard."""
+        if not getattr(self.db, "is_sharded", False):
+            return self.kernel
+        with self._replica_lock:
+            if replica not in self._replica_kernels:
+                self._replica_kernels[replica] = LifecycleKernel(
+                    self.db,
+                    self.stores_for_replica(replica),
+                    self.bus,
+                    runtime=self.runtime,
+                    consumer_id=f"kernel-{id(self):x}-r{replica}",
+                )
+            return self._replica_kernels[replica]
+
     # -- request API -------------------------------------------------------------
     def submit_workflow(
         self,
@@ -218,7 +262,7 @@ class Orchestrator:
     ) -> int:
         workflow.validate()
 
-        def _add() -> int:
+        def _add(shard: int | None = None) -> int:
             return self.stores["requests"].add(
                 workflow.name,
                 scope=scope,
@@ -231,28 +275,36 @@ class Orchestrator:
                     if idempotency_key is not None
                     else None
                 ),
+                shard=shard,
             )
 
         if idempotency_key is None:
             request_id = _add()
         else:
+            # durable dedup: the key row and the request row commit in ONE
+            # transaction on the key's home shard, so a client retrying a
+            # keyed submit collapses onto the original request whichever
+            # replica serves the replay — and the mapping survives restarts
             fp = workflow.fingerprint()
-            with self._idempotency_lock:
-                hit = self._idempotency.get(idempotency_key)
+            home = (
+                self.db.key_shard(idempotency_key)
+                if getattr(self.db, "is_sharded", False)
+                else None
+            )
+            store = self.stores["requests"]
+            with self.db.batch(shard=home):
+                hit = store.idempotency_get(idempotency_key)
                 if hit is not None:
-                    rid, orig_fp = hit
-                    if orig_fp != fp:
+                    if hit["fingerprint"] != fp:
                         raise ValidationError(
                             f"idempotency key {idempotency_key!r} was "
                             "already used for a different workflow "
                             "definition; keys must be unique per submission"
                         )
-                    self._idempotency.move_to_end(idempotency_key)
-                    return rid  # replayed submission: no new row, no event
-                request_id = _add()
-                self._idempotency[idempotency_key] = (request_id, fp)
-                while len(self._idempotency) > self._idempotency_max:
-                    self._idempotency.popitem(last=False)
+                    # replayed submission: no new row, no event
+                    return int(hit["request_id"])
+                request_id = _add(home)
+                store.idempotency_put(idempotency_key, fp, request_id)
         self.kernel.emit(new_request_event(request_id))
         return request_id
 
@@ -477,12 +529,14 @@ class Orchestrator:
     def monitor_summary(self) -> dict[str, Any]:
         db = self.db
         def _counts(table: str) -> dict[str, int]:
-            return {
-                r["status"]: int(r["n"])
-                for r in db.query(
-                    f"SELECT status, COUNT(*) AS n FROM {table} GROUP BY status"
-                )
-            }
+            # merge-sum: a sharded db concatenates per-shard GROUP BY rows,
+            # so the same status can appear once per shard
+            out: dict[str, int] = {}
+            for r in db.query(
+                f"SELECT status, COUNT(*) AS n FROM {table} GROUP BY status"
+            ):
+                out[r["status"]] = out.get(r["status"], 0) + int(r["n"])
+            return out
 
         coord = next(a for a in self.agents if isinstance(a, Coordinator))
         return {
@@ -491,6 +545,11 @@ class Orchestrator:
             "processings": _counts("processings"),
             "contents": _counts("contents"),
             "bus": coord.bus_report(),
+            "db": {
+                "engine": self.db.driver.name,
+                "n_shards": self.n_shards,
+                "stmt_cache": self.db.stmt_cache_stats(),
+            },
             "runtime": dict(self.runtime.stats),
             "broker": self.broker.summary(),
             "dead_letters": self.stores["dead_letters"].count(

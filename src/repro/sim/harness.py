@@ -52,6 +52,7 @@ class SimHarness:
         job_runtime_s: float = 0.0,
         batch_size: int = 64,
         runtime_kwargs: dict[str, Any] | None = None,
+        n_shards: int = 1,
     ):
         self.seed = seed
         self.tick_s = tick_s
@@ -70,8 +71,14 @@ class SimHarness:
             self.runtime.sleep_fn = self.clock.sleep
             self.runtime.fault_hook = self.plan.runtime_fault_hook
             self.runtime.message_hook = self.plan.runtime_message_hook
+            if n_shards > 1:
+                from repro.db.shard import ShardedDatabase
+
+                db: Database = ShardedDatabase(n_shards)
+            else:
+                db = Database(":memory:")
             self.orch = Orchestrator(
-                db=Database(":memory:"),
+                db=db,
                 bus_kind=bus_kind,
                 runtime=self.runtime,
                 poll_period_s=poll_period_s,
@@ -105,6 +112,18 @@ class SimHarness:
         # stale-claim takeover and Coordinator.recover must repair it
         self.crashes.append((self.ticks, consumer_id))
         self.trace.record("crash", agent=consumer_id)
+
+    def kill_replica(self, replica: int) -> None:
+        """Model a whole replica dying: every agent of that replica stops
+        cycling from the next tick on.  Its claims, outbox rows, and shard
+        ownership stay behind — stale-claim takeover by the surviving
+        replicas (plus the Coordinator's full-view recovery) must pick the
+        orphaned shards up."""
+        for agent in self.orch.agents:
+            if agent.replica == replica:
+                agent.enabled = False
+        self.crashes.append((self.ticks, f"replica-{replica}"))
+        self.trace.record("crash", agent=f"replica-{replica}")
 
     def tick(self) -> bool:
         self.clock.advance(self.tick_s)
@@ -172,8 +191,13 @@ class SimHarness:
         # stale_claim_s (30 s) so crashed replicas' claims are recoverable
         self.clock.advance(400.0)
         statuses = self.run_to_terminal(request_ids, max_ticks=max_ticks)
-        # let rollups/outbox drains settle
-        self.run_ticks(settle_ticks)
+        # let rollups/outbox drains settle; each settle tick jumps a full
+        # virtual second so throttled foreign-shard adoption probes
+        # (FOREIGN_SWEEP_PERIOD_S) get a fresh allowance every tick and
+        # orphaned-shard outbox rows drain within the settle window
+        for _ in range(settle_ticks):
+            self.clock.advance(1.0)
+            self.tick()
         return statuses
 
     def check_invariants(self, *, allow_suspended: bool = False) -> None:

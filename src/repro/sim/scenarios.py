@@ -444,6 +444,46 @@ def flapping_site_breaker(seed: int = 0) -> dict[str, Any]:
     return res
 
 
+# ---------------------------------------------------------------------------
+# 9. replica dies mid-drain on a sharded database, survivor takes over
+# ---------------------------------------------------------------------------
+def shard_replica_crash(seed: int = 0) -> dict[str, Any]:
+    """2 orchestrator replicas over 2 shards (durable DB bus): each
+    replica's agents sweep and drain only their own shard.  Mid-drain one
+    replica dies outright — its claims, outbox rows, and shard stay
+    behind.  The survivor must adopt the orphaned shard via the
+    stale-claim takeover grace (foreign shards are swept only when a
+    replica's own shards are idle and rows are overdue past the grace)
+    plus the Coordinator's full-view outbox recovery, and finish every
+    request exactly once: all Finished, no outbox row left on ANY shard,
+    digest-stable."""
+    with SimHarness(seed=seed, bus_kind="db", replicas=2, n_shards=2) as h:
+        rids = [
+            h.orch.submit_workflow(_chain_workflow(f"shard{i}", 3, 4))
+            for i in range(4)
+        ]
+        # round-robin placement: both shards must own live requests,
+        # otherwise the kill below proves nothing
+        per_shard = [
+            int(s.query_one("SELECT COUNT(*) AS n FROM requests")["n"])
+            for s in h.orch.db.shards
+        ]
+        assert all(n > 0 for n in per_shard), per_shard
+        h.run_ticks(6)  # mid-flight: claims + outbox rows on both shards
+        h.kill_replica(1)
+        statuses = h.quiesce(rids)
+        assert h.crashes, "kill_replica never registered"
+        assert all(s == "Finished" for s in statuses.values()), statuses
+        # exactly-once drain across shards: no undrained outbox row anywhere
+        left = sum(
+            int(r["n"])
+            for r in h.orch.db.query("SELECT COUNT(*) AS n FROM outbox")
+        )
+        assert left == 0, f"{left} undrained outbox rows"
+        h.check_invariants()
+        return _result(h, statuses)
+
+
 SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "replica_crash_mid_outbox_drain": replica_crash_mid_outbox_drain,
     "bus_partition_during_cascade_abort": bus_partition_during_cascade_abort,
@@ -453,6 +493,7 @@ SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "soak_2048_random_walk": soak_2048_random_walk,
     "poison_payload_quarantine": poison_payload_quarantine,
     "flapping_site_breaker": flapping_site_breaker,
+    "shard_replica_crash": shard_replica_crash,
 }
 
 #: the cheap scenarios — what CI's SIM_SMOKE step runs
@@ -461,6 +502,7 @@ SMOKE_SCENARIOS = (
     "straggler_site_relocation",
     "poison_payload_quarantine",
     "flapping_site_breaker",
+    "shard_replica_crash",
 )
 
 

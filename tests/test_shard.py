@@ -1,0 +1,270 @@
+"""Sharded hot stores (repro.db.shard): routing, placement, per-replica
+shard ownership, persistent idempotency, and the 4-replica/4-shard
+lifecycle drill.
+
+The router's contract: every id maps to exactly one shard (totality), the
+mapping is stable across processes (no seeded ``hash()``), a request and
+everything born under it share a shard, and cross-shard fan-outs preserve
+global id order because shard id ranges are disjoint and ascending.
+"""
+from __future__ import annotations
+
+import zlib
+
+import pytest
+
+from repro.common.exceptions import ValidationError
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+from repro.db.engine import Database
+from repro.db.shard import (
+    SHARD_BITS,
+    ShardedDatabase,
+    key_shard,
+    payload_shard,
+    replica_shards,
+    shard_of_id,
+)
+from repro.db.stores import make_stores
+from repro.orchestrator import Orchestrator
+from repro.sim import SMOKE_SCENARIOS, SimHarness
+from repro.sim.scenarios import shard_replica_crash
+
+
+# ---------------------------------------------------------------------------
+# routing functions
+# ---------------------------------------------------------------------------
+def test_shard_of_id_totality_over_10k_ids():
+    n = 4
+    seen = {s: 0 for s in range(n)}
+    for base_shard in range(n):
+        for i in range(2500):
+            eid = (base_shard << SHARD_BITS) + 1 + i
+            s = shard_of_id(eid, n)
+            assert 0 <= s < n
+            assert s == base_shard  # id ranges ARE the routing
+            seen[s] += 1
+    assert all(c == 2500 for c in seen.values()), seen
+
+
+def test_key_shard_is_crc32_not_builtin_hash():
+    # must be stable across processes: replicas in different interpreters
+    # (each with its own PYTHONHASHSEED) have to agree on a key's home
+    for key in ("alpha", "beta", "идемпотент", "k" * 100):
+        assert key_shard(key, 4) == zlib.crc32(key.encode("utf-8")) % 4
+
+
+def test_payload_shard_first_entity_id_wins():
+    rid_home = shard_of_id(1 << SHARD_BITS, 4)
+    assert payload_shard({"request_id": 1 << SHARD_BITS}, 4) == rid_home
+    # request_id outranks transform_id outranks content_ids
+    assert (
+        payload_shard(
+            {"request_id": 1 << SHARD_BITS, "transform_id": 2 << SHARD_BITS}, 4
+        )
+        == rid_home
+    )
+    assert payload_shard(
+        {"content_ids": [3 << SHARD_BITS]}, 4
+    ) == shard_of_id(3 << SHARD_BITS, 4)
+    # no ids at all: deterministic key fallback
+    assert payload_shard({}, 4, fallback_key="ev") == key_shard("ev", 4)
+
+
+def test_replica_shards_partition_is_total_and_disjoint():
+    for replicas, n_shards in [(1, 1), (1, 4), (2, 2), (2, 4), (4, 4), (3, 8)]:
+        covered: list[int] = []
+        for r in range(replicas):
+            own = replica_shards(r, replicas, n_shards)
+            assert own, (r, replicas, n_shards)
+            covered.extend(own)
+        assert sorted(covered) == list(range(n_shards)), (replicas, n_shards)
+    # more replicas than shards: everyone still owns something
+    for r in range(8):
+        assert list(replica_shards(r, 8, 4)) == [r % 4]
+
+
+# ---------------------------------------------------------------------------
+# sharded database: seeding, placement, fan-out ordering
+# ---------------------------------------------------------------------------
+def test_sequence_seeding_gives_disjoint_id_ranges():
+    db = ShardedDatabase(4)
+    stores = make_stores(db)
+    rids = [stores["requests"].add(f"r{i}") for i in range(8)]
+    # round-robin placement: two requests per shard, ids inside the
+    # shard's seeded range
+    by_shard: dict[int, list[int]] = {}
+    for rid in rids:
+        s = db.shard_of(rid)
+        assert (rid >> SHARD_BITS) % 4 == s
+        by_shard.setdefault(s, []).append(rid)
+    assert sorted(by_shard) == [0, 1, 2, 3]
+    assert all(len(v) == 2 for v in by_shard.values()), by_shard
+    db.close()
+
+
+def test_cross_shard_fanout_preserves_global_id_order():
+    db = ShardedDatabase(3)
+    stores = make_stores(db)
+    for i in range(9):
+        stores["requests"].add(f"r{i}")
+    rows = db.query("SELECT request_id FROM requests ORDER BY request_id")
+    ids = [int(r["request_id"]) for r in rows]
+    # per-shard ascending + disjoint ascending ranges ⇒ the shard-order
+    # concatenation is globally sorted
+    assert ids == sorted(ids)
+    # paginated list merges id-DESC across shards
+    listed = stores["requests"].list(limit=5)
+    listed_ids = [int(r["request_id"]) for r in listed]
+    assert listed_ids == sorted(ids, reverse=True)[:5]
+    db.close()
+
+
+def test_make_stores_dispatches_to_sharded_wrappers():
+    db = ShardedDatabase(2)
+    stores = make_stores(db)
+    assert type(stores["requests"]).__name__ == "ShardedRequestStore"
+    plain = make_stores(Database(":memory:"))
+    assert type(plain["requests"]).__name__ == "RequestStore"
+    db.close()
+
+
+def test_self_check_passes():
+    from repro.db.shard import _self_check
+
+    assert _self_check() == 0  # the CI gate: python -m repro.db.shard --check
+
+
+# ---------------------------------------------------------------------------
+# persistent idempotency (home-shard dedup)
+# ---------------------------------------------------------------------------
+def _wf(name: str) -> Workflow:
+    wf = Workflow(name)
+    wf.add_work(Work(f"{name}_w0", payload={"kind": "noop"}, n_jobs=1))
+    return wf
+
+
+def test_idempotent_submit_dedups_on_sharded_db():
+    orch = Orchestrator(n_shards=4, switch_interval_s=None)
+    rid = orch.submit_workflow(_wf("keyed"), idempotency_key="job-1")
+    again = orch.submit_workflow(_wf("keyed"), idempotency_key="job-1")
+    assert again == rid
+    with pytest.raises(ValidationError):
+        orch.submit_workflow(_wf("other"), idempotency_key="job-1")
+    # the request row lives on the key's home shard
+    assert orch.db.shard_of(rid) == orch.db.key_shard("job-1")
+
+
+def test_idempotency_survives_restart(tmp_path):
+    path = str(tmp_path / "sharded.db")
+    db = ShardedDatabase(2, path)
+    orch = Orchestrator(db=db, switch_interval_s=None)
+    rid = orch.submit_workflow(_wf("durable"), idempotency_key="persist-me")
+    db.close()
+    # a fresh process (new engines over the same files) must still dedup
+    db2 = ShardedDatabase(2, path)
+    orch2 = Orchestrator(db=db2, switch_interval_s=None)
+    assert (
+        orch2.submit_workflow(_wf("durable"), idempotency_key="persist-me")
+        == rid
+    )
+    with pytest.raises(ValidationError):
+        orch2.submit_workflow(_wf("changed"), idempotency_key="persist-me")
+    db2.close()
+
+
+def test_idempotent_submit_dedups_unsharded_too():
+    orch = Orchestrator(switch_interval_s=None)
+    rid = orch.submit_workflow(_wf("plain"), idempotency_key="k0")
+    assert orch.submit_workflow(_wf("plain"), idempotency_key="k0") == rid
+
+
+# ---------------------------------------------------------------------------
+# statement cache + monitor surface
+# ---------------------------------------------------------------------------
+def test_monitor_summary_reports_db_section():
+    orch = Orchestrator(n_shards=2, switch_interval_s=None)
+    orch.submit_workflow(_wf("mon"))
+    s = orch.monitor_summary()
+    assert s["db"]["n_shards"] == 2
+    assert s["db"]["engine"] == "sqlite"
+    cache = s["db"]["stmt_cache"]
+    assert cache["hits"] + cache["misses"] > 0
+    # repeated statements hit the prepared-statement cache
+    assert cache["hits"] > 0
+
+
+def test_monitor_counts_merge_sum_across_shards():
+    orch = Orchestrator(n_shards=4, switch_interval_s=None)
+    for i in range(8):
+        orch.submit_workflow(_wf(f"c{i}"))
+    s = orch.monitor_summary()
+    # 8 New requests spread over 4 shards must merge-sum, not overwrite
+    assert s["requests"].get("New") == 8, s["requests"]
+
+
+# ---------------------------------------------------------------------------
+# 4-replica / 4-shard lifecycle drill
+# ---------------------------------------------------------------------------
+def test_lifecycle_drill_4_replicas_4_shards():
+    """submit → cascade suspend → resume → finish on a durable bus, with
+    every replica sweeping only its own shard; afterwards each shard's
+    outbox is individually empty (exactly-once drain per shard)."""
+    with SimHarness(bus_kind="db", replicas=4, n_shards=4) as h:
+        # replica ownership really is one disjoint shard each
+        owned = [h.orch.shards_for_replica(r) for r in range(4)]
+        assert sorted(s for own in owned for s in own) == [0, 1, 2, 3]
+        rids = [
+            h.orch.submit_workflow(_chain(f"drill{i}", 2, 2))
+            for i in range(8)
+        ]
+        assert {h.orch.db.shard_of(rid) for rid in rids} == {0, 1, 2, 3}
+        h.run_ticks(4)  # mid-flight
+        for rid in rids:
+            _try(h.orch.suspend_request, rid)
+        h.run_ticks(4)
+        statuses = h.request_statuses(rids)
+        assert "Suspended" in set(statuses.values()), statuses
+        for rid in rids:
+            _try(h.orch.resume_request, rid)
+        statuses = h.quiesce(rids)
+        assert all(s == "Finished" for s in statuses.values()), statuses
+        for k, shard in enumerate(h.orch.db.shards):
+            row = shard.query_one("SELECT COUNT(*) AS n FROM outbox")
+            assert int(row["n"]) == 0, f"shard {k} outbox not drained"
+        h.check_invariants()
+
+
+def _chain(name: str, n_works: int, n_jobs: int) -> Workflow:
+    wf = Workflow(name)
+    prev = None
+    for i in range(n_works):
+        w = Work(f"{name}_w{i}", payload={"kind": "noop"}, n_jobs=n_jobs)
+        wf.add_work(w)
+        if prev:
+            wf.add_dependency(prev, w.name)
+        prev = w.name
+    return wf
+
+
+def _try(fn, *a):
+    from repro.common.exceptions import WorkflowError
+
+    try:
+        fn(*a)
+    except WorkflowError:
+        pass  # already terminal / not in a suspendable state: a race, not a bug
+
+
+# ---------------------------------------------------------------------------
+# crash scenario: in the smoke set, digest-stable
+# ---------------------------------------------------------------------------
+def test_shard_replica_crash_scenario_in_smoke_set():
+    assert "shard_replica_crash" in SMOKE_SCENARIOS
+
+
+def test_shard_replica_crash_digest_stable():
+    r1 = shard_replica_crash(3)
+    r2 = shard_replica_crash(3)
+    assert r1["digest"] == r2["digest"]
+    assert all(s == "Finished" for s in r1["statuses"].values())
