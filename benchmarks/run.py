@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV rows.  Modules:
   scheduling — §3.4.3 hybrid event/poll latency + overhead
   hpo        — Fig. 12 (distributed HPO)
   al         — Fig. 13 (Active Learning)
+  edge       — multi-tenant front door: 10k-client sim drill + long-poll HTTP economics
   kernels    — data-plane step/op timings (regression tracking)
   roofline   — §Roofline terms from the dry-run cache
   sim        — deterministic fault-scenario throughput (repro.sim)
@@ -31,6 +32,7 @@ def main() -> None:
         bench_broker,
         bench_carousel,
         bench_dag,
+        bench_edge,
         bench_eventbus,
         bench_hpo,
         bench_kernels,
@@ -44,6 +46,7 @@ def main() -> None:
         "broker": bench_broker,
         "carousel": bench_carousel,
         "dag": bench_dag,
+        "edge": bench_edge,
         "eventbus": bench_eventbus,
         "scheduling": bench_scheduling,
         "hpo": bench_hpo,

@@ -100,16 +100,26 @@ class Client(abc.ABC):
 
     @abc.abstractmethod
     def work_status(
-        self, request_id: int, work_name: str
+        self, request_id: int, work_name: str, *, wait_s: float | None = None
     ) -> tuple[str, Any]:
-        """(status, results) for one Work — what futures poll."""
+        """(status, results) for one Work — what futures poll.  ``wait_s``
+        requests a long-poll: the backend may park up to that long and
+        answer early on a terminal status (both built-in backends do);
+        a backend may also ignore it and answer immediately — futures
+        detect that and fall back to short-polling."""
 
     def works_status(
-        self, request_id: int, work_names: Sequence[str]
+        self,
+        request_id: int,
+        work_names: Sequence[str],
+        *,
+        wait_s: float | None = None,
     ) -> dict[str, tuple[str, Any]]:
         """Batched ``work_status`` (backends override with one round
-        trip where the transport makes that cheaper)."""
-        return {n: self.work_status(request_id, n) for n in work_names}
+        trip where the transport makes that cheaper).  ``wait_s``
+        long-polls until ANY named work is terminal."""
+        out = {n: self.work_status(request_id, n) for n in work_names}
+        return out
 
     @abc.abstractmethod
     def catalog(self, request_id: int) -> dict[str, Any]:

@@ -27,6 +27,10 @@ if TYPE_CHECKING:  # pragma: no cover - typing only
 #: (one authority, shared with ResultFuture in repro.core.fat)
 TERMINAL_WORK_STATES = frozenset(_TERMINAL)
 
+#: one long-poll leg: long waits are chunked so deadlines stay responsive
+#: and a single server round trip never parks longer than this
+_LONGPOLL_CHUNK_S = 10.0
+
 
 class WorkFuture:
     """Handle on one Work's eventual result, polled through a ``Client``.
@@ -34,25 +38,46 @@ class WorkFuture:
     Mirrors the ``concurrent.futures.Future`` reading API (``done`` /
     ``result`` / ``exception``) without the writer side — state lives in
     the orchestrator, the future only observes it.  Terminal polls are
-    cached so a resolved future never touches the transport again."""
+    cached so a resolved future never touches the transport again.
+
+    Waiting long-polls by default (``work_status(..., wait_s=…)``): the
+    server parks until the status is terminal, so one round trip replaces
+    a poll loop.  Clients whose ``work_status`` predates the ``wait_s``
+    keyword degrade to the old short-poll loop (sticky, detected once)."""
 
     def __init__(self, client: "Client", request_id: int, work_name: str):
         self.client = client
         self.request_id = int(request_id)
         self.work_name = work_name
         self._terminal: tuple[str, Any] | None = None
+        self._longpoll_ok = True
 
     # -- polling ------------------------------------------------------------
-    def poll(self) -> tuple[str, Any]:
-        """One status probe: (status, raw results), cached once terminal."""
-        if self._terminal is None:
+    def poll(self, wait_s: float | None = None) -> tuple[str, Any]:
+        """One status probe: (status, raw results), cached once terminal.
+        ``wait_s`` asks the backend to long-poll that long before
+        answering a non-terminal status."""
+        if self._terminal is not None:
+            return self._terminal
+        if wait_s is not None and wait_s > 0 and self._longpoll_ok:
+            try:
+                status, results = self.client.work_status(
+                    self.request_id, self.work_name, wait_s=wait_s
+                )
+            except TypeError:
+                # third-party Client without the wait_s keyword: remember
+                # and short-poll from now on
+                self._longpoll_ok = False
+                status, results = self.client.work_status(
+                    self.request_id, self.work_name
+                )
+        else:
             status, results = self.client.work_status(
                 self.request_id, self.work_name
             )
-            if status in TERMINAL_WORK_STATES:
-                self._terminal = (status, results)
-            return status, results
-        return self._terminal
+        if status in TERMINAL_WORK_STATES:
+            self._terminal = (status, results)
+        return status, results
 
     def _observe(self, status: str, results: Any) -> None:
         """Batched pollers (``as_completed``) push observations here."""
@@ -69,12 +94,19 @@ class WorkFuture:
     def result(self, timeout: float = 60.0, interval: float = 0.02) -> Any:
         deadline = utils.utc_now_ts() + timeout
         while True:
-            status, results = self.poll()
+            t0 = utils.utc_now_ts()
+            remaining = deadline - t0
+            wait_s = max(0.0, min(_LONGPOLL_CHUNK_S, remaining))
+            status, results = self.poll(wait_s)
             if status in TERMINAL_WORK_STATES:
                 return decode_work_results(self.work_name, status, results)
             if utils.utc_now_ts() > deadline:
                 raise TimeoutError(f"work {self.work_name} still {status}")
-            utils.sleep(interval)
+            # short-poll fallback: if the answer came back immediately
+            # (no long-poll happened — unsupported or ignored wait_s),
+            # pace the loop the old way instead of spinning
+            if utils.utc_now_ts() - t0 < interval:
+                utils.sleep(interval)
 
     def exception(
         self, timeout: float = 60.0, interval: float = 0.02
@@ -95,22 +127,36 @@ class WorkFuture:
         )
 
 
-def _poll_round(futures: list[WorkFuture]) -> dict[int, str]:
+def _poll_round(
+    futures: list[WorkFuture], wait_s: float | None = None
+) -> dict[int, str]:
     """Poll every pending future once, batching per (client, request):
     one ``works_status`` call covers all futures sharing a request.
     Returns {id(future): status} so callers reuse THIS round's answers
-    instead of re-polling the transport per future."""
+    instead of re-polling the transport per future.
+
+    ``wait_s`` long-polls, but only when every future shares ONE
+    (client, request) group — the server returns as soon as ANY of the
+    named works lands terminal.  With several groups a long-poll on the
+    first would starve updates from the others, so polling stays short."""
     groups: dict[tuple[int, int], list[WorkFuture]] = {}
     for f in futures:
         groups.setdefault((id(f.client), f.request_id), []).append(f)
+    wait: float | None = wait_s if len(groups) == 1 else None
     out: dict[int, str] = {}
     for group in groups.values():
         if len(group) == 1:
-            out[id(group[0])] = group[0].poll()[0]
+            out[id(group[0])] = group[0].poll(wait)[0]
             continue
-        statuses = group[0].client.works_status(
-            group[0].request_id, [f.work_name for f in group]
-        )
+        client, rid = group[0].client, group[0].request_id
+        names = [f.work_name for f in group]
+        if wait is not None and wait > 0:
+            try:
+                statuses = client.works_status(rid, names, wait_s=wait)
+            except TypeError:  # pre-wait_s Client implementation
+                statuses = client.works_status(rid, names)
+        else:
+            statuses = client.works_status(rid, names)
         for f in group:
             status, results = statuses.get(f.work_name, ("Unknown", None))
             f._observe(status, results)
@@ -125,11 +171,16 @@ def as_completed(
     interval: float = 0.02,
 ) -> Iterator[WorkFuture]:
     """Yield futures as they reach a terminal state (earliest finisher
-    first), like ``concurrent.futures.as_completed``."""
+    first), like ``concurrent.futures.as_completed``.  Polling long-polls
+    the server where it can (single request group) and short-polls
+    otherwise; either way every wait runs through the swappable
+    time/sleep providers."""
     pending = list(futures)
     deadline = utils.utc_now_ts() + timeout
     while pending:
-        statuses = _poll_round(pending)
+        t0 = utils.utc_now_ts()
+        wait_s = max(0.0, min(_LONGPOLL_CHUNK_S, deadline - t0))
+        statuses = _poll_round(pending, wait_s)
         still: list[WorkFuture] = []
         for f in pending:
             if statuses.get(id(f)) in TERMINAL_WORK_STATES:
@@ -142,7 +193,10 @@ def as_completed(
         if utils.utc_now_ts() > deadline:
             names = [f.work_name for f in pending]
             raise TimeoutError(f"{len(pending)} futures still pending: {names}")
-        utils.sleep(interval)
+        # pace the loop only when no long-poll actually happened (several
+        # groups, or a backend that ignores wait_s)
+        if utils.utc_now_ts() - t0 < interval:
+            utils.sleep(interval)
 
 
 def gather(

@@ -19,18 +19,21 @@ Two layers:
 from __future__ import annotations
 
 import base64
+import http.client
 import json
+import threading
 import urllib.error
-import urllib.request
 from typing import Any, Mapping, Sequence
-from urllib.parse import quote
+from urllib.parse import quote, urlsplit
 
 from repro.api.client import Client
 from repro.common import utils
 from repro.common.exceptions import (
     AuthenticationError,
     AuthorizationError,
+    MethodNotAllowedError,
     NotFoundError,
+    RateLimitedError,
     ReproError,
     ValidationError,
     WorkflowError,
@@ -43,6 +46,8 @@ ERROR_CODE_TO_EXC: dict[str, type[ReproError]] = {
     "unauthenticated": AuthenticationError,
     "permission_denied": AuthorizationError,
     "not_found": NotFoundError,
+    "method_not_allowed": MethodNotAllowedError,
+    "rate_limited": RateLimitedError,
     "conflict": WorkflowError,
     "invalid_argument": ValidationError,
 }
@@ -52,11 +57,23 @@ _STATUS_TO_EXC: dict[int, type[ReproError]] = {
     401: AuthenticationError,
     403: AuthorizationError,
     404: NotFoundError,
+    405: MethodNotAllowedError,
     409: WorkflowError,
+    429: RateLimitedError,
 }
 
-#: transient transport failures worth retrying on idempotent calls
-_RETRYABLE = (urllib.error.URLError, ConnectionError, TimeoutError)
+#: transient transport failures worth retrying on idempotent calls.
+#: URLError/Connection/Timeout are all OSError subclasses but stay named
+#: for documentation; HTTPException covers http.client protocol breakage.
+_RETRYABLE = (urllib.error.URLError, OSError, http.client.HTTPException)
+
+#: a pooled keep-alive connection the server quietly closed (or whose
+#: socket died under us): retried once on a fresh connection inside _once
+#: — but only when the failed connection had already served a request;
+#: a FRESH connection failing is a real error.  TimeoutError (the socket
+#: read timeout) is deliberately excluded: the server is alive but slow,
+#: and replaying would double the wait.
+_STALE_CONN = (OSError, http.client.HTTPException)
 
 
 class _RetryableStatus(Exception):
@@ -73,8 +90,17 @@ class _RetryableStatus(Exception):
 
 
 class HttpTransport:
-    """Thin urllib wrapper: one ``request()`` entry point for both API
-    versions, with typed error decoding and idempotent-GET retries.
+    """Pooled ``http.client`` wrapper: one ``request()`` entry point for
+    both API versions, with typed error decoding and idempotent-GET
+    retries.
+
+    Connection reuse: each thread keeps ONE persistent keep-alive
+    connection (HTTP/1.1 on both ends), re-established transparently when
+    the server closes it under us — a request on a *previously used*
+    pooled connection that dies mid-flight is replayed once on a fresh
+    connection before any error surfaces.  ``keepalive=False`` restores
+    the old connection-per-request behaviour (used by benchmarks as the
+    pre-pooling baseline).
 
     Backpressure-aware: 429/503 answers honour the server's ``Retry-After``
     header (capped at ``retry_after_cap_s`` per attempt), and the whole
@@ -93,14 +119,56 @@ class HttpTransport:
         backoff_s: float = 0.05,
         retry_window_s: float = 30.0,
         retry_after_cap_s: float = 5.0,
+        keepalive: bool = True,
     ):
         self.url = url.rstrip("/")
+        parts = urlsplit(self.url)
+        self._scheme = parts.scheme or "http"
+        self._host = parts.hostname or "localhost"
+        self._port = parts.port
+        self._base_path = parts.path.rstrip("/")
         self.token = token
         self.timeout_s = float(timeout_s)
         self.retries = int(retries)
         self.backoff_s = float(backoff_s)
         self.retry_window_s = float(retry_window_s)
         self.retry_after_cap_s = float(retry_after_cap_s)
+        self.keepalive = bool(keepalive)
+        self._local = threading.local()
+        #: observability for the connection-reuse benchmarks
+        self.calls = 0          # HTTP round trips completed (any status)
+        self.conns_opened = 0   # TCP connections established
+        self.reconnects = 0     # stale keep-alive connections replaced
+
+    # -- connection pool (one persistent connection per thread) -----------
+    def _connection(self) -> tuple[http.client.HTTPConnection, bool]:
+        """(connection, reused): the thread's pooled connection, or a
+        fresh one.  ``reused`` is True only when the connection already
+        served a request — the stale-retry discriminator."""
+        conn = getattr(self._local, "conn", None)
+        if conn is not None:
+            return conn, True
+        cls = (
+            http.client.HTTPSConnection
+            if self._scheme == "https"
+            else http.client.HTTPConnection
+        )
+        conn = cls(self._host, self._port, timeout=self.timeout_s)
+        self.conns_opened += 1
+        return conn, False
+
+    def _drop_connection(self) -> None:
+        conn = getattr(self._local, "conn", None)
+        self._local.conn = None
+        if conn is not None:
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover - close is best-effort
+                pass
+
+    def close(self) -> None:
+        """Release the calling thread's pooled connection."""
+        self._drop_connection()
 
     def request(
         self,
@@ -110,6 +178,7 @@ class HttpTransport:
         *,
         headers: Mapping[str, str] | None = None,
         idempotent: bool | None = None,
+        timeout_s: float | None = None,
     ) -> dict[str, Any]:
         """Issue one call; GETs (or ``idempotent=True`` calls, e.g. keyed
         submissions) are retried with exponential backoff on transport
@@ -117,20 +186,29 @@ class HttpTransport:
         429 answers are retried for any verb (the server rejected the call
         before processing it), 503 only when idempotent; both honour
         ``Retry-After``.  No retry sleeps past the ``retry_window_s``
-        deadline — the typed error surfaces instead."""
+        deadline — the typed error surfaces instead.  ``timeout_s``
+        overrides the per-request socket timeout (long-polls pass
+        window + default so the wait never trips the read timeout)."""
         if idempotent is None:
             idempotent = method == "GET"
         attempts = self.retries if idempotent else 0
         delay = self.backoff_s
         deadline = utils.utc_now_ts() + self.retry_window_s
         attempt = 0
+        # tests monkeypatch _once(method, path, body, headers); only pass
+        # the timeout override when one was actually requested
+        args = (
+            (method, path, body, headers)
+            if timeout_s is None
+            else (method, path, body, headers, timeout_s)
+        )
         while True:
             try:
                 # NB: HTTP status errors surface as typed ReproErrors from
                 # _once (the server answered) and are never retried — except
                 # the explicit backpressure statuses below; only transport-
                 # level failures reach the _RETRYABLE arm.
-                return self._once(method, path, body, headers)
+                return self._once(*args)
             except _RetryableStatus as exc:
                 budget = self.retries if exc.code == 429 else attempts
                 wait = (
@@ -158,44 +236,78 @@ class HttpTransport:
         path: str,
         body: Mapping[str, Any] | None,
         headers: Mapping[str, str] | None,
+        timeout_s: float | None = None,
     ) -> dict[str, Any]:
         data = json.dumps(body).encode() if body is not None else None
-        req = urllib.request.Request(self.url + path, data=data, method=method)
-        req.add_header("Content-Type", "application/json")
+        hdrs = {"Content-Type": "application/json"}
         if self.token:
-            req.add_header("Authorization", f"Bearer {self.token}")
-        for k, v in (headers or {}).items():
-            req.add_header(k, v)
-        try:
-            with urllib.request.urlopen(req, timeout=self.timeout_s) as resp:
-                return json.loads(resp.read())
-        except urllib.error.HTTPError as exc:
-            decoded = self._decode_error(method, path, exc)
-            if exc.code in (429, 503):
-                ra = exc.headers.get("Retry-After") if exc.headers else None
-                try:
-                    retry_after = float(ra) if ra is not None else None
-                except (TypeError, ValueError):
-                    retry_after = None
-                raise _RetryableStatus(exc.code, retry_after, decoded) from exc
-            raise decoded from exc
+            hdrs["Authorization"] = f"Bearer {self.token}"
+        hdrs.update(headers or {})
+        if not self.keepalive:
+            hdrs["Connection"] = "close"
+        want_timeout = self.timeout_s if timeout_s is None else float(timeout_s)
+        while True:
+            conn, reused = self._connection()
+            try:
+                if conn.sock is not None:
+                    conn.sock.settimeout(want_timeout)
+                else:
+                    conn.timeout = want_timeout
+                conn.request(
+                    method, self._base_path + path, body=data, headers=hdrs
+                )
+                resp = conn.getresponse()
+                payload = resp.read()
+            except TimeoutError:
+                self._drop_connection()
+                raise
+            except _STALE_CONN:
+                self._drop_connection()
+                if reused:
+                    # the server closed an idle keep-alive connection
+                    # between our requests: replay once on a fresh one
+                    self.reconnects += 1
+                    continue
+                raise
+            break
+        self.calls += 1
+        if resp.will_close or not self.keepalive:
+            self._drop_connection()
+            try:
+                conn.close()
+            except OSError:  # pragma: no cover
+                pass
+        else:
+            self._local.conn = conn
+        status = int(resp.status)
+        if 200 <= status < 300:
+            return json.loads(payload or b"{}")
+        decoded = self._decode_error(method, path, status, payload)
+        if status in (429, 503):
+            ra = resp.headers.get("Retry-After")
+            try:
+                retry_after = float(ra) if ra is not None else None
+            except (TypeError, ValueError):
+                retry_after = None
+            raise _RetryableStatus(status, retry_after, decoded)
+        raise decoded
 
     @staticmethod
     def _decode_error(
-        method: str, path: str, exc: urllib.error.HTTPError
+        method: str, path: str, status: int, raw: bytes
     ) -> ReproError:
         try:
-            payload = json.loads(exc.read())
+            payload = json.loads(raw)
         except Exception:  # noqa: BLE001 - non-JSON error body
-            payload = {"error": str(exc)}
-        err = payload.get("error")
+            payload = {"error": raw.decode(errors="replace")}
+        err = payload.get("error") if isinstance(payload, dict) else None
         if isinstance(err, Mapping):  # v2 envelope
             exc_cls = ERROR_CODE_TO_EXC.get(str(err.get("code")), ReproError)
             message = err.get("message")
         else:  # v1 string error
-            exc_cls = _STATUS_TO_EXC.get(exc.code, ReproError)
+            exc_cls = _STATUS_TO_EXC.get(status, ReproError)
             message = err
-        return exc_cls(f"HTTP {exc.code} on {method} {path}: {message}")
+        return exc_cls(f"HTTP {status} on {method} {path}: {message}")
 
 
 class HttpClient(Client):
@@ -209,6 +321,7 @@ class HttpClient(Client):
         timeout_s: float = 30.0,
         retries: int = 2,
         backoff_s: float = 0.05,
+        keepalive: bool = True,
         transport: HttpTransport | None = None,
     ):
         self.transport = transport or HttpTransport(
@@ -217,6 +330,7 @@ class HttpClient(Client):
             timeout_s=timeout_s,
             retries=retries,
             backoff_s=backoff_s,
+            keepalive=keepalive,
         )
 
     # -- auth ------------------------------------------------------------------
@@ -313,15 +427,32 @@ class HttpClient(Client):
             qs += f"&status={status}"
         return self.transport.request("GET", f"/v2/request?{qs}")
 
-    def work_status(self, request_id: int, work_name: str) -> tuple[str, Any]:
-        out = self.transport.request(
-            "GET",
-            f"/v2/request/{int(request_id)}/work/{quote(work_name, safe='')}",
+    def work_status(
+        self,
+        request_id: int,
+        work_name: str,
+        *,
+        wait_s: float | None = None,
+    ) -> tuple[str, Any]:
+        """``wait_s`` long-polls: the server parks up to that long and
+        answers early on a terminal status — one round trip instead of a
+        poll loop.  The socket timeout is widened by the wait window."""
+        path = (
+            f"/v2/request/{int(request_id)}/work/{quote(work_name, safe='')}"
         )
+        kw: dict[str, Any] = {}
+        if wait_s is not None and wait_s > 0:
+            path += f"?wait={float(wait_s):g}"
+            kw["timeout_s"] = self.transport.timeout_s + float(wait_s)
+        out = self.transport.request("GET", path, **kw)
         return out["status"], out.get("results")
 
     def works_status(
-        self, request_id: int, work_names: Sequence[str]
+        self,
+        request_id: int,
+        work_names: Sequence[str],
+        *,
+        wait_s: float | None = None,
     ) -> dict[str, tuple[str, Any]]:
         # the batch endpoint is comma-delimited, so a (rare) name that
         # itself contains a comma falls back to individual fetches
@@ -333,9 +464,12 @@ class HttpClient(Client):
         }
         if batchable:
             names = ",".join(quote(n, safe="") for n in batchable)
-            reply = self.transport.request(
-                "GET", f"/v2/request/{int(request_id)}/works?names={names}"
-            )
+            path = f"/v2/request/{int(request_id)}/works?names={names}"
+            kw: dict[str, Any] = {}
+            if wait_s is not None and wait_s > 0:
+                path += f"&wait={float(wait_s):g}"
+                kw["timeout_s"] = self.transport.timeout_s + float(wait_s)
+            reply = self.transport.request("GET", path, **kw)
             for name, w in reply["works"].items():
                 out[name] = (w["status"], w.get("results"))
         return out

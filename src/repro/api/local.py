@@ -62,8 +62,30 @@ class LocalClient(Client):
         )
         return row["status"]
 
-    def work_status(self, request_id: int, work_name: str) -> tuple[str, Any]:
+    def work_status(
+        self,
+        request_id: int,
+        work_name: str,
+        *,
+        wait_s: float | None = None,
+    ) -> tuple[str, Any]:
+        if wait_s is not None and wait_s > 0:
+            return self.orch.work_status_wait(
+                int(request_id), work_name, wait_s
+            )
         return self.orch.work_status(int(request_id), work_name)
+
+    def works_status(
+        self,
+        request_id: int,
+        work_names: Any,
+        *,
+        wait_s: float | None = None,
+    ) -> dict[str, tuple[str, Any]]:
+        names = list(work_names)
+        if wait_s is not None and wait_s > 0:
+            return self.orch.works_status_wait(int(request_id), names, wait_s)
+        return {n: self.orch.work_status(int(request_id), n) for n in names}
 
     def catalog(self, request_id: int) -> dict[str, Any]:
         return self.orch.catalog(int(request_id))

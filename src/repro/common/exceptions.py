@@ -31,6 +31,26 @@ class AuthorizationError(ReproError):
     pass
 
 
+class RateLimitedError(ReproError):
+    """The API edge refused admission (per-user / global quota exceeded).
+
+    ``retry_after_s`` is the server's backoff hint; the REST layer maps it
+    to a 429 response with a ``Retry-After`` header, which the HTTP
+    transport's retry loop already honours."""
+
+    def __init__(self, message: str, *, retry_after_s: float = 1.0):
+        super().__init__(message)
+        self.retry_after_s = float(retry_after_s)
+
+
+class MethodNotAllowedError(ReproError):
+    """The path exists but not for this HTTP method (405 + ``Allow``)."""
+
+    def __init__(self, message: str, *, allowed: tuple[str, ...] = ()):
+        super().__init__(message)
+        self.allowed = tuple(allowed)
+
+
 class WorkflowError(ReproError):
     pass
 

@@ -63,6 +63,14 @@ def sleep(seconds: float) -> None:
     _sleep_provider(seconds)
 
 
+def sleep_is_virtual() -> bool:
+    """True when a replacement sleep provider is installed (the sim's
+    virtual clock).  Blocking primitives that park OS threads (condition
+    waits, socket timeouts) must degrade to ``sleep`` in that case, or
+    they would stall real time inside a single-threaded simulation."""
+    return _sleep_provider is not time.sleep
+
+
 # id generation sits on the per-workload/per-work hot path: an os.urandom
 # syscall per id (uuid4) is measurable there, so seed a PRNG once instead.
 _uid_rng = random.Random(int.from_bytes(os.urandom(16), "big"))

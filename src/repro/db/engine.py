@@ -27,6 +27,7 @@ from __future__ import annotations
 
 import sqlite3
 import threading
+import time
 from collections import OrderedDict
 from contextlib import contextmanager
 from typing import Any, Callable, Iterator, Sequence
@@ -174,6 +175,65 @@ def resolve_driver(driver: Any = None) -> Any:
     return driver
 
 
+class WriteSignal:
+    """Condition signalled after every committed write transaction.
+
+    ``notify`` checks the waiter count WITHOUT taking the condition lock,
+    so the per-commit cost when nobody long-polls is one attribute read.
+    The price is a benign race (a waiter registering concurrently with a
+    commit can miss that one notify), which ``wait_for_write`` absorbs by
+    capping each condition wait at a short slice and re-reading the
+    generation counter — a missed wakeup costs at most one slice of
+    latency, never the whole long-poll window.
+    """
+
+    __slots__ = ("cond", "waiters")
+
+    def __init__(self) -> None:
+        self.cond = threading.Condition()
+        self.waiters = 0
+
+    def notify(self) -> None:
+        if self.waiters:
+            with self.cond:
+                self.cond.notify_all()
+
+
+#: upper bound on one condition-wait slice (see WriteSignal docstring)
+_WAIT_SLICE_S = 0.05
+
+
+def wait_for_write(db: Any, gen: int, timeout_s: float) -> int:
+    """Shared long-poll primitive for Database and ShardedDatabase: park
+    until ``db.write_gen`` moves past ``gen`` (any committed write) or the
+    timeout elapses; returns the generation observed on exit.
+
+    Under the sim's virtual clock there are no writer threads to wake us —
+    progress happens when the caller's loop ticks the harness — so this
+    degrades to a single virtual sleep, which the clock turns into an
+    instant deterministic advance."""
+    from repro.common import utils
+
+    if timeout_s <= 0 or db.write_gen != gen:
+        return db.write_gen
+    if utils.sleep_is_virtual():
+        utils.sleep(timeout_s)
+        return db.write_gen
+    deadline = time.monotonic() + timeout_s
+    sig = db.write_signal
+    with sig.cond:
+        while db.write_gen == gen:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            sig.waiters += 1
+            try:
+                sig.cond.wait(min(_WAIT_SLICE_S, remaining))
+            finally:
+                sig.waiters -= 1
+    return db.write_gen
+
+
 class Database:
     """Thread-safe sqlite wrapper with one connection per thread.
 
@@ -210,6 +270,11 @@ class Database:
         #: scans when nothing can possibly have changed (idle-poll gating)
         self.write_gen = 0
         self._gen_lock = threading.Lock()
+        #: long-poll park point: notified on every committed write (only
+        #: when someone is actually waiting — zero hot-path cost otherwise).
+        #: ShardedDatabase replaces this with ONE instance shared by all
+        #: shards so a waiter sees commits on any shard.
+        self.write_signal = WriteSignal()
         if self._memory:
             # One shared connection guarded by a lock: ':memory:' DBs are
             # per-connection, so threads must share.
@@ -304,6 +369,13 @@ class Database:
         # would let the idle-poll gate skip work that is actually due
         with self._gen_lock:
             self.write_gen += 1
+        self.write_signal.notify()
+
+    def wait_write(self, gen: int, timeout_s: float) -> int:
+        """Park until ``write_gen`` moves past ``gen`` or ``timeout_s``
+        elapses; returns the current generation.  The REST long-poll
+        handlers sit here instead of spinning status queries."""
+        return wait_for_write(self, gen, timeout_s)
 
     @contextmanager
     def _write_guard(self) -> Iterator[None]:

@@ -158,6 +158,11 @@ class ShardedDatabase:
         self._stores_lock = threading.Lock()
         self._placement = 0
         self._placement_lock = threading.Lock()
+        # ONE write signal shared by every shard: a long-poll waiter must
+        # wake on a commit to ANY shard (write_gen below sums all shards)
+        self.write_signal = self.shards[0].write_signal
+        for s in self.shards[1:]:
+            s.write_signal = self.write_signal
         self._seed_sequences()
 
     # -- id routing ------------------------------------------------------
@@ -268,6 +273,12 @@ class ShardedDatabase:
     @property
     def write_gen(self) -> int:
         return sum(s.write_gen for s in self.shards)
+
+    def wait_write(self, gen: int, timeout_s: float) -> int:
+        """Park until any shard commits a write (see Database.wait_write)."""
+        from repro.db.engine import wait_for_write
+
+        return wait_for_write(self, gen, timeout_s)
 
     @property
     def fault_hook(self) -> Callable[[str], None] | None:

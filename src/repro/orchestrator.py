@@ -28,6 +28,7 @@ from repro.agents import (
 from repro.common.constants import (
     RequestStatus,
     TERMINAL_REQUEST_STATES,
+    TERMINAL_TRANSFORM_STATES,
 )
 from repro.common.exceptions import (
     NotFoundError,
@@ -154,6 +155,10 @@ class Orchestrator:
             for r in range(replicas)
         ]
         self._started = False
+        #: edge admission gate (repro.rest.edge.EdgeGate), attached by the
+        #: REST layer when quotas are configured; surfaced in
+        #: monitor_summary()["edge"] so dashboards see rejections/inflight
+        self.edge: Any | None = None
         # agent threads are short-burst IO/lock-bound; the interpreter's
         # default 5 ms switch interval turns every lock handoff into a
         # scheduling quantum.  A tighter interval cuts hot-path latency.
@@ -399,6 +404,57 @@ class Orchestrator:
         meta = trow.get("transform_metadata") or {}
         return (trow["status"], meta.get("results"))
 
+    # terminal-or-unanswerable work statuses: a long-poll returns as soon
+    # as one of these is observed (Unknown = the request id itself is bad)
+    _WORK_DONE = frozenset(
+        {str(s) for s in TERMINAL_TRANSFORM_STATES} | {"Unknown"}
+    )
+
+    def work_status_wait(
+        self, request_id: int, node_id: str, wait_s: float
+    ) -> tuple[str, Any]:
+        """Long-poll ``work_status``: parks on the database write signal
+        and re-reads only when something actually committed, returning
+        early on a terminal status.  At the deadline the current
+        (possibly non-terminal) status is returned — a long-poll never
+        errors on timeout, it just answers 'still running'."""
+        status, results = self.work_status(request_id, node_id)
+        deadline = utc_now_ts() + wait_s
+        gen = self.db.write_gen
+        while status not in self._WORK_DONE:
+            remaining = deadline - utc_now_ts()
+            if remaining <= 0:
+                break
+            new_gen = self.db.wait_write(gen, remaining)
+            if new_gen == gen:
+                continue  # timed slice expired with no commits
+            gen = new_gen
+            status, results = self.work_status(request_id, node_id)
+        return (status, results)
+
+    def works_status_wait(
+        self, request_id: int, node_ids: list[str], wait_s: float
+    ) -> dict[str, tuple[str, Any]]:
+        """Batched long-poll: returns as soon as ANY of the named works is
+        terminal (callers pass only still-pending names, so one completion
+        is exactly the wake-up they want), else at the deadline."""
+        def _read() -> dict[str, tuple[str, Any]]:
+            return {n: self.work_status(request_id, n) for n in node_ids}
+
+        out = _read()
+        deadline = utc_now_ts() + wait_s
+        gen = self.db.write_gen
+        while not any(st in self._WORK_DONE for st, _ in out.values()):
+            remaining = deadline - utc_now_ts()
+            if remaining <= 0:
+                break
+            new_gen = self.db.wait_write(gen, remaining)
+            if new_gen == gen:
+                continue
+            gen = new_gen
+            out = _read()
+        return out
+
     def wait_request(
         self,
         request_id: int,
@@ -555,6 +611,8 @@ class Orchestrator:
             "dead_letters": self.stores["dead_letters"].count(
                 status="Quarantined"
             ),
+            # API-edge admission gate (None when no quotas are configured)
+            "edge": self.edge.summary() if self.edge is not None else None,
             "orphaned_processings": sum(
                 a.orphaned for a in self.agents if isinstance(a, Poller)
             ),

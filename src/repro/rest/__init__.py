@@ -2,3 +2,4 @@
 from repro.rest.app import RestApp, RestServer  # noqa: F401
 from repro.rest.auth import AuthService  # noqa: F401
 from repro.rest.client import RestClient  # noqa: F401
+from repro.rest.edge import EdgeGate  # noqa: F401

@@ -25,6 +25,7 @@ Two API versions share the table:
 from __future__ import annotations
 
 import base64
+import itertools
 import json
 import re
 import threading
@@ -35,7 +36,9 @@ from urllib.parse import parse_qs, unquote, urlparse
 from repro.common.exceptions import (
     AuthenticationError,
     AuthorizationError,
+    MethodNotAllowedError,
     NotFoundError,
+    RateLimitedError,
     ReproError,
     ValidationError,
     WorkflowError,
@@ -44,8 +47,10 @@ from repro.core.fat import GLOBAL_CODE_CACHE
 from repro.core.workflow import Workflow
 from repro.orchestrator import Orchestrator
 from repro.rest.auth import AuthService
+from repro.rest.edge import EdgeGate
 
-Route = tuple[str, re.Pattern[str], str | None, Callable[..., Any]]
+#: (method, pattern, required role, recognized query params, handler)
+Route = tuple[str, re.Pattern[str], str | None, tuple[str, ...], Callable[..., Any]]
 
 #: exception class → (HTTP status, machine-readable v2 error code); first
 #: match wins, so subclasses must precede ReproError
@@ -53,6 +58,8 @@ ERROR_MAP: tuple[tuple[type[Exception], int, str], ...] = (
     (AuthenticationError, 401, "unauthenticated"),
     (AuthorizationError, 403, "permission_denied"),
     (NotFoundError, 404, "not_found"),
+    (MethodNotAllowedError, 405, "method_not_allowed"),
+    (RateLimitedError, 429, "rate_limited"),
     # illegal lifecycle transition → conflict with current state
     (WorkflowError, 409, "conflict"),
     (ValidationError, 400, "invalid_argument"),
@@ -65,16 +72,38 @@ _V1_DEPRECATION = 'version="v1"; successor="/v2"'
 class RestApp:
     """Routing + handlers, independent of the HTTP plumbing (testable)."""
 
-    def __init__(self, orch: Orchestrator | None, auth: AuthService | None = None):
+    def __init__(
+        self,
+        orch: Orchestrator | None,
+        auth: AuthService | None = None,
+        *,
+        edge: EdgeGate | None = None,
+        longpoll_max_s: float = 30.0,
+    ):
         self.orch = orch
         self.auth = auth or AuthService()
+        #: admission gate; attach it to the orchestrator so its counters
+        #: surface in monitor_summary()["edge"]
+        self.edge = edge
+        if edge is not None and orch is not None:
+            orch.edge = edge
+        #: cap on the ``?wait=`` long-poll window (seconds)
+        self.longpoll_max_s = float(longpoll_max_s)
         self.routes: list[Route] = []
         self._register_routes()
 
     # -- route registration ---------------------------------------------------
-    def route(self, method: str, pattern: str, role: str | None):
+    def route(
+        self,
+        method: str,
+        pattern: str,
+        role: str | None,
+        params: tuple[str, ...] = (),
+    ):
         def deco(fn: Callable[..., Any]) -> Callable[..., Any]:
-            self.routes.append((method, re.compile(f"^{pattern}$"), role, fn))
+            self.routes.append(
+                (method, re.compile(f"^{pattern}$"), role, tuple(params), fn)
+            )
             return fn
 
         return deco
@@ -90,7 +119,9 @@ class RestApp:
             r("POST", rf"{v}/auth/token", None)(self._auth_token)
             # request -----------------------------------------------------------
             r("POST", rf"{v}/request", "submit")(self._request_submit)
-            r("GET", rf"{v}/request/{_id}", "read")(self._request_get)
+            r("GET", rf"{v}/request/{_id}", "read", ("fields",))(
+                self._request_get
+            )
             r("POST", rf"{v}/request/{_id}/abort", "submit")(self._request_abort)
             # lifecycle control plane: synchronous kernel commands (404 on
             # unknown request, 409 on an illegal transition)
@@ -116,15 +147,26 @@ class RestApp:
             r("GET", rf"{v}/log/{_id}", "read")(self._log)
         # v2-only resources ---------------------------------------------------
         # paginated request listing
-        r("GET", r"/v2/request", "read")(self._request_list)
-        # per-work status+result (what remote FaT futures poll)
-        r("GET", rf"/v2/request/{_id}/work/(?P<work_name>[^/?]+)", "read")(
-            self._work_get
+        r("GET", r"/v2/request", "read", ("limit", "offset", "status"))(
+            self._request_list
         )
-        # batched variant: ?names=a,b,c — one round trip per poll sweep
-        r("GET", rf"/v2/request/{_id}/works", "read")(self._works_get)
+        # per-work status+result (what remote FaT futures poll);
+        # ?wait=<s> long-polls until the status is terminal or <s> elapsed
+        r(
+            "GET",
+            rf"/v2/request/{_id}/work/(?P<work_name>[^/?]+)",
+            "read",
+            ("wait",),
+        )(self._work_get)
+        # batched variant: ?names=a,b,c — one round trip per poll sweep;
+        # ?wait=<s> long-polls until ANY named work is terminal
+        r("GET", rf"/v2/request/{_id}/works", "read", ("names", "wait"))(
+            self._works_get
+        )
         # dead-letter queue (quarantined poison payloads)
-        r("GET", r"/v2/deadletter", "read")(self._deadletter_list)
+        r("GET", r"/v2/deadletter", "read", ("limit", "offset", "status"))(
+            self._deadletter_list
+        )
         r(
             "POST",
             r"/v2/deadletter/(?P<dead_letter_id>\d+)"
@@ -134,11 +176,17 @@ class RestApp:
 
     def route_table(self) -> list[dict[str, Any]]:
         """Stable description of the registered surface (method, pattern,
-        required role) — input to the API-surface snapshot check."""
+        required role, query params) — input to the API-surface snapshot
+        check."""
         return sorted(
             (
-                {"method": m, "pattern": pat.pattern, "role": role}
-                for m, pat, role, _fn in self.routes
+                {
+                    "method": m,
+                    "pattern": pat.pattern,
+                    "role": role,
+                    "params": sorted(params),
+                }
+                for m, pat, role, params, _fn in self.routes
             ),
             key=lambda d: (d["pattern"], d["method"]),
         )
@@ -159,11 +207,16 @@ class RestApp:
         resp_headers: dict[str, str] = {}
         if not v2:
             resp_headers["Deprecation"] = _V1_DEPRECATION
-        for m, pattern, role, fn in self.routes:
-            if m != method:
-                continue
+        # methods seen on routes whose pattern matched the path but whose
+        # method did not — a known resource hit the wrong way is 405+Allow,
+        # not 404 (the path plainly exists)
+        allowed: set[str] = set()
+        for m, pattern, role, _params, fn in self.routes:
             match = pattern.match(path)
             if not match:
+                continue
+            if m != method:
+                allowed.add(m)
                 continue
             try:
                 claims: dict[str, Any] | None = None
@@ -185,8 +238,20 @@ class RestApp:
                 )
                 return 200, out, resp_headers
             except Exception as exc:  # noqa: BLE001 - mapped to HTTP below
+                if isinstance(exc, RateLimitedError):
+                    # the one header the PR 7 client retry loop honours
+                    resp_headers["Retry-After"] = (
+                        f"{exc.retry_after_s:.3f}"
+                    )
                 status, payload = self._error_payload(exc, v2=v2)
                 return status, payload, resp_headers
+        if allowed:
+            resp_headers["Allow"] = ", ".join(sorted(allowed))
+            exc = MethodNotAllowedError(
+                f"{method} not allowed on {path}",
+                allowed=tuple(sorted(allowed)),
+            )
+            return (*self._error_payload(exc, v2=v2), resp_headers)
         return (
             404,
             self._error_payload(
@@ -262,13 +327,24 @@ class RestApp:
             raise ValidationError(f"priority must be an integer: {exc}") from exc
         # idempotency: body field wins, else the conventional header
         idem = body.get("idempotency_key") or headers.get("idempotency-key")
-        request_id = self.orch.submit_workflow(
-            wf,
-            requester=requester,
-            scope=str(body.get("scope", "default")),
-            priority=priority,
-            idempotency_key=idem,
-        )
+        # edge admission AFTER delegation resolution: a delegated submit
+        # spends the delegate's quota, exactly like their fair share
+        if self.edge is not None:
+            self.edge.admit(requester)  # raises RateLimitedError → 429
+        try:
+            request_id = self.orch.submit_workflow(
+                wf,
+                requester=requester,
+                scope=str(body.get("scope", "default")),
+                priority=priority,
+                idempotency_key=idem,
+            )
+        except BaseException:
+            if self.edge is not None:
+                self.edge.cancel(requester)
+            raise
+        if self.edge is not None:
+            self.edge.note(requester, request_id)
         return {"request_id": request_id}
 
     def _request_get(
@@ -340,11 +416,31 @@ class RestApp:
             return self.orch.requeue_dead_letter(int(dead_letter_id))
         return self.orch.discard_dead_letter(int(dead_letter_id))
 
+    def _wait_param(self, query: dict[str, list[str]]) -> float:
+        """``?wait=<s>`` long-poll window, clamped to [0, longpoll_max_s]."""
+        raw = (query.get("wait") or ["0"])[0]
+        try:
+            return max(0.0, min(self.longpoll_max_s, float(raw)))
+        except ValueError as exc:
+            raise ValidationError(
+                f"query param 'wait' must be a number of seconds: {raw!r}"
+            ) from exc
+
     def _work_get(
-        self, request_id: str, work_name: str, **kw: Any
+        self,
+        request_id: str,
+        work_name: str,
+        query: dict[str, list[str]],
+        **kw: Any,
     ) -> dict[str, Any]:
         rid = int(request_id)
-        status, results = self.orch.work_status(rid, work_name)
+        wait_s = self._wait_param(query)
+        if wait_s > 0:
+            status, results = self.orch.work_status_wait(
+                rid, work_name, wait_s
+            )
+        else:
+            status, results = self.orch.work_status(rid, work_name)
         return {
             "request_id": rid,
             "work": work_name,
@@ -361,10 +457,15 @@ class RestApp:
             names.extend(n for n in raw.split(",") if n)
         if not names:
             raise ValidationError("query param 'names' is required (a,b,c)")
-        works: dict[str, Any] = {}
-        for name in names:
-            status, results = self.orch.work_status(rid, name)
-            works[name] = {"status": status, "results": results}
+        wait_s = self._wait_param(query)
+        if wait_s > 0:
+            statuses = self.orch.works_status_wait(rid, names, wait_s)
+        else:
+            statuses = {n: self.orch.work_status(rid, n) for n in names}
+        works = {
+            name: {"status": status, "results": results}
+            for name, (status, results) in statuses.items()
+        }
         return {"request_id": rid, "works": works}
 
     def _cache_put(self, body: dict[str, Any], **kw: Any) -> dict[str, Any]:
@@ -393,8 +494,20 @@ class RestApp:
         return self.orch.request_log(int(request_id))
 
 
+#: one id per accepted TCP connection — lets tests (and curious clients)
+#: observe keep-alive reuse via the X-Connection-Id response header
+_conn_ids = itertools.count(1)
+
+
 class _Handler(BaseHTTPRequestHandler):
     app: RestApp
+    # HTTP/1.1 turns on persistent connections in BaseHTTPRequestHandler;
+    # _reply always sends Content-Length, which 1.1 keep-alive requires
+    protocol_version = "HTTP/1.1"
+
+    def setup(self) -> None:
+        super().setup()
+        self.conn_id = next(_conn_ids)
 
     def _serve(self, method: str) -> None:
         parsed = urlparse(self.path)
@@ -416,13 +529,19 @@ class _Handler(BaseHTTPRequestHandler):
         self, status: int, payload: dict[str, Any], headers: dict[str, str]
     ) -> None:
         data = json.dumps(payload).encode()
-        self.send_response(status)
-        self.send_header("Content-Type", "application/json")
-        self.send_header("Content-Length", str(len(data)))
-        for k, v in headers.items():
-            self.send_header(k, v)
-        self.end_headers()
-        self.wfile.write(data)
+        try:
+            self.send_response(status)
+            self.send_header("Content-Type", "application/json")
+            self.send_header("Content-Length", str(len(data)))
+            self.send_header("X-Connection-Id", str(self.conn_id))
+            for k, v in headers.items():
+                self.send_header(k, v)
+            self.end_headers()
+            self.wfile.write(data)
+        except (BrokenPipeError, ConnectionResetError):
+            # client hung up mid-write (timeout, cancel): drop the
+            # connection quietly instead of stack-tracing the server thread
+            self.close_connection = True
 
     def do_GET(self) -> None:  # noqa: N802 - stdlib API
         self._serve("GET")

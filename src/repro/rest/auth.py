@@ -37,10 +37,12 @@ class AuthService:
         secret: bytes | None = None,
         token_ttl_s: float = 3600.0,
         cache_ttl_s: float = 30.0,
+        cache_max: int = 4096,
     ):
         self._secret = secret or secrets.token_bytes(32)
         self.token_ttl_s = token_ttl_s
         self.cache_ttl_s = cache_ttl_s
+        self.cache_max = int(cache_max)
         self._users: dict[str, set[str]] = {}
         self._cache: dict[str, tuple[float, dict[str, Any]]] = {}
         self._lock = threading.Lock()
@@ -72,8 +74,13 @@ class AuthService:
         now = utc_now_ts()
         with self._lock:
             hit = self._cache.get(token)
-            if hit and hit[0] > now:
-                return hit[1]
+            if hit is not None:
+                if hit[0] > now:
+                    return hit[1]
+                # stale entry (TTL elapsed, or the token itself expired —
+                # the entry deadline is capped at ``exp``): drop it and
+                # fall through to full validation, which re-checks ``exp``
+                del self._cache[token]
         try:
             body, sig = token.rsplit(".", 1)
         except ValueError as exc:
@@ -86,8 +93,26 @@ class AuthService:
         if claims.get("exp", 0) < now:
             raise AuthenticationError("token expired")
         with self._lock:
-            self._cache[token] = (now + self.cache_ttl_s, claims)
+            if len(self._cache) >= self.cache_max:
+                self._evict(now)
+            # cap the entry deadline at the token's own expiry: a cached
+            # hit must never outlive the token it vouches for
+            deadline = min(
+                now + self.cache_ttl_s, float(claims.get("exp", now))
+            )
+            self._cache[token] = (deadline, claims)
         return claims
+
+    def _evict(self, now: float) -> None:
+        """Bound the cache (caller holds the lock): purge expired entries
+        first; if every entry is still live, drop the oldest-deadline
+        half so a token flood cannot grow the dict without bound."""
+        self._cache = {
+            t: e for t, e in self._cache.items() if e[0] > now
+        }
+        if len(self._cache) >= self.cache_max:
+            keep = sorted(self._cache.items(), key=lambda kv: kv[1][0])
+            self._cache = dict(keep[len(keep) // 2:])
 
     def authorize(self, token: str, role: str) -> dict[str, Any]:
         claims = self.validate(token)

@@ -1,0 +1,160 @@
+"""Edge admission control: per-user quotas at the API front door.
+
+The broker's :class:`~repro.broker.policy.Throttler` applies backpressure
+*inside* the scheduler — a user at quota keeps their jobs queued.  At the
+API edge the right semantics are different: an over-quota submission must
+be *refused* immediately with ``429`` and a ``Retry-After`` hint, so ten
+thousand interactive clients shed load at the cheapest possible point
+(before a request row is ever written) instead of piling work into the
+broker queues.  This module reuses the same Throttler for the accounting
+and adds the edge-specific parts:
+
+* **ticket lifetime = request lifetime.**  An admission ticket is released
+  when the submitted request lands in a terminal state.  There is no
+  callback from the kernel to the edge; instead the gate *lazily* reaps
+  tickets by reading the status column of its tracked requests on each
+  admission attempt — a handful of indexed point reads, and exactly the
+  same data path the clients poll anyway.
+* **computed Retry-After.**  The hint is the EWMA of recently observed
+  request completion times (admission → terminal), clamped to
+  ``[min_retry_after_s, max_retry_after_s]`` — i.e. "about one slot should
+  free up in this long".  Before any completion has been observed the
+  default applies.
+
+The gate is attached to the orchestrator (``orch.edge``) so its counters
+ride along in ``monitor_summary()["edge"]``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Any
+
+from repro.broker.policy import Throttler
+from repro.common.constants import TERMINAL_REQUEST_STATES
+from repro.common.exceptions import NotFoundError, RateLimitedError
+from repro.common.utils import utc_now_ts
+
+_TERMINAL = frozenset(str(s) for s in TERMINAL_REQUEST_STATES)
+
+
+class EdgeGate:
+    def __init__(
+        self,
+        orch: Any,
+        *,
+        max_inflight_per_user: int | None = None,
+        max_inflight_total: int | None = None,
+        user_quotas: dict[str, int] | None = None,
+        default_retry_after_s: float = 1.0,
+        min_retry_after_s: float = 0.05,
+        max_retry_after_s: float = 30.0,
+        ewma_alpha: float = 0.2,
+    ):
+        self.orch = orch
+        self.throttler = Throttler(
+            max_inflight_total=max_inflight_total,
+            max_inflight_per_user=max_inflight_per_user,
+            user_quotas=user_quotas,
+        )
+        self.default_retry_after_s = float(default_retry_after_s)
+        self.min_retry_after_s = float(min_retry_after_s)
+        self.max_retry_after_s = float(max_retry_after_s)
+        self.ewma_alpha = float(ewma_alpha)
+        self._ewma_s: float | None = None
+        # user -> {request_id: admission timestamp}; tickets held by
+        # requests still in flight
+        self._tracked: dict[str, dict[int, float]] = {}
+        self._lock = threading.RLock()
+        self.admitted = 0
+        self.rejected = 0
+        self.completed = 0
+
+    # -- ticket reaping ---------------------------------------------------
+    def _reap_user(self, user: str) -> None:
+        """Release tickets whose requests have finished (caller holds the
+        lock).  Status-only point reads — no workflow blob decodes."""
+        tracked = self._tracked.get(user)
+        if not tracked:
+            return
+        store = self.orch.stores["requests"]
+        now = utc_now_ts()
+        for rid in list(tracked):
+            try:
+                status = store.get(rid, columns=("status",))["status"]
+            except NotFoundError:  # pragma: no cover - row GC'd under us
+                status = None
+            if status is None or status in _TERMINAL:
+                t0 = tracked.pop(rid)
+                self.throttler.release(user)
+                self.completed += 1
+                took = max(0.0, now - t0)
+                self._ewma_s = (
+                    took
+                    if self._ewma_s is None
+                    else self._ewma_s
+                    + self.ewma_alpha * (took - self._ewma_s)
+                )
+        if not tracked:
+            self._tracked.pop(user, None)
+
+    def _reap_all(self) -> None:
+        for user in list(self._tracked):
+            self._reap_user(user)
+
+    # -- admission --------------------------------------------------------
+    def retry_after_s(self) -> float:
+        base = (
+            self._ewma_s
+            if self._ewma_s is not None
+            else self.default_retry_after_s
+        )
+        return max(self.min_retry_after_s, min(self.max_retry_after_s, base))
+
+    def admit(self, user: str) -> None:
+        """Take an admission ticket for ``user`` or raise
+        :class:`RateLimitedError` carrying the Retry-After hint.  Callers
+        MUST follow a successful admit with either ``note(user, rid)``
+        (submission landed) or ``cancel(user)`` (submission failed)."""
+        with self._lock:
+            self._reap_user(user)
+            if not self.throttler.try_admit(user):
+                # the refusal may be the *global* cap held up by other
+                # users' finished-but-unreaped tickets: reap everyone
+                # once before giving up
+                self._reap_all()
+                if not self.throttler.try_admit(user):
+                    self.rejected += 1
+                    hint = self.retry_after_s()
+                    raise RateLimitedError(
+                        f"user {user!r} is over the submission quota",
+                        retry_after_s=hint,
+                    )
+            self.admitted += 1
+
+    def note(self, user: str, request_id: int) -> None:
+        """Bind the ticket taken by ``admit`` to the submitted request."""
+        with self._lock:
+            self._tracked.setdefault(user, {})[int(request_id)] = (
+                utc_now_ts()
+            )
+
+    def cancel(self, user: str) -> None:
+        """Return an admitted ticket whose submission never landed."""
+        with self._lock:
+            self.admitted -= 1
+            self.throttler.release(user)
+
+    # -- monitoring -------------------------------------------------------
+    def summary(self) -> dict[str, Any]:
+        with self._lock:
+            self._reap_all()
+            return {
+                "inflight": self.throttler.inflight(),
+                "per_user_inflight": {
+                    u: len(t) for u, t in sorted(self._tracked.items())
+                },
+                "admitted": self.admitted,
+                "rejected": self.rejected,
+                "completed": self.completed,
+                "retry_after_s": round(self.retry_after_s(), 4),
+            }

@@ -16,6 +16,9 @@ straggler slowdowns cost nothing real.
 """
 from __future__ import annotations
 
+import hashlib
+import json
+import random
 from typing import Any, Callable
 
 from repro.broker import BreakerBoard, CostModel, DataAwareBroker
@@ -484,6 +487,179 @@ def shard_replica_crash(seed: int = 0) -> dict[str, Any]:
         return _result(h, statuses)
 
 
+# ---------------------------------------------------------------------------
+# 10. multi-tenant edge front door under load
+# ---------------------------------------------------------------------------
+def edge_front_door(
+    seed: int = 0,
+    *,
+    n_users: int = 8,
+    clients_per_user: int = 24,
+    quota_per_user: int = 4,
+    poll_every_ticks: int = 4,
+    max_ticks: int = 8000,
+    p99_budget_s: float = 120.0,
+    fairness_ratio: float = 2.0,
+    max_retry_after_s: float = 5.0,
+) -> dict[str, Any]:
+    """A tenant swarm hammers the REST front door (``RestApp.dispatch``
+    driven directly — real auth tokens, real routing, no sockets) under
+    the virtual clock.  Every client submits one single-work request; the
+    :class:`~repro.rest.edge.EdgeGate` holds each tenant to
+    ``quota_per_user`` in-flight requests, so most submissions bounce with
+    429 and the computed ``Retry-After`` — clients honour the hint and
+    come back.  Faults (bus drops/duplicates, worker kills) run the whole
+    time.  At the end: every client holds exactly one Finished result
+    (none lost, none duplicated), the gate's books balance, per-tenant
+    mean latency is fair, p99 submit→result latency is bounded, and the
+    whole run — orchestrator trace AND client-side event log — is
+    digest-stable per seed."""
+    from repro.rest.app import RestApp
+    from repro.rest.auth import AuthService
+    from repro.rest.edge import EdgeGate
+
+    terminal = frozenset(
+        ("Finished", "SubFinished", "Failed", "Cancelled", "Expired")
+    )
+    spec = FaultSpec(bus_drop=0.1, bus_duplicate=0.1, worker_kill=0.01)
+    with SimHarness(
+        seed=seed, spec=spec, sites={"edge0": 32, "edge1": 32}
+    ) as h:
+        from repro.common.utils import utc_now_ts
+
+        auth = AuthService(token_ttl_s=1e9)  # virtual days pass in a run
+        users = [f"tenant{u}" for u in range(n_users)]
+        tokens: dict[str, str] = {}
+        for u in users:
+            auth.register(u)
+            tokens[u] = auth.issue_token(u)
+        edge = EdgeGate(
+            h.orch,
+            max_inflight_per_user=quota_per_user,
+            default_retry_after_s=0.5,
+            min_retry_after_s=0.05,
+            max_retry_after_s=max_retry_after_s,
+        )
+        app = RestApp(h.orch, auth, edge=edge)
+
+        # deterministic client fleet: seeded arrival jitter, fixed order
+        rng = random.Random(seed * 7919 + 13)
+        poll_s = poll_every_ticks * h.tick_s
+        clients: list[dict[str, Any]] = []
+        for u in users:
+            for k in range(clients_per_user):
+                clients.append({
+                    "user": u,
+                    "name": f"{u}_c{k}",
+                    "state": "submit",
+                    "next_ts": rng.uniform(0.0, 2.0),
+                    "first_ts": None,
+                    "rid": None,
+                    "done_ts": None,
+                    "status": None,
+                    "rejects": 0,
+                })
+        events: list[tuple[Any, ...]] = []
+        h.arm()
+        pending = len(clients)
+        while pending and h.ticks < max_ticks:
+            now = utc_now_ts()
+            for c in clients:
+                if c["state"] == "done" or c["next_ts"] > now:
+                    continue
+                hdrs = {"authorization": f"Bearer {tokens[c['user']]}"}
+                if c["state"] == "submit":
+                    if c["first_ts"] is None:
+                        c["first_ts"] = now
+                    wf = Workflow(f"edge_{c['name']}")
+                    wf.add_work(
+                        Work(f"w_{c['name']}", payload={"kind": "noop"},
+                             n_jobs=1, max_retries=6)
+                    )
+                    status, payload, rh = app.dispatch(
+                        "POST", "/v2/request", {"workflow": wf.to_dict()},
+                        hdrs,
+                    )
+                    if status == 429:
+                        c["rejects"] += 1
+                        c["next_ts"] = now + float(rh["Retry-After"])
+                        events.append(("reject", c["name"], round(now, 3)))
+                    else:
+                        assert status == 200, (status, payload)
+                        c["rid"] = int(payload["request_id"])
+                        c["state"] = "poll"
+                        c["next_ts"] = now + poll_s
+                        events.append(
+                            ("admit", c["name"], c["rid"], round(now, 3))
+                        )
+                else:  # poll
+                    status, payload, _rh = app.dispatch(
+                        "GET",
+                        f"/v2/request/{c['rid']}/work/w_{c['name']}",
+                        None, hdrs,
+                    )
+                    assert status == 200, (status, payload)
+                    if payload["status"] in terminal:
+                        c["state"] = "done"
+                        c["status"] = payload["status"]
+                        c["done_ts"] = now
+                        pending -= 1
+                        events.append(
+                            ("done", c["name"], payload["status"],
+                             round(now, 3))
+                        )
+                    else:
+                        c["next_ts"] = now + poll_s
+            h.tick()
+        assert pending == 0, (
+            f"{pending} clients unfinished after {h.ticks} ticks"
+        )
+
+        rids = [c["rid"] for c in clients]
+        statuses = h.quiesce(rids)
+        # exactly-once result delivery: one distinct request per client,
+        # every one of them Finished despite drops/dups/kills
+        assert len(set(rids)) == len(clients), "duplicate request ids"
+        assert all(c["status"] == "Finished" for c in clients), [
+            (c["name"], c["status"]) for c in clients
+            if c["status"] != "Finished"
+        ]
+        # quota pressure really happened, and the gate's books balance
+        summary = edge.summary()
+        total_rejects = sum(c["rejects"] for c in clients)
+        assert total_rejects > 0, "quota never rejected anyone"
+        assert summary["rejected"] == total_rejects, summary
+        assert summary["admitted"] == len(clients), summary
+        assert summary["completed"] == len(clients), summary
+        assert summary["inflight"] == 0, summary
+        # latency: p99 bounded, per-tenant means fair
+        lats = sorted(c["done_ts"] - c["first_ts"] for c in clients)
+        p99 = lats[min(len(lats) - 1, int(0.99 * len(lats)))]
+        assert p99 <= p99_budget_s, f"p99 {p99:.2f}s over budget"
+        per_user = {
+            u: [c["done_ts"] - c["first_ts"] for c in clients
+                if c["user"] == u]
+            for u in users
+        }
+        means = {u: sum(v) / len(v) for u, v in per_user.items()}
+        spread = max(means.values()) / max(min(means.values()), 1e-9)
+        assert spread <= fairness_ratio, f"unfair tenant latency: {means}"
+        h.check_invariants()
+        out = _result(h, statuses)
+        out["client_digest"] = hashlib.sha256(
+            json.dumps(events, sort_keys=True).encode()
+        ).hexdigest()
+        out["edge"] = summary
+        out["n_clients"] = len(clients)
+        out["latency_s"] = {
+            "mean": round(sum(lats) / len(lats), 4),
+            "p50": round(lats[len(lats) // 2], 4),
+            "p99": round(p99, 4),
+            "fairness_spread": round(spread, 4),
+        }
+        return out
+
+
 SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "replica_crash_mid_outbox_drain": replica_crash_mid_outbox_drain,
     "bus_partition_during_cascade_abort": bus_partition_during_cascade_abort,
@@ -494,6 +670,7 @@ SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "poison_payload_quarantine": poison_payload_quarantine,
     "flapping_site_breaker": flapping_site_breaker,
     "shard_replica_crash": shard_replica_crash,
+    "edge_front_door": edge_front_door,
 }
 
 #: the cheap scenarios — what CI's SIM_SMOKE step runs

@@ -521,3 +521,268 @@ def test_api_surface_snapshot_clean():
     from repro.api import snapshot
 
     assert snapshot.check() == []
+
+
+# ---------------------------------------------------------------------------
+# multi-tenant front door: HTTP/1.1 keep-alive, long-poll, quotas, 405s
+# ---------------------------------------------------------------------------
+def test_http11_keepalive_reuses_one_connection(http_server):
+    """The server speaks HTTP/1.1 with Content-Length, so one raw client
+    connection serves many requests — and the X-Connection-Id header
+    proves they really landed on the same accepted socket."""
+    import http.client
+
+    srv, _ = http_server
+    host, port = srv.address
+    conn = http.client.HTTPConnection(host, port, timeout=5)
+    try:
+        ids = []
+        for _ in range(3):
+            conn.request("GET", "/v2/ping")
+            resp = conn.getresponse()
+            assert resp.status == 200 and resp.version == 11
+            ids.append(resp.headers["X-Connection-Id"])
+            resp.read()
+        assert len(set(ids)) == 1, ids
+    finally:
+        conn.close()
+
+
+def test_transport_pools_connection_across_calls(http_server):
+    srv, _ = http_server
+    cli = HttpClient(srv.url, timeout_s=5.0)
+    try:
+        for _ in range(3):
+            assert cli.ping()
+        assert cli.transport.calls == 3
+        assert cli.transport.conns_opened == 1
+        assert cli.transport.reconnects == 0
+    finally:
+        cli.close()
+
+
+def test_transport_reconnects_when_pooled_socket_dies(http_server):
+    """A pooled keep-alive connection the server (or a middlebox) killed
+    is replayed once on a fresh connection — invisible to the caller."""
+    srv, _ = http_server
+    cli = HttpClient(srv.url, timeout_s=5.0)
+    try:
+        assert cli.ping()
+        cli.transport._local.conn.sock.close()  # simulate a silent close
+        assert cli.ping()
+        assert cli.transport.reconnects == 1
+        assert cli.transport.conns_opened == 2
+    finally:
+        cli.close()
+
+
+def test_transport_keepalive_off_opens_connection_per_call(http_server):
+    srv, _ = http_server
+    cli = HttpClient(srv.url, timeout_s=5.0, keepalive=False)
+    try:
+        assert cli.ping() and cli.ping()
+        assert cli.transport.conns_opened == 2
+    finally:
+        cli.close()
+
+
+@pytest.mark.parametrize(
+    "path,v2", [("/v2/ping", True), ("/ping", False)]
+)
+def test_unknown_method_on_known_path_is_405_with_allow(orch, path, v2):
+    """A known resource hit with the wrong verb answers 405 + Allow (in
+    the right error envelope per API version), never a lying 404."""
+    app = RestApp(orch)
+    status, payload, headers = app.dispatch("DELETE", path, None, {})
+    assert status == 405
+    assert "GET" in headers["Allow"].split(", ")
+    if v2:
+        assert payload["error"]["code"] == "method_not_allowed"
+    else:
+        assert "error" in payload and isinstance(payload["error"], str)
+
+
+def test_unknown_path_stays_404(orch):
+    status, _payload, _ = RestApp(orch).dispatch(
+        "GET", "/v2/definitely/not/a/route", None, {}
+    )
+    assert status == 404
+
+
+def test_http_405_maps_to_typed_error(http_server):
+    from repro.common.exceptions import MethodNotAllowedError
+
+    srv, _ = http_server
+    cli = HttpClient(srv.url, timeout_s=5.0)
+    try:
+        with pytest.raises(MethodNotAllowedError):
+            cli.transport.request("POST", "/v2/ping", {})
+    finally:
+        cli.close()
+
+
+def _auth_headers(app, user="tester", groups=("users", "admins")):
+    """Register a user on the app's own AuthService and build the Bearer
+    header direct-dispatch tests need to pass role filters."""
+    app.auth.register(user, list(groups))
+    return {"authorization": f"Bearer {app.auth.issue_token(user)}"}
+
+
+def test_work_longpoll_returns_early_when_terminal(orch):
+    """``?wait=`` on an already-terminal work answers immediately — the
+    park is skipped entirely, not slept through."""
+    cli = LocalClient(orch)
+    rid = cli.submit(_simple_wf("lp_done"))
+    assert cli.wait(rid, timeout=30.0) == "Finished"
+    app = RestApp(orch)
+    t0 = time.time()
+    status, payload, _ = app.dispatch(
+        "GET", f"/v2/request/{rid}/work/w0", None, _auth_headers(app),
+        {"wait": ["5"]},
+    )
+    assert status == 200 and payload["status"] == "Finished"
+    assert time.time() - t0 < 2.0
+
+
+def test_work_longpoll_parks_until_result(orch):
+    """A long-poll on a running work parks on the store's write signal
+    and returns the terminal status well before the wait window ends."""
+    cli = LocalClient(orch)
+    rid = cli.submit(_simple_wf("lp_park", task="api_slow"))
+    app = RestApp(orch)
+    t0 = time.time()
+    status, payload, _ = app.dispatch(
+        "GET", f"/v2/request/{rid}/work/w0", None, _auth_headers(app),
+        {"wait": ["20"]},
+    )
+    took = time.time() - t0
+    assert status == 200 and payload["status"] == "Finished"
+    assert took < 15.0, f"long-poll never woke early ({took:.1f}s)"
+
+
+def test_work_longpoll_times_out_with_current_status(orch):
+    """An expired wait window answers the *current* (non-terminal)
+    status — long-poll is a latency optimisation, never a hang."""
+    cli = LocalClient(orch)
+    rid = cli.submit(_simple_wf("lp_window", task="api_slow"))
+    app = RestApp(orch)
+    status, payload, _ = app.dispatch(
+        "GET", f"/v2/request/{rid}/work/w0", None, _auth_headers(app),
+        {"wait": ["0.05"]},
+    )
+    assert status == 200  # whatever status it had when the window closed
+
+
+def test_work_longpoll_rejects_garbage_wait(orch):
+    app = RestApp(orch)
+    status, payload, _ = app.dispatch(
+        "GET", "/v2/request/1/work/w0", None, _auth_headers(app),
+        {"wait": ["soon"]},
+    )
+    assert status == 400
+
+
+def test_longpoll_wait_clamped_to_cap(orch):
+    """wait= beyond the server cap is clamped, not rejected — clients
+    cannot park a worker thread for an hour."""
+    app = RestApp(orch, longpoll_max_s=0.1)
+    cli = LocalClient(orch)
+    rid = cli.submit(_simple_wf("lp_cap", task="api_slow"))
+    t0 = time.time()
+    status, _, _ = app.dispatch(
+        "GET", f"/v2/request/{rid}/work/w0", None, _auth_headers(app),
+        {"wait": ["3600"]},
+    )
+    assert status == 200
+    assert time.time() - t0 < 5.0
+
+
+def test_edge_quota_429_retry_after_and_recovery(orch):
+    """Over-quota submission bounces with 429 + a float Retry-After; the
+    ticket frees when the request lands terminal, and the books balance
+    in monitor()["edge"]."""
+    from repro.rest import EdgeGate
+
+    edge = EdgeGate(orch, max_inflight_per_user=1)
+    app = RestApp(orch, edge=edge)
+    hdrs = _auth_headers(app)
+    body = {"workflow": _simple_wf("edge_q", task="api_slow").to_dict()}
+    status, payload, _ = app.dispatch("POST", "/v2/request", body, hdrs)
+    assert status == 200
+    rid = payload["request_id"]
+
+    body2 = {"workflow": _simple_wf("edge_q2").to_dict()}
+    status, payload, headers = app.dispatch(
+        "POST", "/v2/request", body2, hdrs
+    )
+    assert status == 429
+    assert payload["error"]["code"] == "rate_limited"
+    assert float(headers["Retry-After"]) > 0
+
+    LocalClient(orch).wait(rid, timeout=30.0)
+    status, _, _ = app.dispatch("POST", "/v2/request", body2, hdrs)
+    assert status == 200
+    edge_stats = orch.monitor_summary()["edge"]
+    assert edge_stats["rejected"] == 1
+    assert edge_stats["admitted"] == 2
+
+
+def test_http_429_maps_to_typed_error(orch):
+    from repro.common.exceptions import RateLimitedError
+    from repro.rest import EdgeGate
+
+    edge = EdgeGate(orch, max_inflight_per_user=1)
+    srv = RestServer(RestApp(orch, edge=edge)).start()
+    cli = HttpClient(srv.url, timeout_s=5.0, retries=0)
+    try:
+        cli.register("bob", ["users"])
+        cli.login("bob")
+        cli.submit(_simple_wf("edge_h", task="api_slow"))
+        with pytest.raises(RateLimitedError) as exc_info:
+            cli.submit(_simple_wf("edge_h2"))
+        assert exc_info.value.retry_after_s > 0
+    finally:
+        cli.close()
+        srv.stop()
+
+
+def test_http_client_longpoll_one_round_trip(http_server):
+    """fut.result() over HTTP rides one long-poll GET instead of a
+    short-poll loop: round trips stay O(1)."""
+    srv, _ = http_server
+    cli = HttpClient(srv.url, timeout_s=5.0)
+    try:
+        cli.register("carol", ["users"])
+        cli.login("carol")
+        rid = cli.submit(_simple_wf("lp_http", task="api_slow"))
+        base = cli.transport.calls
+        cli.future(rid, "w0").result(timeout=30.0)
+        polls = cli.transport.calls - base
+        assert polls <= 3, f"{polls} round trips for one result"
+    finally:
+        cli.close()
+
+
+def test_auth_cache_never_outlives_token_expiry(virtual_clock):
+    """A cached validation must expire WITH the token: advance past exp
+    and the same token is rejected even though it was cached."""
+    from repro.common.exceptions import AuthenticationError
+    from repro.rest import AuthService
+
+    auth = AuthService(token_ttl_s=10.0, cache_ttl_s=9999.0)
+    auth.register("eve")
+    token = auth.issue_token("eve")
+    assert auth.validate(token)["sub"] == "eve"  # now cached
+    virtual_clock.advance(11.0)  # past exp, well inside cache_ttl
+    with pytest.raises(AuthenticationError):
+        auth.validate(token)
+
+
+def test_auth_cache_size_bounded():
+    from repro.rest import AuthService
+
+    auth = AuthService(cache_max=4)
+    for i in range(8):
+        auth.register(f"u{i}")
+        auth.validate(auth.issue_token(f"u{i}"))
+    assert len(auth._cache) <= 4
