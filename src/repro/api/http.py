@@ -69,10 +69,12 @@ _RETRYABLE = (urllib.error.URLError, OSError, http.client.HTTPException)
 
 #: a pooled keep-alive connection the server quietly closed (or whose
 #: socket died under us): retried once on a fresh connection inside _once
-#: — but only when the failed connection had already served a request;
-#: a FRESH connection failing is a real error.  TimeoutError (the socket
-#: read timeout) is deliberately excluded: the server is alive but slow,
-#: and replaying would double the wait.
+#: — but only when the failed connection had already served a request AND
+#: the failure cannot mean the server processed the call (request not
+#: fully written, or an idempotent GET); a FRESH connection failing is a
+#: real error.  TimeoutError (the socket read timeout) is deliberately
+#: excluded: the server is alive but slow, and replaying would double the
+#: wait.
 _STALE_CONN = (OSError, http.client.HTTPException)
 
 
@@ -97,8 +99,11 @@ class HttpTransport:
     Connection reuse: each thread keeps ONE persistent keep-alive
     connection (HTTP/1.1 on both ends), re-established transparently when
     the server closes it under us — a request on a *previously used*
-    pooled connection that dies mid-flight is replayed once on a fresh
-    connection before any error surfaces.  ``keepalive=False`` restores
+    pooled connection that dies before it was fully written (or an
+    idempotent GET that dies at any point) is replayed once on a fresh
+    connection before any error surfaces; a non-idempotent call that
+    dies after the request went out fails instead, because the server
+    may already have processed it.  ``keepalive=False`` restores
     the old connection-per-request behaviour (used by benchmarks as the
     pre-pooling baseline).
 
@@ -248,6 +253,7 @@ class HttpTransport:
         want_timeout = self.timeout_s if timeout_s is None else float(timeout_s)
         while True:
             conn, reused = self._connection()
+            sent = False
             try:
                 if conn.sock is not None:
                     conn.sock.settimeout(want_timeout)
@@ -256,6 +262,7 @@ class HttpTransport:
                 conn.request(
                     method, self._base_path + path, body=data, headers=hdrs
                 )
+                sent = True
                 resp = conn.getresponse()
                 payload = resp.read()
             except TimeoutError:
@@ -263,9 +270,15 @@ class HttpTransport:
                 raise
             except _STALE_CONN:
                 self._drop_connection()
-                if reused:
-                    # the server closed an idle keep-alive connection
-                    # between our requests: replay once on a fresh one
+                # a stale keep-alive connection is only replayed when the
+                # server cannot have acted on the request: either it died
+                # before the request was fully written, or the verb is
+                # idempotent by definition (GET).  A POST that failed
+                # AFTER being written may have executed server-side —
+                # surface the error instead of silently running it twice
+                # (keyed submits recover via the caller's retry loop,
+                # where replays collapse on the idempotency key).
+                if reused and (not sent or method == "GET"):
                     self.reconnects += 1
                     continue
                 raise

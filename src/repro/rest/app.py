@@ -211,12 +211,14 @@ class RestApp:
         # method did not — a known resource hit the wrong way is 405+Allow,
         # not 404 (the path plainly exists)
         allowed: set[str] = set()
+        public_allowed = False
         for m, pattern, role, _params, fn in self.routes:
             match = pattern.match(path)
             if not match:
                 continue
             if m != method:
                 allowed.add(m)
+                public_allowed = public_allowed or role is None
                 continue
             try:
                 claims: dict[str, Any] | None = None
@@ -246,6 +248,15 @@ class RestApp:
                 status, payload = self._error_payload(exc, v2=v2)
                 return status, payload, resp_headers
         if allowed:
+            # a wrong-verb probe on a protected resource must not map the
+            # route surface: require a valid token (any role) before the
+            # Allow header admits the path exists.  Purely public paths
+            # (e.g. /ping) keep answering 405 unauthenticated.
+            if not public_allowed:
+                try:
+                    self.auth.validate(self._bearer(headers))
+                except AuthenticationError as exc:
+                    return (*self._error_payload(exc, v2=v2), resp_headers)
             resp_headers["Allow"] = ", ".join(sorted(allowed))
             exc = MethodNotAllowedError(
                 f"{method} not allowed on {path}",
@@ -512,7 +523,26 @@ class _Handler(BaseHTTPRequestHandler):
     def _serve(self, method: str) -> None:
         parsed = urlparse(self.path)
         body: dict[str, Any] | None = None
-        length = int(self.headers.get("Content-Length") or 0)
+        # we only frame bodies by Content-Length; a chunked body we never
+        # drained would leave bytes on the keep-alive connection and
+        # desync every later request on it — refuse and drop the socket
+        if self.headers.get("Transfer-Encoding"):
+            self._reply(
+                411,
+                {"error": "chunked bodies are not supported; "
+                          "send Content-Length"},
+                {"Connection": "close"},
+            )
+            return
+        try:
+            length = int(self.headers.get("Content-Length") or 0)
+        except ValueError:
+            self._reply(
+                400,
+                {"error": "invalid Content-Length"},
+                {"Connection": "close"},
+            )
+            return
         if length:
             try:
                 body = json.loads(self.rfile.read(length))

@@ -131,12 +131,24 @@ class EdgeGate:
                     )
             self.admitted += 1
 
-    def note(self, user: str, request_id: int) -> None:
-        """Bind the ticket taken by ``admit`` to the submitted request."""
+    def note(self, user: str, request_id: int) -> bool:
+        """Bind the ticket taken by ``admit`` to the submitted request.
+
+        Returns ``True`` when the binding is new.  A replayed keyed
+        submission collapses onto an EXISTING request id; binding the
+        fresh ticket to it would shadow the one already held, so reaping
+        could only ever release one of them — every replay would leak an
+        inflight slot forever.  Instead the duplicate ticket is returned
+        here and ``False`` comes back."""
         with self._lock:
-            self._tracked.setdefault(user, {})[int(request_id)] = (
-                utc_now_ts()
-            )
+            tracked = self._tracked.setdefault(user, {})
+            rid = int(request_id)
+            if rid in tracked:
+                self.admitted -= 1
+                self.throttler.release(user)
+                return False
+            tracked[rid] = utc_now_ts()
+            return True
 
     def cancel(self, user: str) -> None:
         """Return an admitted ticket whose submission never landed."""

@@ -786,3 +786,202 @@ def test_auth_cache_size_bounded():
         auth.register(f"u{i}")
         auth.validate(auth.issue_token(f"u{i}"))
     assert len(auth._cache) <= 4
+
+
+# ---------------------------------------------------------------------------
+# front-door hardening: replay-safe edge tickets, honest stale-conn replay,
+# chunked-body rejection, auth-gated 405
+# ---------------------------------------------------------------------------
+def test_edge_note_duplicate_returns_ticket(orch):
+    """EdgeGate.note on an already-tracked request id (an idempotent
+    replay) returns the duplicate ticket instead of leaking it."""
+    import threading as _t
+
+    from repro.rest import EdgeGate
+
+    gate = _t.Event()
+    register_task("api_gate_note", lambda **kw: gate.wait(10) or {})
+    try:
+        rid = LocalClient(orch).submit(
+            _simple_wf("edge_note", task="api_gate_note")
+        )
+        edge = EdgeGate(orch, max_inflight_per_user=2)
+        edge.admit("u")
+        assert edge.note("u", rid) is True
+        edge.admit("u")
+        assert edge.note("u", rid) is False  # replay: ticket returned
+        assert edge.throttler.inflight() == 1
+        assert edge.admitted == 1
+    finally:
+        gate.set()
+
+
+def test_keyed_replay_does_not_leak_edge_tickets(orch):
+    """Client retries of a keyed submit collapse onto one request id; the
+    duplicate admission tickets must come back, or every replay would eat
+    an inflight slot until the user is 429'd forever."""
+    import threading as _t
+
+    from repro.rest import EdgeGate
+
+    gate = _t.Event()
+    register_task("api_gate_replay", lambda **kw: gate.wait(10) or {})
+    try:
+        edge = EdgeGate(orch, max_inflight_per_user=2)
+        app = RestApp(orch, edge=edge)
+        hdrs = _auth_headers(app)
+        body = {
+            "workflow": _simple_wf(
+                "edge_replay", task="api_gate_replay"
+            ).to_dict(),
+            "idempotency_key": "k-replay",
+        }
+        rids = set()
+        for _ in range(4):  # original + three replays
+            status, payload, _ = app.dispatch(
+                "POST", "/v2/request", body, hdrs
+            )
+            assert status == 200
+            rids.add(payload["request_id"])
+        assert len(rids) == 1
+        stats = edge.summary()
+        assert stats["inflight"] == 1  # exactly one ticket held
+        assert stats["admitted"] == 1  # net of returned duplicates
+        # quota still has room for a second DISTINCT submission
+        body2 = {"workflow": _simple_wf("edge_replay2").to_dict()}
+        status, _, _ = app.dispatch("POST", "/v2/request", body2, hdrs)
+        assert status == 200
+    finally:
+        gate.set()
+
+
+def test_405_on_protected_path_requires_auth(orch):
+    """An unauthenticated wrong-verb probe on a protected resource gets
+    401 with no Allow header (no route-surface disclosure); with a valid
+    token the honest 405 + Allow comes back."""
+    app = RestApp(orch)
+    status, _payload, headers = app.dispatch(
+        "DELETE", "/v2/request/1", None, {}
+    )
+    assert status == 401 and "Allow" not in headers
+    status, _payload, headers = app.dispatch(
+        "DELETE", "/v2/request/1", None, _auth_headers(app)
+    )
+    assert status == 405 and "GET" in headers["Allow"].split(", ")
+
+
+def test_chunked_body_rejected_411(http_server):
+    """A chunked body would leave undrained bytes on the keep-alive
+    connection; the server refuses it outright and drops the socket."""
+    import http.client
+
+    srv, _ = http_server
+    host, port = srv.address
+    conn = http.client.HTTPConnection(host, port, timeout=5)
+    try:
+        conn.putrequest("POST", "/v2/auth/register")
+        conn.putheader("Transfer-Encoding", "chunked")
+        conn.putheader("Content-Type", "application/json")
+        conn.endheaders()
+        conn.send(b"2\r\n{}\r\n0\r\n\r\n")
+        resp = conn.getresponse()
+        assert resp.status == 411
+        assert resp.headers.get("Connection", "").lower() == "close"
+        resp.read()
+    finally:
+        conn.close()
+
+
+def _read_http_request(sock) -> bytes:
+    """Read one full HTTP request (headers + Content-Length body) off a
+    raw socket."""
+    data = b""
+    while b"\r\n\r\n" not in data:
+        chunk = sock.recv(65536)
+        if not chunk:
+            return data
+        data += chunk
+    head, _, rest = data.partition(b"\r\n\r\n")
+    length = 0
+    for line in head.split(b"\r\n"):
+        if line.lower().startswith(b"content-length:"):
+            length = int(line.split(b":", 1)[1])
+    while len(rest) < length:
+        chunk = sock.recv(65536)
+        if not chunk:
+            break
+        rest += chunk
+    return data
+
+
+_RAW_OK = (
+    b"HTTP/1.1 200 OK\r\nContent-Length: 2\r\n"
+    b"Content-Type: application/json\r\n\r\n{}"
+)
+
+
+def test_stale_pooled_post_is_not_silently_replayed():
+    """A POST that dies AFTER the request was fully written may have been
+    processed server-side: it must surface a transport error, never be
+    silently executed twice."""
+    import socket
+    import threading as _t
+
+    lsock = socket.create_server(("127.0.0.1", 0))
+    host, port = lsock.getsockname()
+    posts_seen = []
+
+    def serve():
+        conn, _ = lsock.accept()
+        _read_http_request(conn)          # GET: warm the pool
+        conn.sendall(_RAW_OK)
+        _read_http_request(conn)          # POST fully written by client…
+        posts_seen.append(1)
+        conn.close()                      # …then die without answering
+
+    _t.Thread(target=serve, daemon=True).start()
+    tr = HttpTransport(
+        f"http://{host}:{port}", timeout_s=5.0, retries=2, backoff_s=0.001
+    )
+    try:
+        assert tr.request("GET", "/v2/ping") == {}
+        with pytest.raises(ReproError, match="transport failure"):
+            tr.request("POST", "/v2/request", {"x": 1})
+        assert posts_seen == [1]   # written exactly once, never replayed
+        assert tr.reconnects == 0
+    finally:
+        tr.close()
+        lsock.close()
+
+
+def test_stale_pooled_get_replays_on_fresh_connection():
+    """An idempotent GET that dies after being written IS transparently
+    replayed on a fresh connection — the caller never sees the blip."""
+    import socket
+    import threading as _t
+
+    lsock = socket.create_server(("127.0.0.1", 0))
+    host, port = lsock.getsockname()
+
+    def serve():
+        conn, _ = lsock.accept()
+        _read_http_request(conn)
+        conn.sendall(_RAW_OK)             # warm the pool
+        _read_http_request(conn)          # second GET fully written…
+        conn.close()                      # …server dies without answering
+        conn2, _ = lsock.accept()         # the replay, on a fresh conn
+        _read_http_request(conn2)
+        conn2.sendall(_RAW_OK)
+        conn2.close()
+
+    _t.Thread(target=serve, daemon=True).start()
+    tr = HttpTransport(
+        f"http://{host}:{port}", timeout_s=5.0, retries=0, backoff_s=0.001
+    )
+    try:
+        assert tr.request("GET", "/v2/ping") == {}
+        assert tr.request("GET", "/v2/ping") == {}
+        assert tr.reconnects == 1
+    finally:
+        tr.close()
+        lsock.close()
