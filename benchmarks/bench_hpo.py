@@ -3,6 +3,7 @@ and TPE-vs-random convergence at fixed budget."""
 from __future__ import annotations
 
 import math
+import os
 import time
 from typing import Any
 
@@ -40,6 +41,35 @@ def run() -> list[dict[str, Any]]:
                 },
             }
         )
+    # campaign-engine throughput: ONE looping request, all steering
+    # server-side in the Clerk — trials/s through the full stack.
+    # BENCH_SMOKE shrinks 64 trials (8 gen x 8) to 8 (2 gen x 4).
+    smoke = bool(int(os.environ.get("BENCH_SMOKE", "0") or "0"))
+    gens, par = (2, 4) if smoke else (8, 8)
+    budget_s = 30.0 if smoke else 120.0
+    orch = Orchestrator(poll_period_s=0.02)
+    with orch:
+        space = SearchSpace({"x": Uniform(-1, 1), "lr": LogUniform(1e-5, 1e-1)})
+        svc = HPOService(orch, space, "bench_objective", optimizer="tpe", seed=1)
+        t0 = time.perf_counter()
+        out = svc.run(iterations=gens, candidates_per_iter=par, timeout=budget_s)
+        dt = time.perf_counter() - t0
+    assert out["n_trials"] == gens * par, out
+    assert dt < budget_s, f"campaign_hpo_64trials blew the {budget_s}s budget: {dt:.1f}s"
+    rows.append(
+        {
+            "name": "hpo/campaign_hpo_64trials",
+            "us_per_call": dt * 1e6 / out["n_trials"],
+            "derived": {
+                "trials_per_s": round(out["n_trials"] / dt, 1),
+                "n_trials": out["n_trials"],
+                "generations": out["generations"],
+                "best_objective": round(out["best_objective"], 4),
+                "wall_s": round(dt, 2),
+                "smoke": smoke,
+            },
+        }
+    )
     # offline optimizer comparison at equal budget
     def f(c):
         return (c["x"] - 0.62) ** 2 + (c["y"] + 0.2) ** 2

@@ -1,6 +1,9 @@
 """Active Learning campaign (paper §4.4 / Fig. 13): automated
 simulate → analyze → propose loop converging on a hidden physics
-"significance" optimum with no human intervention.
+"significance" optimum with no human intervention.  The whole loop is
+ONE looping campaign request steered server-side by the UCB acquisition
+function; the client submits, waits, and reads the observation pool back
+out of the campaign's persisted state.
 
     PYTHONPATH=src python examples/active_learning.py
 """
@@ -9,13 +12,32 @@ from __future__ import annotations
 import json
 
 from repro.al import ActiveLearner
+from repro.api import LocalClient
 from repro.orchestrator import Orchestrator
 
 
 def main() -> None:
     with Orchestrator(poll_period_s=0.05) as orch:
-        al = ActiveLearner(orch, points_per_iter=4)
-        out = al.run(iterations=6, target=2.0, timeout=120)
+        client = LocalClient(orch)
+        al = ActiveLearner(client, points_per_iter=4)
+        rid = al.submit(iterations=6, target=2.0)
+        print(f"AL campaign submitted as request {rid}")
+        client.wait(rid, timeout=120)
+
+        al.collect(rid)  # observation pool + per-generation history
+        print("acquisition history:")
+        for h in al.history:
+            print(f"  generation {h['generation']}: "
+                  f"best_y={h['best_y']:.3f} at x={h['best_x']:.3f} "
+                  f"({h['n_observations']} observations)")
+        best = max(al.observations, key=lambda o: o["significance"])
+        out = {
+            "best_x": best["x"],
+            "best_y": best["significance"],
+            "true_optimum_x": 0.62,
+            "n_observations": len(al.observations),
+            "request_id": rid,
+        }
         print(json.dumps(out, indent=1))
         print(f"\nfound optimum x={out['best_x']:.3f} "
               f"(truth {out['true_optimum_x']}) with only "

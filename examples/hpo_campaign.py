@@ -1,6 +1,8 @@
 """Distributed HPO campaign (paper §4.3): TPE-guided search over real
-(reduced) model training runs, dispatched as Work units through the
-orchestrator across multiple sites.
+(reduced) model training runs, dispatched as ONE looping campaign
+request — the orchestrator's Clerk collects each generation, tells the
+optimizer, and re-instantiates the next one server-side.  The client
+below just submits, watches the campaign steer, and collects the trail.
 
     PYTHONPATH=src python examples/hpo_campaign.py --iterations 2
 """
@@ -9,6 +11,9 @@ from __future__ import annotations
 import argparse
 import json
 
+from repro.api import LocalClient
+from repro.common.constants import TERMINAL_REQUEST_STATES
+from repro.common.utils import sleep
 from repro.core.work import register_task
 from repro.hpo import HPOService, LogUniform, SearchSpace
 from repro.orchestrator import Orchestrator
@@ -28,16 +33,36 @@ def main() -> None:
     space = SearchSpace({"lr": LogUniform(1e-4, 3e-2)})
 
     with Orchestrator(poll_period_s=0.05, runtime=runtime) as orch:
-        svc = HPOService(orch, space, "train_trial", optimizer="tpe", seed=0)
-        results = svc.run(
-            iterations=args.iterations,
-            candidates_per_iter=args.candidates,
-            timeout=600,
-        )
-        print(json.dumps(results, indent=1))
+        client = LocalClient(orch)
+        svc = HPOService(client, space, "train_trial", optimizer="tpe", seed=0)
+        rid = svc.submit(generations=args.iterations, parallel=args.candidates)
+        print(f"campaign submitted as request {rid}; steering is "
+              "server-side — the client only watches:")
+
+        # live progress off the campaign surface (the same data backs
+        # monitor_summary()["campaigns"] and GET /v2/request/<id>/campaign)
+        terminal = [str(s) for s in TERMINAL_REQUEST_STATES]
+        last_gen = -1
+        while True:
+            status = client.status(rid)["status"]
+            camps = client.campaign(rid)["campaigns"]
+            summary = (camps[0].get("summary") or {}) if camps else {}
+            gen = summary.get("generation", 0)
+            if summary and gen != last_gen:
+                last_gen = gen
+                print(f"  generation {gen}: "
+                      f"best_objective={summary.get('best_objective')}")
+            if status in terminal:
+                break
+            sleep(0.2)
+
+        camp = svc.collect(rid)  # pulls trial trail + rehydrated optimizer
+        print(json.dumps(camp["summary"], indent=1))
         print("\ntrial table:")
         for t in svc.trials:
-            print(f"  lr={t['candidate']['lr']:.2e} loss={t['objective']:.4f}")
+            obj = ("abandoned" if t["objective"] is None
+                   else f"{t['objective']:.4f}")
+            print(f"  lr={t['candidate']['lr']:.2e} loss={obj}")
 
 
 if __name__ == "__main__":

@@ -180,6 +180,7 @@ class Clerk(BaseAgent):
                 # transform inserts + request update + events: one tx
                 created, events = self._launch_ready(request_id, wf)
                 self._retry_failed(request_id, wf)
+                self._supersede_abandoned(request_id, wf)
                 # persist evolved metadata; the kernel validates the rollup
                 # against the request's CURRENT status (a concurrent
                 # suspend/cancel beats a stale snapshot)
@@ -298,6 +299,28 @@ class Clerk(BaseAgent):
                     transforms.update(old_tid, transform_metadata={"superseded": True})
                 except NotFoundError:
                     pass
+
+    def _supersede_abandoned(self, request_id: int, wf: Workflow) -> None:
+        """Quorum steering abandoned these stragglers mid-generation: mark
+        their transforms superseded so a late completion never re-adopts
+        into the (already Cancelled) work and the campaign's trial trail
+        stays exact.  Runs inside the same transaction as the steer, and
+        the ``_abandon_applied`` flag rides the persisted blob, so the
+        supersede is exactly-once per abandoned work."""
+        transforms = self.stores["transforms"]
+        for work in wf.works.values():
+            res = work.results or {}
+            if not res.get("abandoned") or res.get("_abandon_applied"):
+                continue
+            if work.transform_id is not None:
+                try:
+                    transforms.update(
+                        work.transform_id,
+                        transform_metadata={"superseded": True},
+                    )
+                except NotFoundError:
+                    pass
+            res["_abandon_applied"] = True
 
     def _request_status(self, wf: Workflow, old: str) -> RequestStatus:
         if wf.is_terminal():

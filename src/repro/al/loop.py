@@ -17,12 +17,7 @@ import math
 import random
 from typing import Any
 
-from repro.common.constants import WorkStatus
-from repro.core.condition import Condition
-from repro.core.parameter import Ref
-from repro.core.work import Work, register_task
-from repro.core.workflow import Workflow
-from repro.orchestrator import Orchestrator
+from repro.core.work import register_task
 
 # hidden landscape (the "truth" the AL search explores)
 def _true_significance(x: float) -> float:
@@ -86,48 +81,53 @@ register_task("al_analyze", _analyze_task)
 
 
 class ActiveLearner:
-    """Drives the AL loop through the orchestrator, one iDDS workflow per
-    iteration (production chain → analysis chain), mirroring Fig. 13."""
+    """Thin client for the server-side AL campaign (Fig. 13): ONE looping
+    workflow (production chain → analysis chain, re-steered by the UCB
+    acquisition each generation) submitted over the unified ``Client``
+    surface — the orchestrator loops it, the learner just waits."""
 
-    def __init__(self, orch: Orchestrator, *, points_per_iter: int = 4):
-        self.orch = orch
+    def __init__(self, backend: Any, *, points_per_iter: int = 4):
+        from repro.hpo.service import _as_client
+
+        self.client = _as_client(backend)
         self.points_per_iter = points_per_iter
         self.observations: list[dict[str, Any]] = []
-        self.proposals: list[float] = [0.1, 0.35, 0.55, 0.9]
         self.history: list[dict[str, Any]] = []
+        self.request_id: int | None = None
 
-    def run_iteration(self, *, timeout: float = 60.0) -> dict[str, Any]:
-        wf = Workflow(f"al_iter_{len(self.history)}")
-        sim = Work(
-            "simulate",
-            task="al_simulate",
-            parameters={"points": list(self.proposals)},
-            n_jobs=len(self.proposals),
+    def submit(self, *, iterations: int = 6, target: float = 2.0) -> int:
+        from repro.campaign.builders import al_campaign_workflow
+
+        wf = al_campaign_workflow(
+            iterations=iterations,
+            target=target,
+            points_per_iter=self.points_per_iter,
         )
-        wf.add_work(sim)
-        ana = Work(
-            "analyze",
-            task="al_analyze",
-            parameters={"observations": Ref("simulate.outputs.job_results", [])},
-        )
-        wf.add_work(ana)
-        wf.add_dependency("simulate", "analyze", Condition.succeeded("simulate"))
-        rid = self.orch.submit_workflow(wf)
-        self.orch.wait_request(rid, timeout=timeout)
-        _, sim_res = self.orch.work_status(rid, "simulate")
-        new_obs = (sim_res or {}).get("job_results") or []
-        self.observations.extend(new_obs)
-        # analysis ran only on this iteration's sims; refine over ALL data
-        result = _analyze_task({"observations": self.observations}, 0, 1, {})
-        self.proposals = result["proposals"][: self.points_per_iter]
-        self.history.append(result)
-        return result
+        self.request_id = self.client.submit(wf)
+        return self.request_id
+
+    def collect(self, request_id: int | None = None) -> dict[str, Any]:
+        from repro.common.exceptions import SchedulingError
+
+        rid = int(request_id if request_id is not None else self.request_id)
+        info = self.client.campaign(rid, include_state=True)
+        camps = info.get("campaigns") or []
+        if not camps:
+            raise SchedulingError(f"request {rid} carries no campaign loop")
+        camp = camps[0]
+        state = camp.get("state") or {}
+        self.observations = list(state.get("observations") or [])
+        self.history = list(state.get("history") or [])
+        return camp
 
     def run(self, *, iterations: int = 6, target: float = 2.0, timeout: float = 60.0) -> dict[str, Any]:
-        for _ in range(iterations):
-            result = self.run_iteration(timeout=timeout)
-            if result["best_y"] is not None and result["best_y"] >= target:
-                break
+        rid = self.submit(iterations=iterations, target=target)
+        self.client.wait(rid, timeout=timeout)
+        self.collect(rid)
+        if not self.observations:
+            from repro.common.exceptions import SchedulingError
+
+            raise SchedulingError("AL campaign produced no observations")
         best = max(self.observations, key=lambda o: o["significance"])
         return {
             "best_x": best["x"],
@@ -135,4 +135,5 @@ class ActiveLearner:
             "true_optimum_x": 0.62,
             "n_iterations": len(self.history),
             "n_observations": len(self.observations),
+            "request_id": rid,
         }

@@ -122,6 +122,16 @@ class Client(abc.ABC):
         return out
 
     @abc.abstractmethod
+    def campaign(
+        self, request_id: int, *, include_state: bool = False
+    ) -> dict[str, Any]:
+        """Steering-loop progress for one campaign request:
+        {"request_id", "name", "status", "campaigns": [{"loop",
+        "steering", "iteration", "max_iterations", "quorum", "stopped",
+        "summary"[, "state"]}]}.  ``include_state`` adds the raw
+        persisted optimizer/learner state."""
+
+    @abc.abstractmethod
     def catalog(self, request_id: int) -> dict[str, Any]:
         ...
 

@@ -487,6 +487,14 @@ class HttpClient(Client):
                 out[name] = (w["status"], w.get("results"))
         return out
 
+    def campaign(
+        self, request_id: int, *, include_state: bool = False
+    ) -> dict[str, Any]:
+        path = f"/v2/request/{int(request_id)}/campaign"
+        if include_state:
+            path += "?state=1"
+        return self.transport.request("GET", path)
+
     def catalog(self, request_id: int) -> dict[str, Any]:
         return self.transport.request("GET", f"/v2/catalog/{int(request_id)}")
 

@@ -87,6 +87,13 @@ class LocalClient(Client):
             return self.orch.works_status_wait(int(request_id), names, wait_s)
         return {n: self.orch.work_status(int(request_id), n) for n in names}
 
+    def campaign(
+        self, request_id: int, *, include_state: bool = False
+    ) -> dict[str, Any]:
+        return self.orch.campaign_status(
+            int(request_id), include_state=include_state
+        )
+
     def catalog(self, request_id: int) -> dict[str, Any]:
         return self.orch.catalog(int(request_id))
 

@@ -1,0 +1,32 @@
+"""Server-side campaign engine (paper §4.3–§4.4, ROADMAP item 2).
+
+A *campaign* is a looping Workflow whose generations are steered by a
+registered steering function — HPO candidate suggestion or an active-
+learning acquisition — evaluated by the Clerk when a generation's works
+land terminal.  The steer, the updated optimizer/learner state and the
+next generation's works commit in one lifecycle-kernel transaction on
+the request's home shard, so replica crashes and suspend/resume/retry
+cascades mid-campaign resume exactly where they left off.
+"""
+from repro.campaign.builders import (  # noqa: F401
+    al_campaign_workflow,
+    campaigns_in_blob,
+    hpo_campaign_workflow,
+)
+from repro.campaign.steering import al_ucb_steering, hpo_steering  # noqa: F401
+from repro.core.workflow import (  # noqa: F401
+    get_steering,
+    has_steering,
+    register_steering,
+)
+
+__all__ = [
+    "al_campaign_workflow",
+    "al_ucb_steering",
+    "campaigns_in_blob",
+    "get_steering",
+    "has_steering",
+    "hpo_campaign_workflow",
+    "hpo_steering",
+    "register_steering",
+]

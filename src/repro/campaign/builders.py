@@ -1,0 +1,144 @@
+"""Campaign workflow builders and progress extraction.
+
+Builders produce plain looping Workflows: generation 0's works carry the
+first suggested parameters, and the loop's ``state`` carries the
+optimizer/learner blob so every later generation is steered server-side
+by the Clerk — no external driver loop.
+"""
+from __future__ import annotations
+
+from typing import Any, Sequence
+
+from repro.core.condition import Condition
+from repro.core.parameter import Ref
+from repro.core.work import Work
+from repro.core.workflow import Workflow
+from repro.hpo.optimizers import make_optimizer
+from repro.hpo.space import SearchSpace
+
+
+def hpo_campaign_workflow(
+    space: SearchSpace,
+    objective_task: str,
+    *,
+    optimizer: str = "tpe",
+    seed: int = 0,
+    parallel: int = 8,
+    generations: int = 3,
+    target_objective: float | None = None,
+    quorum: float | None = None,
+    name: str = "hpo_campaign",
+    work_kwargs: dict[str, Any] | None = None,
+) -> Workflow:
+    """A ``generations × parallel`` HPO campaign as one looping workflow.
+
+    Generation 0's candidates are drawn here; the post-ask optimizer
+    state rides in ``loop.state`` so the server-side steer continues the
+    exact same random stream — resubmitting the same (space, seed)
+    yields the same fingerprint and the same trial trajectory.
+    """
+    opt = make_optimizer(optimizer, space, seed=seed)
+    candidates = opt.ask(parallel)
+    wf = Workflow(name)
+    names: list[str] = []
+    for i, cand in enumerate(candidates):
+        w = Work(
+            f"trial{i}",
+            task=objective_task,
+            parameters={"candidate": cand},
+            **(work_kwargs or {}),
+        )
+        wf.add_work(w)
+        names.append(w.name)
+    state: dict[str, Any] = {
+        "optimizer": opt.state_dict(),
+        "pending": dict(zip(names, candidates)),
+        "trials": [],
+        "generation": 0,
+    }
+    if target_objective is not None:
+        state["target_objective"] = float(target_objective)
+    wf.add_loop(
+        "campaign",
+        names,
+        Condition.true(),
+        max_iterations=generations,
+        steering="hpo",
+        quorum=quorum,
+        state=state,
+    )
+    return wf
+
+
+def al_campaign_workflow(
+    *,
+    iterations: int = 6,
+    target: float = 2.0,
+    points_per_iter: int = 4,
+    initial_points: Sequence[float] = (0.1, 0.35, 0.55, 0.9),
+    name: str = "al_campaign",
+    work_kwargs: dict[str, Any] | None = None,
+) -> Workflow:
+    """The Fig. 13 active-learning chain (simulate → analyze) as one
+    looping workflow, steered by the UCB acquisition each generation."""
+    # registers al_simulate / al_analyze as an import side effect
+    import repro.al.loop  # noqa: F401
+
+    wf = Workflow(name)
+    pts = [float(p) for p in initial_points][:points_per_iter] or [0.5]
+    sim = Work(
+        "simulate",
+        task="al_simulate",
+        parameters={"points": pts},
+        n_jobs=len(pts),
+        **(work_kwargs or {}),
+    )
+    wf.add_work(sim)
+    ana = Work(
+        "analyze",
+        task="al_analyze",
+        parameters={"observations": Ref("simulate.outputs.job_results", [])},
+        **(work_kwargs or {}),
+    )
+    wf.add_work(ana)
+    wf.add_dependency("simulate", "analyze", Condition.succeeded("simulate"))
+    state: dict[str, Any] = {
+        "observations": [],
+        "points_per_iter": int(points_per_iter),
+        "target": float(target),
+        "generation": 0,
+        "history": [],
+    }
+    wf.add_loop(
+        "campaign",
+        ["simulate", "analyze"],
+        Condition.true(),
+        max_iterations=iterations,
+        steering="al_ucb",
+        state=state,
+    )
+    return wf
+
+
+def campaigns_in_blob(
+    blob: dict[str, Any], *, include_state: bool = False
+) -> list[dict[str, Any]]:
+    """Extract steering-loop progress from a persisted workflow blob
+    (plain dict walk — no Workflow materialization, safe on hot paths)."""
+    out: list[dict[str, Any]] = []
+    for lname, sp in (blob.get("loops") or {}).items():
+        if not isinstance(sp, dict) or not sp.get("steering"):
+            continue
+        entry: dict[str, Any] = {
+            "loop": lname,
+            "steering": sp.get("steering"),
+            "iteration": sp.get("iteration", 0),
+            "max_iterations": sp.get("max_iterations"),
+            "quorum": sp.get("quorum"),
+            "stopped": sp.get("stopped") or None,
+            "summary": sp.get("summary") or {},
+        }
+        if include_state:
+            entry["state"] = sp.get("state") or {}
+        out.append(entry)
+    return out

@@ -1,0 +1,152 @@
+"""Built-in steering functions.
+
+A steering function is the campaign's brain: given the loop's persisted
+``state`` and the just-finished generation's per-work results, it tells
+the optimizer/learner about the new evidence, decides whether to
+continue, and suggests the next generation's parameters.  The Clerk
+commits the returned state together with the next generation's works in
+one kernel transaction, so a crash between collect and re-instantiate
+replays the same decision from the same persisted inputs.
+
+Determinism contract: everything random lives in ``state`` (serialized
+``random.Random`` Mersenne state inside the optimizer blob); steering
+must never touch global RNGs or wall clocks.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from repro.core.workflow import register_steering
+
+
+@register_steering("hpo")
+def hpo_steering(
+    state: dict[str, Any],
+    results: dict[str, dict[str, Any]],
+    context: dict[str, Any],
+) -> dict[str, Any]:
+    """HPO generation steer: tell finished trials, ask the next batch.
+
+    ``state`` layout::
+
+        optimizer: optimizers.state_dict() blob (space + rng + history)
+        pending:   {work base name: candidate} awaiting evaluation
+        trials:    [{candidate, objective, status}, ...] full trail
+        generation: completed-generation counter
+        target_objective: optional early-stop threshold (minimization)
+    """
+    from repro.hpo.optimizers import optimizer_from_state
+
+    opt = optimizer_from_state(state["optimizer"])
+    pending: dict[str, Any] = state.get("pending") or {}
+    trials = list(state.get("trials") or [])
+    for base in sorted(pending):
+        cand = pending[base]
+        r = results.get(base) or {}
+        res = r.get("results") or {}
+        if res.get("abandoned") or "objective" not in res:
+            # straggler abandoned at quorum or trial failed: record it,
+            # but never feed a made-up objective to the optimizer
+            trials.append(
+                {
+                    "candidate": cand,
+                    "objective": None,
+                    "status": r.get("status", "unknown"),
+                }
+            )
+            continue
+        value = float(res["objective"])
+        opt.tell(cand, value)
+        trials.append(
+            {"candidate": cand, "objective": value, "status": r.get("status")}
+        )
+    bases = sorted(results)
+    suggestions = opt.ask(len(bases))
+    next_pending = dict(zip(bases, suggestions))
+    best = opt.best()
+    generation = int(state.get("generation") or 0) + 1
+    n_trials = sum(1 for t in trials if t["objective"] is not None)
+    target = state.get("target_objective")
+    cont = not (
+        target is not None and best is not None and best[1] <= float(target)
+    )
+    new_state = dict(state)
+    new_state.update(
+        {
+            "optimizer": opt.state_dict(),
+            "pending": next_pending,
+            "trials": trials,
+            "generation": generation,
+        }
+    )
+    return {
+        "continue": cont,
+        "state": new_state,
+        "parameters": {b: {"candidate": c} for b, c in next_pending.items()},
+        "summary": {
+            "kind": "hpo",
+            "generation": generation,
+            "n_trials": n_trials,
+            "best_candidate": best[0] if best else None,
+            "best_objective": best[1] if best else None,
+        },
+    }
+
+
+@register_steering("al_ucb")
+def al_ucb_steering(
+    state: dict[str, Any],
+    results: dict[str, dict[str, Any]],
+    context: dict[str, Any],
+) -> dict[str, Any]:
+    """Active-learning steer: fold this generation's simulations into the
+    observation pool, refit the UCB surrogate over *all* data, propose
+    the next points.
+
+    ``state`` layout::
+
+        observations:    accumulated {x, significance} points
+        points_per_iter: proposals per generation
+        target:          stop once best observed significance >= target
+        history:         per-generation {best_x, best_y, n_observations}
+    """
+    from repro.al.loop import _analyze_task
+
+    obs = list(state.get("observations") or [])
+    sim = (results.get("simulate") or {}).get("results") or {}
+    obs.extend(sim.get("job_results") or [])
+    analysis = _analyze_task({"observations": obs}, 0, 1, {})
+    k = int(state.get("points_per_iter") or 4)
+    proposals = list(analysis["proposals"])[:k]
+    generation = int(state.get("generation") or 0) + 1
+    entry = {
+        "generation": generation,
+        "best_x": analysis.get("best_x"),
+        "best_y": analysis.get("best_y"),
+        "n_observations": len(obs),
+    }
+    target = state.get("target")
+    best_y = analysis.get("best_y")
+    cont = not (
+        target is not None and best_y is not None and best_y >= float(target)
+    )
+    new_state = dict(state)
+    new_state.update(
+        {
+            "observations": obs,
+            "generation": generation,
+            "history": list(state.get("history") or []) + [entry],
+        }
+    )
+    return {
+        "continue": cont,
+        "state": new_state,
+        "parameters": {"simulate": {"points": proposals}},
+        "summary": {
+            "kind": "al",
+            "generation": generation,
+            "n_observations": len(obs),
+            "best_x": analysis.get("best_x"),
+            "best_y": best_y,
+        },
+    }

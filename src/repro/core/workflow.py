@@ -17,10 +17,11 @@ Semantics implemented here (and exercised by the property tests):
 """
 from __future__ import annotations
 
-from typing import Any, Iterable, Mapping
+import math
+from typing import Any, Callable, Iterable, Mapping
 
 from repro.common.constants import WorkStatus
-from repro.common.exceptions import WorkflowError
+from repro.common.exceptions import ValidationError, WorkflowError
 from repro.common.utils import new_uid
 from repro.core.condition import Condition
 from repro.core.dag import DirectedGraph
@@ -40,8 +41,83 @@ def _iter_name(base: str, iteration: int) -> str:
     return base if iteration == 0 else f"{base}#{iteration}"
 
 
+# ---------------------------------------------------------------------------
+# Steering registry: named campaign-steering functions (serializable by name,
+# like Condition predicates and Work tasks).  A steering function closes one
+# generate → fan-out → collect → steer loop turn: it reads the finished
+# generation's results, folds them into the loop's persisted ``state``, and
+# decides whether (and with which parameters) the next generation runs.
+#
+# Contract — ``fn(state, results, context)`` where
+#   * ``state``    — the loop's JSON state dict (optimizer/learner state,
+#                    best-so-far, trial history); persisted in the request's
+#                    workflow blob, so it survives crashes and cascades,
+#   * ``results``  — {base_work_name: {"status", "results"}} for the works of
+#                    the generation that just landed terminal (abandoned
+#                    stragglers appear as Cancelled with no results),
+#   * ``context``  — the full workflow context (Condition-style),
+# returning a decision dict:
+#   {"continue": bool,                # run generation k+1?
+#    "state": {...},                  # replacement state (default: unchanged)
+#    "parameters": {base: {k: v}},    # per-work parameter overrides for k+1
+#    "summary": {...}}                # small progress dict for monitoring
+#
+# Steering MUST be deterministic in (state, results): the Clerk may replay a
+# steer after a crash whose transaction never committed, and two replicas
+# must reach byte-identical decisions.  Randomness belongs in ``state``
+# (e.g. a serialized ``random.Random``), never in global RNGs or clocks.
+# ---------------------------------------------------------------------------
+_STEERINGS: dict[str, Callable[..., dict[str, Any]]] = {}
+
+
+def register_steering(name: str, fn: Callable[..., dict[str, Any]] | None = None):
+    def deco(f: Callable[..., dict[str, Any]]) -> Callable[..., dict[str, Any]]:
+        _STEERINGS[name] = f
+        return f
+
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def _load_builtin_steerings() -> None:
+    # built-ins ("hpo", "al_ucb") register as an import side effect; a
+    # server replica rehydrating a campaign blob must find them without
+    # the submitting client's imports
+    try:
+        import repro.campaign.steering  # noqa: F401
+    except ImportError:  # pragma: no cover - partial installs
+        pass
+
+
+def get_steering(name: str) -> Callable[..., dict[str, Any]]:
+    if name not in _STEERINGS:
+        _load_builtin_steerings()
+    if name not in _STEERINGS:
+        raise ValidationError(
+            f"unknown steering {name!r} (register with register_steering)"
+        )
+    return _STEERINGS[name]
+
+
+def has_steering(name: str) -> bool:
+    if name not in _STEERINGS:
+        _load_builtin_steerings()
+    return name in _STEERINGS
+
+
 class LoopSpec:
-    """A loop over a group of work names with a continue condition."""
+    """A loop over a group of work names with a continue condition — and,
+    for campaigns, a registered steering function plus persisted state.
+
+    ``steering`` (a :func:`register_steering` name) replaces the
+    condition as the continue/stop authority: when the current generation
+    lands terminal the steering function is invoked with the collected
+    results and ``state``, and its decision (continue?, next parameters,
+    new state) re-instantiates iteration ``k+1``.  ``quorum`` (0 < q <= 1)
+    lets a steering loop advance once that fraction of the generation is
+    terminal, abandoning the stragglers instead of stalling on them.
+    """
 
     def __init__(
         self,
@@ -50,12 +126,31 @@ class LoopSpec:
         condition: Condition,
         *,
         max_iterations: int = 100,
+        steering: str | None = None,
+        quorum: float | None = None,
+        state: dict[str, Any] | None = None,
     ):
         self.name = name
         self.work_names = list(work_names)
         self.condition = condition
         self.max_iterations = max_iterations
         self.iteration = 0
+        self.steering = steering
+        if quorum is not None and not (0.0 < float(quorum) <= 1.0):
+            raise ValidationError(
+                f"loop {name!r}: quorum must be in (0, 1], got {quorum!r}"
+            )
+        self.quorum = float(quorum) if quorum is not None else None
+        #: campaign state (optimizer/learner state, best-so-far, history);
+        #: owned by the steering function, persisted in the workflow blob
+        self.state: dict[str, Any] = dict(state or {})
+        #: small steering-produced progress dict for monitor/REST surfaces
+        self.summary: dict[str, Any] = {}
+        #: truthy once the loop will never expand again; the string records
+        #: why: "done" (steering said stop), "bound" (max_iterations), or
+        #: "failed" (a generation ended with zero successes — a request
+        #: ``retry`` that recovers the generation clears this and resumes)
+        self.stopped: str | None = None
 
     def to_dict(self) -> dict[str, Any]:
         return {
@@ -64,6 +159,11 @@ class LoopSpec:
             "condition": self.condition.to_dict(),
             "max_iterations": self.max_iterations,
             "iteration": self.iteration,
+            "steering": self.steering,
+            "quorum": self.quorum,
+            "state": self.state,
+            "summary": self.summary,
+            "stopped": self.stopped,
         }
 
     @classmethod
@@ -73,8 +173,13 @@ class LoopSpec:
             list(d["work_names"]),
             Condition.from_dict(d["condition"]),
             max_iterations=d.get("max_iterations", 100),
+            steering=d.get("steering"),
+            quorum=d.get("quorum"),
+            state=d.get("state"),
         )
         sp.iteration = d.get("iteration", 0)
+        sp.summary = dict(d.get("summary") or {})
+        sp.stopped = d.get("stopped") or None
         return sp
 
 
@@ -123,18 +228,35 @@ class Workflow:
         condition: Condition,
         *,
         max_iterations: int = 100,
+        steering: str | None = None,
+        quorum: float | None = None,
+        state: dict[str, Any] | None = None,
     ) -> None:
         for n in work_names:
             if n not in self.works:
                 raise WorkflowError(f"unknown work {n!r} in loop {name!r}")
         self.loops[name] = LoopSpec(
-            name, work_names, condition, max_iterations=max_iterations
+            name,
+            work_names,
+            condition,
+            max_iterations=max_iterations,
+            steering=steering,
+            quorum=quorum,
+            state=state,
         )
 
     def validate(self) -> None:
         self.graph.validate()
         for w in self.works.values():
             w.validate()
+        for loop in self.loops.values():
+            # like Work tasks, steering resolves by name on the server —
+            # an unregistered name must fail at submit, not mid-campaign
+            if loop.steering is not None and not has_steering(loop.steering):
+                raise ValidationError(
+                    f"loop {loop.name!r}: unregistered steering "
+                    f"{loop.steering!r}"
+                )
 
     # -- runtime context ----------------------------------------------------
     def context(self) -> dict[str, Any]:
@@ -225,22 +347,81 @@ class Workflow:
     # -- loops ---------------------------------------------------------------
     def expand_loops(self) -> list[Work]:
         """Called by the Clerk when works finish: for each loop whose current
-        iteration is fully terminal and whose condition holds, instantiate
-        the next iteration.  Returns newly created works."""
+        iteration is fully terminal (or, with a steering quorum, terminal
+        enough) and whose condition/steering says continue, instantiate the
+        next iteration.  Returns newly created works.
+
+        Deterministic and idempotent per generation: once a generation has
+        steered, either ``iteration`` advanced (so the group is no longer
+        terminal) or ``stopped`` is set — re-running against the same
+        persisted blob (crash replay, cache rebuild) reproduces the same
+        decision, which is what makes one Clerk transaction per generation
+        an exactly-once steer."""
         ctx = self.context()
         created: list[Work] = []
         for loop in self.loops.values():
-            cur_names = [_iter_name(n, loop.iteration) for n in loop.work_names]
-            if not all(
-                self.works[n].status in _TERMINAL
-                for n in cur_names
-                if n in self.works
-            ):
+            if loop.stopped and not self._failed_loop_recovered(loop):
                 continue
-            if loop.iteration + 1 >= loop.max_iterations:
-                continue
-            if not loop.condition.evaluate(ctx):
-                continue
+            cur_names = [
+                _iter_name(n, loop.iteration)
+                for n in loop.work_names
+                if _iter_name(n, loop.iteration) in self.works
+            ]
+            terminal = [
+                n for n in cur_names if self.works[n].status in _TERMINAL
+            ]
+            overrides: dict[str, dict[str, Any]] = {}
+            if loop.steering is not None:
+                need = len(cur_names)
+                if loop.quorum is not None:
+                    need = min(need, max(1, math.ceil(loop.quorum * need)))
+                if len(terminal) < need:
+                    continue
+                if not any(
+                    self.works[n].status in _SUCCESS for n in cur_names
+                ):
+                    # a generation with zero successes must not steer at
+                    # all: invoking the steering fn here would overwrite
+                    # its state (pending candidates, RNG) with a next
+                    # generation that never launches, corrupting the
+                    # post-`retry` resume.  Park the loop as "failed" with
+                    # state untouched so the request rolls up terminal and
+                    # a retry cascade can recover it in place.
+                    loop.stopped = "failed"
+                    continue
+                # quorum met but stragglers remain: abandon them — skipped,
+                # Cancelled, flagged so the Clerk supersedes their
+                # transforms (late results never re-adopt)
+                for n in cur_names:
+                    if self.works[n].status not in _TERMINAL:
+                        self._skip(n)
+                        self.works[n].results["abandoned"] = True
+                results = {
+                    n.split("#")[0]: {
+                        "status": str(self.works[n].status),
+                        "results": self.works[n].results,
+                    }
+                    for n in cur_names
+                }
+                decision = get_steering(loop.steering)(
+                    loop.state, results, ctx
+                )
+                loop.state = dict(decision.get("state", loop.state))
+                loop.summary = dict(decision.get("summary", loop.summary))
+                if not decision.get("continue", False):
+                    loop.stopped = "done"
+                    continue
+                if loop.iteration + 1 >= loop.max_iterations:
+                    loop.stopped = "bound"
+                    continue
+                overrides = dict(decision.get("parameters") or {})
+            else:
+                if len(terminal) < len(cur_names):
+                    continue
+                if loop.iteration + 1 >= loop.max_iterations:
+                    continue
+                if not loop.condition.evaluate(ctx):
+                    continue
             loop.iteration += 1
             mapping: dict[str, str] = {}
             for base in loop.work_names:
@@ -254,6 +435,8 @@ class Workflow:
                 nxt.transform_id = None
                 nxt.internal_id = new_uid("w")
                 nxt.parameters["loop_iteration"] = loop.iteration
+                for k, v in (overrides.get(base) or {}).items():
+                    nxt.parameters[k] = v
                 self.add_work(nxt)
                 mapping[base] = nxt.name
                 created.append(nxt)
@@ -263,6 +446,22 @@ class Workflow:
                 if pb in mapping and cb in mapping and "#" not in p and "#" not in c:
                     self.add_dependency(mapping[pb], mapping[cb], cond)
         return created
+
+    def _failed_loop_recovered(self, loop: LoopSpec) -> bool:
+        """A loop parked as "failed" resumes when a retry cascade recovered
+        its generation: any success among the current works clears the
+        stop, and the campaign steers from exactly where it left off."""
+        if loop.stopped != "failed":
+            return False
+        cur = [
+            _iter_name(n, loop.iteration)
+            for n in loop.work_names
+            if _iter_name(n, loop.iteration) in self.works
+        ]
+        if not any(self.works[n].status in _SUCCESS for n in cur):
+            return False
+        loop.stopped = None
+        return True
 
     # -- dynamic expansion ------------------------------------------------------
     def expand(
@@ -282,6 +481,15 @@ class Workflow:
         # a loop that would still expand keeps the workflow alive
         ctx = self.context()
         for loop in self.loops.values():
+            if loop.steering is not None:
+                # a steering loop is alive until it records a stop reason:
+                # with all works terminal the next expand_loops pass either
+                # advances the iteration (new NEW works) or sets `stopped`
+                if not loop.stopped:
+                    return False
+                continue
+            if loop.stopped:
+                continue
             if loop.iteration + 1 < loop.max_iterations and loop.condition.evaluate(
                 ctx
             ):
@@ -315,10 +523,31 @@ class Workflow:
             "name": d["name"],
             "parameters": d["parameters"],
             # only each work's template — metadata carries runtime state
-            # and per-instance uids
-            "works": {n: w["template"] for n, w in (d["works"] or {}).items()},
-            "edges": d["edges"],
-            "loops": d["loops"],
+            # and per-instance uids; `#k` clones are loop runtime, not
+            # definition, so the digest is stable across iterations
+            "works": {
+                n: w["template"]
+                for n, w in (d["works"] or {}).items()
+                if "#" not in n
+            },
+            "edges": [
+                e
+                for e in d["edges"]
+                if "#" not in e["parent"] and "#" not in e["child"]
+            ],
+            # only the loop *definition* — iteration counters, optimizer
+            # state, summaries and stop reasons evolve at runtime
+            "loops": {
+                n: {
+                    "name": sp["name"],
+                    "work_names": sp["work_names"],
+                    "condition": sp["condition"],
+                    "max_iterations": sp["max_iterations"],
+                    "steering": sp.get("steering"),
+                    "quorum": sp.get("quorum"),
+                }
+                for n, sp in (d["loops"] or {}).items()
+            },
         }
         return hashlib.sha256(json_dumps(definition).encode()).hexdigest()[:32]
 

@@ -29,6 +29,25 @@ class RandomSearch:
             return None
         return min(self.history, key=lambda cv: cv[1])
 
+    # -- state (de)serialization ----------------------------------------------
+    # Campaigns persist the optimizer in the request's home shard between
+    # generations, so ask/tell must round-trip through JSON exactly: the
+    # Mersenne state goes along so a crash-replayed `ask` re-draws the
+    # same candidates.
+    def state_dict(self) -> dict[str, Any]:
+        s = self.rng.getstate()
+        return {
+            "kind": self.name,
+            "space": self.space.to_dict(),
+            "rng": [s[0], list(s[1]), s[2]],
+            "history": [[dict(c), float(v)] for c, v in self.history],
+        }
+
+    def load_state(self, d: dict[str, Any]) -> None:
+        r = d["rng"]
+        self.rng.setstate((r[0], tuple(r[1]), r[2]))
+        self.history = [(dict(c), float(v)) for c, v in d["history"]]
+
 
 class TPE(RandomSearch):
     """Tree-structured Parzen Estimator (minimization).
@@ -146,9 +165,33 @@ class TPE(RandomSearch):
         return out
 
 
+    def state_dict(self) -> dict[str, Any]:
+        d = super().state_dict()
+        d["gamma"] = self.gamma
+        d["n_startup"] = self.n_startup
+        d["n_ei_candidates"] = self.n_ei
+        return d
+
+
 def make_optimizer(kind: str, space: SearchSpace, **kw: Any) -> RandomSearch:
     if kind == "random":
         return RandomSearch(space, **kw)
     if kind == "tpe":
         return TPE(space, **kw)
     raise ValueError(f"unknown optimizer {kind!r}")
+
+
+def optimizer_from_state(d: dict[str, Any]) -> RandomSearch:
+    """Rehydrate an optimizer from ``state_dict()`` output (the JSON blob a
+    campaign keeps in ``LoopSpec.state``)."""
+    space = SearchSpace.from_dict(d["space"])
+    kw: dict[str, Any] = {}
+    if d["kind"] == "tpe":
+        kw = {
+            "gamma": d.get("gamma", 0.25),
+            "n_startup": d.get("n_startup", 8),
+            "n_ei_candidates": d.get("n_ei_candidates", 24),
+        }
+    opt = make_optimizer(d["kind"], space, **kw)
+    opt.load_state(d)
+    return opt

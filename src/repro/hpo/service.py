@@ -1,26 +1,39 @@
 """Distributed HPO service (paper §4.3, Fig. 12).
 
-One iteration = (1) candidate sampling (random/TPE), (2) asynchronous
-dispatch of training Works through the orchestrator (the PanDA-analogue
-runtime executes them on whatever sites are free), (3) metric collection
-and search-space refinement.  *Segmented* HPO optimizes several models'
-spaces simultaneously, sharing the dispatch machinery.
+A thin client over the campaign engine: ``run`` builds ONE looping
+campaign workflow (``repro.campaign.hpo_campaign_workflow``), submits it
+through the unified ``Client`` surface, and waits.  All steering —
+candidate sampling (random/TPE), metric collection, search-space
+refinement, generation re-instantiation — happens server-side in the
+Clerk, so campaigns get broker fair-share, lifecycle cascades
+(suspend/resume/retry) and crash survival for free.  *Segmented* HPO
+optimizes several models' spaces simultaneously as concurrent campaign
+requests sharing the dispatch machinery.
 """
 from __future__ import annotations
 
-import time
-from typing import Any, Callable
+from typing import Any
 
 from repro.common.exceptions import SchedulingError
-from repro.core.work import Work
-from repro.core.workflow import Workflow
-from repro.hpo.optimizers import RandomSearch, make_optimizer
+from repro.common.utils import utc_now_ts
+from repro.hpo.optimizers import RandomSearch, optimizer_from_state
 from repro.hpo.space import SearchSpace
-from repro.orchestrator import Orchestrator
+
+
+def _as_client(backend: Any):
+    """Accept either a unified ``Client`` or a bare in-process
+    ``Orchestrator`` (wrapped in a ``LocalClient``)."""
+    from repro.api.client import Client
+
+    if isinstance(backend, Client):
+        return backend
+    from repro.api.local import LocalClient
+
+    return LocalClient(backend)
 
 
 class HPOService:
-    """Drives distributed HPO through an orchestrator.
+    """Drives distributed HPO through an orchestrator-side campaign.
 
     ``objective_task`` must be a *registered task* name whose callable
     accepts ``parameters={"candidate": {...}, ...}`` and returns
@@ -29,7 +42,7 @@ class HPOService:
 
     def __init__(
         self,
-        orch: Orchestrator,
+        backend: Any,
         space: SearchSpace,
         objective_task: str,
         *,
@@ -37,36 +50,56 @@ class HPOService:
         seed: int = 0,
         max_parallel: int = 8,
     ):
-        self.orch = orch
-        self.optimizer: RandomSearch = make_optimizer(optimizer, space, seed=seed)
+        self.client = _as_client(backend)
+        self.space = space
         self.objective_task = objective_task
+        self.optimizer_kind = optimizer
+        self.seed = seed
         self.max_parallel = max_parallel
+        self.optimizer: RandomSearch | None = None
         self.trials: list[dict[str, Any]] = []
+        self.request_id: int | None = None
 
-    # -- one iteration ---------------------------------------------------------
-    def run_iteration(self, n_candidates: int, *, timeout: float = 120.0) -> list[dict[str, Any]]:
-        candidates = self.optimizer.ask(n_candidates)
-        wf = Workflow(f"hpo_iter_{len(self.trials)}")
-        names = []
-        for i, cand in enumerate(candidates):
-            w = Work(
-                f"trial_{len(self.trials) + i}",
-                task=self.objective_task,
-                parameters={"candidate": cand},
-            )
-            wf.add_work(w)
-            names.append((w.name, cand))
-        request_id = self.orch.submit_workflow(wf)
-        self.orch.wait_request(request_id, timeout=timeout)
-        results = []
-        for name, cand in names:
-            status, res = self.orch.work_status(request_id, name)
-            value = float((res or {}).get("objective", float("inf")))
-            self.optimizer.tell(cand, value)
-            trial = {"candidate": cand, "objective": value, "status": status}
-            self.trials.append(trial)
-            results.append(trial)
-        return results
+    def submit(
+        self,
+        *,
+        generations: int,
+        parallel: int = 8,
+        target_objective: float | None = None,
+        quorum: float | None = None,
+    ) -> int:
+        """Submit the campaign and return its request id (non-blocking)."""
+        # local import: repro.campaign sits above the hpo package (its
+        # builders pull optimizers from here)
+        from repro.campaign.builders import hpo_campaign_workflow
+
+        wf = hpo_campaign_workflow(
+            self.space,
+            self.objective_task,
+            optimizer=self.optimizer_kind,
+            seed=self.seed,
+            parallel=parallel,
+            generations=generations,
+            target_objective=target_objective,
+            quorum=quorum,
+        )
+        self.request_id = self.client.submit(wf)
+        return self.request_id
+
+    def collect(self, request_id: int | None = None) -> dict[str, Any]:
+        """Pull the campaign's persisted state into this client: trial
+        trail, rehydrated optimizer, best-so-far."""
+        rid = int(request_id if request_id is not None else self.request_id)
+        info = self.client.campaign(rid, include_state=True)
+        camps = info.get("campaigns") or []
+        if not camps:
+            raise SchedulingError(f"request {rid} carries no campaign loop")
+        camp = camps[0]
+        state = camp.get("state") or {}
+        self.trials = list(state.get("trials") or [])
+        if state.get("optimizer"):
+            self.optimizer = optimizer_from_state(state["optimizer"])
+        return camp
 
     def run(
         self,
@@ -75,51 +108,70 @@ class HPOService:
         candidates_per_iter: int = 8,
         timeout: float = 120.0,
     ) -> dict[str, Any]:
-        t0 = time.time()
-        for _ in range(iterations):
-            self.run_iteration(candidates_per_iter, timeout=timeout)
-        best = self.optimizer.best()
-        if best is None:
+        t0 = utc_now_ts()
+        rid = self.submit(generations=iterations, parallel=candidates_per_iter)
+        self.client.wait(rid, timeout=timeout)
+        camp = self.collect(rid)
+        summary = camp.get("summary") or {}
+        if summary.get("best_candidate") is None:
             raise SchedulingError("HPO produced no finished trials")
         return {
-            "best_candidate": best[0],
-            "best_objective": best[1],
-            "n_trials": len(self.trials),
-            "wall_s": time.time() - t0,
+            "best_candidate": summary["best_candidate"],
+            "best_objective": summary["best_objective"],
+            "n_trials": summary.get("n_trials", 0),
+            "generations": summary.get("generation", 0),
+            "request_id": rid,
+            "wall_s": utc_now_ts() - t0,
         }
 
 
 class SegmentedHPO:
     """Simultaneous optimization of multiple models (paper: 'segmented
     HPO, enabling the simultaneous optimization of multiple machine
-    learning models ... well suited for ensemble learning')."""
+    learning models ... well suited for ensemble learning').  Each
+    segment is its own campaign request; they advance concurrently and
+    the runtime interleaves their trials across sites (shared dispatch
+    pool, broker fair-share)."""
 
     def __init__(
         self,
-        orch: Orchestrator,
+        backend: Any,
         segments: dict[str, tuple[SearchSpace, str]],
         *,
         optimizer: str = "tpe",
         seed: int = 0,
     ):
-        self.orch = orch
+        self.client = _as_client(backend)
         self.services = {
-            name: HPOService(orch, space, task, optimizer=optimizer, seed=seed + i)
+            name: HPOService(
+                self.client, space, task, optimizer=optimizer, seed=seed + i
+            )
             for i, (name, (space, task)) in enumerate(segments.items())
         }
 
-    def run(self, *, iterations: int, candidates_per_iter: int = 4, timeout: float = 120.0) -> dict[str, Any]:
+    def run(
+        self,
+        *,
+        iterations: int,
+        candidates_per_iter: int = 4,
+        timeout: float = 120.0,
+    ) -> dict[str, Any]:
+        # submit every segment first — the campaigns advance server-side
+        # in parallel — then wait for all of them
+        rids = {
+            name: svc.submit(
+                generations=iterations, parallel=candidates_per_iter
+            )
+            for name, svc in self.services.items()
+        }
         out: dict[str, Any] = {}
-        for _ in range(iterations):
-            # dispatch one iteration per segment back-to-back; the runtime
-            # interleaves their jobs across sites (shared dispatch pool)
-            for name, svc in self.services.items():
-                svc.run_iteration(candidates_per_iter, timeout=timeout)
         for name, svc in self.services.items():
-            best = svc.optimizer.best()
+            self.client.wait(rids[name], timeout=timeout)
+            camp = svc.collect(rids[name])
+            summary = camp.get("summary") or {}
             out[name] = {
-                "best_candidate": best[0] if best else None,
-                "best_objective": best[1] if best else None,
-                "n_trials": len(svc.trials),
+                "best_candidate": summary.get("best_candidate"),
+                "best_objective": summary.get("best_objective"),
+                "n_trials": summary.get("n_trials", 0),
             }
         return out

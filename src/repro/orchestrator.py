@@ -479,6 +479,62 @@ class Orchestrator:
         row = self.stores["requests"].get(request_id)
         return Workflow.from_dict(row["workflow"])
 
+    def campaign_status(
+        self, request_id: int, *, include_state: bool = False
+    ) -> dict[str, Any]:
+        """Steering-loop progress for one request (shared by both client
+        backends and ``GET /v2/request/{id}/campaign``).  A plain walk of
+        the persisted blob — no Workflow materialization.  With
+        ``include_state`` the raw optimizer/learner state rides along
+        (thin clients use it to reconstruct the trial trail)."""
+        from repro.campaign.builders import campaigns_in_blob
+
+        row = self.stores["requests"].get(request_id)
+        return {
+            "request_id": int(request_id),
+            "name": row["name"],
+            "status": row["status"],
+            "campaigns": campaigns_in_blob(
+                row.get("workflow") or {}, include_state=include_state
+            ),
+        }
+
+    def _campaigns_overview(self, limit_per_shard: int = 64) -> dict[str, Any]:
+        """Active (non-terminal) campaign requests for monitoring.  The
+        scan decodes workflow blobs, so it is capped per shard — a
+        dashboard wants the head of the line, not an unbounded sweep."""
+        from repro.campaign.builders import campaigns_in_blob
+        from repro.common.utils import json_loads
+
+        terminal = tuple(str(s) for s in TERMINAL_REQUEST_STATES)
+        marks = ",".join("?" for _ in terminal)
+        rows = self.db.query(
+            "SELECT request_id, status, workflow FROM requests "
+            f"WHERE status NOT IN ({marks}) ORDER BY request_id LIMIT ?",
+            (*terminal, limit_per_shard),
+        )
+        active: list[dict[str, Any]] = []
+        for r in rows:
+            blob = r["workflow"]
+            if isinstance(blob, str):
+                try:
+                    blob = json_loads(blob)
+                except Exception:
+                    continue
+            for camp in campaigns_in_blob(blob or {}):
+                active.append(
+                    {
+                        "request_id": int(r["request_id"]),
+                        "status": r["status"],
+                        **camp,
+                    }
+                )
+        return {
+            "active": active,
+            "scanned_requests": len(rows),
+            "scan_limit_per_shard": limit_per_shard,
+        }
+
     def catalog(self, request_id: int) -> dict[str, Any]:
         """Collection catalog for one request (shared by both client
         backends and the REST ``/catalog`` endpoints)."""
@@ -618,6 +674,8 @@ class Orchestrator:
             ),
             # FaT archive cache occupancy/evictions (LRU byte-capped)
             "code_cache": GLOBAL_CODE_CACHE.stats(),
+            # active steering campaigns (capped per-shard blob scan)
+            "campaigns": self._campaigns_overview(),
             "agents": {
                 a.consumer_id: {"cycles": a.cycles, "errors": a.errors}
                 for a in self.agents

@@ -163,6 +163,11 @@ class RestApp:
         r("GET", rf"/v2/request/{_id}/works", "read", ("names", "wait"))(
             self._works_get
         )
+        # steering-campaign progress; ?state=1 includes the raw persisted
+        # optimizer/learner state (thin clients rebuild trial trails)
+        r("GET", rf"/v2/request/{_id}/campaign", "read", ("state",))(
+            self._campaign_get
+        )
         # dead-letter queue (quarantined poison payloads)
         r("GET", r"/v2/deadletter", "read", ("limit", "offset", "status"))(
             self._deadletter_list
@@ -487,6 +492,14 @@ class RestApp:
     def _cache_get(self, digest: str, **kw: Any) -> dict[str, Any]:
         data = GLOBAL_CODE_CACHE.get(digest)
         return {"data": base64.b64encode(data).decode()}
+
+    def _campaign_get(
+        self, request_id: str, query: dict[str, list[str]], **kw: Any
+    ) -> dict[str, Any]:
+        include_state = (query.get("state") or ["0"])[-1] not in ("", "0")
+        return self.orch.campaign_status(
+            int(request_id), include_state=include_state
+        )
 
     def _catalog(self, request_id: str, **kw: Any) -> dict[str, Any]:
         return self.orch.catalog(int(request_id))

@@ -660,6 +660,175 @@ def edge_front_door(
         return out
 
 
+# ---------------------------------------------------------------------------
+# 11. HPO campaign advances past straggling / infra-killed trials
+# ---------------------------------------------------------------------------
+def hpo_straggler_trials(seed: int = 0) -> dict[str, Any]:
+    """A server-side HPO campaign (3 generations × 6 trials, quorum 0.8)
+    where one trial per generation straggles AND fails every attempt with
+    transient-infra errors (a zombie that never lands), and another is
+    killed on its first attempt (lands late, via retry).  The steering
+    quorum must advance each generation once 5 of 6 trials are terminal,
+    abandoning the zombie: its work is Cancelled+skipped, its transform
+    superseded (late completions never re-adopt), the optimizer is told
+    only real objectives, and the campaign still finishes all
+    generations — digest-stable."""
+    from repro.campaign.builders import hpo_campaign_workflow
+    from repro.hpo.space import SearchSpace, Uniform
+
+    def campaign_trial(parameters: dict, job_index: int, n_jobs: int,
+                       payload: dict) -> dict[str, Any]:
+        if parameters.get("mode") == "stuck":
+            # transient-infra class: retried with backoff, never trips a
+            # breaker, never quarantined — a pure zombie
+            raise ConnectionError("site link flap")
+        c = parameters["candidate"]
+        return {"objective": (c["x"] - 0.25) ** 2}
+
+    register_task("campaign_trial", campaign_trial)
+    generations, parallel = 3, 6
+    with SimHarness(
+        seed=seed, sites={"siteA": 16, "siteB": 16}, job_runtime_s=0.01
+    ) as h:
+        plan = h.plan
+
+        def trial_name(wl: str) -> str:
+            task = h.runtime.tasks.get(wl)
+            return task.spec.name.split("#")[0] if task else ""
+
+        def faults(wl: str, job: int, attempt: int, site: str) -> str | None:
+            name = trial_name(wl)
+            if name == "trial4" and attempt == 1:
+                # killed once: the retry lands late but still counts
+                plan._note("worker_kill", job=job, site=site)
+                return "kill"
+            if name == "trial5":
+                # the zombie also straggles before its infra error
+                plan._note("worker_straggle", job=job, site=site)
+                return "straggle"
+            return None
+
+        h.runtime.fault_hook = faults
+        wf = hpo_campaign_workflow(
+            SearchSpace({"x": Uniform(-1, 1)}),
+            "campaign_trial",
+            optimizer="tpe",
+            seed=seed,
+            parallel=parallel,
+            generations=generations,
+            quorum=0.8,  # ceil(0.8 * 6) = 5 of 6 advances the generation
+            work_kwargs={"max_retries": 8},
+        )
+        wf.works["trial5"].parameters["mode"] = "stuck"
+        rid = h.orch.submit_workflow(wf)
+        statuses = h.quiesce([rid])
+        assert statuses[rid] == "Finished", statuses
+        assert plan.injected.get("worker_kill", 0) > 0, "trial4 never killed"
+        assert plan.injected.get("worker_straggle", 0) > 0, "no straggle"
+
+        camp = h.orch.campaign_status(rid, include_state=True)["campaigns"][0]
+        assert camp["stopped"] == "bound", camp
+        assert camp["iteration"] == generations - 1, camp
+        trials = camp["state"]["trials"]
+        evaluated = [t for t in trials if t["objective"] is not None]
+        abandoned = [t for t in trials if t["objective"] is None]
+        # every generation evaluated exactly 5 real trials and abandoned
+        # the zombie — no generation stalled on it, none double-counted
+        assert len(evaluated) == generations * (parallel - 1), trials
+        assert len(abandoned) == generations, trials
+        assert camp["summary"]["n_trials"] == len(evaluated), camp
+
+        end_wf = h.orch.workflow_snapshot(rid)
+        zombie_names = {
+            n for n in end_wf.works if n.split("#")[0] == "trial5"
+        }
+        assert zombie_names <= end_wf.skipped, (zombie_names, end_wf.skipped)
+        for trow in h.orch.stores["transforms"].by_request(rid):
+            if trow["node_id"].split("#")[0] == "trial5":
+                meta = trow.get("transform_metadata") or {}
+                assert meta.get("superseded"), trow["node_id"]
+        h.check_invariants()
+        out = _result(h, statuses)
+        out["campaign"] = {
+            "n_trials": camp["summary"]["n_trials"],
+            "best_objective": camp["summary"]["best_objective"],
+            "abandoned": len(abandoned),
+        }
+        return out
+
+
+# ---------------------------------------------------------------------------
+# 12. replica crash between collect and re-instantiate, mid-campaign
+# ---------------------------------------------------------------------------
+def campaign_crash_mid_generation(seed: int = 0) -> dict[str, Any]:
+    """2 replicas over a durable DB bus drive an HPO campaign; one replica
+    dies mid-campaign, inside the collect → steer → re-instantiate window.
+    Because the steer commits atomically with the next generation's
+    transforms on the request's home shard, the survivor resumes from the
+    persisted optimizer state: every trial runs exactly once (no
+    duplicated or lost transforms), and the best-objective trajectory is
+    identical to a fault-free twin run — digest-stable."""
+    from repro.campaign.builders import hpo_campaign_workflow
+    from repro.hpo.space import SearchSpace, Uniform
+
+    def crash_obj(parameters: dict, job_index: int, n_jobs: int,
+                  payload: dict) -> dict[str, Any]:
+        c = parameters["candidate"]
+        return {"objective": (c["x"] - 0.4) ** 2 + 0.05}
+
+    register_task("crash_campaign_obj", crash_obj)
+    generations, parallel = 3, 4
+
+    def run(crash: bool) -> tuple[dict[str, Any], dict[str, Any]]:
+        with SimHarness(
+            seed=seed, bus_kind="db", replicas=2, job_runtime_s=0.01
+        ) as h:
+            wf = hpo_campaign_workflow(
+                SearchSpace({"x": Uniform(-1, 1)}),
+                "crash_campaign_obj",
+                optimizer="tpe",
+                seed=seed,
+                parallel=parallel,
+                generations=generations,
+            )
+            rid = h.orch.submit_workflow(wf)
+            h.run_ticks(6)  # mid-campaign: generation 0 collecting
+            if crash:
+                h.kill_replica(1)
+            statuses = h.quiesce([rid])
+            assert statuses[rid] == "Finished", statuses
+            if crash:
+                assert h.crashes, "kill_replica never registered"
+
+            # exactly-once trials: one transform per (work, generation),
+            # none duplicated by the takeover, none lost
+            trows = h.orch.stores["transforms"].by_request(rid)
+            node_ids = [t["node_id"] for t in trows]
+            assert len(node_ids) == generations * parallel, sorted(node_ids)
+            assert len(set(node_ids)) == len(node_ids), sorted(node_ids)
+
+            camp = h.orch.campaign_status(rid, include_state=True)[
+                "campaigns"
+            ][0]
+            assert camp["stopped"] == "bound", camp
+            trials = camp["state"]["trials"]
+            assert len(trials) == generations * parallel, trials
+            assert all(t["objective"] is not None for t in trials), trials
+            h.check_invariants()
+            summary = {
+                "best_objective": camp["summary"]["best_objective"],
+                "best_candidate": camp["summary"]["best_candidate"],
+                "objectives": [round(t["objective"], 12) for t in trials],
+            }
+            return _result(h, statuses), summary
+
+    _, twin = run(crash=False)  # fault-free twin: the reference trajectory
+    res, crashed = run(crash=True)
+    assert crashed == twin, (crashed, twin)
+    res["campaign"] = crashed
+    return res
+
+
 SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "replica_crash_mid_outbox_drain": replica_crash_mid_outbox_drain,
     "bus_partition_during_cascade_abort": bus_partition_during_cascade_abort,
@@ -671,6 +840,8 @@ SCENARIOS: dict[str, Callable[[int], dict[str, Any]]] = {
     "flapping_site_breaker": flapping_site_breaker,
     "shard_replica_crash": shard_replica_crash,
     "edge_front_door": edge_front_door,
+    "hpo_straggler_trials": hpo_straggler_trials,
+    "campaign_crash_mid_generation": campaign_crash_mid_generation,
 }
 
 #: the cheap scenarios — what CI's SIM_SMOKE step runs
@@ -680,6 +851,8 @@ SMOKE_SCENARIOS = (
     "poison_payload_quarantine",
     "flapping_site_breaker",
     "shard_replica_crash",
+    "hpo_straggler_trials",
+    "campaign_crash_mid_generation",
 )
 
 

@@ -1,0 +1,313 @@
+"""Campaign engine: steering-loop mechanics (`Workflow.expand_loops`),
+the no-wall-clock lint for the steering packages, and mid-campaign
+lifecycle cascades (suspend→resume, retry-of-failed-generation) over
+BOTH client backends — the interrupted run must reproduce the exact
+best-objective trajectory of an uninterrupted twin."""
+from __future__ import annotations
+
+import re
+import threading
+import time
+from pathlib import Path
+
+import pytest
+
+from repro.api import HttpClient, LocalClient
+from repro.campaign import hpo_campaign_workflow
+from repro.common.constants import WorkStatus
+from repro.core import Condition, Work, Workflow
+from repro.core.work import register_task
+from repro.hpo.space import SearchSpace, Uniform
+from repro.rest import RestApp, RestServer
+
+SRC = Path(__file__).resolve().parents[1] / "src" / "repro"
+
+
+# ---------------------------------------------------------------------------
+# wall-clock lint: steering must be replayable, so the packages that feed
+# campaign state may never read the real clock directly (swappable
+# providers in repro.common.utils only)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("pkg", ["hpo", "al", "campaign"])
+def test_no_direct_wallclock_in_steering_packages(pkg):
+    offenders = []
+    pat_import = re.compile(r"^\s*(import\s+time\b|from\s+time\s+import)")
+    pat_call = re.compile(r"\btime\.(time|sleep|monotonic|perf_counter)\s*\(")
+    for f in sorted((SRC / pkg).rglob("*.py")):
+        for i, line in enumerate(f.read_text().splitlines(), 1):
+            code = line.split("#", 1)[0]
+            if pat_import.search(code) or pat_call.search(code):
+                offenders.append(f"{f.relative_to(SRC)}:{i}: {line.strip()}")
+    assert not offenders, (
+        "direct wall-clock usage in steering packages (use "
+        "repro.common.utils providers):\n" + "\n".join(offenders)
+    )
+
+
+# ---------------------------------------------------------------------------
+# expand_loops / Condition unit mechanics (no orchestrator)
+# ---------------------------------------------------------------------------
+def _campaign(parallel=2, generations=3, seed=3, **kw):
+    return hpo_campaign_workflow(
+        SearchSpace({"x": Uniform(-1, 1)}),
+        "noop",
+        optimizer="tpe",
+        seed=seed,
+        parallel=parallel,
+        generations=generations,
+        **kw,
+    )
+
+
+def _gen_names(wf, loop_name="campaign"):
+    loop = wf.loops[loop_name]
+    it = loop.iteration
+    return [n if it == 0 else f"{n}#{it}" for n in loop.work_names]
+
+
+def _finish_generation(wf, objective=lambda c: (c["x"] - 0.3) ** 2):
+    for n in _gen_names(wf):
+        w = wf.works[n]
+        w.status = WorkStatus.FINISHED
+        w.results = {"objective": objective(w.parameters["candidate"])}
+
+
+def test_steering_loop_advances_then_hits_bound():
+    wf = _campaign(parallel=2, generations=3)
+    loop = wf.loops["campaign"]
+    assert loop.iteration == 0 and loop.stopped is None
+
+    _finish_generation(wf)
+    created = wf.expand_loops()
+    assert loop.iteration == 1
+    assert sorted(w.name for w in created) == ["trial0#1", "trial1#1"]
+    # new generation carries the steered candidate + iteration tag
+    for w in created:
+        assert w.status == WorkStatus.NEW
+        assert w.parameters["loop_iteration"] == 1
+        assert "x" in w.parameters["candidate"]
+
+    _finish_generation(wf)
+    wf.expand_loops()
+    assert loop.iteration == 2
+
+    _finish_generation(wf)
+    created = wf.expand_loops()
+    assert created == []
+    assert loop.stopped == "bound"
+    # the final generation was still told: 3 generations x 2 trials
+    assert loop.summary["n_trials"] == 6
+    assert loop.summary["generation"] == 3
+    assert wf.is_terminal()
+
+
+def test_steering_loop_idempotent_while_generation_pending():
+    wf = _campaign(parallel=2, generations=3)
+    # only one of two works terminal and no quorum: must not steer
+    names = _gen_names(wf)
+    wf.works[names[0]].status = WorkStatus.FINISHED
+    wf.works[names[0]].results = {"objective": 0.1}
+    assert wf.expand_loops() == []
+    assert wf.loops["campaign"].iteration == 0
+
+
+def test_fingerprint_stable_across_iterations():
+    wf = _campaign(parallel=2, generations=4)
+    fp0 = wf.fingerprint()
+    for _ in range(3):
+        _finish_generation(wf)
+        wf.expand_loops()
+        assert wf.fingerprint() == fp0
+    # round-trip through the persisted blob too
+    assert Workflow.from_dict(wf.to_dict()).fingerprint() == fp0
+
+
+def test_zero_success_generation_parks_with_state_untouched():
+    wf = _campaign(parallel=2, generations=3)
+    loop = wf.loops["campaign"]
+    pending_before = dict(loop.state["pending"])
+    for n in _gen_names(wf):
+        wf.works[n].status = WorkStatus.FAILED
+    assert wf.expand_loops() == []
+    assert loop.stopped == "failed"
+    # steering was NOT invoked: candidates awaiting evaluation, trial
+    # trail and generation counter are exactly as before the failure
+    assert loop.state["pending"] == pending_before
+    assert loop.state["trials"] == []
+    assert loop.state["generation"] == 0
+    assert wf.is_terminal()
+
+    # a retry cascade recovers the generation in place: works reset and
+    # re-run successfully -> the loop un-parks and steers from the SAME
+    # pending candidates
+    _finish_generation(wf)
+    created = wf.expand_loops()
+    assert loop.stopped is None
+    assert loop.iteration == 1
+    assert len(created) == 2
+    told = [t["candidate"] for t in loop.state["trials"]]
+    assert told == [pending_before[b] for b in sorted(pending_before)]
+
+
+def test_all_conditioned_edges_false_prunes_branch():
+    wf = Workflow("prune")
+    for n in ("a", "b", "c", "d"):
+        wf.add_work(Work(n, task="noop"))
+    wf.add_dependency("a", "b", Condition.false())
+    wf.add_dependency("b", "c")  # exclusive descendant of the dead branch
+    wf.add_dependency("a", "d", Condition.false())
+    wf.add_dependency("b", "d", Condition.true())  # one live edge keeps d
+    wf.works["a"].status = WorkStatus.FINISHED
+
+    ready = {w.name for w in wf.ready_works()}
+    assert "b" not in ready
+    assert "b" in wf.skipped
+    assert wf.works["b"].status == WorkStatus.CANCELLED
+    # descendants see the skipped parent lazily
+    wf.ready_works()
+    assert "c" in wf.skipped
+    # d's edges: a-edge branches off, b-edge has a skipped parent -> all
+    # votes are branch-offs, so the whole diamond dies
+    wf.ready_works()
+    assert "d" in wf.skipped
+    assert wf.is_terminal()
+
+
+def test_legacy_condition_loop_respects_iteration_bound():
+    wf = Workflow("legacy")
+    wf.add_work(Work("w", task="noop"))
+    wf.add_loop("lp", ["w"], condition=Condition.true(), max_iterations=3)
+    seen = []
+    for _ in range(5):
+        for n in _gen_names(wf, "lp"):
+            wf.works[n].status = WorkStatus.FINISHED
+        seen.extend(w.name for w in wf.expand_loops())
+    assert seen == ["w#1", "w#2"]  # 3 iterations total, then the bound
+
+
+# ---------------------------------------------------------------------------
+# mid-campaign cascades over both client backends
+# ---------------------------------------------------------------------------
+_GATE = {"armed": False, "event": threading.Event()}
+_FLAKY_SEEN: set = set()
+
+
+@pytest.fixture(scope="module", autouse=True)
+def _campaign_tasks():
+    def gate_obj(parameters, job_index, n_jobs, payload):
+        # generation 1 blocks on the gate while armed, so the test can
+        # deterministically suspend mid-generation
+        if _GATE["armed"] and parameters.get("loop_iteration", 0) == 1:
+            _GATE["event"].wait(timeout=10.0)
+        x = float(parameters["candidate"]["x"])
+        return {"objective": (x - 0.3) ** 2}
+
+    def flaky_obj(parameters, job_index, n_jobs, payload):
+        x = float(parameters["candidate"]["x"])
+        if parameters.get("loop_iteration", 0) == 1:
+            key = round(x, 12)
+            if key not in _FLAKY_SEEN:
+                _FLAKY_SEEN.add(key)
+                raise RuntimeError("flaky generation boom")
+        return {"objective": (x - 0.3) ** 2}
+
+    register_task("campaign_gate_obj", gate_obj)
+    register_task("campaign_flaky_obj", flaky_obj)
+    yield
+
+
+@pytest.fixture(params=["local", "http"])
+def api_client(request, orch):
+    if request.param == "local":
+        yield LocalClient(orch)
+    else:
+        app = RestApp(orch)
+        srv = RestServer(app).start()
+        cli = HttpClient(srv.url, timeout_s=10.0)
+        cli.register("carol", ["users"])
+        cli.login("carol")
+        yield cli
+        srv.stop()
+
+
+def _cascade_wf(task):
+    return hpo_campaign_workflow(
+        SearchSpace({"x": Uniform(-1, 1)}),
+        task,
+        optimizer="tpe",
+        seed=5,
+        parallel=3,
+        generations=3,
+        work_kwargs={"max_retries": 0},
+    )
+
+
+def _trajectory(client, rid):
+    camp = client.campaign(rid, include_state=True)["campaigns"][0]
+    trials = (camp.get("state") or {}).get("trials") or []
+    return [(t["candidate"]["x"], t["objective"]) for t in trials], camp
+
+
+def _run_twin(client):
+    """Uninterrupted reference run (same seed, pure objective)."""
+    _GATE["armed"] = False
+    rid = client.submit(_cascade_wf("campaign_gate_obj"))
+    assert client.wait(rid, timeout=30) == "Finished"
+    return _trajectory(client, rid)
+
+
+def test_campaign_suspend_resume_matches_uninterrupted(api_client):
+    twin_traj, twin_camp = _run_twin(api_client)
+    assert len(twin_traj) == 9 and all(o is not None for _, o in twin_traj)
+
+    _GATE["event"].clear()
+    _GATE["armed"] = True
+    try:
+        rid = api_client.submit(_cascade_wf("campaign_gate_obj"))
+        deadline = time.monotonic() + 15.0
+        while True:
+            camps = api_client.campaign(rid)["campaigns"]
+            if camps and camps[0]["iteration"] >= 1:
+                break
+            assert time.monotonic() < deadline, "campaign never reached gen 1"
+            time.sleep(0.01)
+        # generation 1 is in flight (its jobs are parked on the gate)
+        api_client.suspend(rid)
+        assert api_client.status(rid)["status"] == "Suspended"
+    finally:
+        _GATE["event"].set()
+        _GATE["armed"] = False
+    # in-flight jobs drain, but the campaign must NOT steer while parked
+    time.sleep(0.3)
+    assert api_client.status(rid)["status"] == "Suspended"
+    camps = api_client.campaign(rid)["campaigns"]
+    assert camps[0]["iteration"] == 1 and camps[0]["stopped"] is None
+
+    api_client.resume(rid)
+    assert api_client.wait(rid, timeout=30) == "Finished"
+    traj, camp = _trajectory(api_client, rid)
+    assert traj == twin_traj
+    assert camp["summary"]["best_objective"] == twin_camp["summary"]["best_objective"]
+    assert camp["summary"]["generation"] == 3
+    assert camp["stopped"] == "bound"
+
+
+def test_campaign_retry_failed_generation_matches_uninterrupted(api_client):
+    twin_traj, twin_camp = _run_twin(api_client)
+
+    _FLAKY_SEEN.clear()
+    rid = api_client.submit(_cascade_wf("campaign_flaky_obj"))
+    st = api_client.wait(rid, timeout=30)
+    assert st in ("Failed", "SubFinished")
+    camps = api_client.campaign(rid)["campaigns"]
+    assert camps[0]["stopped"] == "failed"
+    assert camps[0]["iteration"] == 1
+
+    # retry recovers the generation in place: the 3 failed trials reset,
+    # re-run (now succeeding), and the campaign steers onward
+    assert api_client.retry(rid) == 3
+    assert api_client.wait(rid, timeout=30) == "Finished"
+    traj, camp = _trajectory(api_client, rid)
+    assert traj == twin_traj
+    assert camp["summary"]["best_objective"] == twin_camp["summary"]["best_objective"]
+    assert camp["stopped"] == "bound"
